@@ -1,0 +1,110 @@
+//! End-to-end driver: the full system on a real small workload, proving
+//! all three layers compose (EXPERIMENTS.md §E2E records a run).
+//!
+//!   1. ensure a pretrained backbone exists (pretraining = full finetuning
+//!      on the generic corpus, driven through the train-step HLO),
+//!   2. finetune a RoAd₁ adapter on the arithmetic suite for a few hundred
+//!      steps, logging the loss curve,
+//!   3. evaluate generative exact-match through the serving engine,
+//!   4. register the trained adapter alongside a second user's adapter and
+//!      serve a heterogeneous batch, reporting latency/throughput.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train_serve
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use road::adapters::{Adapter, RoadAdapter};
+use road::coordinator::engine::{Engine, EngineConfig};
+use road::coordinator::request::{Request, SamplingParams};
+use road::runtime::Runtime;
+use road::tasks::{self, SuiteSampler};
+use road::trainer::{self, Recipe, Trainer};
+use road::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Rc::new(Runtime::from_default_artifacts()?);
+    let config = "train";
+
+    // --- 1. backbone -------------------------------------------------------
+    let pretrained = rt.manifest.artifact_path(&format!("pretrained_{config}.bin"));
+    if !pretrained.exists() {
+        println!("[e2e] no pretrained backbone; running a short pretrain (600 steps)...");
+        let mut tr = Trainer::new(rt.clone(), config, "full")?;
+        let corpus = tasks::pretrain_corpus();
+        let recipe = Recipe { lr: 1e-3, steps: 600, warmup_ratio: 0.1, seed: 0, eval_every: 0, log_every: 100 };
+        let mut src = SuiteSampler::new(&corpus, tr.batch, tr.seq_len);
+        let rep = trainer::train(&mut tr, &recipe, &mut src, None)?;
+        println!("[e2e] pretrain: {}", rep.summary_line());
+        tr.merged_params()?.save(&pretrained)?;
+    } else {
+        println!("[e2e] using existing pretrained backbone");
+    }
+
+    // --- 2. finetune RoAd1 on arithmetic ------------------------------------
+    let mut tr = Trainer::new(rt.clone(), config, "road1")?;
+    println!(
+        "[e2e] finetuning road1: {} trainable params ({:.3}% of backbone)",
+        tr.n_trainable,
+        100.0 * tr.n_trainable as f64
+            / road::model::ParamStore::load_pretrained(&rt.manifest, config)?.n_params() as f64
+    );
+    let suite = tasks::arithmetic_train_suite();
+    let recipe = Recipe { lr: 3e-3, steps: 300, warmup_ratio: 0.1, seed: 0, eval_every: 0, log_every: 50 };
+    let mut src = SuiteSampler::new(&suite, tr.batch, tr.seq_len);
+    let report = trainer::train(&mut tr, &recipe, &mut src, None)?;
+    println!("[e2e] finetune: {}", report.summary_line());
+    println!(
+        "[e2e] loss curve (every 30 steps): {:?}",
+        report
+            .losses
+            .iter()
+            .step_by(30)
+            .map(|l| (l * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+
+    // --- 3. generative eval through the engine ------------------------------
+    let econf = EngineConfig { model: config.into(), mode: "road".into(), decode_slots: 8, queue_capacity: 1024 };
+    let mut engine = Engine::new(rt.clone(), econf)?;
+    let adapter = tr.export_adapter()?;
+    engine.register_adapter("math", &adapter)?;
+    for task in tasks::arithmetic_eval_suite() {
+        if task.metric() != tasks::Metric::ExactMatch {
+            continue;
+        }
+        let ev = tasks::eval_exact_match(&mut engine, Some("math"), task.as_ref(), 32, 99)?;
+        println!("[e2e] {:<10} exact match = {:.3}", ev.task, ev.score);
+    }
+
+    // --- 4. heterogeneous serving ------------------------------------------
+    let mut rng = Rng::seed_from(5);
+    engine.register_adapter("other-user", &Adapter::Road(RoadAdapter::random(&engine.cfg, &mut rng, 0.1)))?;
+    let mut reqs = Vec::new();
+    for i in 0..16u64 {
+        let prompt = if i % 2 == 0 { "12+34=" } else { "7+8=" };
+        let adapter = if i % 2 == 0 { "math" } else { "other-user" };
+        reqs.push(
+            Request::new(i + 1, road::tokenizer::encode(prompt), 6)
+                .with_adapter(adapter)
+                .with_sampling(SamplingParams { temperature: 0.0, top_k: 0, seed: 0, stop_token: Some(b'.' as i32) }),
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let outs = engine.run_all(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for o in outs.iter().take(4) {
+        println!(
+            "[e2e] req {} ({:?}) -> {:?}",
+            o.id,
+            o.adapter,
+            road::tokenizer::decode(&o.tokens)
+        );
+    }
+    println!("[e2e] served {} heterogeneous requests in {wall:.2}s", outs.len());
+    println!("[e2e] {}", engine.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,512 @@
+"""AOT compiler: lower every Layer-1/Layer-2 entry point to HLO text.
+
+`python -m compile.aot --out ../artifacts` produces:
+
+  artifacts/<entry>.hlo.txt     HLO text per entry point (the interchange
+                                format — jax >= 0.5 emits protos with
+                                64-bit instruction ids that xla_extension
+                                0.5.1 rejects; the text parser reassigns
+                                ids, so text round-trips cleanly)
+  artifacts/manifest.json       the contract with the rust runtime: model
+                                configs, per-entry input/output signatures
+                                (group, name, shape, dtype) in exact
+                                positional order, and file inventory
+  artifacts/params_<cfg>.bin    'pretrained' parameters, f32 LE, leaves
+                                concatenated in flattening (sorted-key)
+                                order
+  artifacts/trainable_<cfg>_<method>.bin
+                                method trainable init in flattening order
+  artifacts/golden_<entry>.{in,out}.bin
+                                recorded input/output tensors for rust
+                                integration tests (raw LE bytes in
+                                signature order)
+
+Python runs once here and never on the request path.
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, train
+from .kernels import ref as kref
+
+F32, I32 = "f32", "i32"
+_DTYPES = {F32: jnp.float32, I32: jnp.int32}
+_NPDT = {F32: np.float32, I32: np.int32}
+
+# Shape bucket constants (mirrored in rust via the manifest).
+SERVE_DECODE_BATCHES = (1, 2, 4, 8, 16)
+SERVE_PREFILL_BUCKETS = ((1, 16), (8, 16), (8, 64))
+TINY_PREFILL = (2, 16)
+TRAIN_B, TRAIN_L = 16, 32
+GEN_B, GEN_L = 8, 16
+REPS_B, REPS_L = 16, 32
+HEAD_B, HEAD_K = 64, 4
+
+SERVE_MODES = ("base", "road", "lora")
+GEN_MODES = ("base", "road", "lora", "ia3", "oft")
+EVAL_METHODS = ("full", "road1", "road2", "road4", "road1_fc1", "lora",
+                "ia3", "bitfit", "oft2", "oft16")
+TRAIN2_METHODS = ("road1", "road2", "road4", "lora", "full")
+
+
+def spec(group, name, shape, dtype=F32):
+    return {"group": group, "name": name, "shape": list(shape),
+            "dtype": dtype}
+
+
+def sds(s):
+    return jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]])
+
+
+class Entry:
+    """One lowered entry point: flat positional fn + signature + metadata."""
+
+    def __init__(self, name, fn, inputs, meta):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs  # list of spec dicts, positional order
+        self.meta = meta      # kind/mode/config/... (copied into manifest)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Entry builders
+# ---------------------------------------------------------------------------
+
+def _dict_specs(group, named_shapes, dtype=F32):
+    return [spec(group, n, s, dtype) for n, s in named_shapes]
+
+
+def serving_entry(kind, cfg, mode, b, l=None):
+    """prefill_<mode>_<cfg>_b<B>_l<L> / decode_<mode>_<cfg>_b<B>."""
+    pspecs = _dict_specs("params", model.param_specs(cfg))
+    aspecs = _dict_specs("adapters", model.adapter_specs(cfg, mode))
+    np_, na = len(pspecs), len(aspecs)
+    nl, h, t, hd = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+    pkeys = [s["name"] for s in pspecs]
+    akeys = [s["name"] for s in aspecs]
+
+    if kind == "prefill":
+        data = [spec("data", "ids", (b,), I32),
+                spec("data", "tokens", (b, l), I32),
+                spec("data", "lengths", (b,), I32)]
+
+        def fn(*args):
+            p = model.unflatten(pkeys, args[:np_])
+            a = model.unflatten(akeys, args[np_:np_ + na])
+            ids, tokens, lengths = args[np_ + na:]
+            return model.prefill(cfg, mode, p, a, ids, tokens, lengths)
+
+        name = f"prefill_{mode}_{cfg.name}_b{b}_l{l}"
+    else:
+        data = [spec("data", "ids", (b,), I32),
+                spec("data", "token", (b,), I32),
+                spec("data", "pos", (b,), I32),
+                spec("data", "k_cache", (nl, b, h, t, hd), F32),
+                spec("data", "v_cache", (nl, b, h, t, hd), F32)]
+
+        def fn(*args):
+            p = model.unflatten(pkeys, args[:np_])
+            a = model.unflatten(akeys, args[np_:np_ + na])
+            ids, token, pos, kc, vc = args[np_ + na:]
+            return model.decode(cfg, mode, p, a, ids, token, pos, kc, vc)
+
+        name = f"decode_{mode}_{cfg.name}_b{b}"
+
+    meta = {"kind": kind, "mode": mode, "config": cfg.name, "batch": b}
+    if l is not None:
+        meta["prompt_len"] = l
+    return Entry(name, fn, pspecs + aspecs + data, meta)
+
+
+def train_entry(cfg, method, b=TRAIN_B, l=TRAIN_L):
+    frozen_specs = [] if method == "full" \
+        else _dict_specs("frozen", model.param_specs(cfg))
+    tspecs = _dict_specs("trainable", train.trainable_specs(cfg, method))
+    mspecs = [dict(s, group="opt_m") for s in tspecs]
+    vspecs = [dict(s, group="opt_v") for s in tspecs]
+    masked = method == "road1_masked"
+    gspecs = [dict(s, group="grad_mask") for s in tspecs] if masked else []
+    data = [spec("data", "step", (), F32), spec("data", "lr", (), F32),
+            spec("data", "tokens", (b, l), I32),
+            spec("data", "targets", (b, l), I32),
+            spec("data", "mask", (b, l), F32)]
+    nf, nt = len(frozen_specs), len(tspecs)
+    fkeys = [s["name"] for s in frozen_specs]
+    tkeys = [s["name"] for s in tspecs]
+
+    def fn(*args):
+        i = 0
+        frozen = model.unflatten(fkeys, args[i:i + nf]); i += nf
+        tr = model.unflatten(tkeys, args[i:i + nt]); i += nt
+        m = model.unflatten(tkeys, args[i:i + nt]); i += nt
+        v = model.unflatten(tkeys, args[i:i + nt]); i += nt
+        gm = None
+        if masked:
+            gm = model.unflatten(tkeys, args[i:i + nt]); i += nt
+        step, lr, tokens, targets, mask = args[i:]
+        nt_, nm_, nv_, loss = train.train_step(
+            cfg, method, frozen, tr, m, v, step, lr, tokens, targets, mask,
+            grad_mask=gm)
+        return (*model.flatten(nt_), *model.flatten(nm_),
+                *model.flatten(nv_), loss)
+
+    meta = {"kind": "train_step", "method": method, "config": cfg.name,
+            "batch": b, "seq_len": l,
+            "n_trainable": int(sum(int(np.prod(s["shape"])) for s in tspecs))}
+    return Entry(f"train_{method}_{cfg.name}", fn,
+                 frozen_specs + tspecs + mspecs + vspecs + gspecs + data,
+                 meta)
+
+
+def eval_entry(kind, cfg, method, b=TRAIN_B, l=TRAIN_L):
+    frozen_specs = [] if method == "full" \
+        else _dict_specs("frozen", model.param_specs(cfg))
+    tspecs = _dict_specs("trainable", train.trainable_specs(cfg, method))
+    nf, nt = len(frozen_specs), len(tspecs)
+    fkeys = [s["name"] for s in frozen_specs]
+    tkeys = [s["name"] for s in tspecs]
+    if kind == "eval_loss":
+        data = [spec("data", "tokens", (b, l), I32),
+                spec("data", "targets", (b, l), I32),
+                spec("data", "mask", (b, l), F32)]
+
+        def fn(*args):
+            frozen = model.unflatten(fkeys, args[:nf])
+            tr = model.unflatten(tkeys, args[nf:nf + nt])
+            tokens, targets, mask = args[nf + nt:]
+            return train.eval_loss(cfg, method, frozen, tr, tokens, targets,
+                                   mask)
+    else:
+        data = [spec("data", "tokens", (b, l), I32),
+                spec("data", "lengths", (b,), I32)]
+
+        def fn(*args):
+            frozen = model.unflatten(fkeys, args[:nf])
+            tr = model.unflatten(tkeys, args[nf:nf + nt])
+            tokens, lengths = args[nf + nt:]
+            return (train.last_logits(cfg, method, frozen, tr, tokens,
+                                      lengths),)
+
+    meta = {"kind": kind, "method": method, "config": cfg.name, "batch": b,
+            "seq_len": l}
+    return Entry(f"{kind}_{method}_{cfg.name}", fn,
+                 frozen_specs + tspecs + data, meta)
+
+
+def reps_entry(cfg, mode, b=REPS_B, l=REPS_L):
+    pspecs = _dict_specs("params", model.param_specs(cfg))
+    aspecs = _dict_specs("adapters", model.adapter_specs(cfg, mode, n=1))
+    np_, na = len(pspecs), len(aspecs)
+    pkeys = [s["name"] for s in pspecs]
+    akeys = [s["name"] for s in aspecs]
+    data = [spec("data", "ids", (b,), I32),
+            spec("data", "tokens", (b, l), I32),
+            spec("data", "lengths", (b,), I32)]
+
+    def fn(*args):
+        p = model.unflatten(pkeys, args[:np_])
+        a = model.unflatten(akeys, args[np_:np_ + na])
+        ids, tokens, lengths = args[np_ + na:]
+        return (model.hidden_states(cfg, mode, p, a, ids, tokens, lengths),)
+
+    meta = {"kind": "reps", "mode": mode, "config": cfg.name, "batch": b,
+            "seq_len": l}
+    return Entry(f"reps_{mode}_{cfg.name}", fn, pspecs + aspecs + data, meta)
+
+
+def head_entry(kind, cfg, head_mode, b=HEAD_B, k=HEAD_K):
+    d = cfg.d_model
+    hspecs = _dict_specs("trainable", [("b1", (d,)), ("b2", (k,)),
+                                       ("w1", (d, d)), ("w2", (d, k))])
+    hkeys = [s["name"] for s in hspecs]
+    if kind == "head_train":
+        mspecs = [dict(s, group="opt_m") for s in hspecs]
+        vspecs = [dict(s, group="opt_v") for s in hspecs]
+        data = [spec("data", "step", (), F32), spec("data", "lr", (), F32),
+                spec("data", "reps", (b, d), F32),
+                spec("data", "labels", (b,), I32)]
+
+        def fn(*args):
+            hd = model.unflatten(hkeys, args[0:4])
+            m = model.unflatten(hkeys, args[4:8])
+            v = model.unflatten(hkeys, args[8:12])
+            step, lr, reps, labels = args[12:]
+            nh, nm, nv, loss = train.head_train_step(hd, m, v, step, lr,
+                                                     reps, labels, head_mode)
+            return (*model.flatten(nh), *model.flatten(nm),
+                    *model.flatten(nv), loss)
+
+        inputs = hspecs + mspecs + vspecs + data
+    else:
+        data = [spec("data", "reps", (b, d), F32)]
+
+        def fn(*args):
+            hd = model.unflatten(hkeys, args[0:4])
+            return (train.head_logits(hd, args[4], head_mode),)
+
+        inputs = hspecs + data
+    meta = {"kind": kind, "head_mode": head_mode, "config": cfg.name,
+            "batch": b, "n_classes": k}
+    return Entry(f"{kind}_{head_mode}_{cfg.name}", fn, inputs, meta)
+
+
+def build_all_entries():
+    entries = []
+    serve, tiny, tr, tr2 = (configs.SERVE, configs.TINY, configs.TRAIN,
+                            configs.TRAIN2)
+    # Serving (Figure 4 / the coordinator's hot path)
+    for mode in SERVE_MODES:
+        for b in SERVE_DECODE_BATCHES:
+            entries.append(serving_entry("decode", serve, mode, b))
+        for b, l in SERVE_PREFILL_BUCKETS:
+            entries.append(serving_entry("prefill", serve, mode, b, l))
+    # Tiny (unit/integration scale)
+    for mode in SERVE_MODES:
+        entries.append(serving_entry("decode", tiny, mode, TINY_PREFILL[0]))
+        entries.append(serving_entry("prefill", tiny, mode, *TINY_PREFILL))
+    entries.append(train_entry(tiny, "road1", b=4, l=16))
+    entries.append(eval_entry("eval_loss", tiny, "road1", b=4, l=16))
+    entries.append(eval_entry("last_logits", tiny, "road1", b=4, l=16))
+    # Training graphs (Tables 2-6, Fig 2/5, Tab D.1)
+    for method in train.METHODS:
+        entries.append(train_entry(tr, method))
+    for method in EVAL_METHODS:
+        entries.append(eval_entry("eval_loss", tr, method))
+        entries.append(eval_entry("last_logits", tr, method))
+    # Generative eval on the train config (commonsense/arithmetic suites,
+    # composability generation): adapter banks with n_adapters slots.
+    for mode in GEN_MODES:
+        entries.append(serving_entry("prefill", tr, mode, GEN_B, GEN_L))
+        entries.append(serving_entry("decode", tr, mode, GEN_B))
+    # Pilot studies
+    for mode in ("base", "road", "lora"):
+        entries.append(reps_entry(tr, mode))
+    for hm in train.HEAD_MODES:
+        entries.append(head_entry("head_train", tr, hm))
+        entries.append(head_entry("head_logits", tr, hm))
+    # Second backbone (Tab D.2 analogue)
+    for method in TRAIN2_METHODS:
+        entries.append(train_entry(tr2, method))
+        entries.append(eval_entry("eval_loss", tr2, method))
+        entries.append(eval_entry("last_logits", tr2, method))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Binary dumps (params, trainable inits, golden records)
+# ---------------------------------------------------------------------------
+
+def dump_flat(path, arrays):
+    with open(path, "wb") as f:
+        for a in arrays:
+            f.write(np.asarray(a).astype(_NPDT[F32], copy=False).tobytes())
+
+
+def dump_params(out):
+    files = {}
+    for cfg in configs.PRESETS.values():
+        p = model.init_params(cfg, jax.random.PRNGKey(0))
+        fname = f"params_{cfg.name}.bin"
+        dump_flat(os.path.join(out, fname), model.flatten(p))
+        files[cfg.name] = fname
+    return files
+
+
+def dump_trainables(out):
+    files = {}
+    jobs = [(configs.TRAIN, m) for m in train.METHODS]
+    jobs += [(configs.TRAIN2, m) for m in TRAIN2_METHODS]
+    jobs += [(configs.TINY, "road1")]
+    for cfg, method in jobs:
+        p = model.init_params(cfg, jax.random.PRNGKey(0))
+        t = train.init_trainable(cfg, method, jax.random.PRNGKey(7), p)
+        fname = f"trainable_{cfg.name}_{method}.bin"
+        dump_flat(os.path.join(out, fname), model.flatten(t))
+        files[f"{cfg.name}/{method}"] = fname
+    return files
+
+
+def _golden_inputs(entry, rng):
+    """Deterministic concrete inputs for a golden record."""
+    arrs = []
+    cfg = configs.PRESETS[entry.meta["config"]]
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    for s in entry.inputs:
+        if s["group"] in ("params", "frozen"):
+            arrs.append(np.asarray(params[s["name"]], dtype=np.float32))
+        elif s["group"] == "adapters" and s["name"].endswith(".r1"):
+            n, d = s["shape"]
+            theta = 0.1 + 0.05 * np.arange(d // 2, dtype=np.float32)
+            r1 = np.repeat(np.cos(theta), 2)
+            arrs.append(np.tile(r1, (n, 1)).astype(np.float32))
+        elif s["group"] == "adapters" and s["name"].endswith(".r2"):
+            n, d = s["shape"]
+            theta = 0.1 + 0.05 * np.arange(d // 2, dtype=np.float32)
+            r2 = np.repeat(np.sin(theta), 2)
+            arrs.append(np.tile(r2, (n, 1)).astype(np.float32))
+        elif s["dtype"] == I32:
+            if s["name"] in ("ids",):
+                arrs.append((np.arange(int(np.prod(s["shape"])))
+                             % 2).reshape(s["shape"]).astype(np.int32))
+            elif s["name"] in ("tokens", "token", "targets"):
+                arrs.append(rng.integers(
+                    0, cfg.vocab, size=s["shape"]).astype(np.int32))
+            elif s["name"] in ("lengths", "pos"):
+                arrs.append(np.full(s["shape"], 7, dtype=np.int32))
+            elif s["name"] == "labels":
+                arrs.append(rng.integers(0, 4, s["shape"]).astype(np.int32))
+            else:
+                arrs.append(np.zeros(s["shape"], dtype=np.int32))
+        else:
+            if s["name"] == "mask":
+                arrs.append(np.ones(s["shape"], dtype=np.float32))
+            elif s["name"] in ("k_cache", "v_cache"):
+                arrs.append((0.01 * rng.standard_normal(s["shape"]))
+                            .astype(np.float32))
+            elif s["name"] == "step":
+                arrs.append(np.float32(1.0))
+            elif s["name"] == "lr":
+                arrs.append(np.float32(1e-3))
+            elif s["group"] in ("opt_m", "opt_v"):
+                arrs.append(np.zeros(s["shape"], dtype=np.float32))
+            elif s["group"] == "grad_mask":
+                arrs.append(np.ones(s["shape"], dtype=np.float32))
+            elif s["group"] == "trainable":
+                # identity-ish values from the dumped trainable init
+                t = train.init_trainable(
+                    cfg, entry.meta.get("method", "road1"),
+                    jax.random.PRNGKey(7), params)
+                arrs.append(np.asarray(t[s["name"]], dtype=np.float32))
+            else:
+                arrs.append((0.1 * rng.standard_normal(s["shape"]))
+                            .astype(np.float32))
+    return arrs
+
+
+GOLDEN_ENTRIES = ("decode_road_tiny_b2", "prefill_road_tiny_b2_l16",
+                  "decode_base_tiny_b2", "train_road1_tiny",
+                  "eval_loss_road1_tiny")
+
+
+def dump_golden(out, entries):
+    by_name = {e.name: e for e in entries}
+    golden = {}
+    for name in GOLDEN_ENTRIES:
+        e = by_name[name]
+        rng = np.random.default_rng(1234)
+        ins = _golden_inputs(e, rng)
+        outs = e.fn(*[jnp.asarray(a) for a in ins])
+        with open(os.path.join(out, f"golden_{name}.in.bin"), "wb") as f:
+            for a in ins:
+                f.write(np.asarray(a).tobytes())
+        out_specs = []
+        with open(os.path.join(out, f"golden_{name}.out.bin"), "wb") as f:
+            for i, o in enumerate(outs):
+                o = np.asarray(o)
+                out_specs.append({"name": f"out{i}", "shape": list(o.shape),
+                                  "dtype": F32 if o.dtype == np.float32
+                                  else I32})
+                f.write(o.tobytes())
+        golden[name] = {"in": f"golden_{name}.in.bin",
+                        "out": f"golden_{name}.out.bin",
+                        "outputs": out_specs}
+    return golden
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def lower_entry(entry, out_dir):
+    in_sds = [sds(s) for s in entry.inputs]
+    t0 = time.time()
+    lowered = jax.jit(entry.fn, keep_unused=True).lower(*in_sds)
+    out_shapes = jax.eval_shape(entry.fn, *in_sds)
+    text = to_hlo_text(lowered)
+    fname = f"{entry.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outputs = []
+    for i, o in enumerate(out_shapes):
+        dt = F32 if o.dtype == jnp.float32 else I32
+        outputs.append({"name": f"out{i}", "shape": list(o.shape),
+                        "dtype": dt})
+    return {"file": fname, "inputs": entry.inputs, "outputs": outputs,
+            **entry.meta}, time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on entry names (incremental build)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = build_all_entries()
+    existing = None
+    if args.only:
+        pat = re.compile(args.only)
+        entries = [e for e in entries if pat.search(e.name)]
+        # Incremental build: merge into the existing manifest instead of
+        # clobbering entries outside the filter.
+        mpath = os.path.join(args.out, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                existing = json.load(f)
+
+    manifest = {
+        "configs": {c.name: c.to_dict() for c in configs.PRESETS.values()},
+        "buckets": {
+            "serve_decode_batches": list(SERVE_DECODE_BATCHES),
+            "serve_prefill": [list(b) for b in SERVE_PREFILL_BUCKETS],
+            "train": {"batch": TRAIN_B, "seq_len": TRAIN_L},
+            "gen": {"batch": GEN_B, "prompt_len": GEN_L},
+            "reps": {"batch": REPS_B, "seq_len": REPS_L},
+            "head": {"batch": HEAD_B, "n_classes": HEAD_K},
+        },
+        "entries": {},
+    }
+    total = len(entries)
+    for i, e in enumerate(entries):
+        meta, dt = lower_entry(e, args.out)
+        manifest["entries"][e.name] = meta
+        print(f"[{i + 1}/{total}] {e.name}  ({dt:.1f}s)", flush=True)
+
+    if existing is not None:
+        # Keep untouched entries/dumps; refresh only what we rebuilt.
+        merged = dict(existing)
+        merged["entries"].update(manifest["entries"])
+        merged["configs"] = manifest["configs"]
+        merged["buckets"] = manifest["buckets"]
+        merged["params_files"] = dump_params(args.out)
+        merged["trainable_files"] = dump_trainables(args.out)
+        manifest = merged
+    else:
+        manifest["params_files"] = dump_params(args.out)
+        manifest["trainable_files"] = dump_trainables(args.out)
+        manifest["golden"] = dump_golden(args.out, build_all_entries())
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {total} entries + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

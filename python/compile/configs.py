@@ -1,0 +1,98 @@
+"""Model configuration presets for the RoAd reproduction.
+
+Every preset is a fully static description of a tiny LLaMA-style
+transformer.  The same config object is consumed by model.py (forward
+graphs), train.py (training graphs) and aot.py (artifact manifest), and is
+serialized into artifacts/manifest.json so the rust side never has to guess
+shapes.
+
+CPU-only substitution for the paper's LLaMA-7B/13B and RoBERTa backbones:
+the RoAd mechanism is per-linear-layer and architecture-shape independent,
+so small widths/depths preserve every behaviour under study (see
+DESIGN.md §4).
+"""
+
+from dataclasses import dataclass, asdict, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    # Number of adapter slots held in the serving-side banks.
+    n_adapters: int = 16
+    # LoRA rank used for the lora baseline banks / training graphs.
+    lora_rank: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+# Adapted projections: every linear layer of a block, as in the paper
+# ("RoAd is applied to all linear layers").  (name, in_dim_key, out_dim_key)
+PROJS = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+
+def proj_dims(cfg: ModelConfig, proj: str) -> tuple[int, int]:
+    """(d_in, d_out) of a projection."""
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (D, D),
+        "wk": (D, D),
+        "wv": (D, D),
+        "wo": (D, D),
+        "wgate": (D, F),
+        "wup": (D, F),
+        "wdown": (F, D),
+    }[proj]
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+# Unit-test scale: fast pytest sweeps.
+TINY = ModelConfig(
+    name="tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+    d_ff=192, max_seq=128, n_adapters=4, lora_rank=4,
+)
+
+# Serving benchmark scale (Figure 4): deep enough that the adapter path is a
+# measurable fraction of step time, small enough for CPU decode throughput.
+SERVE = ModelConfig(
+    name="serve", vocab=256, d_model=256, n_layers=4, n_heads=8,
+    d_ff=768, max_seq=288, n_adapters=16, lora_rank=8,
+)
+
+# Finetuning-experiment scale (Tables 2-6, Figure 2/5): trained for a few
+# hundred steps per method per task on synthetic suites.
+TRAIN = ModelConfig(
+    name="train", vocab=256, d_model=128, n_layers=3, n_heads=4,
+    d_ff=384, max_seq=96, n_adapters=4, lora_rank=8,
+)
+
+# Second model preset ("LLaMA2/3 analogue" for Table D.2): different
+# width/depth ratio, same interface.
+TRAIN2 = ModelConfig(
+    name="train2", vocab=256, d_model=96, n_layers=4, n_heads=6,
+    d_ff=288, max_seq=96, n_adapters=4, lora_rank=8,
+)
+
+PRESETS = {c.name: c for c in (TINY, SERVE, TRAIN, TRAIN2)}
+
+
+def get(name: str) -> ModelConfig:
+    return PRESETS[name]

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel for the batched-LoRA baseline (paper §2.2).
+
+This is the comparison path of Figure 4: serving heterogeneous requests with
+per-request LoRA modules requires a batched matmul (bmm) chain
+
+    delta_i = (h_i @ B_i) @ A_i            per request i in the batch,
+
+which on a TPU forces [B] *separate* small MXU passes (the adapters differ,
+so the batch cannot be collapsed into one systolic matmul), and on GPUs is
+torch.bmm with its well-documented overhead [Abdelfattah et al.].  The
+kernel grids over the batch; each program owns one request's [L, d1] tile
+and its gathered [d1, r] / [r, d2] adapter matrices.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lora_bmm_kernel(h_ref, lb_ref, la_ref, o_ref):
+    """One request: delta = (h @ lb) @ la."""
+    h = h_ref[...][0]      # [L, d1]
+    lb = lb_ref[...][0]    # [d1, r]
+    la = la_ref[...][0]    # [r, d2]
+    mid = jnp.dot(h, lb, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(mid, la,
+                         preferred_element_type=jnp.float32)[None].astype(
+                             o_ref.dtype)
+
+
+def lora_batched_apply(h, lb_bank, la_bank, ids):
+    """Heterogeneous-batch LoRA delta via per-request bmm.
+
+    h [B, L, d1]; lb_bank [n, d1, r]; la_bank [n, r, d2]; ids [B].
+    Returns the delta to be added to the frozen layer's output.
+    """
+    b, l, d1 = h.shape
+    r = lb_bank.shape[-1]
+    d2 = la_bank.shape[-1]
+    lb = lb_bank[ids]  # [B, d1, r]
+    la = la_bank[ids]  # [B, r, d2]
+    return pl.pallas_call(
+        _lora_bmm_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l, d1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d1, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, r, d2), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l, d2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, d2), h.dtype),
+        interpret=True,
+    )(h, lb, la)

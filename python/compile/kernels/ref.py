@@ -1,0 +1,226 @@
+"""Pure-jnp reference oracles for every Layer-1 kernel.
+
+These are the ground truth the Pallas kernels are tested against (pytest +
+hypothesis in python/tests/), and they double as the documentation of the
+math:
+
+  Eq. 2   R = diag(R_1..R_{d/2}),  R_i = [[cos t, -sin t], [sin t, cos t]]
+  Eq. 3   general block  [[a11 cos t11, -a12 sin t12],
+                          [a21 sin t21,  a22 cos t22]]
+  Eq. 4   z = R1 (*) h + R2 (*) h_hat,  h_hat = (-h2, h1, -h4, h3, ...)
+
+All RoAd variants (RoAd_1/2/4) share the *serving-time* representation of
+two effective vectors (R1, R2) per adapted projection; only the trainable
+parameterization differs (see road_vectors_*).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Pair-swap rearrangement (the h_hat of Eq. 4)
+# ---------------------------------------------------------------------------
+
+def pairswap(h: jnp.ndarray) -> jnp.ndarray:
+    """h_hat: (-h2, h1, -h4, h3, ...) along the last axis."""
+    *lead, d = h.shape
+    assert d % 2 == 0, "RoAd needs an even feature dimension"
+    hp = h.reshape(*lead, d // 2, 2)
+    swapped = jnp.stack([-hp[..., 1], hp[..., 0]], axis=-1)
+    return swapped.reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# RoAd variant parameterizations -> effective (R1, R2) vectors
+# ---------------------------------------------------------------------------
+
+def road_vectors_1(theta: jnp.ndarray, alpha: jnp.ndarray):
+    """RoAd_1: theta, alpha of shape [d/2]; all four cells share them.
+
+    R1 = interleave(a cos t, a cos t), R2 = interleave(a sin t, a sin t).
+    """
+    c = alpha * jnp.cos(theta)
+    s = alpha * jnp.sin(theta)
+    r1 = jnp.stack([c, c], axis=-1).reshape(-1)
+    r2 = jnp.stack([s, s], axis=-1).reshape(-1)
+    return r1, r2
+
+
+def road_vectors_2(theta: jnp.ndarray, alpha: jnp.ndarray):
+    """RoAd_2: theta, alpha of shape [d/2, 2] (row-wise sharing).
+
+    Row 1 of each block uses (a[...,0], t[...,0]), row 2 uses (a[...,1],
+    t[...,1]).  #trainable = 2*d.
+    """
+    c1 = alpha[..., 0] * jnp.cos(theta[..., 0])  # row-1 cos cell
+    s1 = alpha[..., 0] * jnp.sin(theta[..., 0])  # row-1 sin cell (on -h2)
+    s2 = alpha[..., 1] * jnp.sin(theta[..., 1])  # row-2 sin cell (on h1)
+    c2 = alpha[..., 1] * jnp.cos(theta[..., 1])  # row-2 cos cell
+    r1 = jnp.stack([c1, c2], axis=-1).reshape(-1)
+    r2 = jnp.stack([s1, s2], axis=-1).reshape(-1)
+    return r1, r2
+
+
+def road_vectors_4(theta: jnp.ndarray, alpha: jnp.ndarray):
+    """RoAd_4: theta, alpha of shape [d/2, 4] = (t11, t12, t21, t22).
+
+    All four cells distinct.  #trainable = 4*d.
+    """
+    c1 = alpha[..., 0] * jnp.cos(theta[..., 0])
+    s1 = alpha[..., 1] * jnp.sin(theta[..., 1])
+    s2 = alpha[..., 2] * jnp.sin(theta[..., 2])
+    c2 = alpha[..., 3] * jnp.cos(theta[..., 3])
+    r1 = jnp.stack([c1, c2], axis=-1).reshape(-1)
+    r2 = jnp.stack([s1, s2], axis=-1).reshape(-1)
+    return r1, r2
+
+
+ROAD_VECTOR_FNS = {1: road_vectors_1, 2: road_vectors_2, 4: road_vectors_4}
+
+
+def road_dense_matrix(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the block-diagonal R in R^{d x d} (test/merge oracle).
+
+    Block i (rows/cols 2i, 2i+1):
+        [[ r1[2i],   -r2[2i]  ],
+         [ r2[2i+1],  r1[2i+1]]]
+    so that R @ h == r1*h + r2*pairswap(h).
+    """
+    d = r1.shape[0]
+    m = jnp.zeros((d, d), dtype=r1.dtype)
+    idx = jnp.arange(d // 2)
+    m = m.at[2 * idx, 2 * idx].set(r1[2 * idx])
+    m = m.at[2 * idx, 2 * idx + 1].set(-r2[2 * idx])
+    m = m.at[2 * idx + 1, 2 * idx].set(r2[2 * idx + 1])
+    m = m.at[2 * idx + 1, 2 * idx + 1].set(r1[2 * idx + 1])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Adapter application oracles
+# ---------------------------------------------------------------------------
+
+def road_apply(h: jnp.ndarray, r1: jnp.ndarray, r2: jnp.ndarray):
+    """Single-adapter RoAd apply (Eq. 4).  h [..., d]; r1, r2 [d]."""
+    return r1 * h + r2 * pairswap(h)
+
+
+def road_batched_apply(h, r1_bank, r2_bank, ids):
+    """Heterogeneous-batch RoAd apply.
+
+    h [B, L, d]; banks [n_adapters, d]; ids [B] int32 selecting the adapter
+    of each request.  This is the paper's Eq. 4 reformulation: adapter
+    selection is a gather of two vectors, application is element-wise.
+    """
+    r1 = r1_bank[ids][:, None, :]  # [B,1,d]
+    r2 = r2_bank[ids][:, None, :]
+    return r1 * h + r2 * pairswap(h)
+
+
+def lora_batched_apply(h, lb_bank, la_bank, ids):
+    """Heterogeneous-batch LoRA delta (the paper's §2.2 baseline).
+
+    h [B, L, d1]; lb_bank [n, d1, r]; la_bank [n, r, d2]; returns the
+    *delta* (x B_i) A_i per request — a batched matmul (bmm) chain, which is
+    exactly the overhead RoAd eliminates.
+    """
+    lb = lb_bank[ids]                     # [B, d1, r]
+    la = la_bank[ids]                     # [B, r, d2]
+    mid = jnp.einsum("bld,bdr->blr", h, lb)
+    return jnp.einsum("blr,brd->bld", mid, la)
+
+
+def ia3_batched_apply(h, s_bank, ids):
+    """Heterogeneous-batch (IA)^3: pure per-request element-wise scaling."""
+    return s_bank[ids][:, None, :] * h
+
+
+# ---------------------------------------------------------------------------
+# Merge oracles (fold adapters into pretrained weights; paper §3.2)
+# ---------------------------------------------------------------------------
+
+def road_merge(w0: jnp.ndarray, r1: jnp.ndarray, r2: jnp.ndarray):
+    """W = W0 R^T so that x @ W == road_apply(x @ W0, r1, r2).
+
+    w0 [d_in, d_out] (inputs-right convention used by model.py).
+    """
+    r = road_dense_matrix(r1, r2)
+    return w0 @ r.T
+
+
+def lora_merge(w0: jnp.ndarray, lb: jnp.ndarray, la: jnp.ndarray):
+    """W = W0 + B A (LoRA weight merging)."""
+    return w0 + lb @ la
+
+
+# ---------------------------------------------------------------------------
+# OFT (Cayley) oracle — the paper's §2.1/§D.1 comparison baseline
+# ---------------------------------------------------------------------------
+
+def _gauss_jordan_inverse(a: jnp.ndarray) -> jnp.ndarray:
+    """Batched matrix inverse via pivot-free Gauss-Jordan, [n, w, w].
+
+    Written with plain jnp ops (no LAPACK custom-calls) so the graph is
+    loadable by the rust PJRT runtime (xla_extension 0.5.1 rejects jax's
+    lapack_*_ffi custom-call targets).  Pivot-free is safe here: (I - Q)
+    with Q skew-symmetric has symmetric part I, so it is well-conditioned
+    with nonzero leading minors.
+    """
+    n, w, _ = a.shape
+    aug = jnp.concatenate(
+        [a, jnp.broadcast_to(jnp.eye(w, dtype=a.dtype), (n, w, w))], axis=-1)
+
+    def body(i, aug):
+        pivot = aug[:, i, :] / aug[:, i, i][:, None]        # [n, 2w]
+        factors = aug[:, :, i]                               # [n, w]
+        elim = aug - factors[:, :, None] * pivot[:, None, :]
+        # restore the pivot row itself
+        row_mask = (jnp.arange(w) == i)[None, :, None]
+        return jnp.where(row_mask, pivot[:, None, :], elim)
+
+    aug = jax.lax.fori_loop(0, w, body, aug)
+    return aug[:, :, w:]
+
+
+def oft_cayley_blocks(q: jnp.ndarray) -> jnp.ndarray:
+    """Cayley parameterization R_i = (I + Q_i)(I - Q_i)^{-1} per block.
+
+    q [n_blocks, w, w] raw parameters; Q = q - q^T is skew-symmetric.  The
+    matrix inversion per block is exactly the extra cost RoAd avoids
+    (Tab D.1).
+    """
+    w = q.shape[-1]
+    skew = q - jnp.swapaxes(q, -1, -2)
+    eye = jnp.eye(w, dtype=q.dtype)
+    if w == 2:
+        # Closed form: Q = [[0, b], [-b, 0]]; (I-Q)^{-1} = (I+Q)/(1+b^2).
+        b = skew[..., 0, 1]
+        det = 1.0 + b * b
+        r00 = (1.0 - b * b) / det
+        r01 = 2.0 * b / det
+        return jnp.stack(
+            [jnp.stack([r00, r01], axis=-1),
+             jnp.stack([-r01, r00], axis=-1)], axis=-2)
+    inv = _gauss_jordan_inverse(eye - skew)
+    return jnp.einsum("nij,njk->nik", eye + skew, inv)
+
+
+def oft_apply(h: jnp.ndarray, q: jnp.ndarray):
+    """Apply block-diagonal Cayley-orthogonal R to h [..., d]."""
+    *lead, d = h.shape
+    n, w, _ = q.shape
+    assert n * w == d
+    r = oft_cayley_blocks(q)                       # [n, w, w]
+    hb = h.reshape(*lead, n, w)
+    zb = jnp.einsum("...nw,nvw->...nv", hb, r)     # z = R h per block
+    return zb.reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# DII (distributed interchange intervention, Eq. 1) oracle
+# ---------------------------------------------------------------------------
+
+def dii(b, s, r):
+    """DII(b, s, R) = b + R^T (R s - R b).  r [k, d] with orthonormal rows."""
+    return b + (s @ r.T - b @ r.T) @ r

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernels for RoAd (Eq. 4 of the paper).
+
+The compute hot-spot of the serving path is the per-request adapter
+application inside every linear layer:
+
+    z = R1_i (*) h  +  R2_i (*) pairswap(h)        (request i's adapter)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is a pure VPU
+(vector-unit) op — no MXU involvement — which is the TPU restatement of the
+paper's "element-wise instead of bmm" claim.  The grid tiles [batch x
+sequence] and BlockSpec streams [TL, d] tiles of h through VMEM together
+with the request's two [d] adapter vectors; the pair-swap is a lane-local
+even/odd de-interleave (reshape to [TL, d/2, 2]), so the whole kernel is one
+fused multiply-add pass over the tile.
+
+Pallas runs with interpret=True on this CPU image: real-TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute.  Correctness is
+validated against kernels/ref.py under pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _road_tile_kernel(h_ref, r1_ref, r2_ref, o_ref):
+    """One [1, TL, d] tile: z = r1*h + r2*pairswap(h).
+
+    r1_ref / r2_ref are the [1, d] adapter vectors already gathered for this
+    batch row (gather hoisted out of the inner loop — see road_batched_apply).
+    """
+    h = h_ref[...]                       # [1, TL, d]
+    r1 = r1_ref[...][:, None, :]         # [1, 1, d]
+    r2 = r2_ref[...][:, None, :]
+    one, tl, d = h.shape
+    hp = h.reshape(one, tl, d // 2, 2)
+    hhat = jnp.stack([-hp[..., 1], hp[..., 0]], axis=-1).reshape(one, tl, d)
+    o_ref[...] = r1 * h + r2 * hhat
+
+
+def _pick_tile(l: int) -> int:
+    """Sequence tile length: small enough for VMEM, divides the bucket."""
+    for t in (32, 16, 8, 4, 2, 1):
+        if l % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(jax.named_call, name="road_batched_apply")
+def road_batched_apply(h, r1_bank, r2_bank, ids):
+    """Heterogeneous-batch RoAd apply (Eq. 4), Pallas hot path.
+
+    h        [B, L, d]   activations out of the frozen linear layer
+    r1_bank  [n, d]      cos-side effective vectors, one row per adapter
+    r2_bank  [n, d]      sin-side effective vectors
+    ids      [B] int32   adapter id per request
+
+    The adapter gather is O(B*d) and hoisted out of the kernel; the kernel
+    body is a single element-wise pass (the paper's claim: overhead
+    comparable to element-wise multiplication, not bmm).
+    """
+    b, l, d = h.shape
+    r1 = r1_bank[ids]  # [B, d]
+    r2 = r2_bank[ids]
+    tl = _pick_tile(l)
+    grid = (b, l // tl)
+    return pl.pallas_call(
+        _road_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tl, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tl, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, d), h.dtype),
+        interpret=True,
+    )(h, r1, r2)
+
+
+def _road_apply_kernel(h_ref, r1_ref, r2_ref, o_ref):
+    """Single-adapter tile kernel: shared (r1, r2) for the whole batch."""
+    h = h_ref[...]                       # [TL, d]
+    r1 = r1_ref[...]                     # [d]
+    r2 = r2_ref[...]
+    tl, d = h.shape
+    hp = h.reshape(tl, d // 2, 2)
+    hhat = jnp.stack([-hp[..., 1], hp[..., 0]], axis=-1).reshape(tl, d)
+    o_ref[...] = r1[None, :] * h + r2[None, :] * hhat
+
+
+def road_apply(h, r1, r2):
+    """Single-adapter RoAd apply; h [..., d], r1/r2 [d] (training path)."""
+    *lead, d = h.shape
+    rows = 1
+    for s in lead:
+        rows *= s
+    h2 = h.reshape(rows, d)
+    tl = _pick_tile(rows)
+    out = pl.pallas_call(
+        _road_apply_kernel,
+        grid=(rows // tl,),
+        in_specs=[
+            pl.BlockSpec((tl, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tl, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), h.dtype),
+        interpret=True,
+    )(h2, r1, r2)
+    return out.reshape(*lead, d)

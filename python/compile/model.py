@@ -1,0 +1,356 @@
+"""Layer-2 JAX model: a tiny LLaMA-style transformer with pluggable
+per-request adapter modes.
+
+This is the compute graph the rust coordinator serves.  It is written once
+here, lowered by aot.py to HLO text, and never imported at runtime.
+
+Conventions
+-----------
+* Parameters live in a FLAT dict[str, Array] with dotted keys
+  ("blocks.0.wq", ...).  Flattening order = sorted(keys); this order is
+  recorded in artifacts/manifest.json and is the contract with rust.
+* Linear layers use the inputs-left convention: y = x @ W + b, with
+  W [d_in, d_out].  All linears carry a bias (needed for the BitFit
+  baseline; initialized to zero so the base model matches a bias-less one).
+* Adapter modes:
+    "base"  — no adapter inputs (merged weights / pretrained model)
+    "road"  — RoAd banks: per proj r1/r2 [n_adapters, d_out]; applied with
+              the Layer-1 Pallas element-wise kernel (Eq. 4)
+    "lora"  — unmerged LoRA banks: lb [n, d_in, r], la [n, r, d_out];
+              applied with the Layer-1 bmm kernel (the Figure-4 baseline)
+    "ia3"   — scaling banks: s [n, d_out]
+    "oft"   — Cayley-orthogonal block-diagonal banks: q [n, d/w, w, w]
+* Entry points (prefill / decode / reps / logits) take adapter ids [B] so a
+  single executable serves heterogeneous batches — the paper's batching
+  scenario.
+* KV caches are [n_layers, B, n_heads, max_seq, head_dim]; decode writes at
+  per-slot positions so the rust engine can run continuous batching over
+  slots that sit at different sequence offsets.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PROJS, proj_dims
+from .kernels.road import road_batched_apply
+from .kernels.lora import lora_batched_apply
+from .kernels.ia3 import ia3_batched_apply
+from .kernels import ref as kref
+
+ADAPTER_MODES = ("base", "road", "lora", "ia3", "oft")
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / flattening helpers
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Random 'pretrained' parameters (flat dict, deterministic layout)."""
+    params = {}
+    k_emb, k_head, key = jax.random.split(key, 3)
+    scale = cfg.d_model ** -0.5
+    params["tok_emb"] = jax.random.normal(k_emb, (cfg.vocab, cfg.d_model)) * scale
+    params["final_norm"] = jnp.ones((cfg.d_model,))
+    params["lm_head"] = jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) * scale
+    for i in range(cfg.n_layers):
+        pre = f"blocks.{i}"
+        params[f"{pre}.attn_norm"] = jnp.ones((cfg.d_model,))
+        params[f"{pre}.ffn_norm"] = jnp.ones((cfg.d_model,))
+        for proj in PROJS:
+            d_in, d_out = proj_dims(cfg, proj)
+            key, sub = jax.random.split(key)
+            params[f"{pre}.{proj}"] = jax.random.normal(sub, (d_in, d_out)) * (d_in ** -0.5)
+            params[f"{pre}.{proj}.bias"] = jnp.zeros((d_out,))
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """(name, shape) in flattening order, without materializing arrays."""
+    shapes = {
+        "tok_emb": (cfg.vocab, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab),
+    }
+    for i in range(cfg.n_layers):
+        pre = f"blocks.{i}"
+        shapes[f"{pre}.attn_norm"] = (cfg.d_model,)
+        shapes[f"{pre}.ffn_norm"] = (cfg.d_model,)
+        for proj in PROJS:
+            d_in, d_out = proj_dims(cfg, proj)
+            shapes[f"{pre}.{proj}"] = (d_in, d_out)
+            shapes[f"{pre}.{proj}.bias"] = (d_out,)
+    return [(k, shapes[k]) for k in sorted(shapes)]
+
+
+def init_adapters(cfg: ModelConfig, mode: str, n: int | None = None,
+                  oft_w: int = 2) -> dict:
+    """Identity-initialized adapter banks for `mode` (theta=0, alpha=1)."""
+    n = n if n is not None else cfg.n_adapters
+    banks = {}
+    for i in range(cfg.n_layers):
+        pre = f"blocks.{i}"
+        for proj in PROJS:
+            d_in, d_out = proj_dims(cfg, proj)
+            if mode == "road":
+                banks[f"{pre}.{proj}.r1"] = jnp.ones((n, d_out))
+                banks[f"{pre}.{proj}.r2"] = jnp.zeros((n, d_out))
+            elif mode == "lora":
+                banks[f"{pre}.{proj}.lb"] = jnp.zeros((n, d_in, cfg.lora_rank))
+                banks[f"{pre}.{proj}.la"] = jnp.zeros((n, cfg.lora_rank, d_out))
+            elif mode == "ia3":
+                banks[f"{pre}.{proj}.s"] = jnp.ones((n, d_out))
+            elif mode == "oft":
+                banks[f"{pre}.{proj}.q"] = jnp.zeros((n, d_out // oft_w, oft_w, oft_w))
+            elif mode == "base":
+                pass
+            else:
+                raise ValueError(mode)
+    return banks
+
+
+def adapter_specs(cfg: ModelConfig, mode: str, n: int | None = None,
+                  oft_w: int = 2) -> list[tuple[str, tuple[int, ...]]]:
+    banks = init_adapters(cfg, mode, n, oft_w)
+    return [(k, tuple(banks[k].shape)) for k in sorted(banks)]
+
+
+def flatten(d: dict) -> list:
+    return [d[k] for k in sorted(d)]
+
+
+def unflatten(keys: list[str], leaves) -> dict:
+    return dict(zip(sorted(keys), leaves))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """cos/sin tables [..., head_dim/2] for integer positions [...]."""
+    hd = cfg.head_dim
+    inv = cfg.rope_theta ** (-jnp.arange(0, hd, 2) / hd)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv   # [..., hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, H, L, hd]; cos/sin [B, L, hd/2] (or broadcastable)."""
+    xr = x.reshape(*x.shape[:-1], -1, 2)
+    x1, x2 = xr[..., 0], xr[..., 1]
+    c = cos[:, None, :, :]
+    s = sin[:, None, :, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _linear(params, name, x, mode, adapters, ids, oft_w, use_kernels=True):
+    """Adapted linear layer: frozen matmul + per-request adapter epilogue.
+
+    use_kernels=False routes through the pure-jnp oracles instead of the
+    Pallas kernels — required on the training path (interpret-mode Pallas
+    has no reverse-mode autodiff rule); numerics are identical.
+    """
+    z = x @ params[name] + params[f"{name}.bias"]
+    if mode == "base":
+        return z
+    road_f = road_batched_apply if use_kernels else kref.road_batched_apply
+    lora_f = lora_batched_apply if use_kernels else kref.lora_batched_apply
+    ia3_f = ia3_batched_apply if use_kernels else kref.ia3_batched_apply
+    if mode == "road":
+        return road_f(z, adapters[f"{name}.r1"], adapters[f"{name}.r2"], ids)
+    if mode == "lora":
+        return z + lora_f(x, adapters[f"{name}.lb"], adapters[f"{name}.la"],
+                          ids)
+    if mode == "ia3":
+        return ia3_f(z, adapters[f"{name}.s"], ids)
+    if mode == "oft":
+        # Baseline path: build R via Cayley per call (the cost the paper's
+        # Tab D.1 charges OFT for).  Batched over requests via gather.
+        q = adapters[f"{name}.q"][ids]           # [B, nb, w, w]
+        r = kref.oft_cayley_blocks(q.reshape(-1, oft_w, oft_w))
+        r = r.reshape(*q.shape)
+        b, l, d = z.shape
+        zb = z.reshape(b, l, -1, oft_w)
+        out = jnp.einsum("blnw,bnvw->blnv", zb, r)
+        return out.reshape(b, l, d)
+    raise ValueError(mode)
+
+
+def _block(cfg, params, i, x, mode, adapters, ids, cos, sin, kv_mask,
+           k_cache, v_cache, write_onehot, oft_w, use_kernels=True):
+    """One transformer block; returns (x, new_k_cache, new_v_cache).
+
+    k_cache/v_cache: [B, H, T, hd] for this layer.  write_onehot
+    [B, 1, T, 1] marks the cache positions written by this call (prefill
+    writes L positions; decode writes one per slot).  kv_mask [B, 1, q, T]
+    is the attention visibility mask.
+    """
+    pre = f"blocks.{i}"
+    b, l, _ = x.shape
+    h = rmsnorm(x, params[f"{pre}.attn_norm"])
+    lin = lambda nm, inp: _linear(params, f"{pre}.{nm}", inp, mode, adapters,
+                                  ids, oft_w, use_kernels)
+    q = lin("wq", h).reshape(b, l, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = lin("wk", h).reshape(b, l, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = lin("wv", h).reshape(b, l, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # Scatter new K/V into the cache at the positions marked by write_onehot.
+    # (One-hot blend keeps the graph shape-static for AOT compilation.)
+    t = k_cache.shape[2]
+    if l == t:
+        k_new = jnp.where(write_onehot > 0, k, k_cache)
+        v_new = jnp.where(write_onehot > 0, v, v_cache)
+    else:
+        # l < t: expand the written rows into cache positions.
+        # write_onehot here is [B, 1, T, L]: cache position t receives row j.
+        keep = 1.0 - write_onehot.sum(-1, keepdims=True)     # [B,1,T,1]
+        k_new = jnp.einsum("bhld,botl->bhtd", k, write_onehot) + k_cache * keep
+        v_new = jnp.einsum("bhld,botl->bhtd", v, write_onehot) + v_cache * keep
+
+    scores = jnp.einsum("bhqd,bhtd->bhqt", q, k_new) * (cfg.head_dim ** -0.5)
+    scores = jnp.where(kv_mask > 0, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqt,bhtd->bhqd", attn, v_new)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, l, cfg.d_model)
+    x = x + lin("wo", ctx)
+
+    h2 = rmsnorm(x, params[f"{pre}.ffn_norm"])
+    gate = lin("wgate", h2)
+    up = lin("wup", h2)
+    x = x + lin("wdown", jax.nn.silu(gate) * up)
+    return x, k_new, v_new
+
+
+def _embed(params, tokens):
+    return params["tok_emb"][tokens]
+
+
+def _head(params, x):
+    return rmsnorm(x, params["final_norm"]) @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Entry points (lowered to HLO by aot.py)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, mode: str, params: dict, adapters: dict,
+            ids, tokens, lengths, oft_w: int = 2):
+    """Process prompts, fill KV caches, return last-valid-token logits.
+
+    tokens [B, L] int32 (right-padded); lengths [B] int32 (valid lengths).
+    Returns (logits [B, V], k_caches [n_layers,B,H,T,hd], v_caches same).
+    """
+    b, l = tokens.shape
+    t = cfg.max_seq
+    x = _embed(params, tokens)
+    pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+    cos, sin = rope_tables(cfg, pos)
+    # Causal mask over the cache: query j attends cache positions <= j,
+    # and only positions < L have been written.
+    q_idx = jnp.arange(l)[:, None]           # [L,1]
+    t_idx = jnp.arange(t)[None, :]           # [1,T]
+    mask = (t_idx <= q_idx) & (t_idx < l)
+    kv_mask = jnp.broadcast_to(mask[None, None], (b, 1, l, t)).astype(jnp.float32)
+    # Cache scatter: cache position p <- row p for p < L.
+    write = (jnp.arange(t)[:, None] == jnp.arange(l)[None, :]).astype(jnp.float32)
+    write_onehot = jnp.broadcast_to(write[None, None], (b, 1, t, l))
+
+    kcs, vcs = [], []
+    for i in range(cfg.n_layers):
+        kc = jnp.zeros((b, cfg.n_heads, t, cfg.head_dim))
+        vc = jnp.zeros((b, cfg.n_heads, t, cfg.head_dim))
+        x, kc, vc = _block(cfg, params, i, x, mode, adapters, ids, cos, sin,
+                           kv_mask, kc, vc, write_onehot, oft_w)
+        kcs.append(kc)
+        vcs.append(vc)
+    logits_all = _head(params, x)                       # [B, L, V]
+    last = jnp.clip(lengths - 1, 0, l - 1)
+    logits = jnp.take_along_axis(
+        logits_all, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return logits, jnp.stack(kcs), jnp.stack(vcs)
+
+
+def decode(cfg: ModelConfig, mode: str, params: dict, adapters: dict,
+           ids, token, pos, k_caches, v_caches, oft_w: int = 2):
+    """One decode step for B slots at per-slot positions.
+
+    token [B] int32; pos [B] int32 (cache position to write / attend up to);
+    k_caches/v_caches [n_layers, B, H, T, hd].
+    Returns (logits [B, V], k_caches', v_caches').
+    """
+    b = token.shape[0]
+    t = cfg.max_seq
+    x = _embed(params, token[:, None])                  # [B,1,D]
+    cos, sin = rope_tables(cfg, pos[:, None])           # [B,1,hd/2]
+    t_idx = jnp.arange(t)[None, None, None, :]          # [1,1,1,T]
+    kv_mask = (t_idx <= pos[:, None, None, None]).astype(jnp.float32)
+    write_onehot = (jnp.arange(t)[None, None, :, None]
+                    == pos[:, None, None, None]).astype(jnp.float32)  # [B,1,T,1]
+
+    nkc, nvc = [], []
+    for i in range(cfg.n_layers):
+        x, kc, vc = _block(cfg, params, i, x, mode, adapters, ids, cos, sin,
+                           kv_mask, k_caches[i], v_caches[i],
+                           write_onehot, oft_w)
+        nkc.append(kc)
+        nvc.append(vc)
+    logits = _head(params, x)[:, 0]
+    return logits, jnp.stack(nkc), jnp.stack(nvc)
+
+
+def full_forward(cfg: ModelConfig, mode: str, params: dict, adapters: dict,
+                 ids, tokens, oft_w: int = 2, use_kernels: bool = True):
+    """Causal logits for ALL positions (training / eval-loss path).
+
+    tokens [B, L] -> logits [B, L, V].  No KV cache materialization: plain
+    causal attention (cheaper to differentiate).
+    """
+    b, l = tokens.shape
+    x = _embed(params, tokens)
+    pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+    cos, sin = rope_tables(cfg, pos)
+    causal = (jnp.arange(l)[None, :] <= jnp.arange(l)[:, None])
+    kv_mask = jnp.broadcast_to(causal[None, None], (b, 1, l, l)).astype(jnp.float32)
+    write_onehot = jnp.ones((b, 1, l, 1))
+    for i in range(cfg.n_layers):
+        kc = jnp.zeros((b, cfg.n_heads, l, cfg.head_dim))
+        vc = jnp.zeros((b, cfg.n_heads, l, cfg.head_dim))
+        x, _, _ = _block(cfg, params, i, x, mode, adapters, ids, cos, sin,
+                         kv_mask, kc, vc, write_onehot, oft_w, use_kernels)
+    return _head(params, x)
+
+
+def hidden_states(cfg: ModelConfig, mode: str, params: dict, adapters: dict,
+                  ids, tokens, lengths, oft_w: int = 2):
+    """Per-layer last-valid-token hidden states (pilot study, Fig 2/B.1).
+
+    Returns [B, n_layers + 1, D]: embedding output plus each block output.
+    """
+    b, l = tokens.shape
+    x = _embed(params, tokens)
+    pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+    cos, sin = rope_tables(cfg, pos)
+    causal = (jnp.arange(l)[None, :] <= jnp.arange(l)[:, None])
+    kv_mask = jnp.broadcast_to(causal[None, None], (b, 1, l, l)).astype(jnp.float32)
+    write_onehot = jnp.ones((b, 1, l, 1))
+    last = jnp.clip(lengths - 1, 0, l - 1).astype(jnp.int32)
+
+    def take_last(h):
+        return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+
+    outs = [take_last(x)]
+    for i in range(cfg.n_layers):
+        kc = jnp.zeros((b, cfg.n_heads, l, cfg.head_dim))
+        vc = jnp.zeros((b, cfg.n_heads, l, cfg.head_dim))
+        x, _, _ = _block(cfg, params, i, x, mode, adapters, ids, cos, sin,
+                         kv_mask, kc, vc, write_onehot, oft_w)
+        outs.append(take_last(x))
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,304 @@
+"""Layer-2 training graphs: fwd + bwd + AdamW step per PEFT method.
+
+Each method is lowered to a single HLO `train_step` that the rust trainer
+drives in a loop (python never runs at training time either — training is
+part of the reproduced system, Tables 2-6 / Fig 2 / Fig 5 / Tab D.1).
+
+Methods
+-------
+  full      — full finetuning (all parameters trainable)
+  road1/2/4 — the paper's contribution (Table 1 variants); trainables are
+              theta/alpha per adapted projection, mapped to effective
+              (R1, R2) vectors by kernels.ref.road_vectors_* and applied
+              through the Layer-1 element-wise kernel
+  road1_fc1 — RoAd_1 on the first feed-forward layer only (Table 2 row)
+  lora      — LoRA rank cfg.lora_rank on every linear
+  ia3       — (IA)^3 scaling vectors
+  bitfit    — biases (+ norm scales) only
+  oft2/oft16— OFT with Cayley parameterization, block size w (Tab D.1
+              baseline: matrix solves in the step graph)
+  road1_masked — RoAd_1 with a per-block gradient mask, used by the
+              composability experiment (Fig 5) to train disjoint subspaces
+              of R on different tasks simultaneously.
+
+The optimizer is AdamW (paper Tab C.2: weight decay 0), with bias
+correction; `lr` is a runtime input so the rust side owns the schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PROJS, proj_dims
+from . import model
+from .kernels import ref as kref
+
+METHODS = ("full", "road1", "road2", "road4", "road1_fc1", "lora", "ia3",
+           "bitfit", "oft2", "oft16", "road1_masked")
+
+FC1_PROJS = ("wgate", "wup")  # "first feed-forward layer" analogue
+
+
+def method_projs(method: str):
+    return FC1_PROJS if method == "road1_fc1" else PROJS
+
+
+def oft_block_w(method: str) -> int:
+    return {"oft2": 2, "oft16": 16}[method]
+
+
+# ---------------------------------------------------------------------------
+# Trainable parameter initialization per method
+# ---------------------------------------------------------------------------
+
+def init_trainable(cfg: ModelConfig, method: str, key, params=None) -> dict:
+    """Identity-preserving init (theta=0, alpha=1, la=0, q=0, s=1)."""
+    t = {}
+    if method == "full":
+        assert params is not None
+        return dict(params)
+    if method == "bitfit":
+        assert params is not None
+        for k in params:
+            if k.endswith(".bias") or k.endswith("norm"):
+                t[k] = params[k]
+        return t
+    for i in range(cfg.n_layers):
+        pre = f"blocks.{i}"
+        for proj in method_projs(method):
+            d_in, d_out = proj_dims(cfg, proj)
+            nm = f"{pre}.{proj}"
+            if method in ("road1", "road1_fc1", "road1_masked"):
+                t[f"{nm}.theta"] = jnp.zeros((d_out // 2,))
+                t[f"{nm}.alpha"] = jnp.ones((d_out // 2,))
+            elif method == "road2":
+                t[f"{nm}.theta"] = jnp.zeros((d_out // 2, 2))
+                t[f"{nm}.alpha"] = jnp.ones((d_out // 2, 2))
+            elif method == "road4":
+                t[f"{nm}.theta"] = jnp.zeros((d_out // 2, 4))
+                t[f"{nm}.alpha"] = jnp.ones((d_out // 2, 4))
+            elif method == "lora":
+                key, sub = jax.random.split(key)
+                t[f"{nm}.lb"] = jax.random.normal(sub, (d_in, cfg.lora_rank)) * (d_in ** -0.5)
+                t[f"{nm}.la"] = jnp.zeros((cfg.lora_rank, d_out))
+            elif method == "ia3":
+                t[f"{nm}.s"] = jnp.ones((d_out,))
+            elif method in ("oft2", "oft16"):
+                w = oft_block_w(method)
+                t[f"{nm}.q"] = jnp.zeros((d_out // w, w, w))
+            else:
+                raise ValueError(method)
+    return t
+
+
+def trainable_specs(cfg: ModelConfig, method: str):
+    p = model.init_params(cfg, jax.random.PRNGKey(0)) \
+        if method in ("full", "bitfit") else None
+    t = init_trainable(cfg, method, jax.random.PRNGKey(0), p)
+    return [(k, tuple(t[k].shape)) for k in sorted(t)]
+
+
+def n_trainable(cfg: ModelConfig, method: str) -> int:
+    return sum(
+        int(jnp.prod(jnp.array(s))) for _, s in trainable_specs(cfg, method))
+
+
+# ---------------------------------------------------------------------------
+# Method -> forward mapping
+# ---------------------------------------------------------------------------
+
+def road_variant(method: str) -> int:
+    return {"road1": 1, "road1_fc1": 1, "road1_masked": 1,
+            "road2": 2, "road4": 4}[method]
+
+
+def build_forward_inputs(cfg: ModelConfig, method: str, params: dict,
+                         trainable: dict):
+    """Map (frozen params, trainable) -> (eff_params, mode, adapters, oft_w).
+
+    Adapter banks get n=1 rows; ids are all-zero at train time.
+    """
+    if method == "full":
+        return trainable, "base", {}, 2
+    if method == "bitfit":
+        eff = dict(params)
+        eff.update(trainable)
+        return eff, "base", {}, 2
+    adapters = {}
+    if method.startswith("road"):
+        var = road_variant(method)
+        vec = kref.ROAD_VECTOR_FNS[var]
+        # Projections NOT adapted by this method keep identity banks.
+        for i in range(cfg.n_layers):
+            pre = f"blocks.{i}"
+            for proj in PROJS:
+                _, d_out = proj_dims(cfg, proj)
+                nm = f"{pre}.{proj}"
+                if f"{nm}.theta" in trainable:
+                    r1, r2 = vec(trainable[f"{nm}.theta"], trainable[f"{nm}.alpha"])
+                else:
+                    r1 = jnp.ones((d_out,))
+                    r2 = jnp.zeros((d_out,))
+                adapters[f"{nm}.r1"] = r1[None]
+                adapters[f"{nm}.r2"] = r2[None]
+        return params, "road", adapters, 2
+    if method == "lora":
+        for k, a in trainable.items():
+            adapters[k] = a[None]
+        return params, "lora", adapters, 2
+    if method == "ia3":
+        for k, a in trainable.items():
+            adapters[k] = a[None]
+        return params, "ia3", adapters, 2
+    if method in ("oft2", "oft16"):
+        for k, a in trainable.items():
+            adapters[k] = a[None]
+        return params, "oft", adapters, oft_block_w(method)
+    raise ValueError(method)
+
+
+# ---------------------------------------------------------------------------
+# Loss / AdamW
+# ---------------------------------------------------------------------------
+
+def masked_nll(logits, targets, mask):
+    """Per-example mean negative log-likelihood of `targets` under `logits`.
+
+    logits [B, L, V]; targets [B, L] int32; mask [B, L] float (1 = counted).
+    Returns ([B] per-example nll, scalar mean over counted tokens).
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    per_ex = -(tgt * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+    total = -(tgt * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return per_ex, total
+
+
+def adamw_update(g, p, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v
+
+
+# ---------------------------------------------------------------------------
+# Entry points lowered by aot.py
+# ---------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, method: str, frozen: dict, trainable: dict,
+               m: dict, v: dict, step, lr, tokens, targets, mask,
+               grad_mask: dict | None = None):
+    """One AdamW step.  Returns (trainable', m', v', loss).
+
+    grad_mask (road1_masked only): dict with the same keys as trainable,
+    multiplying gradients element-wise — this is how the composability
+    experiment trains disjoint halves of R on different tasks.
+    """
+
+    def loss_fn(tr):
+        eff, mode, adapters, oft_w = build_forward_inputs(cfg, method, frozen, tr)
+        ids = jnp.zeros((tokens.shape[0],), dtype=jnp.int32)
+        logits = model.full_forward(cfg, mode, eff, adapters, ids, tokens,
+                                    oft_w=oft_w, use_kernels=False)
+        _, total = masked_nll(logits, targets, mask)
+        return total
+
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+    if grad_mask is not None:
+        grads = {k: g * grad_mask[k] for k, g in grads.items()}
+    new_t, new_m, new_v = {}, {}, {}
+    for k in trainable:
+        new_t[k], new_m[k], new_v[k] = adamw_update(
+            grads[k], trainable[k], m[k], v[k], step, lr)
+    return new_t, new_m, new_v, loss
+
+
+def eval_loss(cfg: ModelConfig, method: str, frozen: dict, trainable: dict,
+              tokens, targets, mask):
+    """Per-example + mean NLL with the method's trainables applied."""
+    eff, mode, adapters, oft_w = build_forward_inputs(cfg, method, frozen,
+                                                      trainable)
+    ids = jnp.zeros((tokens.shape[0],), dtype=jnp.int32)
+    logits = model.full_forward(cfg, mode, eff, adapters, ids, tokens,
+                                oft_w=oft_w)
+    per_ex, total = masked_nll(logits, targets, mask)
+    return per_ex, total
+
+
+def last_logits(cfg: ModelConfig, method: str, frozen: dict, trainable: dict,
+                tokens, lengths):
+    """Logits at the last valid position (classification eval path)."""
+    eff, mode, adapters, oft_w = build_forward_inputs(cfg, method, frozen,
+                                                      trainable)
+    b, l = tokens.shape
+    ids = jnp.zeros((b,), dtype=jnp.int32)
+    logits = model.full_forward(cfg, mode, eff, adapters, ids, tokens,
+                                oft_w=oft_w)
+    last = jnp.clip(lengths - 1, 0, l - 1).astype(jnp.int32)
+    return jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Disentanglement head (pilot study 2, Fig 2 Right)
+# ---------------------------------------------------------------------------
+
+HEAD_MODES = ("normal", "mag", "angle")
+
+
+def head_init(d: int, n_classes: int, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, d)) * (d ** -0.5),
+        "b1": jnp.zeros((d,)),
+        "w2": jax.random.normal(k2, (d, n_classes)) * (d ** -0.5),
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def head_forward(head: dict, reps, head_mode: str):
+    """Two-layer classifier over frozen-backbone representations.
+
+    First layer per the paper's disentanglement protocol:
+      normal: z = x @ W1
+      mag:    z_i = ||W1[:, i]|| * ||x||         (magnitude only)
+      angle:  z_i = cos(W1[:, i], x)             (angle only)
+    """
+    x = reps  # [B, D]
+    w1 = head["w1"]
+    if head_mode == "normal":
+        z = x @ w1 + head["b1"]
+    elif head_mode == "mag":
+        wn = jnp.linalg.norm(w1, axis=0)          # [D]
+        xn = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        z = wn[None, :] * xn + head["b1"]
+    elif head_mode == "angle":
+        wn = jnp.maximum(jnp.linalg.norm(w1, axis=0), 1e-6)
+        xn = jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+        z = (x @ w1) / (wn[None, :] * xn) + head["b1"]
+    else:
+        raise ValueError(head_mode)
+    h = jax.nn.relu(z)
+    return h @ head["w2"] + head["b2"]
+
+
+def head_train_step(head: dict, m: dict, v: dict, step, lr, reps, labels,
+                    head_mode: str):
+    def loss_fn(hd):
+        logits = head_forward(hd, reps, head_mode)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                                   axis=-1)[:, 0]
+        return nll.mean()
+
+    loss, grads = jax.value_and_grad(loss_fn)(head)
+    nh, nm, nv = {}, {}, {}
+    for k in head:
+        nh[k], nm[k], nv[k] = adamw_update(grads[k], head[k], m[k], v[k],
+                                           step, lr)
+    return nh, nm, nv, loss
+
+
+def head_logits(head: dict, reps, head_mode: str):
+    return head_forward(head, reps, head_mode)

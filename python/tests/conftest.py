@@ -1,0 +1,16 @@
+import os
+
+import jax
+import pytest
+
+# Deterministic, CPU-only test environment.
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")

@@ -1,0 +1,302 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/batch compositions; explicit tests pin down the
+algebraic invariants of the RoAd transform (Eq. 2-4 of the paper).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, road, lora, ia3
+
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# pairswap
+# ---------------------------------------------------------------------------
+
+class TestPairswap:
+    def test_example(self):
+        h = jnp.array([1.0, 2.0, 3.0, 4.0])
+        np.testing.assert_allclose(ref.pairswap(h), [-2.0, 1.0, -4.0, 3.0])
+
+    def test_double_swap_negates(self):
+        h = rand(0, (3, 8))
+        np.testing.assert_allclose(ref.pairswap(ref.pairswap(h)), -h, **TOL)
+
+    def test_norm_preserved(self):
+        h = rand(1, (5, 16))
+        np.testing.assert_allclose(
+            jnp.linalg.norm(ref.pairswap(h), axis=-1),
+            jnp.linalg.norm(h, axis=-1), **TOL)
+
+    def test_orthogonal_to_input_per_pair(self):
+        # Each 2D pair of pairswap(h) is orthogonal to the same pair of h.
+        h = rand(2, (4, 12))
+        hp = h.reshape(4, 6, 2)
+        sp = ref.pairswap(h).reshape(4, 6, 2)
+        dots = (hp * sp).sum(-1)
+        np.testing.assert_allclose(dots, jnp.zeros_like(dots), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RoAd variant parameterizations
+# ---------------------------------------------------------------------------
+
+class TestRoadVectors:
+    def test_identity_init(self):
+        for var, shape in [(1, (8,)), (2, (8, 2)), (4, (8, 4))]:
+            theta = jnp.zeros(shape)
+            alpha = jnp.ones(shape)
+            r1, r2 = ref.ROAD_VECTOR_FNS[var](theta, alpha)
+            np.testing.assert_allclose(r1, jnp.ones(16))
+            np.testing.assert_allclose(r2, jnp.zeros(16))
+
+    def test_road1_pure_rotation_preserves_pair_norm(self):
+        theta = rand(3, (8,))
+        alpha = jnp.ones((8,))
+        r1, r2 = ref.road_vectors_1(theta, alpha)
+        h = rand(4, (5, 16))
+        z = ref.road_apply(h, r1, r2)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(z.reshape(5, 8, 2), axis=-1),
+            jnp.linalg.norm(h.reshape(5, 8, 2), axis=-1), **TOL)
+
+    def test_road1_alpha_scales_magnitude(self):
+        theta = jnp.zeros((4,))
+        alpha = jnp.full((4,), 2.0)
+        r1, r2 = ref.road_vectors_1(theta, alpha)
+        h = rand(5, (3, 8))
+        np.testing.assert_allclose(ref.road_apply(h, r1, r2), 2.0 * h, **TOL)
+
+    def test_road2_reduces_to_road1_when_shared(self):
+        theta = rand(6, (8,))
+        alpha = 1.0 + 0.1 * rand(7, (8,))
+        r1a, r2a = ref.road_vectors_1(theta, alpha)
+        t2 = jnp.stack([theta, theta], axis=-1)
+        a2 = jnp.stack([alpha, alpha], axis=-1)
+        r1b, r2b = ref.road_vectors_2(t2, a2)
+        np.testing.assert_allclose(r1a, r1b, **TOL)
+        np.testing.assert_allclose(r2a, r2b, **TOL)
+
+    def test_road4_reduces_to_road2(self):
+        t2 = rand(8, (8, 2))
+        a2 = 1.0 + 0.1 * rand(9, (8, 2))
+        r1a, r2a = ref.road_vectors_2(t2, a2)
+        t4 = jnp.stack([t2[:, 0], t2[:, 0], t2[:, 1], t2[:, 1]], axis=-1)
+        a4 = jnp.stack([a2[:, 0], a2[:, 0], a2[:, 1], a2[:, 1]], axis=-1)
+        r1b, r2b = ref.road_vectors_4(t4, a4)
+        np.testing.assert_allclose(r1a, r1b, **TOL)
+        np.testing.assert_allclose(r2a, r2b, **TOL)
+
+    def test_trainable_counts_match_table1(self):
+        d = 32
+        # Table 1: d, 2d, 4d trainable parameters for RoAd_1/2/4 (theta and
+        # alpha together: road1 stores d/2 theta + d/2 alpha = d, etc).
+        assert 2 * (d // 2) == d
+        assert 2 * (d // 2) * 2 == 2 * d
+        assert 2 * (d // 2) * 4 == 4 * d
+
+
+# ---------------------------------------------------------------------------
+# Dense-matrix / sparse-apply equivalence (Eq. 4)
+# ---------------------------------------------------------------------------
+
+class TestDenseEquivalence:
+    def test_apply_matches_dense_matmul(self):
+        theta = rand(10, (8,))
+        alpha = 1.0 + 0.2 * rand(11, (8,))
+        r1, r2 = ref.road_vectors_1(theta, alpha)
+        m = ref.road_dense_matrix(r1, r2)
+        h = rand(12, (5, 16))
+        np.testing.assert_allclose(ref.road_apply(h, r1, r2), h @ m.T, **TOL)
+
+    def test_dense_matrix_orthogonal_when_pure_rotation(self):
+        theta = rand(13, (8,))
+        r1, r2 = ref.road_vectors_1(theta, jnp.ones((8,)))
+        m = ref.road_dense_matrix(r1, r2)
+        np.testing.assert_allclose(m @ m.T, jnp.eye(16), atol=1e-5)
+
+    def test_merge_equals_apply(self):
+        theta = rand(14, (8,))
+        alpha = 1.0 + 0.2 * rand(15, (8,))
+        r1, r2 = ref.road_vectors_1(theta, alpha)
+        w0 = rand(16, (12, 16))
+        x = rand(17, (5, 12))
+        merged = ref.road_merge(w0, r1, r2)
+        np.testing.assert_allclose(
+            x @ merged, ref.road_apply(x @ w0, r1, r2), **TOL)
+
+    def test_lora_merge_equals_apply(self):
+        w0 = rand(18, (12, 16))
+        lb = rand(19, (12, 4))
+        la = rand(20, (4, 16))
+        x = rand(21, (5, 12))
+        np.testing.assert_allclose(
+            x @ ref.lora_merge(w0, lb, la),
+            x @ w0 + (x @ lb) @ la, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracles (hypothesis shape sweeps)
+# ---------------------------------------------------------------------------
+
+shapes = st.tuples(st.integers(1, 5), st.sampled_from([1, 2, 3, 4, 8, 16]),
+                   st.sampled_from([2, 4, 8, 16, 64]))
+
+
+class TestPallasVsRef:
+    @settings(max_examples=15, deadline=None)
+    @given(shapes, st.integers(1, 6), st.integers(0, 10 ** 6))
+    def test_road_batched(self, shp, n_adapters, seed):
+        b, l, d = shp
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        h = jax.random.normal(k1, (b, l, d))
+        r1 = jax.random.normal(k2, (n_adapters, d))
+        r2 = jax.random.normal(k3, (n_adapters, d))
+        ids = jax.random.randint(k4, (b,), 0, n_adapters)
+        np.testing.assert_allclose(
+            road.road_batched_apply(h, r1, r2, ids),
+            ref.road_batched_apply(h, r1, r2, ids), **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(shapes, st.integers(0, 10 ** 6))
+    def test_road_single(self, shp, seed):
+        b, l, d = shp
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        h = jax.random.normal(k1, (b, l, d))
+        r1 = jax.random.normal(k2, (d,))
+        r2 = jax.random.normal(k3, (d,))
+        np.testing.assert_allclose(road.road_apply(h, r1, r2),
+                                   ref.road_apply(h, r1, r2), **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(shapes, st.integers(1, 4), st.sampled_from([1, 2, 4, 8]),
+           st.integers(0, 10 ** 6))
+    def test_lora_batched(self, shp, n_adapters, rank, seed):
+        b, l, d1 = shp
+        d2 = d1  # output dim
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        h = jax.random.normal(k1, (b, l, d1))
+        lb = jax.random.normal(k2, (n_adapters, d1, rank))
+        la = jax.random.normal(k3, (n_adapters, rank, d2))
+        ids = jax.random.randint(k4, (b,), 0, n_adapters)
+        np.testing.assert_allclose(
+            lora.lora_batched_apply(h, lb, la, ids),
+            ref.lora_batched_apply(h, lb, la, ids), rtol=1e-3, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(shapes, st.integers(1, 6), st.integers(0, 10 ** 6))
+    def test_ia3_batched(self, shp, n_adapters, seed):
+        b, l, d = shp
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        h = jax.random.normal(k1, (b, l, d))
+        s = jax.random.normal(k2, (n_adapters, d))
+        ids = jax.random.randint(k3, (b,), 0, n_adapters)
+        np.testing.assert_allclose(ia3.ia3_batched_apply(h, s, ids),
+                                   ref.ia3_batched_apply(h, s, ids), **TOL)
+
+    def test_heterogeneous_equals_per_request_loop(self):
+        """Paper §3.2 batching: one batched call == per-request calls."""
+        b, l, d, n = 4, 8, 16, 4
+        h = rand(30, (b, l, d))
+        r1 = rand(31, (n, d))
+        r2 = rand(32, (n, d))
+        ids = jnp.array([3, 1, 0, 2], dtype=jnp.int32)
+        batched = road.road_batched_apply(h, r1, r2, ids)
+        for i in range(b):
+            solo = ref.road_apply(h[i], r1[ids[i]], r2[ids[i]])
+            np.testing.assert_allclose(batched[i], solo, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# OFT baseline (Cayley)
+# ---------------------------------------------------------------------------
+
+class TestOft:
+    @pytest.mark.parametrize("w", [2, 4, 8, 16])
+    def test_cayley_orthogonal(self, w):
+        q = 0.3 * rand(40 + w, (5, w, w))
+        r = ref.oft_cayley_blocks(q)
+        eye = jnp.broadcast_to(jnp.eye(w), (5, w, w))
+        np.testing.assert_allclose(
+            jnp.einsum("nij,nkj->nik", r, r), eye, atol=1e-4)
+
+    def test_gauss_jordan_matches_numpy(self):
+        a = np.eye(8, dtype=np.float32)[None] + \
+            0.2 * np.random.default_rng(0).standard_normal((3, 8, 8)).astype(np.float32)
+        a = a + np.transpose(a, (0, 2, 1))  # symmetric + dominant-ish
+        a += 8 * np.eye(8, dtype=np.float32)
+        inv = ref._gauss_jordan_inverse(jnp.asarray(a))
+        np.testing.assert_allclose(inv, np.linalg.inv(a), rtol=1e-3,
+                                   atol=1e-4)
+
+    def test_closed_form_w2_matches_general(self):
+        q = 0.4 * rand(50, (6, 2, 2))
+        r2 = ref.oft_cayley_blocks(q)
+        # general Gauss-Jordan path
+        skew = q - jnp.swapaxes(q, -1, -2)
+        eye = jnp.broadcast_to(jnp.eye(2), (6, 2, 2))
+        inv = ref._gauss_jordan_inverse(eye - skew)
+        rg = jnp.einsum("nij,njk->nik", eye + skew, inv)
+        np.testing.assert_allclose(r2, rg, rtol=1e-4, atol=1e-5)
+
+    def test_identity_at_init(self):
+        q = jnp.zeros((4, 2, 2))
+        h = rand(51, (3, 8))
+        np.testing.assert_allclose(ref.oft_apply(h, q), h, **TOL)
+
+    def test_oft_w2_is_2d_rotation(self):
+        """RoAd == OFT_{w=2} (paper §3.2): same orbit, different params."""
+        q = jnp.array([[[0.0, 0.7], [0.0, 0.0]]])
+        r = ref.oft_cayley_blocks(q)[0]
+        # r is [[cos a, sin a], [-sin a, cos a]] for a = 2*atan(0.7)
+        a = 2 * np.arctan(0.7)
+        np.testing.assert_allclose(
+            r, [[np.cos(a), np.sin(a)], [-np.sin(a), np.cos(a)]], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# DII framing (Eq. 1, paper §2.3/§3.2)
+# ---------------------------------------------------------------------------
+
+class TestDII:
+    def test_road_is_dii_with_source_h(self):
+        """Phi(h) = R h = h + R^T(R h - R h) ... wait — verify the paper's
+        claim via the rotation form: with orthonormal R rows and s = h,
+        DII(b=h, s=h, R) = h; RoAd instead *rotates* in the kept subspace.
+        We verify the DII identity itself and that pure-rotation RoAd
+        preserves the complement of the intervened subspace."""
+        d, k = 16, 4
+        r = jnp.linalg.qr(rand(60, (d, d)))[0][:k]  # orthonormal rows [k,d]
+        b = rand(61, (3, d))
+        s = rand(62, (3, d))
+        out = ref.dii(b, s, r)
+        # Projection onto rowspace(r) equals s's projection:
+        np.testing.assert_allclose(out @ r.T, s @ r.T, atol=1e-4)
+        # Complement untouched:
+        comp = jnp.eye(d) - r.T @ r
+        np.testing.assert_allclose(out @ comp, b @ comp, atol=1e-4)
+
+    def test_subspace_rotation_locality(self):
+        """Rotating blocks i<d/4 leaves dims >= d/2 untouched — the basis of
+        the composability protocol (train disjoint halves of R)."""
+        d = 16
+        theta = jnp.zeros((d // 2,)).at[: d // 4].set(0.5)
+        r1, r2 = ref.road_vectors_1(theta, jnp.ones((d // 2,)))
+        h = rand(63, (5, d))
+        z = ref.road_apply(h, r1, r2)
+        np.testing.assert_allclose(z[:, d // 2:], h[:, d // 2:], **TOL)
+        assert float(jnp.abs(z[:, : d // 2] - h[:, : d // 2]).max()) > 1e-3

@@ -1,0 +1,183 @@
+"""Layer-2 model correctness: entry-point consistency across adapter modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.kernels import ref
+
+CFG = configs.TINY
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, KEY)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, CFG.vocab)
+    lens = jnp.array([12, 7], dtype=jnp.int32)
+    ids = jnp.array([0, 1], dtype=jnp.int32)
+    return toks, lens, ids
+
+
+def random_road_banks(cfg, n, seed=5):
+    banks = {}
+    k = jax.random.PRNGKey(seed)
+    for i in range(cfg.n_layers):
+        for proj in configs.PROJS:
+            _, d_out = configs.proj_dims(cfg, proj)
+            k, k1, k2 = jax.random.split(k, 3)
+            theta = 0.3 * jax.random.normal(k1, (n, d_out // 2))
+            alpha = 1.0 + 0.1 * jax.random.normal(k2, (n, d_out // 2))
+            r1, r2 = jax.vmap(ref.road_vectors_1)(theta, alpha)
+            banks[f"blocks.{i}.{proj}.r1"] = r1
+            banks[f"blocks.{i}.{proj}.r2"] = r2
+    return banks
+
+
+class TestIdentityAdapters:
+    """theta=0, alpha=1 must reproduce the base model exactly — the paper's
+    'preserve the starting point' initialization property."""
+
+    @pytest.mark.parametrize("mode", ["road", "lora", "ia3", "oft"])
+    def test_prefill_matches_base(self, params, batch, mode):
+        toks, lens, ids = batch
+        ad = model.init_adapters(CFG, mode)
+        base, _, _ = model.prefill(CFG, "base", params, {}, ids, toks, lens)
+        got, _, _ = model.prefill(CFG, mode, params, ad, ids, toks, lens)
+        np.testing.assert_allclose(got, base, rtol=2e-4, atol=2e-4)
+
+
+class TestPrefillDecodeConsistency:
+    def test_prefill_logits_match_full_forward(self, params, batch):
+        toks, lens, ids = batch
+        lg, _, _ = model.prefill(CFG, "base", params, {}, ids, toks, lens)
+        full = model.full_forward(CFG, "base", params, {}, ids, toks)
+        np.testing.assert_allclose(lg[0], full[0, 11], rtol=2e-3, atol=1e-3)
+        np.testing.assert_allclose(lg[1], full[1, 6], rtol=2e-3, atol=1e-3)
+
+    def test_decode_step_matches_full_forward(self, params, batch):
+        toks, lens, ids = batch
+        _, kc, vc = model.prefill(CFG, "base", params, {}, ids, toks, lens)
+        nxt = jnp.array([42, 99], dtype=jnp.int32)
+        lg2, _, _ = model.decode(CFG, "base", params, {}, ids, nxt, lens,
+                                 kc, vc)
+        ext = jnp.concatenate([toks[0], jnp.array([42])])[None]
+        full = model.full_forward(CFG, "base", params, {}, ids[:1], ext)
+        np.testing.assert_allclose(lg2[0], full[0, 12], rtol=5e-3, atol=2e-3)
+
+    def test_two_decode_steps_chain(self, params, batch):
+        toks, lens, ids = batch
+        _, kc, vc = model.prefill(CFG, "base", params, {}, ids, toks, lens)
+        t1 = jnp.array([10, 11], dtype=jnp.int32)
+        _, kc, vc = model.decode(CFG, "base", params, {}, ids, t1, lens, kc, vc)
+        t2 = jnp.array([20, 21], dtype=jnp.int32)
+        lg, _, _ = model.decode(CFG, "base", params, {}, ids, t2, lens + 1,
+                                kc, vc)
+        ext = jnp.concatenate([toks[0], jnp.array([10, 20])])[None]
+        full = model.full_forward(CFG, "base", params, {}, ids[:1], ext)
+        np.testing.assert_allclose(lg[0], full[0, 13], rtol=5e-3, atol=2e-3)
+
+    def test_road_decode_matches_merged_weights(self, params, batch):
+        """Serving equivalence: unmerged RoAd banks == weights merged with
+        W R^T (paper §3.2 zero-overhead-merge claim)."""
+        toks, lens, ids = batch
+        banks = random_road_banks(CFG, CFG.n_adapters)
+        # Build a merged-params model for adapter id 1.
+        merged = dict(params)
+        for i in range(CFG.n_layers):
+            for proj in configs.PROJS:
+                nm = f"blocks.{i}.{proj}"
+                r1 = banks[f"{nm}.r1"][1]
+                r2 = banks[f"{nm}.r2"][1]
+                merged[nm] = ref.road_merge(params[nm], r1, r2)
+                rmat = ref.road_dense_matrix(r1, r2)
+                merged[f"{nm}.bias"] = rmat @ params[f"{nm}.bias"]
+        ids1 = jnp.array([1, 1], dtype=jnp.int32)
+        lg_road, _, _ = model.prefill(CFG, "road", params, banks, ids1,
+                                      toks, lens)
+        lg_merged, _, _ = model.prefill(CFG, "base", merged, {}, ids1,
+                                        toks, lens)
+        np.testing.assert_allclose(lg_road, lg_merged, rtol=5e-3, atol=2e-3)
+
+
+class TestHeterogeneousBatch:
+    def test_each_slot_uses_its_own_adapter(self, params, batch):
+        """Slot isolation: batched heterogeneous == per-request homogeneous."""
+        toks, lens, _ = batch
+        banks = random_road_banks(CFG, CFG.n_adapters)
+        ids = jnp.array([3, 1], dtype=jnp.int32)
+        lg, _, _ = model.prefill(CFG, "road", params, banks, ids, toks, lens)
+        for slot in range(2):
+            solo_ids = jnp.full((2,), ids[slot], dtype=jnp.int32)
+            solo, _, _ = model.prefill(CFG, "road", params, banks, solo_ids,
+                                       toks, lens)
+            np.testing.assert_allclose(lg[slot], solo[slot], rtol=2e-4,
+                                       atol=2e-4)
+
+
+class TestHiddenStates:
+    def test_shapes_and_embedding_row(self, params, batch):
+        toks, lens, ids = batch
+        hs = model.hidden_states(CFG, "base", params, {}, ids, toks, lens)
+        assert hs.shape == (2, CFG.n_layers + 1, CFG.d_model)
+        np.testing.assert_allclose(hs[0, 0], params["tok_emb"][toks[0, 11]],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(hs[1, 0], params["tok_emb"][toks[1, 6]],
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        pos = jnp.arange(6)[None]
+        cos, sin = model.rope_tables(CFG, pos)
+        x = jax.random.normal(jax.random.PRNGKey(3),
+                              (1, CFG.n_heads, 6, CFG.head_dim))
+        y = model.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                                   jnp.linalg.norm(x, axis=-1), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_rope_position_zero_is_identity(self):
+        pos = jnp.zeros((1, 1), dtype=jnp.int32)
+        cos, sin = model.rope_tables(CFG, pos)
+        x = jax.random.normal(jax.random.PRNGKey(4),
+                              (1, CFG.n_heads, 1, CFG.head_dim))
+        np.testing.assert_allclose(model.apply_rope(x, cos, sin), x,
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_rope_relative_property(self):
+        """<RoPE(q,m), RoPE(k,n)> depends only on m-n."""
+        hd = CFG.head_dim
+        q = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, hd))
+        k = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, hd))
+
+        def dot_at(m, n):
+            cm, sm = model.rope_tables(CFG, jnp.array([[m]]))
+            cn, sn = model.rope_tables(CFG, jnp.array([[n]]))
+            qr = model.apply_rope(q, cm, sm)
+            kr = model.apply_rope(k, cn, sn)
+            return float((qr * kr).sum())
+
+        assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-3
+
+
+class TestParamSpecs:
+    def test_specs_match_init(self, params):
+        specs = model.param_specs(CFG)
+        assert [k for k, _ in specs] == sorted(params)
+        for k, s in specs:
+            assert tuple(params[k].shape) == s
+
+    def test_adapter_specs_match_init(self):
+        for mode in ("road", "lora", "ia3", "oft"):
+            banks = model.init_adapters(CFG, mode)
+            specs = model.adapter_specs(CFG, mode)
+            assert [k for k, _ in specs] == sorted(banks)
+            for k, s in specs:
+                assert tuple(banks[k].shape) == s

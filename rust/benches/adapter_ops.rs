@@ -1,0 +1,87 @@
+//! Microbench of the host-side adapter operations: RoAd's element-wise
+//! rotate (Eq. 4) vs LoRA's rank-r matmul delta vs weight merging, across
+//! ranks — the rank axis of Figure 4 (Left) at the op level, plus the
+//! merge cost that makes "merged serving" free at request time.
+//!
+//! ```bash
+//! cargo bench --bench adapter_ops
+//! ```
+
+use std::time::Instant;
+
+use road::adapters::RoadVectors;
+use road::model::{lora_merge_weight, road_merge_weight, road_rotate_vec};
+use road::tensor::HostTensor;
+use road::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<40} {:>10.2} ns/op", per * 1e9);
+    per
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(1);
+    let d_in = 256usize;
+    let d_out = 256usize;
+    let iters = 2000;
+
+    let h: Vec<f32> = rng.normal_vec(d_out, 1.0);
+    let theta: Vec<f32> = rng.normal_vec(d_out / 2, 0.3);
+    let alpha = vec![1.0f32; d_out / 2];
+    let v = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+
+    println!("# adapter epilogue cost per token (d={d_out})");
+    let road_t = bench("road rotate (element-wise, Eq. 4)", iters, || {
+        std::hint::black_box(road_rotate_vec(
+            std::hint::black_box(&h),
+            &v.r1,
+            &v.r2,
+        ));
+    });
+
+    let x: Vec<f32> = rng.normal_vec(d_in, 1.0);
+    for rank in [4usize, 8, 16, 32] {
+        let lb: Vec<f32> = rng.normal_vec(d_in * rank, 0.05);
+        let la: Vec<f32> = rng.normal_vec(rank * d_out, 0.05);
+        let lora_t = bench(&format!("lora delta (bmm-equivalent, r={rank})"), iters, || {
+            // z += (x @ lb) @ la
+            let mut mid = vec![0f32; rank];
+            for r in 0..rank {
+                let mut acc = 0f32;
+                for i in 0..d_in {
+                    acc += x[i] * lb[i * rank + r];
+                }
+                mid[r] = acc;
+            }
+            let mut z = vec![0f32; d_out];
+            for r in 0..rank {
+                let m = mid[r];
+                for j in 0..d_out {
+                    z[j] += m * la[r * d_out + j];
+                }
+            }
+            std::hint::black_box(z);
+        });
+        println!("    -> lora(r={rank}) / road = {:.1}x", lora_t / road_t);
+    }
+
+    println!("\n# one-time merge cost (amortized to zero at serving time)");
+    let w = HostTensor::f32(vec![d_in, d_out], rng.normal_vec(d_in * d_out, 0.05));
+    bench("road merge  W <- W R^T", 200, || {
+        std::hint::black_box(road_merge_weight(&w, &v.r1, &v.r2));
+    });
+    let lb: Vec<f32> = rng.normal_vec(d_in * 8, 0.05);
+    let la: Vec<f32> = rng.normal_vec(8 * d_out, 0.05);
+    bench("lora merge  W <- W + BA (r=8)", 200, || {
+        std::hint::black_box(lora_merge_weight(&w, &lb, &la, 8));
+    });
+}

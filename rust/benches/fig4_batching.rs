@@ -1,0 +1,55 @@
+//! Figure 4 bench: end-to-end heterogeneous-batching throughput sweeps
+//! (merged vs unmerged; vs #generated tokens; vs #distinct adapters).
+//!
+//! Plain `harness = false` binary (no criterion in the offline image):
+//! each point is a full engine run; results print as the paper's series.
+//!
+//! ```bash
+//! cargo bench --bench fig4_batching            # all three panels
+//! cargo bench --bench fig4_batching -- quick   # reduced sweep
+//! ```
+
+use std::rc::Rc;
+
+use road::bench;
+use road::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let rt = Rc::new(Runtime::from_default_artifacts()?);
+    let seed = 7;
+
+    let tokens = if quick { 24 } else { 64 };
+    println!("# Figure 4 (Left): merged vs unmerged, batch 1, {tokens} tokens");
+    let pts = bench::fig4_left(&rt, tokens, seed)?;
+    println!("{}", bench::render_points("fig4-left", &pts));
+
+    let counts: Vec<usize> = if quick { vec![16, 48] } else { vec![16, 32, 64, 128] };
+    println!("# Figure 4 (Middle): throughput vs #generated tokens (batch 8, 8 adapters)");
+    let pts = bench::fig4_middle(&rt, &counts, seed)?;
+    println!("{}", bench::render_points("fig4-middle", &pts));
+    summarize_ratio(&pts);
+
+    let distinct: Vec<usize> = if quick { vec![1, 8] } else { vec![1, 2, 4, 8] };
+    println!("# Figure 4 (Right): throughput vs #distinct adapters (batch 8, {tokens} tokens)");
+    let pts = bench::fig4_right(&rt, &distinct, tokens, seed)?;
+    println!("{}", bench::render_points("fig4-right", &pts));
+    summarize_ratio(&pts);
+    Ok(())
+}
+
+/// Print the road/lora throughput ratio per matched sweep point — the
+/// paper's headline "2x LoRA" claim, on this substrate.
+fn summarize_ratio(pts: &[road::bench::ServingPoint]) {
+    for pair in pts.chunks(2) {
+        if pair.len() == 2 {
+            let (road, lora) = (&pair[0], &pair[1]);
+            println!(
+                "  ratio @ (d={}, t={}): road/lora = {:.2}x",
+                road.distinct_adapters,
+                road.new_tokens,
+                road.tokens_per_sec / lora.tokens_per_sec
+            );
+        }
+    }
+}

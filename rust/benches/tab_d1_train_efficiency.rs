@@ -1,0 +1,41 @@
+//! Table D.1 bench: finetuning efficiency per method — step time and
+//! trainable/optimizer-state footprint.  RoAd's inherently-orthogonal 2x2
+//! rotations vs OFT's per-step Cayley matrix solves.
+//!
+//! ```bash
+//! cargo bench --bench tab_d1_train_efficiency
+//! cargo bench --bench tab_d1_train_efficiency -- quick
+//! ```
+
+use std::rc::Rc;
+
+use road::bench;
+use road::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let iters = if quick { 10 } else { 50 };
+    let rt = Rc::new(Runtime::from_default_artifacts()?);
+
+    // The paper's Tab D.1 rows: OFT at two block granularities vs the
+    // three RoAd variants (plus lora/ia3 for context).
+    let methods = ["oft16", "oft2", "road1", "road2", "road4", "lora", "ia3"];
+    let mut rows = Vec::new();
+    for m in methods {
+        eprintln!("timing {m} ({iters} iters)...");
+        rows.push(bench::measure_train_efficiency(&rt, "train", m, iters, 3)?);
+    }
+    println!("{}", bench::render_train_efficiency(&rows));
+
+    // Headline comparison: the paper reports OFT (w=2 analogue) ~50x the
+    // RoAd step time; on XLA-CPU the Cayley solves partially fuse, so the
+    // expected shape is oft >= road with the gap growing for oft16.
+    let t = |name: &str| rows.iter().find(|r| r.method == name).unwrap().secs_per_step;
+    println!(
+        "step-time ratios: oft2/road1 = {:.2}x, oft16/road1 = {:.2}x, lora/road1 = {:.2}x",
+        t("oft2") / t("road1"),
+        t("oft16") / t("road1"),
+        t("lora") / t("road1"),
+    );
+    Ok(())
+}

@@ -1,0 +1,536 @@
+//! Adapter representations, banks and the serving-side registry.
+//!
+//! All three RoAd variants share the serving representation of two
+//! effective vectors (R1, R2) per adapted projection (Eq. 4); training
+//! parameterizations (theta/alpha in 1/2/4-way sharing, Table 1) convert
+//! through [`RoadVectors::from_theta_alpha`].  LoRA and (IA)³ adapters are
+//! carried for the Figure-4 baseline comparison.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::ModelConfigInfo;
+use crate::model::{proj_dims, PROJS};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// Effective serving vectors for one projection: z = r1⊗h + r2⊗ĥ.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoadVectors {
+    pub r1: Vec<f32>,
+    pub r2: Vec<f32>,
+}
+
+impl RoadVectors {
+    pub fn identity(d: usize) -> RoadVectors {
+        RoadVectors { r1: vec![1.0; d], r2: vec![0.0; d] }
+    }
+
+    /// Convert trainable (theta, alpha) to effective vectors.
+    ///
+    /// variant 1: theta/alpha `[d/2]`;  variant 2: `[d/2, 2]` row-shared;
+    /// variant 4: `[d/2, 4]` all-distinct (t11, t12, t21, t22) — mirrors
+    /// python/compile/kernels/ref.py exactly.
+    pub fn from_theta_alpha(variant: usize, theta: &[f32], alpha: &[f32]) -> Result<RoadVectors> {
+        let per = match variant {
+            1 => 1,
+            2 => 2,
+            4 => 4,
+            _ => bail!("unknown RoAd variant {variant}"),
+        };
+        if theta.len() != alpha.len() || theta.len() % per != 0 {
+            bail!("bad theta/alpha lengths for variant {variant}");
+        }
+        let half = theta.len() / per;
+        let d = half * 2;
+        let mut r1 = vec![0f32; d];
+        let mut r2 = vec![0f32; d];
+        for k in 0..half {
+            let (c1, s1, s2, c2) = match variant {
+                1 => {
+                    let (t, a) = (theta[k], alpha[k]);
+                    (a * t.cos(), a * t.sin(), a * t.sin(), a * t.cos())
+                }
+                2 => {
+                    let (t1, a1) = (theta[2 * k], alpha[2 * k]);
+                    let (t2, a2) = (theta[2 * k + 1], alpha[2 * k + 1]);
+                    (a1 * t1.cos(), a1 * t1.sin(), a2 * t2.sin(), a2 * t2.cos())
+                }
+                _ => {
+                    let t = &theta[4 * k..4 * k + 4];
+                    let a = &alpha[4 * k..4 * k + 4];
+                    (a[0] * t[0].cos(), a[1] * t[1].sin(), a[2] * t[2].sin(), a[3] * t[3].cos())
+                }
+            };
+            r1[2 * k] = c1;
+            r1[2 * k + 1] = c2;
+            r2[2 * k] = s1;
+            r2[2 * k + 1] = s2;
+        }
+        Ok(RoadVectors { r1, r2 })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.r1.len()
+    }
+}
+
+/// A trained RoAd adapter: effective vectors per adapted projection, keyed
+/// "blocks.<i>.<proj>".
+#[derive(Clone, Debug, Default)]
+pub struct RoadAdapter {
+    pub per_proj: BTreeMap<String, RoadVectors>,
+}
+
+impl RoadAdapter {
+    pub fn identity(cfg: &ModelConfigInfo) -> RoadAdapter {
+        let mut per_proj = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            for proj in PROJS {
+                let (_, d_out) = proj_dims(cfg, proj);
+                per_proj.insert(format!("blocks.{i}.{proj}"), RoadVectors::identity(d_out));
+            }
+        }
+        RoadAdapter { per_proj }
+    }
+
+    /// Random small rotations (used by serving benchmarks where only the
+    /// *cost* of heterogeneous adapters matters, not trained quality).
+    pub fn random(cfg: &ModelConfigInfo, rng: &mut Rng, scale: f32) -> RoadAdapter {
+        let mut a = RoadAdapter::identity(cfg);
+        for vecs in a.per_proj.values_mut() {
+            let d = vecs.dim();
+            let theta: Vec<f32> = (0..d / 2).map(|_| rng.normal() * scale).collect();
+            let alpha: Vec<f32> = (0..d / 2).map(|_| 1.0 + rng.normal() * 0.02).collect();
+            *vecs = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+        }
+        a
+    }
+
+    /// Build from a trainer's flat trainable tensors
+    /// ("blocks.i.proj.theta"/".alpha").
+    pub fn from_trainable(
+        variant: usize,
+        named: &[(String, HostTensor)],
+    ) -> Result<RoadAdapter> {
+        let mut per_proj = BTreeMap::new();
+        let mut thetas: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        let mut alphas: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        for (name, t) in named {
+            if let Some(base) = name.strip_suffix(".theta") {
+                thetas.insert(base.to_string(), t.as_f32());
+            } else if let Some(base) = name.strip_suffix(".alpha") {
+                alphas.insert(base.to_string(), t.as_f32());
+            }
+        }
+        for (base, th) in &thetas {
+            let al = alphas
+                .get(base)
+                .ok_or_else(|| anyhow!("theta without alpha for {base}"))?;
+            per_proj.insert(base.clone(), RoadVectors::from_theta_alpha(variant, th, al)?);
+        }
+        if per_proj.is_empty() {
+            bail!("no road trainables found");
+        }
+        Ok(RoadAdapter { per_proj })
+    }
+
+    /// Subspace composition (paper §4.3 / Fig 5): take 2×2 blocks with index
+    /// < split_blocks from `a`, the rest from `b`.  Disjoint blocks are
+    /// orthogonal subspaces, so both tasks' rotations coexist in one R.
+    pub fn compose(a: &RoadAdapter, b: &RoadAdapter, split_frac: f32) -> Result<RoadAdapter> {
+        let mut per_proj = BTreeMap::new();
+        for (key, va) in &a.per_proj {
+            let vb = b
+                .per_proj
+                .get(key)
+                .ok_or_else(|| anyhow!("composition: {key} missing from second adapter"))?;
+            let d = va.dim();
+            if vb.dim() != d {
+                bail!("composition dim mismatch at {key}");
+            }
+            let split = ((d / 2) as f32 * split_frac) as usize * 2;
+            let mut r1 = va.r1.clone();
+            let mut r2 = va.r2.clone();
+            r1[split..].copy_from_slice(&vb.r1[split..]);
+            r2[split..].copy_from_slice(&vb.r2[split..]);
+            per_proj.insert(key.clone(), RoadVectors { r1, r2 });
+        }
+        Ok(RoadAdapter { per_proj })
+    }
+}
+
+/// A trained LoRA adapter (the unmerged-serving baseline of Figure 4).
+#[derive(Clone, Debug, Default)]
+pub struct LoraAdapter {
+    pub per_proj: BTreeMap<String, LoraMats>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LoraMats {
+    pub lb: Vec<f32>, // [d_in, r]
+    pub la: Vec<f32>, // [r, d_out]
+    pub rank: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl LoraAdapter {
+    pub fn zeros(cfg: &ModelConfigInfo) -> LoraAdapter {
+        let mut per_proj = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            for proj in PROJS {
+                let (d_in, d_out) = proj_dims(cfg, proj);
+                per_proj.insert(
+                    format!("blocks.{i}.{proj}"),
+                    LoraMats {
+                        lb: vec![0.0; d_in * cfg.lora_rank],
+                        la: vec![0.0; cfg.lora_rank * d_out],
+                        rank: cfg.lora_rank,
+                        d_in,
+                        d_out,
+                    },
+                );
+            }
+        }
+        LoraAdapter { per_proj }
+    }
+
+    pub fn random(cfg: &ModelConfigInfo, rng: &mut Rng, scale: f32) -> LoraAdapter {
+        let mut a = LoraAdapter::zeros(cfg);
+        for m in a.per_proj.values_mut() {
+            let s_in = scale / (m.d_in as f32).sqrt();
+            m.lb = rng.normal_vec(m.d_in * m.rank, s_in);
+            m.la = rng.normal_vec(m.rank * m.d_out, scale / (m.rank as f32).sqrt());
+        }
+        a
+    }
+
+    pub fn from_trainable(named: &[(String, HostTensor)]) -> Result<LoraAdapter> {
+        let mut lbs: BTreeMap<String, HostTensor> = BTreeMap::new();
+        let mut las: BTreeMap<String, HostTensor> = BTreeMap::new();
+        for (name, t) in named {
+            if let Some(base) = name.strip_suffix(".lb") {
+                lbs.insert(base.to_string(), t.clone());
+            } else if let Some(base) = name.strip_suffix(".la") {
+                las.insert(base.to_string(), t.clone());
+            }
+        }
+        let mut per_proj = BTreeMap::new();
+        for (base, lb) in &lbs {
+            let la = las.get(base).ok_or_else(|| anyhow!("lb without la at {base}"))?;
+            per_proj.insert(
+                base.clone(),
+                LoraMats {
+                    d_in: lb.shape[0],
+                    rank: lb.shape[1],
+                    d_out: la.shape[1],
+                    lb: lb.as_f32(),
+                    la: la.as_f32(),
+                },
+            );
+        }
+        if per_proj.is_empty() {
+            bail!("no lora trainables found");
+        }
+        Ok(LoraAdapter { per_proj })
+    }
+}
+
+/// (IA)³ scaling adapter.
+#[derive(Clone, Debug, Default)]
+pub struct Ia3Adapter {
+    pub per_proj: BTreeMap<String, Vec<f32>>,
+}
+
+impl Ia3Adapter {
+    pub fn identity(cfg: &ModelConfigInfo) -> Ia3Adapter {
+        let mut per_proj = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            for proj in PROJS {
+                let (_, d_out) = proj_dims(cfg, proj);
+                per_proj.insert(format!("blocks.{i}.{proj}"), vec![1.0; d_out]);
+            }
+        }
+        Ia3Adapter { per_proj }
+    }
+}
+
+/// Any trained adapter.
+#[derive(Clone, Debug)]
+pub enum Adapter {
+    Road(RoadAdapter),
+    Lora(LoraAdapter),
+    Ia3(Ia3Adapter),
+}
+
+impl Adapter {
+    pub fn mode(&self) -> &'static str {
+        match self {
+            Adapter::Road(_) => "road",
+            Adapter::Lora(_) => "lora",
+            Adapter::Ia3(_) => "ia3",
+        }
+    }
+}
+
+/// Bank of adapter slots matching the HLO bank inputs: per bank key a
+/// [n_slots, ...] tensor.  Slot 0 is pinned to identity so unoccupied
+/// decode lanes are no-ops.
+pub struct AdapterBank {
+    pub mode: String,
+    pub n_slots: usize,
+    /// bank key ("blocks.i.proj.r1" / ".lb" / ...) -> stacked tensor.
+    pub tensors: BTreeMap<String, HostTensor>,
+    pub dirty: bool,
+}
+
+impl AdapterBank {
+    pub fn new(cfg: &ModelConfigInfo, mode: &str, n_slots: usize) -> Result<AdapterBank> {
+        let mut tensors = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            for proj in PROJS {
+                let (d_in, d_out) = proj_dims(cfg, proj);
+                let key = format!("blocks.{i}.{proj}");
+                match mode {
+                    "road" => {
+                        let mut r1 = HostTensor::zeros(vec![n_slots, d_out], crate::tensor::DType::F32);
+                        for s in 0..n_slots {
+                            r1.write_f32_range(s * d_out, &vec![1.0; d_out]);
+                        }
+                        tensors.insert(format!("{key}.r1"), r1);
+                        tensors.insert(
+                            format!("{key}.r2"),
+                            HostTensor::zeros(vec![n_slots, d_out], crate::tensor::DType::F32),
+                        );
+                    }
+                    "lora" => {
+                        tensors.insert(
+                            format!("{key}.lb"),
+                            HostTensor::zeros(
+                                vec![n_slots, d_in, cfg.lora_rank],
+                                crate::tensor::DType::F32,
+                            ),
+                        );
+                        tensors.insert(
+                            format!("{key}.la"),
+                            HostTensor::zeros(
+                                vec![n_slots, cfg.lora_rank, d_out],
+                                crate::tensor::DType::F32,
+                            ),
+                        );
+                    }
+                    "ia3" => {
+                        let mut s_t =
+                            HostTensor::zeros(vec![n_slots, d_out], crate::tensor::DType::F32);
+                        for s in 0..n_slots {
+                            s_t.write_f32_range(s * d_out, &vec![1.0; d_out]);
+                        }
+                        tensors.insert(format!("{key}.s"), s_t);
+                    }
+                    "base" => {}
+                    _ => bail!("unknown adapter mode {mode}"),
+                }
+            }
+        }
+        Ok(AdapterBank { mode: mode.to_string(), n_slots, tensors, dirty: true })
+    }
+
+    /// Install an adapter into bank slot `slot`.
+    pub fn set_slot(&mut self, slot: usize, adapter: &Adapter) -> Result<()> {
+        if slot >= self.n_slots {
+            bail!("slot {slot} out of range ({})", self.n_slots);
+        }
+        match (adapter, self.mode.as_str()) {
+            (Adapter::Road(a), "road") => {
+                for (key, vecs) in &a.per_proj {
+                    let d = vecs.dim();
+                    self.tensors
+                        .get_mut(&format!("{key}.r1"))
+                        .ok_or_else(|| anyhow!("bank missing {key}.r1"))?
+                        .write_f32_range(slot * d, &vecs.r1);
+                    self.tensors
+                        .get_mut(&format!("{key}.r2"))
+                        .ok_or_else(|| anyhow!("bank missing {key}.r2"))?
+                        .write_f32_range(slot * d, &vecs.r2);
+                }
+            }
+            (Adapter::Lora(a), "lora") => {
+                for (key, m) in &a.per_proj {
+                    self.tensors
+                        .get_mut(&format!("{key}.lb"))
+                        .ok_or_else(|| anyhow!("bank missing {key}.lb"))?
+                        .write_f32_range(slot * m.d_in * m.rank, &m.lb);
+                    self.tensors
+                        .get_mut(&format!("{key}.la"))
+                        .ok_or_else(|| anyhow!("bank missing {key}.la"))?
+                        .write_f32_range(slot * m.rank * m.d_out, &m.la);
+                }
+            }
+            (Adapter::Ia3(a), "ia3") => {
+                for (key, s) in &a.per_proj {
+                    self.tensors
+                        .get_mut(&format!("{key}.s"))
+                        .ok_or_else(|| anyhow!("bank missing {key}.s"))?
+                        .write_f32_range(slot * s.len(), s);
+                }
+            }
+            (a, m) => bail!("adapter mode {} incompatible with bank mode {m}", a.mode()),
+        }
+        self.dirty = true;
+        Ok(())
+    }
+}
+
+/// Registry mapping user-visible adapter names to bank slots.
+///
+/// Slot 0 is reserved for identity (requests without an adapter).
+pub struct AdapterRegistry {
+    pub bank: AdapterBank,
+    by_name: BTreeMap<String, usize>,
+    next_slot: usize,
+}
+
+impl AdapterRegistry {
+    pub fn new(bank: AdapterBank) -> AdapterRegistry {
+        AdapterRegistry { bank, by_name: BTreeMap::new(), next_slot: 1 }
+    }
+
+    /// Register a named adapter; returns its slot id.
+    pub fn register(&mut self, name: &str, adapter: &Adapter) -> Result<usize> {
+        if let Some(&slot) = self.by_name.get(name) {
+            self.bank.set_slot(slot, adapter)?;
+            return Ok(slot);
+        }
+        if self.next_slot >= self.bank.n_slots {
+            bail!(
+                "adapter bank full ({} slots); unregister something first",
+                self.bank.n_slots
+            );
+        }
+        let slot = self.next_slot;
+        self.bank.set_slot(slot, adapter)?;
+        self.by_name.insert(name.to_string(), slot);
+        self.next_slot += 1;
+        Ok(slot)
+    }
+
+    pub fn slot_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.by_name.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.bank.n_slots - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfigInfo {
+        ModelConfigInfo {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 12,
+            max_seq: 16,
+            head_dim: 4,
+            n_adapters: 4,
+            lora_rank: 2,
+        }
+    }
+
+    #[test]
+    fn variant1_identity() {
+        let v = RoadVectors::from_theta_alpha(1, &[0.0; 4], &[1.0; 4]).unwrap();
+        assert_eq!(v.r1, vec![1.0; 8]);
+        assert_eq!(v.r2, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn variant2_matches_variant1_when_shared(){
+        let theta = [0.3f32, -0.2];
+        let alpha = [1.1f32, 0.9];
+        let v1 = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+        let t2 = [0.3f32, 0.3, -0.2, -0.2];
+        let a2 = [1.1f32, 1.1, 0.9, 0.9];
+        let v2 = RoadVectors::from_theta_alpha(2, &t2, &a2).unwrap();
+        for i in 0..4 {
+            assert!((v1.r1[i] - v2.r1[i]).abs() < 1e-6);
+            assert!((v1.r2[i] - v2.r2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn compose_takes_halves() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from(0);
+        let a = RoadAdapter::random(&cfg, &mut rng, 0.3);
+        let b = RoadAdapter::random(&cfg, &mut rng, 0.3);
+        let c = RoadAdapter::compose(&a, &b, 0.5).unwrap();
+        for (key, vc) in &c.per_proj {
+            let va = &a.per_proj[key];
+            let vb = &b.per_proj[key];
+            let d = vc.dim();
+            assert_eq!(&vc.r1[..d / 2], &va.r1[..d / 2]);
+            assert_eq!(&vc.r1[d / 2..], &vb.r1[d / 2..]);
+            assert_eq!(&vc.r2[..d / 2], &va.r2[..d / 2]);
+            assert_eq!(&vc.r2[d / 2..], &vb.r2[d / 2..]);
+        }
+    }
+
+    #[test]
+    fn bank_slot0_identity_and_set() {
+        let cfg = tiny_cfg();
+        let mut bank = AdapterBank::new(&cfg, "road", 4).unwrap();
+        let r1 = bank.tensors.get("blocks.0.wq.r1").unwrap();
+        assert_eq!(r1.read_f32_range(0, 8), vec![1.0; 8]);
+        let mut rng = Rng::seed_from(1);
+        let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3));
+        bank.set_slot(2, &a).unwrap();
+        let r1 = bank.tensors.get("blocks.0.wq.r1").unwrap();
+        // slot 0 untouched, slot 2 changed
+        assert_eq!(r1.read_f32_range(0, 8), vec![1.0; 8]);
+        assert_ne!(r1.read_f32_range(16, 8), vec![1.0; 8]);
+    }
+
+    #[test]
+    fn registry_assigns_and_reuses_slots() {
+        let cfg = tiny_cfg();
+        let bank = AdapterBank::new(&cfg, "road", 4).unwrap();
+        let mut reg = AdapterRegistry::new(bank);
+        let mut rng = Rng::seed_from(2);
+        let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3));
+        let s1 = reg.register("user-a", &a).unwrap();
+        let s2 = reg.register("user-b", &a).unwrap();
+        assert_eq!((s1, s2), (1, 2));
+        assert_eq!(reg.register("user-a", &a).unwrap(), 1); // update in place
+        assert_eq!(reg.slot_of("user-b"), Some(2));
+        let _ = reg.register("user-c", &a).unwrap();
+        assert!(reg.register("user-d", &a).is_err()); // bank full (slot 0 reserved)
+    }
+
+    #[test]
+    fn mode_mismatch_rejected() {
+        let cfg = tiny_cfg();
+        let mut bank = AdapterBank::new(&cfg, "road", 2).unwrap();
+        let l = Adapter::Lora(LoraAdapter::zeros(&cfg));
+        assert!(bank.set_slot(1, &l).is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! Serving workload generation + the Figure-4 / Table-D.1 sweep harness.
+//!
+//! Figure 4's three panels are throughput studies of the multi-adapter
+//! serving engine:
+//!   * Left   — merged vs unmerged LoRA vs rank (batch 1, long generation),
+//!   * Middle — RoAd vs unmerged LoRA vs #generated tokens (batch 8,
+//!              heterogeneous adapters),
+//!   * Right  — RoAd vs unmerged LoRA vs #distinct adapters in the batch.
+//!
+//! Table D.1 times the per-step cost of each finetuning method (RoAd's
+//! inherent orthogonality vs OFT's Cayley solves) and reports the
+//! optimizer-state footprint.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::adapters::{Adapter, LoraAdapter, RoadAdapter};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::request::{Request, SamplingParams};
+use crate::runtime::Runtime;
+use crate::trainer::{Recipe, TrainBatch, Trainer};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_f, Table};
+
+/// One serving measurement.
+#[derive(Clone, Debug)]
+pub struct ServingPoint {
+    pub label: String,
+    pub batch: usize,
+    pub distinct_adapters: usize,
+    pub new_tokens: usize,
+    pub requests: usize,
+    pub wall_secs: f64,
+    /// Generated tokens per second (the paper's throughput axis).
+    pub tokens_per_sec: f64,
+    pub decode_steps: usize,
+}
+
+/// Build a heterogeneous workload: `n_requests` requests over
+/// `distinct` registered adapters (round-robin), each generating
+/// `new_tokens` tokens from a short prompt.
+pub fn hetero_workload(
+    rng: &mut Rng,
+    n_requests: usize,
+    distinct: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> Vec<Request> {
+    (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|_| 1 + rng.below(255) as i32).collect();
+            let mut r = Request::new((i + 1) as u64, prompt, new_tokens).with_sampling(
+                SamplingParams { temperature: 0.0, top_k: 0, seed: i as u64, stop_token: None },
+            );
+            if distinct > 0 {
+                r = r.with_adapter(&format!("adapter-{}", i % distinct));
+            }
+            r
+        })
+        .collect()
+}
+
+/// Register `distinct` random adapters of the engine's mode.
+pub fn register_adapters(engine: &mut Engine, distinct: usize, seed: u64) -> Result<()> {
+    let mut rng = Rng::seed_from(seed);
+    for i in 0..distinct {
+        let adapter = match engine.econf.mode.as_str() {
+            "road" => Adapter::Road(RoadAdapter::random(&engine.cfg, &mut rng, 0.2)),
+            "lora" => Adapter::Lora(LoraAdapter::random(&engine.cfg, &mut rng, 0.05)),
+            m => anyhow::bail!("no random adapter generator for mode {m}"),
+        };
+        engine.register_adapter(&format!("adapter-{i}"), &adapter)?;
+    }
+    Ok(())
+}
+
+/// Run one serving measurement: fresh engine in `mode`, `distinct`
+/// adapters, `n_requests` requests × `new_tokens` tokens.
+pub fn measure_serving(
+    rt: &Rc<Runtime>,
+    model: &str,
+    mode: &str,
+    slots: usize,
+    distinct: usize,
+    n_requests: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Result<ServingPoint> {
+    let econf = EngineConfig {
+        model: model.into(),
+        mode: mode.into(),
+        decode_slots: slots,
+        queue_capacity: 4096,
+    };
+    let mut engine = Engine::new(rt.clone(), econf)?;
+    if distinct > 0 {
+        register_adapters(&mut engine, distinct, seed)?;
+    }
+    let mut rng = Rng::seed_from(seed ^ 0xbe7c);
+    let prompt_len = 8;
+    let reqs = hetero_workload(&mut rng, n_requests, distinct, prompt_len, new_tokens);
+
+    let t0 = std::time::Instant::now();
+    let outs = engine.run_all(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let gen_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    Ok(ServingPoint {
+        label: format!("{mode}/d{distinct}"),
+        batch: slots,
+        distinct_adapters: distinct,
+        new_tokens,
+        requests: n_requests,
+        wall_secs: wall,
+        tokens_per_sec: gen_tokens as f64 / wall,
+        decode_steps: engine.metrics.decode_steps,
+    })
+}
+
+/// Figure 4 (Left): merged vs unmerged LoRA.  The merged path is the base
+/// model (adapter folded into W, paper §4.2); the unmerged path pays the
+/// per-layer bmm epilogue.  Rank is compile-time-fixed in the artifacts,
+/// so the sweep axis here is the serving mode; the rank effect is covered
+/// by the adapter_ops microbench.
+pub fn fig4_left(rt: &Rc<Runtime>, new_tokens: usize, seed: u64) -> Result<Vec<ServingPoint>> {
+    let mut out = Vec::new();
+    // batch 1, single adapter — the paper's configuration.
+    let mut merged = measure_serving(rt, "serve", "base", 1, 0, 4, new_tokens, seed)?;
+    merged.label = "lora-merged(base)".into();
+    out.push(merged);
+    let mut unmerged = measure_serving(rt, "serve", "lora", 1, 1, 4, new_tokens, seed)?;
+    unmerged.label = "lora-unmerged".into();
+    out.push(unmerged);
+    let mut road = measure_serving(rt, "serve", "road", 1, 1, 4, new_tokens, seed)?;
+    road.label = "road-unmerged".into();
+    out.push(road);
+    Ok(out)
+}
+
+/// Figure 4 (Middle): throughput vs #generated tokens at batch 8, eight
+/// distinct adapters (fully heterogeneous).
+pub fn fig4_middle(
+    rt: &Rc<Runtime>,
+    token_counts: &[usize],
+    seed: u64,
+) -> Result<Vec<ServingPoint>> {
+    let mut out = Vec::new();
+    for &nt in token_counts {
+        for mode in ["road", "lora"] {
+            let mut p = measure_serving(rt, "serve", mode, 8, 8, 16, nt, seed)?;
+            p.label = format!("{mode}/t{nt}");
+            out.push(p);
+        }
+    }
+    Ok(out)
+}
+
+/// Figure 4 (Right): throughput vs #distinct adapters at batch 8.
+pub fn fig4_right(
+    rt: &Rc<Runtime>,
+    distinct_counts: &[usize],
+    new_tokens: usize,
+    seed: u64,
+) -> Result<Vec<ServingPoint>> {
+    let mut out = Vec::new();
+    for &d in distinct_counts {
+        for mode in ["road", "lora"] {
+            out.push(measure_serving(rt, "serve", mode, 8, d, 16, new_tokens, seed)?);
+        }
+    }
+    Ok(out)
+}
+
+pub fn render_points(title: &str, points: &[ServingPoint]) -> String {
+    let mut t = Table::new(&[
+        "config", "batch", "#adapters", "new-toks", "reqs", "wall(s)", "tok/s",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.label.clone(),
+            p.batch.to_string(),
+            p.distinct_adapters.to_string(),
+            p.new_tokens.to_string(),
+            p.requests.to_string(),
+            fmt_f(p.wall_secs, 2),
+            fmt_f(p.tokens_per_sec, 1),
+        ]);
+    }
+    format!("## {title}\n{}", t.render())
+}
+
+// ---------------------------------------------------------------------------
+// Table D.1: finetuning efficiency (RoAd vs OFT Cayley)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct TrainEfficiency {
+    pub method: String,
+    pub n_trainable: usize,
+    pub iters: usize,
+    pub wall_secs: f64,
+    pub secs_per_step: f64,
+    /// Trainable + AdamW state footprint in bytes (the part that scales
+    /// with the method; the paper's "peak GPU memory" analogue on a
+    /// host-state basis).
+    pub state_bytes: usize,
+}
+
+/// Time `iters` optimizer steps of `method` on random LM batches.
+pub fn measure_train_efficiency(
+    rt: &Rc<Runtime>,
+    config: &str,
+    method: &str,
+    iters: usize,
+    seed: u64,
+) -> Result<TrainEfficiency> {
+    let mut tr = Trainer::new(rt.clone(), config, method)?;
+    let (b, l) = (tr.batch, tr.seq_len);
+    let mut rng = Rng::seed_from(seed);
+    let recipe = Recipe::default().with_steps(iters);
+
+    // Warm-up step excluded from timing (compile/caches).
+    let mk = |rng: &mut Rng| -> TrainBatch {
+        let tokens: Vec<i32> = (0..b * l).map(|_| 1 + rng.below(255) as i32).collect();
+        let mut targets = vec![0i32; b * l];
+        for row in 0..b {
+            for p in 0..l - 1 {
+                targets[row * l + p] = tokens[row * l + p + 1];
+            }
+        }
+        TrainBatch { tokens, targets, mask: vec![1.0; b * l] }
+    };
+    let warm = mk(&mut rng);
+    tr.step(&warm, recipe.lr_at(0))?;
+
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let batch = mk(&mut rng);
+        tr.step(&batch, recipe.lr_at(i))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let state_bytes = tr.n_trainable * 4 * 3; // params + m + v
+    Ok(TrainEfficiency {
+        method: method.to_string(),
+        n_trainable: tr.n_trainable,
+        iters,
+        wall_secs: wall,
+        secs_per_step: wall / iters as f64,
+        state_bytes,
+    })
+}
+
+pub fn render_train_efficiency(rows: &[TrainEfficiency]) -> String {
+    let mut t = Table::new(&[
+        "method", "#trainable", "iters", "wall(s)", "s/step", "state(KB)",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            r.n_trainable.to_string(),
+            r.iters.to_string(),
+            fmt_f(r.wall_secs, 2),
+            fmt_f(r.secs_per_step, 4),
+            fmt_f(r.state_bytes as f64 / 1024.0, 1),
+        ]);
+    }
+    format!("## Table D.1 analogue: finetuning efficiency\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_round_robins_adapters() {
+        let mut rng = Rng::seed_from(1);
+        let reqs = hetero_workload(&mut rng, 8, 4, 8, 16);
+        assert_eq!(reqs.len(), 8);
+        assert_eq!(reqs[0].adapter.as_deref(), Some("adapter-0"));
+        assert_eq!(reqs[5].adapter.as_deref(), Some("adapter-1"));
+        assert!(reqs.iter().all(|r| r.prompt.len() == 8));
+        assert!(reqs.iter().all(|r| r.prompt.iter().all(|&t| t > 0)));
+    }
+
+    #[test]
+    fn workload_without_adapters_is_base() {
+        let mut rng = Rng::seed_from(2);
+        let reqs = hetero_workload(&mut rng, 3, 0, 4, 8);
+        assert!(reqs.iter().all(|r| r.adapter.is_none()));
+    }
+
+    #[test]
+    fn render_produces_rows() {
+        let p = ServingPoint {
+            label: "road/d8".into(),
+            batch: 8,
+            distinct_adapters: 8,
+            new_tokens: 128,
+            requests: 16,
+            wall_secs: 1.5,
+            tokens_per_sec: 1365.3,
+            decode_steps: 256,
+        };
+        let s = render_points("Fig 4 (Right)", &[p]);
+        assert!(s.contains("road/d8"));
+        assert!(s.contains("1365.3"));
+    }
+}

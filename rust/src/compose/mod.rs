@@ -1,0 +1,274 @@
+//! Composability experiment (paper §4.3, Figure 5).
+//!
+//! RoAd as a distributed interchange intervention: Φ(h) = R h.  Disjoint
+//! 2×2 blocks of R are orthogonal subspaces, so two tasks can be trained
+//! *simultaneously* into the two halves of R — the upper half on task A
+//! ("German completions" analogue), the lower half on task B ("English
+//! instruction following" analogue) — by masking the complementary blocks'
+//! gradients (the `road1_masked` step graph).  After training, the
+//! combined R exhibits both behaviours.
+//!
+//! The substitution for HellaSwag-de / Ultrafeedback (DESIGN.md §4): two
+//! synthetic "languages" over disjoint alphabets — task A answers in the
+//! uppercase alphabet, task B in lowercase — trained from English-alphabet
+//! prompts.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::adapters::{Adapter, RoadAdapter};
+use crate::runtime::Runtime;
+use crate::tasks::{lm_batch, Example, Metric, Task};
+use crate::trainer::{loop_::BatchSource, Trainer};
+use crate::util::rng::Rng;
+
+/// Task A ("German subspace" analogue): prompts in lowercase letters, gold
+/// completion = the same word *translated* into the uppercase alphabet
+/// (a fixed letter-wise cipher).  The model must learn to respond in the
+/// foreign alphabet.
+pub struct ForeignEcho;
+
+impl Task for ForeignEcho {
+    fn name(&self) -> &'static str {
+        "foreign-echo"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = 1 + rng.below(2);
+        let word: String = (0..n).map(|_| (b'a' + rng.below(8) as u8) as char).collect();
+        let foreign: String = word.chars().map(|c| c.to_ascii_uppercase()).collect();
+        Example::gen(&format!("g:{word}>"), &format!("{foreign}."))
+    }
+}
+
+/// Task B ("instruction following" analogue): reverse the word, answer in
+/// the native lowercase alphabet.
+pub struct NativeReverse;
+
+impl Task for NativeReverse {
+    fn name(&self) -> &'static str {
+        "native-reverse"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = 2;
+        let word: String = (0..n).map(|_| (b'a' + rng.below(8) as u8) as char).collect();
+        let rev: String = word.chars().rev().collect();
+        Example::gen(&format!("i:{word}>"), &format!("{rev}."))
+    }
+}
+
+/// Alternating-task batch source: even batches from A, odd from B — the
+/// "both tasks are simultaneously trained" protocol.
+pub struct AlternatingSource<'a> {
+    pub a: &'a dyn Task,
+    pub b: &'a dyn Task,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tick: usize,
+}
+
+impl BatchSource for AlternatingSource<'_> {
+    fn next_batch(&mut self, rng: &mut Rng) -> crate::trainer::TrainBatch {
+        let t: &dyn Task = if self.tick % 2 == 0 { self.a } else { self.b };
+        self.tick += 1;
+        let exs: Vec<Example> = (0..self.batch).map(|_| t.sample(rng)).collect();
+        lm_batch(&exs, self.batch, self.seq_len)
+    }
+}
+
+/// Which half of each RoAd block-vector a task owns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Half {
+    Upper,
+    Lower,
+}
+
+/// Positional mask over a length-n trainable: true where the element's
+/// block index falls in the task's half.
+pub fn half_mask_sized(half: Half, n_blocks: usize) -> impl Fn(usize) -> bool + Copy {
+    move |idx: usize| {
+        let upper = idx < n_blocks / 2;
+        (half == Half::Upper) == upper
+    }
+}
+
+/// Result of the composability run: the three adapters (A-only half,
+/// B-only half, combined) plus training diagnostics.
+pub struct ComposeOutcome {
+    pub adapter_a: RoadAdapter,
+    pub adapter_b: RoadAdapter,
+    pub combined: RoadAdapter,
+    pub loss_a: f32,
+    pub loss_b: f32,
+}
+
+/// Train both halves simultaneously (one `road1_masked` trainer whose mask
+/// alternates with the task — exactly Fig 5's protocol), then split the
+/// result into per-half adapters and the combined adapter.
+pub fn train_composed(
+    rt: &Rc<Runtime>,
+    config: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<ComposeOutcome> {
+    let mut tr = Trainer::new(rt.clone(), config, "road1_masked")?;
+    let (b, l) = (tr.batch, tr.seq_len);
+    let task_a = ForeignEcho;
+    let task_b = NativeReverse;
+    let peak_lr = 1e-2f32; // RoAd takes large LRs (paper §C.1); Fig 5 used 5e-3
+
+    let mut rng = Rng::seed_from(seed);
+    let mut loss_a = f32::NAN;
+    let mut loss_b = f32::NAN;
+    for step in 0..steps {
+        let (task, half): (&dyn Task, Half) = if step % 2 == 0 {
+            (&task_a, Half::Upper)
+        } else {
+            (&task_b, Half::Lower)
+        };
+        // Mask the complementary half's gradients for this step.
+        set_half_mask(&mut tr, half)?;
+
+        let exs: Vec<Example> = (0..b).map(|_| task.sample(&mut rng)).collect();
+        let batch = lm_batch(&exs, b, l);
+        let lr = peak_lr * warm_frac(step, steps);
+        let loss = tr.step(&batch, lr)?;
+        if step % 2 == 0 {
+            loss_a = loss;
+        } else {
+            loss_b = loss;
+        }
+    }
+
+    // Export the combined adapter, then split halves against identity.
+    let combined = match tr.export_adapter()? {
+        Adapter::Road(a) => a,
+        _ => unreachable!(),
+    };
+    let identity = RoadAdapter::identity(&tr.cfg);
+    // adapter_a = upper half of combined + identity lower half.
+    let adapter_a = RoadAdapter::compose(&combined, &identity, 0.5)?;
+    // adapter_b = identity upper half + lower half of combined.
+    let adapter_b = RoadAdapter::compose(&identity, &combined, 0.5)?;
+    Ok(ComposeOutcome { adapter_a, adapter_b, combined, loss_a, loss_b })
+}
+
+fn warm_frac(step: usize, total: usize) -> f32 {
+    let warm = (total as f32 * 0.1).max(1.0);
+    ((step as f32 + 1.0) / warm).min(1.0)
+}
+
+/// Install the per-tensor half mask on a road1_masked trainer.
+pub fn set_half_mask(tr: &mut Trainer, half: Half) -> Result<()> {
+    // Capture tensor sizes first: the closure only sees (name, idx).
+    let sizes: std::collections::BTreeMap<String, usize> =
+        tr.trainable().iter().map(|(n, t)| (n.clone(), t.elem_count())).collect();
+    tr.set_grad_mask(move |name, idx| {
+        let n = sizes[name];
+        let upper = idx < n / 2;
+        (half == Half::Upper) == upper
+    })
+}
+
+/// Exact-match accuracy of `adapter` on `task` through the generative
+/// engine path (used to score each subspace and the combination).
+pub fn score_adapter(
+    engine: &mut crate::coordinator::engine::Engine,
+    name: &str,
+    adapter: &RoadAdapter,
+    task: &dyn Task,
+    n: usize,
+    seed: u64,
+) -> Result<f64> {
+    engine.register_adapter(name, &Adapter::Road(adapter.clone()))?;
+    let eval = crate::tasks::eval_exact_match(engine, Some(name), task, n, seed)?;
+    Ok(eval.score)
+}
+
+/// Qualitative transcript entry (the Fig 5 presentation format).
+pub struct Transcript {
+    pub prompt: String,
+    pub subspace: String,
+    pub response: String,
+}
+
+/// Generate qualitative samples with a given adapter (Fig 5's per-subspace
+/// responses).
+pub fn sample_responses(
+    engine: &mut crate::coordinator::engine::Engine,
+    adapter_name: &str,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<Vec<Transcript>> {
+    let mut reqs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        reqs.push(
+            crate::coordinator::request::Request::new(
+                (i + 1) as u64,
+                crate::tokenizer::encode(p),
+                max_new,
+            )
+            .with_adapter(adapter_name)
+            .with_sampling(crate::coordinator::request::SamplingParams {
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+                stop_token: Some(b'.' as i32),
+            }),
+        );
+    }
+    let outs = engine.run_all(reqs)?;
+    let mut ts: Vec<Transcript> = outs
+        .into_iter()
+        .map(|o| Transcript {
+            prompt: prompts[(o.id - 1) as usize].clone(),
+            subspace: adapter_name.to_string(),
+            response: crate::tokenizer::decode(&o.tokens),
+        })
+        .collect();
+    ts.sort_by(|a, b| a.prompt.cmp(&b.prompt));
+    Ok(ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_use_disjoint_answer_alphabets() {
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..50 {
+            let a = ForeignEcho.sample(&mut rng);
+            let b = NativeReverse.sample(&mut rng);
+            let resp_a = crate::tokenizer::decode(&a.completion);
+            let resp_b = crate::tokenizer::decode(&b.completion);
+            assert!(resp_a.trim_end_matches('.').chars().all(|c| c.is_ascii_uppercase()));
+            assert!(resp_b.trim_end_matches('.').chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn foreign_echo_is_cipher_of_prompt() {
+        let mut rng = Rng::seed_from(2);
+        let ex = ForeignEcho.sample(&mut rng);
+        let p = crate::tokenizer::decode(&ex.prompt);
+        let word = p.trim_start_matches("g:").trim_end_matches('>');
+        let want: String = word.chars().map(|c| c.to_ascii_uppercase()).collect();
+        assert_eq!(crate::tokenizer::decode(&ex.completion), format!("{want}."));
+    }
+
+    #[test]
+    fn half_mask_sized_splits_range() {
+        let m = half_mask_sized(Half::Upper, 8);
+        assert!(m(0) && m(3));
+        assert!(!m(4) && !m(7));
+        let m = half_mask_sized(Half::Lower, 8);
+        assert!(!m(0) && m(4));
+    }
+}

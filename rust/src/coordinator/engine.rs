@@ -1,0 +1,501 @@
+//! The serving engine: continuous batching over fixed decode slots with
+//! per-request adapters — the paper's heterogeneous-batching scenario
+//! (§2.2/§4.2) as a running system.
+//!
+//! One engine owns one PJRT runtime (single-threaded by construction — the
+//! xla client is `Rc`-based); the [`super::server::EngineServer`] wraps it
+//! in a dedicated thread behind mpsc channels.
+//!
+//! Iteration structure (vLLM-style, iteration-level scheduling):
+//!   1. admit waiting requests into free slots via a bucketed prefill
+//!      (fixed-shape executables; prompts padded to the bucket),
+//!   2. run ONE decode step across all slots (active lanes advance, empty
+//!      lanes are masked by pos/id 0),
+//!   3. sample, detect finished requests, free their slots.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::adapters::{Adapter, AdapterBank, AdapterRegistry};
+use crate::manifest::{EntryInfo, ModelConfigInfo};
+use crate::model::ParamStore;
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::tensor::HostTensor;
+
+use super::kv::{KvState, SlotAllocator};
+use super::metrics::Metrics;
+use super::queue::AdmissionQueue;
+use super::request::{ActiveRequest, FinishReason, Request, RequestOutput};
+use super::sampler;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Model config name from the manifest ("serve", "train", "tiny").
+    pub model: String,
+    /// Adapter execution mode: "base" (merged / no adapters), "road"
+    /// (element-wise Eq. 4 path), "lora" (bmm baseline), "ia3".
+    pub mode: String,
+    /// Decode slot count; must have a matching decode_<mode>_<model>_b<N>
+    /// artifact.
+    pub decode_slots: usize,
+    pub queue_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "serve".into(),
+            mode: "road".into(),
+            decode_slots: 8,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+struct PrefillBucket {
+    batch: usize,
+    prompt_len: usize,
+    exe: Rc<Executable>,
+}
+
+pub struct Engine {
+    pub rt: Rc<Runtime>,
+    pub cfg: ModelConfigInfo,
+    pub econf: EngineConfig,
+    pub registry: AdapterRegistry,
+    params: ParamStore,
+    param_bufs: BTreeMap<String, xla::PjRtBuffer>,
+    bank_bufs: BTreeMap<String, xla::PjRtBuffer>,
+    decode_exe: Rc<Executable>,
+    prefill_buckets: Vec<PrefillBucket>,
+    slots: Vec<Option<ActiveRequest>>,
+    alloc: SlotAllocator,
+    kv: KvState,
+    pub queue: AdmissionQueue,
+    pub metrics: Metrics,
+    next_id: u64,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<Runtime>, econf: EngineConfig) -> Result<Engine> {
+        let params = ParamStore::load_pretrained(&rt.manifest, &econf.model)?;
+        Engine::with_params(rt, econf, params)
+    }
+
+    /// The parameter store this engine serves (merged weights included).
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    /// Build an engine over explicit parameters (e.g. merged weights).
+    pub fn with_params(rt: Rc<Runtime>, econf: EngineConfig, params: ParamStore) -> Result<Engine> {
+        let cfg = rt.manifest.config(&econf.model)?.clone();
+        let decode_name = format!("decode_{}_{}_b{}", econf.mode, econf.model, econf.decode_slots);
+        let decode_exe = rt
+            .load(&decode_name)
+            .with_context(|| format!("loading decode entry {decode_name}"))?;
+
+        // Discover prefill buckets for this (model, mode).
+        let mut prefill_buckets = Vec::new();
+        let names: Vec<String> = rt
+            .manifest
+            .entries
+            .values()
+            .filter(|e| {
+                e.kind == "prefill"
+                    && e.config == econf.model
+                    && e.mode.as_deref() == Some(econf.mode.as_str())
+            })
+            .map(|e| e.name.clone())
+            .collect();
+        for name in names {
+            let exe = rt.load(&name)?;
+            let (batch, prompt_len) =
+                (exe.info.batch.unwrap_or(1), exe.info.prompt_len.unwrap_or(0));
+            prefill_buckets.push(PrefillBucket { batch, prompt_len, exe });
+        }
+        if prefill_buckets.is_empty() {
+            bail!("no prefill entries for model={} mode={}", econf.model, econf.mode);
+        }
+        prefill_buckets.sort_by_key(|b| (b.prompt_len, b.batch));
+
+        // Upload parameters once; they stay device-resident for every call.
+        let mut param_bufs = BTreeMap::new();
+        for (name, t) in params.names.iter().zip(&params.tensors) {
+            param_bufs.insert(name.clone(), rt.upload(t)?);
+        }
+
+        let n_bank = cfg.n_adapters;
+        let bank = AdapterBank::new(&cfg, &econf.mode, n_bank)?;
+        let registry = AdapterRegistry::new(bank);
+
+        let kv = KvState::new(&cfg, econf.decode_slots);
+        let slots = (0..econf.decode_slots).map(|_| None).collect();
+        Ok(Engine {
+            rt,
+            cfg,
+            registry,
+            params,
+            param_bufs,
+            bank_bufs: BTreeMap::new(),
+            decode_exe,
+            prefill_buckets,
+            alloc: SlotAllocator::new(econf.decode_slots),
+            slots,
+            kv,
+            queue: AdmissionQueue::new(econf.queue_capacity),
+            metrics: Metrics::default(),
+            next_id: 1,
+            econf,
+        })
+    }
+
+    pub fn register_adapter(&mut self, name: &str, adapter: &Adapter) -> Result<usize> {
+        if self.econf.mode == "base" {
+            bail!("engine in merged/base mode serves no per-request adapters");
+        }
+        self.registry.register(name, adapter)
+    }
+
+    pub fn max_prompt_len(&self) -> usize {
+        self.prefill_buckets.iter().map(|b| b.prompt_len).max().unwrap_or(0)
+    }
+
+    /// Enqueue a request (backpressure error if the queue is full).
+    pub fn submit(&mut self, mut req: Request) -> Result<u64> {
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if req.prompt.len() > self.max_prompt_len() {
+            bail!(
+                "prompt of {} tokens exceeds the largest prefill bucket ({})",
+                req.prompt.len(),
+                self.max_prompt_len()
+            );
+        }
+        let total = req.prompt.len() + req.max_new_tokens;
+        if total > self.cfg.max_seq {
+            bail!("prompt+max_new = {total} exceeds max_seq {}", self.cfg.max_seq);
+        }
+        if let Some(a) = &req.adapter {
+            if self.registry.slot_of(a).is_none() {
+                bail!("unknown adapter {a:?}");
+            }
+        }
+        if req.id == 0 {
+            req.id = self.next_id;
+        }
+        self.next_id = self.next_id.max(req.id) + 1;
+        let id = req.id;
+        self.queue.push(req)?;
+        Ok(id)
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.n_active() > 0 || !self.queue.is_empty()
+    }
+
+    fn upload_bank_if_dirty(&mut self) -> Result<()> {
+        if !self.registry.bank.dirty && !self.bank_bufs.is_empty() {
+            return Ok(());
+        }
+        self.bank_bufs.clear();
+        for (name, t) in &self.registry.bank.tensors {
+            self.bank_bufs.insert(name.clone(), self.rt.upload(t)?);
+        }
+        self.registry.bank.dirty = false;
+        Ok(())
+    }
+
+    /// Assemble the positional argument list for an entry: device-resident
+    /// params/banks + per-call host data tensors.
+    fn build_args<'a>(
+        &'a self,
+        info: &EntryInfo,
+        data: &BTreeMap<&'static str, &'a HostTensor>,
+    ) -> Result<Vec<Arg<'a>>> {
+        let mut args = Vec::with_capacity(info.inputs.len());
+        for spec in &info.inputs {
+            match spec.group.as_str() {
+                "params" => args.push(Arg::Buffer(
+                    self.param_bufs
+                        .get(&spec.name)
+                        .ok_or_else(|| anyhow!("missing param {}", spec.name))?,
+                )),
+                "adapters" => args.push(Arg::Buffer(
+                    self.bank_bufs
+                        .get(&spec.name)
+                        .ok_or_else(|| anyhow!("missing bank tensor {}", spec.name))?,
+                )),
+                "data" => args.push(Arg::Host(
+                    data.get(spec.name.as_str())
+                        .copied()
+                        .ok_or_else(|| anyhow!("missing data input {}", spec.name))?,
+                )),
+                g => bail!("unexpected input group {g} in {}", info.name),
+            }
+        }
+        Ok(args)
+    }
+
+    /// Admit queued requests into free slots via bucketed prefill.
+    fn maybe_prefill(&mut self) -> Result<()> {
+        loop {
+            let n_free = self.alloc.n_free();
+            if n_free == 0 || self.queue.is_empty() {
+                return Ok(());
+            }
+            let shortest = self.queue.min_prompt_len();
+            // Smallest bucket that fits the shortest waiting prompt; among
+            // those, the largest batch that we can actually fill.
+            let want = n_free.min(self.queue.len());
+            let mut best: Option<usize> = None;
+            for (i, b) in self.prefill_buckets.iter().enumerate() {
+                if b.prompt_len < shortest {
+                    continue;
+                }
+                let cap = b.batch.min(want);
+                let better = match best {
+                    None => true,
+                    Some(j) => {
+                        let bj = &self.prefill_buckets[j];
+                        let (cap_j, len_j) = (bj.batch.min(want), bj.prompt_len);
+                        // prefer more admitted, then shorter padded length
+                        cap > cap_j || (cap == cap_j && b.prompt_len < len_j)
+                    }
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            let Some(bi) = best else { return Ok(()) };
+            let (bucket_b, bucket_l) =
+                (self.prefill_buckets[bi].batch, self.prefill_buckets[bi].prompt_len);
+            let take = self.queue.pop_fitting(n_free.min(bucket_b), bucket_l);
+            if take.is_empty() {
+                return Ok(());
+            }
+            self.prefill_batch(bi, take)?;
+            let _ = (bucket_b, bucket_l);
+        }
+    }
+
+    fn prefill_batch(&mut self, bucket_idx: usize, reqs: Vec<Request>) -> Result<()> {
+        self.upload_bank_if_dirty()?;
+        let (b, l) = (
+            self.prefill_buckets[bucket_idx].batch,
+            self.prefill_buckets[bucket_idx].prompt_len,
+        );
+        let mut tokens = vec![0i32; b * l];
+        let mut lengths = vec![1i32; b];
+        let mut ids = vec![0i32; b];
+        let mut actives: Vec<ActiveRequest> = Vec::with_capacity(reqs.len());
+        let now = Instant::now();
+        for (lane, req) in reqs.into_iter().enumerate() {
+            let slot_adapter = match &req.adapter {
+                Some(name) => self
+                    .registry
+                    .slot_of(name)
+                    .ok_or_else(|| anyhow!("adapter {name:?} vanished"))?,
+                None => 0,
+            };
+            tokens[lane * l..lane * l + req.prompt.len()]
+                .copy_from_slice(&req.prompt);
+            lengths[lane] = req.prompt.len() as i32;
+            ids[lane] = slot_adapter as i32;
+            actives.push(ActiveRequest::new(req, slot_adapter, now));
+        }
+
+        let ids_t = HostTensor::i32(vec![b], ids);
+        let tokens_t = HostTensor::i32(vec![b, l], tokens);
+        let lengths_t = HostTensor::i32(vec![b], lengths);
+        let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
+        data.insert("ids", &ids_t);
+        data.insert("tokens", &tokens_t);
+        data.insert("lengths", &lengths_t);
+        let exe = self.prefill_buckets[bucket_idx].exe.clone();
+        let args = self.build_args(&exe.info, &data)?;
+        let t0 = Instant::now();
+        let outs = exe.run(&args)?;
+        drop(args);
+        self.metrics.prefill_time += t0.elapsed();
+        self.metrics.prefill_batches += 1;
+
+        let logits = &outs[0]; // [b, vocab]
+        let (pk, pv) = (&outs[1], &outs[2]);
+        let vocab = self.cfg.vocab;
+        for (lane, mut ar) in actives.into_iter().enumerate() {
+            // Sample the first generated token from the prefill logits.
+            let row = logits.read_f32_range(lane * vocab, vocab);
+            let tok = sampler::sample(
+                &row,
+                ar.req.sampling.temperature,
+                ar.req.sampling.top_k,
+                &mut ar.rng_state,
+            );
+            ar.generated.push(tok);
+            ar.first_token_at = Some(Instant::now());
+            self.metrics.tokens_generated += 1;
+            self.metrics.prompt_tokens += ar.req.prompt.len();
+
+            let slot = self
+                .alloc
+                .alloc()
+                .ok_or_else(|| anyhow!("scheduler invariant violated: no free slot"))?;
+            self.kv.adopt_prefill_lane(pk, pv, lane, slot, ar.req.prompt.len())?;
+            debug_assert!(self.slots[slot].is_none());
+            self.slots[slot] = Some(ar);
+        }
+        Ok(())
+    }
+
+    /// One decode step across all slots.
+    fn decode_once(&mut self, outputs: &mut Vec<RequestOutput>) -> Result<()> {
+        self.upload_bank_if_dirty()?;
+        let b = self.econf.decode_slots;
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut ids = vec![0i32; b];
+        let mut any = false;
+        for (s, slot) in self.slots.iter().enumerate() {
+            if let Some(ar) = slot {
+                any = true;
+                token[s] = *ar.generated.last().expect("active slot has >= 1 token");
+                pos[s] = ar.pos as i32;
+                ids[s] = ar.slot_adapter as i32;
+            }
+        }
+        if !any {
+            return Ok(());
+        }
+
+        // KV caches are passed by reference — no per-step clone of the
+        // multi-MB cache tensors (EXPERIMENTS.md §Perf).
+        let ids_t = HostTensor::i32(vec![b], ids);
+        let token_t = HostTensor::i32(vec![b], token);
+        let pos_t = HostTensor::i32(vec![b], pos);
+        let exe = self.decode_exe.clone();
+        let (outs, elapsed) = {
+            let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
+            data.insert("ids", &ids_t);
+            data.insert("token", &token_t);
+            data.insert("pos", &pos_t);
+            data.insert("k_cache", &self.kv.k);
+            data.insert("v_cache", &self.kv.v);
+            let args = self.build_args(&exe.info, &data)?;
+            let t0 = Instant::now();
+            let outs = exe.run(&args)?;
+            (outs, t0.elapsed())
+        };
+        self.metrics.decode_time += elapsed;
+        self.metrics.decode_steps += 1;
+
+        let mut outs = outs.into_iter();
+        let logits = outs.next().unwrap();
+        let k_new = outs.next().unwrap();
+        let v_new = outs.next().unwrap();
+        self.kv.replace(k_new, v_new)?;
+
+        let vocab = self.cfg.vocab;
+        for s in 0..b {
+            let Some(ar) = self.slots[s].as_mut() else { continue };
+            ar.pos += 1;
+            let row = logits.read_f32_range(s * vocab, vocab);
+            let tok = sampler::sample(
+                &row,
+                ar.req.sampling.temperature,
+                ar.req.sampling.top_k,
+                &mut ar.rng_state,
+            );
+            ar.generated.push(tok);
+            self.metrics.tokens_generated += 1;
+            if let Some(reason) = ar.done() {
+                let ar = self.slots[s].take().unwrap();
+                self.alloc.release(s)?;
+                self.finish(ar, reason, outputs);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        ar: ActiveRequest,
+        reason: FinishReason,
+        outputs: &mut Vec<RequestOutput>,
+    ) {
+        let now = Instant::now();
+        let ttft = ar
+            .first_token_at
+            .map(|t| (t - ar.submitted).as_secs_f64())
+            .unwrap_or_default();
+        let mut tokens = ar.generated;
+        if reason == FinishReason::StopToken {
+            tokens.pop();
+        }
+        self.metrics.requests_completed += 1;
+        self.metrics.ttft.record_us(ttft * 1e6);
+        let e2e = (now - ar.submitted).as_secs_f64();
+        self.metrics.e2e.record_us(e2e * 1e6);
+        outputs.push(RequestOutput {
+            id: ar.req.id,
+            adapter: ar.req.adapter,
+            tokens,
+            finish: reason,
+            ttft,
+            e2e,
+        });
+    }
+
+    /// One scheduler iteration: admit + decode.  Returns requests finished
+    /// during this iteration.
+    pub fn step(&mut self) -> Result<Vec<RequestOutput>> {
+        self.metrics.start();
+        let mut outputs = Vec::new();
+        self.maybe_prefill()?;
+        // A request can finish at prefill time (max_new_tokens == 1).
+        let finished_at_prefill: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, slot)| {
+                slot.as_ref().and_then(|ar| ar.done().map(|_| s))
+            })
+            .collect();
+        for s in finished_at_prefill {
+            let ar = self.slots[s].take().unwrap();
+            let reason = ar.done().unwrap();
+            self.alloc.release(s)?;
+            self.finish(ar, reason, &mut outputs);
+        }
+        self.decode_once(&mut outputs)?;
+        Ok(outputs)
+    }
+
+    /// Submit a workload and run to completion (bench/example driver).
+    pub fn run_all(&mut self, reqs: Vec<Request>) -> Result<Vec<RequestOutput>> {
+        let mut pending: std::collections::VecDeque<Request> = reqs.into();
+        let mut outputs = Vec::new();
+        while !pending.is_empty() || self.has_work() {
+            while let Some(r) = pending.pop_front() {
+                if let Err(e) = self.submit(r.clone()) {
+                    if e.to_string().contains("backpressure") {
+                        pending.push_front(r);
+                        break;
+                    }
+                    return Err(e);
+                }
+            }
+            outputs.extend(self.step()?);
+        }
+        self.metrics.stop();
+        Ok(outputs)
+    }
+}

@@ -1,0 +1,213 @@
+//! KV-cache state and decode-slot allocation.
+//!
+//! XLA executables are shape-specialized, so the decode step runs at a
+//! fixed slot count B; continuous batching assigns requests to free slot
+//! lanes (each lane tracks its own sequence position — the per-slot `pos`
+//! vector of the decode entry point).  The cache layout matches the HLO
+//! signature: [n_layers, B, n_heads, max_seq, head_dim], f32.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelConfigInfo;
+use crate::tensor::{DType, HostTensor};
+
+/// Free-list slot allocator with double-free protection.
+#[derive(Debug)]
+pub struct SlotAllocator {
+    free: Vec<usize>,
+    in_use: Vec<bool>,
+}
+
+impl SlotAllocator {
+    pub fn new(n: usize) -> SlotAllocator {
+        SlotAllocator { free: (0..n).rev().collect(), in_use: vec![false; n] }
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        let s = self.free.pop()?;
+        self.in_use[s] = true;
+        Some(s)
+    }
+
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.in_use.len() {
+            bail!("slot {slot} out of range");
+        }
+        if !self.in_use[slot] {
+            bail!("double free of slot {slot}");
+        }
+        self.in_use[slot] = false;
+        self.free.push(slot);
+        Ok(())
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.in_use.len()
+    }
+
+    pub fn is_in_use(&self, slot: usize) -> bool {
+        self.in_use.get(slot).copied().unwrap_or(false)
+    }
+}
+
+/// Host-resident K/V caches for all decode slots.
+pub struct KvState {
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub n_layers: usize,
+    pub n_slots: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+impl KvState {
+    pub fn new(cfg: &ModelConfigInfo, n_slots: usize) -> KvState {
+        let shape = vec![cfg.n_layers, n_slots, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        KvState {
+            k: HostTensor::zeros(shape.clone(), DType::F32),
+            v: HostTensor::zeros(shape, DType::F32),
+            n_layers: cfg.n_layers,
+            n_slots,
+            n_heads: cfg.n_heads,
+            max_seq: cfg.max_seq,
+            head_dim: cfg.head_dim,
+        }
+    }
+
+    /// Flat element offset of [layer, slot, head, 0, 0].
+    fn lane_offset(&self, layer: usize, slot: usize, head: usize) -> usize {
+        ((layer * self.n_slots + slot) * self.n_heads + head) * self.max_seq * self.head_dim
+    }
+
+    /// Copy one request's cache lane out of a prefill output
+    /// ([n_layers, b_prefill, n_heads, max_seq, head_dim]) into `slot`.
+    pub fn adopt_prefill_lane(
+        &mut self,
+        pk: &HostTensor,
+        pv: &HostTensor,
+        prefill_lane: usize,
+        slot: usize,
+        prompt_len: usize,
+    ) -> Result<()> {
+        let b_pre = pk.shape[1];
+        if prefill_lane >= b_pre || slot >= self.n_slots {
+            bail!("lane {prefill_lane}/{b_pre} or slot {slot}/{} out of range", self.n_slots);
+        }
+        // Only the first prompt_len positions carry data; copying the head
+        // of each [max_seq, head_dim] row bounds the memcpy to what matters.
+        let row = prompt_len.min(self.max_seq) * self.head_dim;
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let src =
+                    ((l * b_pre + prefill_lane) * self.n_heads + h) * self.max_seq * self.head_dim;
+                let dst = self.lane_offset(l, slot, h);
+                let kd = pk.read_f32_range(src, row);
+                self.k.write_f32_range(dst, &kd);
+                let vd = pv.read_f32_range(src, row);
+                self.v.write_f32_range(dst, &vd);
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace both caches with the decode step's outputs (same shape).
+    pub fn replace(&mut self, k: HostTensor, v: HostTensor) -> Result<()> {
+        if k.shape != self.k.shape || v.shape != self.v.shape {
+            bail!("kv shape changed: {:?} vs {:?}", k.shape, self.k.shape);
+        }
+        self.k = k;
+        self.v = v;
+        Ok(())
+    }
+
+    /// Zero a slot's lanes (hygiene on release; correctness does not depend
+    /// on it because prefill overwrites and masks exclude stale positions).
+    pub fn clear_slot(&mut self, slot: usize) {
+        let zeros = vec![0f32; self.max_seq * self.head_dim];
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let off = self.lane_offset(l, slot, h);
+                self.k.write_f32_range(off, &zeros);
+                self.v.write_f32_range(off, &zeros);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfigInfo {
+        ModelConfigInfo {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 12,
+            max_seq: 8,
+            head_dim: 4,
+            n_adapters: 4,
+            lora_rank: 2,
+        }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut a = SlotAllocator::new(3);
+        let s1 = a.alloc().unwrap();
+        let s2 = a.alloc().unwrap();
+        assert_ne!(s1, s2);
+        assert_eq!(a.n_free(), 1);
+        a.release(s1).unwrap();
+        assert!(a.release(s1).is_err(), "double free must fail");
+        assert_eq!(a.n_free(), 2);
+        let _ = a.alloc().unwrap();
+        let _ = a.alloc().unwrap();
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn adopt_prefill_lane_copies_right_region() {
+        let c = cfg();
+        let mut kv = KvState::new(&c, 4);
+        // prefill output with b=2; fill lane 1 with a marker pattern
+        let shape = vec![c.n_layers, 2, c.n_heads, c.max_seq, c.head_dim];
+        let n: usize = shape.iter().product();
+        let mut pk = HostTensor::zeros(shape.clone(), DType::F32);
+        let pv = HostTensor::zeros(shape, DType::F32);
+        for l in 0..c.n_layers {
+            for h in 0..c.n_heads {
+                let off = ((l * 2 + 1) * c.n_heads + h) * c.max_seq * c.head_dim;
+                pk.write_f32_range(off, &vec![7.5; 3 * c.head_dim]);
+            }
+        }
+        assert!(n > 0);
+        kv.adopt_prefill_lane(&pk, &pv, 1, 2, 3).unwrap();
+        // slot 2 has the marker in the first 3 positions of every lane
+        for l in 0..c.n_layers {
+            for h in 0..c.n_heads {
+                let off = kv.lane_offset(l, 2, h);
+                assert_eq!(kv.k.read_f32_range(off, 3 * c.head_dim), vec![7.5; 3 * c.head_dim]);
+                assert_eq!(kv.k.f32_at(off + 3 * c.head_dim), 0.0);
+            }
+        }
+        // other slots untouched
+        assert_eq!(kv.k.f32_at(kv.lane_offset(0, 1, 0)), 0.0);
+    }
+
+    #[test]
+    fn clear_slot_zeroes() {
+        let c = cfg();
+        let mut kv = KvState::new(&c, 2);
+        kv.k.write_f32_range(kv.lane_offset(0, 1, 0), &[9.0; 4]);
+        kv.clear_slot(1);
+        assert_eq!(kv.k.f32_at(kv.lane_offset(0, 1, 0)), 0.0);
+    }
+}

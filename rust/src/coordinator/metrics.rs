@@ -1,0 +1,82 @@
+//! Serving metrics: throughput, TTFT, per-token and end-to-end latency,
+//! step-time accounting split by phase.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{LatencyRecorder, Summary};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_completed: usize,
+    pub tokens_generated: usize,
+    pub prompt_tokens: usize,
+    pub prefill_batches: usize,
+    pub decode_steps: usize,
+    pub ttft: LatencyRecorder,
+    pub e2e: LatencyRecorder,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    pub started: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn wall(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => (f - s).as_secs_f64(),
+            (Some(s), None) => s.elapsed().as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Generated tokens per second of wall time — Figure 4's y-axis.
+    pub fn throughput(&self) -> f64 {
+        let w = self.wall();
+        if w > 0.0 {
+            self.tokens_generated as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        self.ttft.summary()
+    }
+
+    pub fn e2e_summary(&self) -> Summary {
+        self.e2e.summary()
+    }
+
+    pub fn report(&self) -> String {
+        let t = self.ttft_summary();
+        let e = self.e2e_summary();
+        format!(
+            "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s \
+             prefill_batches={} decode_steps={} \
+             ttft(p50/p90)={:.1}/{:.1}ms e2e(p50/p90)={:.1}/{:.1}ms \
+             prefill={:.2}s decode={:.2}s",
+            self.requests_completed,
+            self.tokens_generated,
+            self.wall(),
+            self.throughput(),
+            self.prefill_batches,
+            self.decode_steps,
+            t.p50 / 1e3,
+            t.p90 / 1e3,
+            e.p50 / 1e3,
+            e.p90 / 1e3,
+            self.prefill_time.as_secs_f64(),
+            self.decode_time.as_secs_f64(),
+        )
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the paper's serving contribution as a running
+//! system — request admission, adapter registry, continuous batching over
+//! decode slots, KV-slot management, sampling, metrics, and a threaded
+//! server front-end.
+
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod sampler;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
+pub use server::{EngineClient, EngineServer};

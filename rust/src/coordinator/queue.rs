@@ -1,0 +1,123 @@
+//! Bounded admission queue with backpressure (the front door of the
+//! coordinator).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::request::Request;
+
+pub struct AdmissionQueue {
+    q: VecDeque<Request>,
+    capacity: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue { q: VecDeque::new(), capacity, admitted: 0, rejected: 0 }
+    }
+
+    /// Admit a request; errors when the queue is full (backpressure — the
+    /// caller is expected to retry or shed load).
+    pub fn push(&mut self, r: Request) -> Result<()> {
+        if self.q.len() >= self.capacity {
+            self.rejected += 1;
+            bail!("queue full ({} waiting); backpressure", self.q.len());
+        }
+        self.admitted += 1;
+        self.q.push_back(r);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.q.pop_front()
+    }
+
+    /// Pop up to n requests whose prompt length fits `max_len`.
+    /// FIFO order is preserved among the selected; skipped requests keep
+    /// their place (no starvation: longer prompts are handled by the bigger
+    /// prefill bucket on a later iteration).
+    pub fn pop_fitting(&mut self, n: usize, max_len: usize) -> Vec<Request> {
+        let mut taken = Vec::new();
+        let mut keep = VecDeque::new();
+        while let Some(r) = self.q.pop_front() {
+            if taken.len() < n && r.prompt.len() <= max_len {
+                taken.push(r);
+            } else {
+                keep.push_back(r);
+            }
+        }
+        self.q = keep;
+        taken
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn max_prompt_len(&self) -> usize {
+        self.q.iter().map(|r| r.prompt.len()).max().unwrap_or(0)
+    }
+
+    pub fn min_prompt_len(&self) -> usize {
+        self.q.iter().map(|r| r.prompt.len()).min().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, plen: usize) -> Request {
+        Request::new(id, vec![1; plen], 4)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = AdmissionQueue::new(10);
+        q.push(req(1, 3)).unwrap();
+        q.push(req(2, 3)).unwrap();
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let mut q = AdmissionQueue::new(2);
+        q.push(req(1, 1)).unwrap();
+        q.push(req(2, 1)).unwrap();
+        assert!(q.push(req(3, 1)).is_err());
+        assert_eq!(q.rejected, 1);
+        q.pop();
+        q.push(req(3, 1)).unwrap();
+    }
+
+    #[test]
+    fn pop_fitting_preserves_skipped() {
+        let mut q = AdmissionQueue::new(10);
+        q.push(req(1, 20)).unwrap(); // too long for bucket
+        q.push(req(2, 4)).unwrap();
+        q.push(req(3, 4)).unwrap();
+        let taken = q.pop_fitting(2, 16);
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn pop_fitting_respects_n() {
+        let mut q = AdmissionQueue::new(10);
+        for i in 0..5 {
+            q.push(req(i, 2)).unwrap();
+        }
+        let taken = q.pop_fitting(3, 16);
+        assert_eq!(taken.len(), 3);
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Request/response types for the multi-adapter serving engine.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct SamplingParams {
+    /// 0.0 => greedy decoding.
+    pub temperature: f32,
+    /// 0 => no top-k truncation.
+    pub top_k: usize,
+    pub seed: u64,
+    /// Stop early when this token is produced (it is not emitted).
+    pub stop_token: Option<i32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0, stop_token: None }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Registered adapter name; None = base model (identity slot 0).
+    pub adapter: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request { id, adapter: None, prompt, max_new_tokens, sampling: Default::default() }
+    }
+
+    pub fn with_adapter(mut self, name: &str) -> Request {
+        self.adapter = Some(name.to_string());
+        self
+    }
+
+    pub fn with_sampling(mut self, s: SamplingParams) -> Request {
+        self.sampling = s;
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    Cancelled,
+}
+
+#[derive(Clone, Debug)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub adapter: Option<String>,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Time to first token (seconds).
+    pub ttft: f64,
+    /// End-to-end latency (seconds).
+    pub e2e: f64,
+}
+
+/// In-flight request state pinned to a decode slot.
+#[derive(Debug)]
+pub struct ActiveRequest {
+    pub req: Request,
+    pub slot_adapter: usize,
+    pub generated: Vec<i32>,
+    pub pos: usize,
+    pub submitted: Instant,
+    pub first_token_at: Option<Instant>,
+    pub rng_state: crate::util::rng::Rng,
+}
+
+impl ActiveRequest {
+    pub fn new(req: Request, slot_adapter: usize, submitted: Instant) -> ActiveRequest {
+        let seed = req.sampling.seed ^ req.id.wrapping_mul(0x9e3779b97f4a7c15);
+        ActiveRequest {
+            slot_adapter,
+            pos: req.prompt.len(),
+            generated: Vec::with_capacity(req.max_new_tokens),
+            submitted,
+            first_token_at: None,
+            rng_state: crate::util::rng::Rng::seed_from(seed),
+            req,
+        }
+    }
+
+    pub fn done(&self) -> Option<FinishReason> {
+        if let (Some(stop), Some(&last)) = (self.req.sampling.stop_token, self.generated.last()) {
+            if last == stop {
+                return Some(FinishReason::StopToken);
+            }
+        }
+        if self.generated.len() >= self.req.max_new_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        None
+    }
+}

@@ -1,0 +1,95 @@
+//! Token sampling over a logits row (greedy / temperature / top-k).
+
+use crate::util::rng::Rng;
+
+/// Sample one token id from `logits`.
+pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    // Collect candidate (index, logit) pairs, optionally top-k-truncated.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(top_k);
+    }
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - max) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= total;
+    }
+    idx[rng.weighted(&probs)] as i32
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Log-softmax probability of `token` under `logits` (LL-judge, Table 5).
+pub fn token_logprob(logits: &[f32], token: usize) -> f64 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f64 = logits.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln()
+        + max as f64;
+    logits[token] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::seed_from(0);
+        assert_eq!(sample(&[0.1, 2.0, -1.0], 0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_respects_distribution() {
+        let mut rng = Rng::seed_from(1);
+        let logits = [0.0f32, 5.0, 0.0, 0.0];
+        let mut hits = 0;
+        for _ in 0..200 {
+            if sample(&logits, 1.0, 0, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 150, "{hits}");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::seed_from(2);
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        for _ in 0..100 {
+            let t = sample(&logits, 2.0, 2, &mut rng);
+            assert!(t == 2 || t == 3, "{t}");
+        }
+    }
+
+    #[test]
+    fn logprob_normalizes() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| token_logprob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits = [1.0f32, 1.1, 0.9, 1.05];
+        let a: Vec<i32> =
+            (0..20).map(|_| sample(&logits, 0.8, 0, &mut Rng::seed_from(9))).collect();
+        let b: Vec<i32> =
+            (0..20).map(|_| sample(&logits, 0.8, 0, &mut Rng::seed_from(9))).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,184 @@
+//! Threaded front-end for the engine: clients talk to a dedicated engine
+//! thread over mpsc channels (the PJRT client is not Send; and the image
+//! carries no tokio — std::thread + channels is the documented
+//! substitution, DESIGN.md §Substitutions).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::adapters::Adapter;
+
+use super::engine::{Engine, EngineConfig};
+use super::request::{Request, RequestOutput};
+
+enum Cmd {
+    Submit(Request, Sender<Result<RequestOutput, String>>),
+    Register(String, Box<Adapter>, Sender<Result<usize, String>>),
+    Stats(Sender<String>),
+    Shutdown,
+}
+
+/// Handle for submitting work to a running engine thread.
+#[derive(Clone)]
+pub struct EngineClient {
+    tx: Sender<Cmd>,
+}
+
+impl EngineClient {
+    /// Submit and wait for the full response.
+    pub fn generate(&self, req: Request) -> Result<RequestOutput> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Submit(req, tx)).map_err(|_| anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Submit without waiting; the receiver yields the output when done.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<RequestOutput, String>>> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Submit(req, tx)).map_err(|_| anyhow!("engine stopped"))?;
+        Ok(rx)
+    }
+
+    pub fn register_adapter(&self, name: &str, adapter: Adapter) -> Result<usize> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Register(name.to_string(), Box::new(adapter), tx))
+            .map_err(|_| anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Stats(tx)).map_err(|_| anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))
+    }
+}
+
+pub struct EngineServer {
+    tx: Sender<Cmd>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl EngineServer {
+    /// Start an engine on its own thread.  `setup` runs on the engine
+    /// thread after construction (e.g. to register adapters that are not
+    /// Send-friendly to build elsewhere).
+    pub fn start(
+        econf: EngineConfig,
+        artifacts_dir: std::path::PathBuf,
+        setup: impl FnOnce(&mut Engine) -> Result<()> + Send + 'static,
+    ) -> Result<(EngineServer, EngineClient)> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("road-engine".into())
+            .spawn(move || engine_thread(econf, artifacts_dir, rx, ready_tx, setup))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(anyhow!("engine init failed: {e}")),
+            Err(_) => return Err(anyhow!("engine thread died during init")),
+        }
+        Ok((EngineServer { tx: tx.clone(), handle: Some(handle) }, EngineClient { tx }))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("engine thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EngineServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_thread(
+    econf: EngineConfig,
+    artifacts_dir: std::path::PathBuf,
+    rx: Receiver<Cmd>,
+    ready: Sender<Result<(), String>>,
+    setup: impl FnOnce(&mut Engine) -> Result<()>,
+) -> Result<()> {
+    let init = (|| -> Result<Engine> {
+        let manifest = crate::manifest::Manifest::load(&artifacts_dir)?;
+        let rt = std::rc::Rc::new(crate::runtime::Runtime::new(manifest)?);
+        let mut engine = Engine::new(rt, econf)?;
+        setup(&mut engine)?;
+        Ok(engine)
+    })();
+    let mut engine = match init {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return Err(e);
+        }
+    };
+
+    // id -> response channel
+    let mut waiters: std::collections::HashMap<u64, Sender<Result<RequestOutput, String>>> =
+        Default::default();
+    let mut shutting_down = false;
+
+    loop {
+        // Drain commands: block when idle, poll when there is work.
+        loop {
+            let cmd = if engine.has_work() || shutting_down {
+                match rx.try_recv() {
+                    Ok(c) => Some(c),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.recv() {
+                    Ok(c) => Some(c),
+                    Err(_) => return Ok(()), // all clients gone, idle
+                }
+            };
+            let Some(cmd) = cmd else { break };
+            match cmd {
+                Cmd::Submit(req, resp) => match engine.submit(req) {
+                    Ok(id) => {
+                        waiters.insert(id, resp);
+                    }
+                    Err(e) => {
+                        let _ = resp.send(Err(format!("{e:#}")));
+                    }
+                },
+                Cmd::Register(name, adapter, resp) => {
+                    let _ = resp.send(
+                        engine.register_adapter(&name, &adapter).map_err(|e| format!("{e:#}")),
+                    );
+                }
+                Cmd::Stats(resp) => {
+                    let _ = resp.send(engine.metrics.report());
+                }
+                Cmd::Shutdown => shutting_down = true,
+            }
+        }
+
+        if engine.has_work() {
+            for out in engine.step()? {
+                if let Some(w) = waiters.remove(&out.id) {
+                    let _ = w.send(Ok(out));
+                }
+            }
+        } else if shutting_down {
+            return Ok(());
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! Experiment drivers: one function per paper table/figure, producing the
+//! markdown rows the paper reports (EXPERIMENTS.md records the runs).
+//!
+//! * Table 2  — NLU suite, one model per task per method, 3 seeds.
+//! * Table 3  — commonsense suite, one unified model per method.
+//! * Table 4  — arithmetic suite, Math10K-analogue training mix.
+//! * Table 5  — instruction following, LL-judge win rate.
+//! * Table 6  — multimodal suite.
+//! * Table D.2 — commonsense on the second backbone (train2).
+//! * Figure 1 — quality-vs-#params summary assembled from the above.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::runtime::Runtime;
+use crate::tasks::{self, Metric, SuiteSampler, Task, TaskSampler};
+use crate::trainer::{self, Recipe, Trainer};
+use crate::util::stats;
+use crate::util::table::{fmt_f, Table};
+
+/// Common experiment options.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub steps: usize,
+    pub seeds: Vec<u64>,
+    pub n_eval: usize,
+    pub verbose: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { steps: 200, seeds: vec![0, 1, 2], n_eval: 256, verbose: false }
+    }
+}
+
+/// One method's row: per-task mean scores (+ std over seeds) and average.
+#[derive(Clone, Debug)]
+pub struct MethodRow {
+    pub method: String,
+    pub n_trainable: usize,
+    pub pct_params: f64,
+    pub scores: Vec<f64>,
+    pub stds: Vec<f64>,
+    pub avg: f64,
+}
+
+fn pct(n_trainable: usize, rt: &Rc<Runtime>, config: &str) -> f64 {
+    let total = crate::model::ParamStore::load(&rt.manifest, config)
+        .map(|p| p.n_params())
+        .unwrap_or(1);
+    100.0 * n_trainable as f64 / total as f64
+}
+
+fn render_rows(title: &str, task_names: &[String], rows: &[MethodRow]) -> String {
+    let mut headers: Vec<&str> = vec!["method", "#params", "%params"];
+    let names: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+    headers.extend(names);
+    headers.push("avg");
+    let mut t = Table::new(&headers);
+    for r in rows {
+        let mut cells = vec![
+            r.method.clone(),
+            r.n_trainable.to_string(),
+            format!("{:.3}%", r.pct_params),
+        ];
+        for (s, sd) in r.scores.iter().zip(&r.stds) {
+            if r.stds.iter().any(|&x| x > 0.0) {
+                cells.push(format!("{:.1}±{:.1}", 100.0 * s, 100.0 * sd));
+            } else {
+                cells.push(format!("{:.1}", 100.0 * s));
+            }
+        }
+        cells.push(format!("{:.1}", 100.0 * r.avg));
+        t.row(cells);
+    }
+    format!("## {title}\n{}", t.render())
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: NLU (one model per task)
+// ---------------------------------------------------------------------------
+
+pub const NLU_METHODS: &[&str] =
+    &["full", "lora", "bitfit", "ia3", "oft2", "road1", "road1_fc1"];
+
+/// Train + evaluate one (method, task, seed) cell of Table 2.
+pub fn nlu_cell(
+    rt: &Rc<Runtime>,
+    config: &str,
+    method: &str,
+    task: &dyn Task,
+    steps: usize,
+    n_eval: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut tr = Trainer::new(rt.clone(), config, method)?;
+    let recipe =
+        Recipe::default().with_lr(Recipe::default_lr(method)).with_steps(steps).with_seed(seed);
+    let mut src = TaskSampler { task, batch: tr.batch, seq_len: tr.seq_len };
+    trainer::train(&mut tr, &recipe, &mut src, None)?;
+    let eval = tasks::eval_classification(&tr, task, n_eval, seed ^ 0x7e57)?;
+    Ok(eval.score)
+}
+
+pub fn run_nlu(
+    rt: &Rc<Runtime>,
+    config: &str,
+    methods: &[&str],
+    opts: &ExpOptions,
+) -> Result<(Vec<String>, Vec<MethodRow>)> {
+    let suite = tasks::nlu_suite();
+    let task_names: Vec<String> = suite.iter().map(|t| t.name().to_string()).collect();
+    let mut rows = Vec::new();
+    for &method in methods {
+        let mut scores = Vec::new();
+        let mut stds = Vec::new();
+        let mut n_trainable = 0usize;
+        for task in &suite {
+            let mut per_seed = Vec::new();
+            for &seed in &opts.seeds {
+                let mut tr = Trainer::new(rt.clone(), config, method)?;
+                n_trainable = tr.n_trainable;
+                let recipe = Recipe::default()
+                    .with_lr(Recipe::default_lr(method))
+                    .with_steps(opts.steps)
+                    .with_seed(seed);
+                let mut src =
+                    TaskSampler { task: task.as_ref(), batch: tr.batch, seq_len: tr.seq_len };
+                trainer::train(&mut tr, &recipe, &mut src, None)?;
+                let ev = tasks::eval_classification(&tr, task.as_ref(), opts.n_eval, seed ^ 0x7e57)?;
+                per_seed.push(ev.score);
+            }
+            scores.push(stats::mean(&per_seed));
+            stds.push(stats::std(&per_seed));
+            if opts.verbose {
+                println!(
+                    "  [nlu] {method:<10} {:<10} {:.3}",
+                    task.name(),
+                    scores.last().unwrap()
+                );
+            }
+        }
+        let avg = stats::mean(&scores);
+        rows.push(MethodRow {
+            method: method.to_string(),
+            n_trainable,
+            pct_params: pct(n_trainable, rt, config),
+            scores,
+            stds,
+            avg,
+        });
+    }
+    Ok((task_names, rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 / D.2: commonsense (one unified model per method)
+// ---------------------------------------------------------------------------
+
+pub const COMMONSENSE_METHODS: &[&str] = &["lora", "ia3", "oft2", "road1", "road2", "road4"];
+pub const TRAIN2_METHODS: &[&str] = &["lora", "road1", "road2", "road4"];
+
+pub fn run_commonsense(
+    rt: &Rc<Runtime>,
+    config: &str,
+    methods: &[&str],
+    opts: &ExpOptions,
+) -> Result<(Vec<String>, Vec<MethodRow>)> {
+    let suite = tasks::commonsense_suite();
+    let task_names: Vec<String> = suite.iter().map(|t| t.name().to_string()).collect();
+    let mut rows = Vec::new();
+    for &method in methods {
+        let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); suite.len()];
+        let mut n_trainable = 0usize;
+        for &seed in &opts.seeds {
+            let mut tr = Trainer::new(rt.clone(), config, method)?;
+            n_trainable = tr.n_trainable;
+            let recipe = Recipe::default()
+                .with_lr(Recipe::default_lr(method))
+                .with_steps(opts.steps)
+                .with_seed(seed);
+            let mut src = SuiteSampler::new(&suite, tr.batch, tr.seq_len);
+            trainer::train(&mut tr, &recipe, &mut src, None)?;
+            for (i, task) in suite.iter().enumerate() {
+                let ev =
+                    tasks::eval_choice_accuracy(&tr, task.as_ref(), opts.n_eval, seed ^ 0x7e57)?;
+                per_task[i].push(ev.score);
+                if opts.verbose {
+                    println!("  [cs] {method:<8} {:<14} {:.3}", task.name(), ev.score);
+                }
+            }
+        }
+        let scores: Vec<f64> = per_task.iter().map(|v| stats::mean(v)).collect();
+        let stds: Vec<f64> = per_task.iter().map(|v| stats::std(v)).collect();
+        let avg = stats::mean(&scores);
+        rows.push(MethodRow {
+            method: method.to_string(),
+            n_trainable,
+            pct_params: pct(n_trainable, rt, config),
+            scores,
+            stds,
+            avg,
+        });
+    }
+    Ok((task_names, rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: arithmetic (generative exact match through the engine)
+// ---------------------------------------------------------------------------
+
+pub const ARITHMETIC_METHODS: &[&str] = &["lora", "ia3", "road1", "road2", "road4"];
+
+/// Serving mode for a trained method's generative eval.
+fn gen_mode(method: &str) -> Result<&'static str> {
+    Ok(match method {
+        m if m.starts_with("road") => "road",
+        "lora" => "lora",
+        "ia3" => "ia3",
+        "full" | "bitfit" => "base",
+        m => bail!("no generative serving path for method {m}"),
+    })
+}
+
+/// Build a generation engine for a trained model: adapter-bank modes carry
+/// the exported adapter; merged methods serve through `base`.
+pub fn gen_engine(rt: &Rc<Runtime>, config: &str, tr: &Trainer) -> Result<(Engine, Option<String>)> {
+    let mode = gen_mode(&tr.method)?;
+    let econf = EngineConfig {
+        model: config.into(),
+        mode: mode.into(),
+        decode_slots: 8,
+        queue_capacity: 4096,
+    };
+    if mode == "base" {
+        let params = tr.merged_params()?;
+        let engine = Engine::with_params(rt.clone(), econf, params)?;
+        Ok((engine, None))
+    } else {
+        let mut engine = Engine::new(rt.clone(), econf)?;
+        let adapter = tr.export_adapter()?;
+        engine.register_adapter("trained", &adapter)?;
+        Ok((engine, Some("trained".to_string())))
+    }
+}
+
+pub fn run_arithmetic(
+    rt: &Rc<Runtime>,
+    config: &str,
+    methods: &[&str],
+    opts: &ExpOptions,
+) -> Result<(Vec<String>, Vec<MethodRow>)> {
+    let train_suite = tasks::arithmetic_train_suite();
+    let eval_suite = tasks::arithmetic_eval_suite();
+    let task_names: Vec<String> = eval_suite.iter().map(|t| t.name().to_string()).collect();
+    let mut rows = Vec::new();
+    for &method in methods {
+        let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); eval_suite.len()];
+        let mut n_trainable = 0usize;
+        for &seed in &opts.seeds {
+            let mut tr = Trainer::new(rt.clone(), config, method)?;
+            n_trainable = tr.n_trainable;
+            let recipe = Recipe::default()
+                .with_lr(Recipe::default_lr(method))
+                .with_steps(opts.steps)
+                .with_seed(seed);
+            let mut src = SuiteSampler::new(&train_suite, tr.batch, tr.seq_len);
+            trainer::train(&mut tr, &recipe, &mut src, None)?;
+
+            let (mut engine, adapter) = gen_engine(rt, config, &tr)?;
+            for (i, task) in eval_suite.iter().enumerate() {
+                let score = match task.metric() {
+                    Metric::ExactMatch => {
+                        tasks::eval_exact_match(
+                            &mut engine,
+                            adapter.as_deref(),
+                            task.as_ref(),
+                            opts.n_eval.min(64),
+                            seed ^ 0x7e57,
+                        )?
+                        .score
+                    }
+                    // AQuA analogue: choice accuracy by NLL scoring.
+                    _ => {
+                        tasks::eval_choice_accuracy(
+                            &tr,
+                            task.as_ref(),
+                            opts.n_eval,
+                            seed ^ 0x7e57,
+                        )?
+                        .score
+                    }
+                };
+                per_task[i].push(score);
+                if opts.verbose {
+                    println!("  [arith] {method:<8} {:<10} {:.3}", task.name(), score);
+                }
+            }
+        }
+        let scores: Vec<f64> = per_task.iter().map(|v| stats::mean(v)).collect();
+        let stds: Vec<f64> = per_task.iter().map(|v| stats::std(v)).collect();
+        let avg = stats::mean(&scores);
+        rows.push(MethodRow {
+            method: method.to_string(),
+            n_trainable,
+            pct_params: pct(n_trainable, rt, config),
+            scores,
+            stds,
+            avg,
+        });
+    }
+    Ok((task_names, rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: instruction following (win rate vs base model)
+// ---------------------------------------------------------------------------
+
+pub const INSTRUCT_METHODS: &[&str] = &["lora", "road1"];
+
+pub fn run_instruct(
+    rt: &Rc<Runtime>,
+    config: &str,
+    methods: &[&str],
+    opts: &ExpOptions,
+) -> Result<String> {
+    let suites: Vec<(&str, Vec<Box<dyn Task>>)> = vec![
+        ("alpaca-x", tasks::instruct_suite()),
+        ("ultra-x", vec![Box::new(tasks::instruct::UltraX) as Box<dyn Task>]),
+    ];
+    let mut t = Table::new(&["method", "#params", "%params", "data", "win rate (%)"]);
+    for (data_name, suite) in &suites {
+        for &method in methods {
+            let mut wins = Vec::new();
+            let mut n_trainable = 0usize;
+            for &seed in &opts.seeds {
+                let mut tr = Trainer::new(rt.clone(), config, method)?;
+                n_trainable = tr.n_trainable;
+                let reference = Trainer::new(rt.clone(), config, method)?; // identity init
+                let recipe = Recipe::default()
+                    .with_lr(Recipe::default_lr(method))
+                    .with_steps(opts.steps)
+                    .with_seed(seed);
+                let mut src = SuiteSampler::new(suite, tr.batch, tr.seq_len);
+                trainer::train(&mut tr, &recipe, &mut src, None)?;
+                // Win rate on the suite's first task distribution (held-out
+                // seed), mirroring single-benchmark scoring.
+                let ev = tasks::eval_win_rate(
+                    &tr,
+                    &reference,
+                    suite[0].as_ref(),
+                    opts.n_eval,
+                    seed ^ 0x7e57,
+                )?;
+                wins.push(ev.score);
+            }
+            t.row(vec![
+                method.to_string(),
+                n_trainable.to_string(),
+                format!("{:.3}%", pct(n_trainable, rt, config)),
+                data_name.to_string(),
+                format!("{:.2}", 100.0 * stats::mean(&wins)),
+            ]);
+        }
+    }
+    Ok(format!("## Table 5 analogue: instruction following (LL-judge)\n{}", t.render()))
+}
+
+// ---------------------------------------------------------------------------
+// Table 6: multimodal
+// ---------------------------------------------------------------------------
+
+pub const MULTIMODAL_METHODS: &[&str] = &["lora", "road4", "road1"];
+
+pub fn run_multimodal(
+    rt: &Rc<Runtime>,
+    config: &str,
+    methods: &[&str],
+    opts: &ExpOptions,
+) -> Result<(Vec<String>, Vec<MethodRow>)> {
+    let suite = tasks::multimodal_suite();
+    let task_names: Vec<String> = suite.iter().map(|t| t.name().to_string()).collect();
+    let mut rows = Vec::new();
+    for &method in methods {
+        let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); suite.len()];
+        let mut n_trainable = 0usize;
+        for &seed in &opts.seeds {
+            let mut tr = Trainer::new(rt.clone(), config, method)?;
+            n_trainable = tr.n_trainable;
+            let recipe = Recipe::default()
+                .with_lr(Recipe::default_lr(method))
+                .with_steps(opts.steps)
+                .with_seed(seed);
+            let mut src = SuiteSampler::new(&suite, tr.batch, tr.seq_len);
+            trainer::train(&mut tr, &recipe, &mut src, None)?;
+            for (i, task) in suite.iter().enumerate() {
+                let ev =
+                    tasks::eval_classification(&tr, task.as_ref(), opts.n_eval, seed ^ 0x7e57)?;
+                per_task[i].push(ev.score);
+            }
+        }
+        let scores: Vec<f64> = per_task.iter().map(|v| stats::mean(v)).collect();
+        let stds: Vec<f64> = per_task.iter().map(|v| stats::std(v)).collect();
+        let avg = stats::mean(&scores);
+        rows.push(MethodRow {
+            method: method.to_string(),
+            n_trainable,
+            pct_params: pct(n_trainable, rt, config),
+            scores,
+            stds,
+            avg,
+        });
+    }
+    Ok((task_names, rows))
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1: quality vs #params summary
+// ---------------------------------------------------------------------------
+
+pub fn fig1_summary(
+    nlu: &[MethodRow],
+    commonsense: &[MethodRow],
+    arithmetic: &[MethodRow],
+) -> String {
+    let mut t = Table::new(&["suite", "method", "%params", "avg score"]);
+    for (suite, rows) in
+        [("nlu", nlu), ("commonsense", commonsense), ("arithmetic", arithmetic)]
+    {
+        for r in rows {
+            t.row(vec![
+                suite.to_string(),
+                r.method.clone(),
+                format!("{:.3}%", r.pct_params),
+                fmt_f(100.0 * r.avg, 1),
+            ]);
+        }
+    }
+    format!("## Figure 1 analogue: quality vs trainable parameters\n{}", t.render())
+}
+
+/// Render a (task_names, rows) pair as the paper-style markdown table.
+pub fn render_table(title: &str, task_names: &[String], rows: &[MethodRow]) -> String {
+    render_rows(title, task_names, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_includes_methods_and_avg() {
+        let rows = vec![MethodRow {
+            method: "road1".into(),
+            n_trainable: 4224,
+            pct_params: 0.59,
+            scores: vec![0.9, 0.8],
+            stds: vec![0.0, 0.0],
+            avg: 0.85,
+        }];
+        let s = render_table("Table X", &["a".into(), "b".into()], &rows);
+        assert!(s.contains("road1"));
+        assert!(s.contains("85.0"));
+    }
+
+    #[test]
+    fn gen_mode_covers_methods() {
+        assert_eq!(gen_mode("road2").unwrap(), "road");
+        assert_eq!(gen_mode("full").unwrap(), "base");
+        assert!(gen_mode("oft2").is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! # road — 2D Rotary Adaptation, reproduced as a serving + finetuning stack
+//!
+//! Reproduction of *"3-in-1: 2D Rotary Adaptation for Efficient Finetuning,
+//! Efficient Batching and Composability"* (Liao & Monz, NeurIPS 2024) as a
+//! three-layer system:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the Eq.-4
+//!   element-wise RoAd apply and the batched-LoRA bmm baseline.
+//! * **Layer 2** — JAX model + training graphs (`python/compile/`), AOT
+//!   lowered to HLO text artifacts.
+//! * **Layer 3** — this crate: a rust coordinator that loads the artifacts
+//!   through PJRT and runs multi-adapter serving (continuous batching over
+//!   decode slots, per-request adapters), PEFT training loops, the paper's
+//!   pilot studies, and the composability experiment.  Python never runs on
+//!   the request path.
+//!
+//! Entry points: [`runtime::Runtime`] (PJRT), [`coordinator::Engine`]
+//! (serving), [`trainer::Trainer`] (finetuning), [`tasks`] (synthetic
+//! benchmark suites), [`bench`] (Figure-4 workloads).
+
+pub mod adapters;
+pub mod bench;
+pub mod compose;
+pub mod coordinator;
+pub mod exp;
+pub mod manifest;
+pub mod model;
+pub mod pilot;
+pub mod runtime;
+pub mod tasks;
+pub mod tensor;
+pub mod tokenizer;
+pub mod trainer;
+pub mod util;
+
+pub use manifest::Manifest;
+pub use runtime::Runtime;
+pub use tensor::{DType, HostTensor};

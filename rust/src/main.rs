@@ -1,0 +1,410 @@
+//! `road` — the launcher for the RoAd reproduction stack.
+//!
+//! Subcommands (one per deliverable; see README.md):
+//!
+//! ```text
+//! road serve       [--mode road|lora|base] [--slots 8] [--requests 32]
+//!                  [--distinct 8] [--tokens 64]
+//! road train       --method road1 [--suite nlu|commonsense|arithmetic]
+//!                  [--steps 200] [--seed 0]
+//! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
+//!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
+//! road pilot       --study magnitude-angle|disentangle [--steps 100]
+//! road compose     [--steps 200] [--n-eval 32]
+//! road bench-serving          --study merge|tokens|hetero [--tokens 64]
+//! road bench-train-efficiency [--iters 50]
+//! road verify      (golden-record numerics check)
+//! ```
+//!
+//! Experiment outputs are printed and appended to `results/<name>.md`.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use road::bench;
+use road::compose;
+use road::coordinator::engine::{Engine, EngineConfig};
+use road::exp::{self, ExpOptions};
+use road::pilot;
+use road::runtime::Runtime;
+use road::tasks;
+use road::trainer::{self, Recipe, Trainer};
+use road::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(args),
+        Some("pretrain") => cmd_pretrain(args),
+        Some("train") => cmd_train(args),
+        Some("exp") => cmd_exp(args),
+        Some("pilot") => cmd_pilot(args),
+        Some("compose") => cmd_compose(args),
+        Some("bench-serving") => cmd_bench_serving(args),
+        Some("bench-train-efficiency") => cmd_bench_train(args),
+        Some("verify") => cmd_verify(),
+        Some(other) => bail!("unknown command {other:?} (try: serve pretrain train exp pilot compose bench-serving bench-train-efficiency verify)"),
+        None => {
+            println!("road — 2D Rotary Adaptation serving + finetuning stack");
+            println!("usage: road <serve|train|exp|pilot|compose|bench-serving|bench-train-efficiency|verify> [--flags]");
+            Ok(())
+        }
+    }
+}
+
+fn runtime() -> Result<Rc<Runtime>> {
+    Ok(Rc::new(Runtime::from_default_artifacts().context(
+        "loading artifacts (run `make artifacts` first, or set ROAD_ARTIFACTS)",
+    )?))
+}
+
+fn save_result(name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.md");
+    std::fs::write(&path, content)?;
+    println!("\n[saved {path}]");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mode = args.get_or("mode", "road");
+    let slots = args.usize_or("slots", 8);
+    let n_requests = args.usize_or("requests", 32);
+    let distinct = args.usize_or("distinct", if mode == "base" { 0 } else { 8 });
+    let tokens = args.usize_or("tokens", 64);
+
+    let rt = runtime()?;
+    let econf = EngineConfig {
+        model: args.get_or("model", "serve"),
+        mode: mode.clone(),
+        decode_slots: slots,
+        queue_capacity: 4096,
+    };
+    let mut engine = Engine::new(rt, econf)?;
+    if distinct > 0 {
+        bench::register_adapters(&mut engine, distinct, 7)?;
+        println!("registered {distinct} {mode} adapters");
+    }
+    let mut rng = road::util::rng::Rng::seed_from(42);
+    let reqs = bench::hetero_workload(&mut rng, n_requests, distinct, 8, tokens);
+    println!(
+        "serving {n_requests} heterogeneous requests ({} distinct adapters, {tokens} new tokens each, {slots} decode slots)...",
+        distinct
+    );
+    let t0 = std::time::Instant::now();
+    let outs = engine.run_all(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let gen: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    println!("{}", engine.metrics.report());
+    println!(
+        "completed {} requests, {gen} tokens in {wall:.2}s  ->  {:.1} tok/s",
+        outs.len(),
+        gen as f64 / wall
+    );
+    Ok(())
+}
+
+/// Full-finetune the random-init backbone on the generic pretraining
+/// corpus and save `artifacts/pretrained_<cfg>.bin` — the starting point
+/// every PEFT experiment adapts from (the paper's "pretrained LLM").
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let config = args.get_or("model", "train");
+    let steps = args.usize_or("steps", 1500);
+    let seed = args.usize_or("seed", 0) as u64;
+    let rt = runtime()?;
+    let out = rt.manifest.artifact_path(&format!("pretrained_{config}.bin"));
+    if out.exists() && !args.bool("force") {
+        println!("{} already exists (use --force=true to redo)", out.display());
+        return Ok(());
+    }
+    let mut tr = Trainer::new(rt.clone(), &config, "full")?;
+    let corpus = tasks::pretrain_corpus();
+    let recipe = Recipe {
+        lr: args.f64_or("lr", 1e-3) as f32,
+        steps,
+        warmup_ratio: 0.1,
+        seed,
+        eval_every: 0,
+        log_every: args.usize_or("log-every", (steps / 10).max(1)),
+    };
+    println!("pretraining backbone {config} on the generic corpus ({steps} steps)...");
+    let mut src = tasks::SuiteSampler::new(&corpus, tr.batch, tr.seq_len);
+    let report = trainer::train(&mut tr, &recipe, &mut src, None)?;
+    println!("{}", report.summary_line());
+    tr.merged_params()?.save(&out)?;
+    println!("saved pretrained backbone to {}", out.display());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let method = args.get_or("method", "road1");
+    let suite_name = args.get_or("suite", "commonsense");
+    let steps = args.usize_or("steps", 200);
+    let seed = args.usize_or("seed", 0) as u64;
+    let config = args.get_or("model", "train");
+
+    let rt = runtime()?;
+    let mut tr = Trainer::new(rt.clone(), &config, &method)?;
+    println!(
+        "training {method} on {suite_name} suite: {} trainable params ({:.3}% of backbone), {steps} steps",
+        tr.n_trainable,
+        100.0 * tr.n_trainable as f64
+            / road::model::ParamStore::load(&rt.manifest, &config)?.n_params() as f64
+    );
+    let suite = match suite_name.as_str() {
+        "nlu" => tasks::nlu_suite(),
+        "commonsense" => tasks::commonsense_suite(),
+        "arithmetic" => tasks::arithmetic_train_suite(),
+        "instruct" => tasks::instruct_suite(),
+        "multimodal" => tasks::multimodal_suite(),
+        s => bail!("unknown suite {s}"),
+    };
+    let recipe = Recipe {
+        lr: args.f64_or("lr", Recipe::default_lr(&method) as f64) as f32,
+        steps,
+        warmup_ratio: 0.1,
+        seed,
+        eval_every: 0,
+        log_every: args.usize_or("log-every", (steps / 10).max(1)),
+    };
+    let mut src = tasks::SuiteSampler::new(&suite, tr.batch, tr.seq_len);
+    let report = trainer::train(&mut tr, &recipe, &mut src, None)?;
+    println!("{}", report.summary_line());
+    if let Some(out) = args.get("save") {
+        tr.save_trainable(out)?;
+        println!("saved trainables to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let suite = args.get_or("suite", "all");
+    let opts = ExpOptions {
+        steps: args.usize_or("steps", 200),
+        seeds: (0..args.usize_or("seeds", 3) as u64).collect(),
+        n_eval: args.usize_or("n-eval", 256),
+        verbose: args.bool("verbose"),
+    };
+    let rt = runtime()?;
+    let mut fig1: Vec<(String, Vec<exp::MethodRow>)> = Vec::new();
+
+    if suite == "nlu" || suite == "all" {
+        println!("== Table 2 analogue: NLU ({} methods x 8 tasks x {} seeds, {} steps) ==",
+            exp::NLU_METHODS.len(), opts.seeds.len(), opts.steps);
+        let (names, rows) = exp::run_nlu(&rt, "train", exp::NLU_METHODS, &opts)?;
+        let md = exp::render_table("Table 2 analogue: NLU suite", &names, &rows);
+        println!("{md}");
+        save_result("tab2_nlu", &md)?;
+        fig1.push(("nlu".into(), rows));
+    }
+    if suite == "commonsense" || suite == "all" {
+        println!("== Table 3 analogue: commonsense ==");
+        let (names, rows) = exp::run_commonsense(&rt, "train", exp::COMMONSENSE_METHODS, &opts)?;
+        let md = exp::render_table("Table 3 analogue: commonsense suite", &names, &rows);
+        println!("{md}");
+        save_result("tab3_commonsense", &md)?;
+        fig1.push(("commonsense".into(), rows));
+    }
+    if suite == "arithmetic" || suite == "all" {
+        println!("== Table 4 analogue: arithmetic ==");
+        let (names, rows) = exp::run_arithmetic(&rt, "train", exp::ARITHMETIC_METHODS, &opts)?;
+        let md = exp::render_table("Table 4 analogue: arithmetic suite", &names, &rows);
+        println!("{md}");
+        save_result("tab4_arithmetic", &md)?;
+        fig1.push(("arithmetic".into(), rows));
+    }
+    if suite == "instruct" || suite == "all" {
+        println!("== Table 5 analogue: instruction following ==");
+        let md = exp::run_instruct(&rt, "train", exp::INSTRUCT_METHODS, &opts)?;
+        println!("{md}");
+        save_result("tab5_instruct", &md)?;
+    }
+    if suite == "multimodal" || suite == "all" {
+        println!("== Table 6 analogue: multimodal ==");
+        let (names, rows) = exp::run_multimodal(&rt, "train", exp::MULTIMODAL_METHODS, &opts)?;
+        let md = exp::render_table("Table 6 analogue: multimodal suite", &names, &rows);
+        println!("{md}");
+        save_result("tab6_multimodal", &md)?;
+    }
+    if suite == "commonsense2" || suite == "all" {
+        println!("== Table D.2 analogue: commonsense on backbone 2 ==");
+        let (names, rows) = exp::run_commonsense(&rt, "train2", exp::TRAIN2_METHODS, &opts)?;
+        let md = exp::render_table("Table D.2 analogue: second backbone", &names, &rows);
+        println!("{md}");
+        save_result("tabd2_commonsense2", &md)?;
+    }
+    if fig1.len() == 3 {
+        let md = exp::fig1_summary(&fig1[0].1, &fig1[1].1, &fig1[2].1);
+        println!("{md}");
+        save_result("fig1_summary", &md)?;
+    }
+    Ok(())
+}
+
+fn cmd_pilot(args: &Args) -> Result<()> {
+    let study = args.get_or("study", "magnitude-angle");
+    let steps = args.usize_or("steps", 100);
+    let seed = args.usize_or("seed", 0) as u64;
+    let rt = runtime()?;
+    match study.as_str() {
+        "magnitude-angle" => {
+            let mut md = String::from("## Figure 2 (L/M) + B.1 analogue: ΔM / ΔD per layer\n");
+            for method in ["full", "lora"] {
+                println!("finetuning ({method}) for the representation study...");
+                let deltas = pilot::study_magnitude_angle(&rt, "train", method, steps, seed)?;
+                md.push_str(&format!("\n### {method} finetuning\n"));
+                md.push_str("| layer | ΔM (rel. magnitude) | ΔD (cosine) |\n|---|---|---|\n");
+                for d in &deltas {
+                    md.push_str(&format!(
+                        "| {} | {:.4} | {:.4} |\n",
+                        d.layer, d.delta_m, d.delta_d
+                    ));
+                }
+            }
+            println!("{md}");
+            save_result("fig2_magnitude_angle", &md)?;
+        }
+        "disentangle" => {
+            let suite = tasks::nlu_suite();
+            // Four tasks with <= 4 classes (the head's class count):
+            // MRPC / CoLA / SST-2 / QNLI analogues.
+            let picks = [1usize, 3, 4, 5];
+            let mut md = String::from(
+                "## Figure 2 (Right) analogue: disentanglement\n| task | normal | mag | angle | random backbone |\n|---|---|---|---|---|\n",
+            );
+            for &ti in &picks {
+                let task = suite[ti].as_ref();
+                let mut cells = vec![task.name().to_string()];
+                for mode in ["normal", "mag", "angle"] {
+                    let r = pilot::study_disentangle(&rt, "train", mode, task, false, steps, seed)?;
+                    cells.push(format!("{:.3}", r.score));
+                    println!("  {} / {mode}: {:.3}", task.name(), r.score);
+                }
+                let r = pilot::study_disentangle(&rt, "train", "normal", task, true, steps, seed)?;
+                cells.push(format!("{:.3}", r.score));
+                md.push_str(&format!("| {} |\n", cells.join(" | ")));
+            }
+            println!("{md}");
+            save_result("fig2_disentangle", &md)?;
+        }
+        s => bail!("unknown study {s} (magnitude-angle|disentangle)"),
+    }
+    Ok(())
+}
+
+fn cmd_compose(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 200);
+    let n_eval = args.usize_or("n-eval", 32);
+    let seed = args.usize_or("seed", 0) as u64;
+    let rt = runtime()?;
+
+    println!("training both subspaces simultaneously ({steps} steps, alternating grad masks)...");
+    let out = compose::train_composed(&rt, "train", steps, seed)?;
+    println!("final losses: task-A {:.4}, task-B {:.4}", out.loss_a, out.loss_b);
+
+    let econf = EngineConfig {
+        model: "train".into(),
+        mode: "road".into(),
+        decode_slots: 8,
+        queue_capacity: 1024,
+    };
+    let mut engine = Engine::new(rt.clone(), econf)?;
+    let task_a = compose::ForeignEcho;
+    let task_b = compose::NativeReverse;
+
+    let mut md = String::from("## Figure 5 analogue: subspace composition\n\n");
+    md.push_str("| adapter | task-A (foreign echo) EM | task-B (native reverse) EM |\n|---|---|---|\n");
+    for (name, adapter) in [
+        ("upper-half(A)", &out.adapter_a),
+        ("lower-half(B)", &out.adapter_b),
+        ("combined", &out.combined),
+    ] {
+        let sa = compose::score_adapter(&mut engine, name, adapter, &task_a, n_eval, seed ^ 1)?;
+        let sb = compose::score_adapter(&mut engine, name, adapter, &task_b, n_eval, seed ^ 2)?;
+        println!("{name:<16} A={sa:.3} B={sb:.3}");
+        md.push_str(&format!("| {name} | {sa:.3} | {sb:.3} |\n"));
+    }
+
+    // Qualitative transcripts (the Fig 5 presentation).
+    md.push_str("\n### Qualitative samples (combined adapter)\n```\n");
+    let prompts = vec!["g:ab>".to_string(), "i:ab>".to_string()];
+    for t in compose::sample_responses(&mut engine, "combined", &prompts, 12)? {
+        md.push_str(&format!("{} -> {}\n", t.prompt, t.response));
+    }
+    md.push_str("```\n");
+    println!("{md}");
+    save_result("fig5_compose", &md)?;
+    Ok(())
+}
+
+fn cmd_bench_serving(args: &Args) -> Result<()> {
+    let study = args.get_or("study", "hetero");
+    let tokens = args.usize_or("tokens", 64);
+    let seed = args.usize_or("seed", 7) as u64;
+    let rt = runtime()?;
+    let md = match study.as_str() {
+        "merge" => {
+            let pts = bench::fig4_left(&rt, tokens, seed)?;
+            bench::render_points("Figure 4 (Left) analogue: merged vs unmerged", &pts)
+        }
+        "tokens" => {
+            let counts: Vec<usize> = vec![16, 32, 64, 128];
+            let pts = bench::fig4_middle(&rt, &counts, seed)?;
+            bench::render_points("Figure 4 (Middle) analogue: throughput vs #generated tokens", &pts)
+        }
+        "hetero" => {
+            let counts: Vec<usize> = vec![1, 2, 4, 8];
+            let pts = bench::fig4_right(&rt, &counts, tokens, seed)?;
+            bench::render_points("Figure 4 (Right) analogue: throughput vs #distinct adapters", &pts)
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero)"),
+    };
+    println!("{md}");
+    save_result(&format!("fig4_{study}"), &md)?;
+    Ok(())
+}
+
+fn cmd_bench_train(args: &Args) -> Result<()> {
+    let iters = args.usize_or("iters", 50);
+    let rt = runtime()?;
+    let methods = ["oft16", "oft2", "road1", "road2", "road4", "lora", "ia3"];
+    let mut rows = Vec::new();
+    for m in methods {
+        println!("timing {m} ({iters} iters)...");
+        rows.push(bench::measure_train_efficiency(&rt, "train", m, iters, 3)?);
+    }
+    let md = bench::render_train_efficiency(&rows);
+    println!("{md}");
+    save_result("tabd1_train_efficiency", &md)?;
+    Ok(())
+}
+
+fn cmd_verify() -> Result<()> {
+    let rt = runtime()?;
+    let golden: Vec<String> = rt.manifest.golden.keys().cloned().collect();
+    for name in &golden {
+        let exe = rt.load(name)?;
+        let (ins, want) = rt.load_golden(name)?;
+        let refs: Vec<&road::tensor::HostTensor> = ins.iter().collect();
+        let outs = exe.run_host(&refs)?;
+        for (got, want) in outs.iter().zip(&want) {
+            if want.dtype == road::tensor::DType::F32 {
+                road::runtime::allclose(got, want, 2e-4, 2e-5)
+                    .with_context(|| format!("golden mismatch in {name}"))?;
+            }
+        }
+        println!("golden OK: {name}");
+    }
+    println!("all {} golden records verified", golden.len());
+    Ok(())
+}

@@ -1,0 +1,255 @@
+//! Typed view of artifacts/manifest.json — the contract between the AOT
+//! compile path (python/compile/aot.py) and this runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfigInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub n_adapters: usize,
+    pub lora_rank: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub group: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: String,
+    /// "mode" for serving entries, "method" for train/eval entries.
+    pub mode: Option<String>,
+    pub method: Option<String>,
+    pub batch: Option<usize>,
+    pub prompt_len: Option<usize>,
+    pub seq_len: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl EntryInfo {
+    /// Positional index of the first input in `group`.
+    pub fn group_range(&self, group: &str) -> (usize, usize) {
+        let mut start = usize::MAX;
+        let mut end = 0;
+        for (i, s) in self.inputs.iter().enumerate() {
+            if s.group == group {
+                start = start.min(i);
+                end = i + 1;
+            }
+        }
+        if start == usize::MAX {
+            (0, 0)
+        } else {
+            (start, end)
+        }
+    }
+
+    pub fn input_index(&self, group: &str, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.group == group && s.name == name)
+            .ok_or_else(|| anyhow!("entry {} has no input {group}/{name}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenInfo {
+    pub entry: String,
+    pub in_file: String,
+    pub out_file: String,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelConfigInfo>,
+    pub entries: BTreeMap<String, EntryInfo>,
+    pub params_files: BTreeMap<String, String>,
+    pub trainable_files: BTreeMap<String, String>,
+    pub golden: BTreeMap<String, GoldenInfo>,
+    pub serve_decode_batches: Vec<usize>,
+    pub serve_prefill_buckets: Vec<(usize, usize)>,
+}
+
+fn parse_iospec(j: &Json, default_group: &str) -> Result<IoSpec> {
+    Ok(IoSpec {
+        group: j.opt("group").map(|g| g.as_str().unwrap_or(default_group).to_string())
+            .unwrap_or_else(|| default_group.to_string()),
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.as_arr()?.iter().map(|x| x.as_usize().unwrap_or(0)).collect(),
+        dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.get("configs")?.as_obj()? {
+            configs.insert(
+                name.clone(),
+                ModelConfigInfo {
+                    name: name.clone(),
+                    vocab: c.get("vocab")?.as_usize()?,
+                    d_model: c.get("d_model")?.as_usize()?,
+                    n_layers: c.get("n_layers")?.as_usize()?,
+                    n_heads: c.get("n_heads")?.as_usize()?,
+                    d_ff: c.get("d_ff")?.as_usize()?,
+                    max_seq: c.get("max_seq")?.as_usize()?,
+                    head_dim: c.get("head_dim")?.as_usize()?,
+                    n_adapters: c.get("n_adapters")?.as_usize()?,
+                    lora_rank: c.get("lora_rank")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|x| parse_iospec(x, "data"))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|x| parse_iospec(x, "out"))
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntryInfo {
+                    name: name.clone(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    kind: e.get("kind")?.as_str()?.to_string(),
+                    config: e.get("config")?.as_str()?.to_string(),
+                    mode: e.opt("mode").and_then(|x| x.as_str().ok().map(String::from)),
+                    method: e.opt("method").and_then(|x| x.as_str().ok().map(String::from)),
+                    batch: e.opt("batch").and_then(|x| x.as_usize().ok()),
+                    prompt_len: e.opt("prompt_len").and_then(|x| x.as_usize().ok()),
+                    seq_len: e.opt("seq_len").and_then(|x| x.as_usize().ok()),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut params_files = BTreeMap::new();
+        for (k, v) in j.get("params_files")?.as_obj()? {
+            params_files.insert(k.clone(), v.as_str()?.to_string());
+        }
+        let mut trainable_files = BTreeMap::new();
+        for (k, v) in j.get("trainable_files")?.as_obj()? {
+            trainable_files.insert(k.clone(), v.as_str()?.to_string());
+        }
+
+        let mut golden = BTreeMap::new();
+        for (k, g) in j.get("golden")?.as_obj()? {
+            golden.insert(
+                k.clone(),
+                GoldenInfo {
+                    entry: k.clone(),
+                    in_file: g.get("in")?.as_str()?.to_string(),
+                    out_file: g.get("out")?.as_str()?.to_string(),
+                    outputs: g
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| parse_iospec(x, "out"))
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let buckets = j.get("buckets")?;
+        let serve_decode_batches = buckets
+            .get("serve_decode_batches")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let serve_prefill_buckets = buckets
+            .get("serve_prefill")?
+            .as_arr()?
+            .iter()
+            .map(|x| {
+                let a = x.as_arr().unwrap();
+                (a[0].as_usize().unwrap(), a[1].as_usize().unwrap())
+            })
+            .collect();
+
+        Ok(Manifest {
+            dir,
+            configs,
+            entries,
+            params_files,
+            trainable_files,
+            golden,
+            serve_decode_batches,
+            serve_prefill_buckets,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryInfo> {
+        self.entries.get(name).ok_or_else(|| anyhow!("no entry {name:?} in manifest"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfigInfo> {
+        self.configs.get(name).ok_or_else(|| anyhow!("no config {name:?} in manifest"))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Default artifacts directory: $ROAD_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ROAD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // Walk up from cwd to find an `artifacts/manifest.json`.
+            let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = d.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !d.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+}

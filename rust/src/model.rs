@@ -1,0 +1,305 @@
+//! Model host: parameter store + host-side weight merging.
+//!
+//! Parameters live as flat named tensors in manifest flattening order
+//! (sorted keys — the contract with python/compile/model.py).  Merging
+//! folds trained adapters into the pretrained weights (paper §3.2:
+//! W = W⁰ Rᵀ for RoAd, W = W⁰ + BA for LoRA) so the merged model serves
+//! through the zero-overhead `base` entries.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::{Manifest, ModelConfigInfo};
+use crate::tensor::{load_flat_f32, HostTensor};
+
+/// Projections adapted by RoAd (every linear layer of a block).
+pub const PROJS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+
+pub fn proj_dims(cfg: &ModelConfigInfo, proj: &str) -> (usize, usize) {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    match proj {
+        "wq" | "wk" | "wv" | "wo" => (d, d),
+        "wgate" | "wup" => (d, f),
+        "wdown" => (f, d),
+        _ => panic!("unknown projection {proj}"),
+    }
+}
+
+#[derive(Clone)]
+pub struct ParamStore {
+    pub config: ModelConfigInfo,
+    pub names: Vec<String>,
+    pub tensors: Vec<HostTensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Load the 'pretrained' parameters for `config` from params_<cfg>.bin.
+    ///
+    /// The (name, shape) specs are recovered from any manifest entry of this
+    /// config that declares a `params` (or `frozen`) input group.
+    pub fn load(manifest: &Manifest, config: &str) -> Result<ParamStore> {
+        let cfg = manifest.config(config)?.clone();
+        let specs = param_specs(manifest, config)?;
+        let file = manifest
+            .params_files
+            .get(config)
+            .ok_or_else(|| anyhow!("no params file for config {config}"))?;
+        let bytes = std::fs::read(manifest.artifact_path(file))?;
+        let loaded = load_flat_f32(&bytes, &specs)?;
+        Ok(ParamStore::from_tensors(cfg, loaded))
+    }
+
+    /// Load the backbone that finetuning starts from: the full-finetuned
+    /// pretraining checkpoint `pretrained_<cfg>.bin` when present (written
+    /// by `road pretrain`), else the random-init `params_<cfg>.bin`.
+    ///
+    /// The paper's PEFT methods adapt a *pretrained* LLM; the pretraining
+    /// stage is part of this reproduction's system (DESIGN.md §4).
+    pub fn load_pretrained(manifest: &Manifest, config: &str) -> Result<ParamStore> {
+        let cand = manifest.artifact_path(&format!("pretrained_{config}.bin"));
+        if cand.exists() {
+            let cfg = manifest.config(config)?.clone();
+            let specs = param_specs(manifest, config)?;
+            let bytes = std::fs::read(&cand)?;
+            let loaded = load_flat_f32(&bytes, &specs)?;
+            return Ok(ParamStore::from_tensors(cfg, loaded));
+        }
+        ParamStore::load(manifest, config)
+    }
+
+    /// Save this store in the flat pretrained-checkpoint format.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let refs: Vec<&HostTensor> = self.tensors.iter().collect();
+        std::fs::write(path, crate::tensor::dump_flat(&refs))?;
+        Ok(())
+    }
+
+    pub fn from_tensors(
+        config: ModelConfigInfo,
+        named: Vec<(String, HostTensor)>,
+    ) -> ParamStore {
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut index = HashMap::new();
+        for (n, t) in named {
+            index.insert(n.clone(), tensors.len());
+            names.push(n);
+            tensors.push(t);
+        }
+        ParamStore { config, names, tensors, index }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.index
+            .get(name)
+            .map(|i| &self.tensors[*i])
+            .ok_or_else(|| anyhow!("no parameter {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut HostTensor> {
+        let i = *self.index.get(name).ok_or_else(|| anyhow!("no parameter {name:?}"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn set(&mut self, name: &str, t: HostTensor) -> Result<()> {
+        let i = *self.index.get(name).ok_or_else(|| anyhow!("no parameter {name:?}"))?;
+        if self.tensors[i].shape != t.shape {
+            bail!("shape mismatch setting {name}");
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.elem_count()).sum()
+    }
+
+    /// Merge a RoAd adapter into every adapted projection (paper §3.2):
+    /// W <- W Rᵀ, bias <- R bias.  Leaves the store serving-ready through
+    /// the zero-overhead `base` entries.
+    pub fn merge_road(&mut self, adapter: &crate::adapters::RoadAdapter) -> Result<()> {
+        for (key, vecs) in &adapter.per_proj {
+            let w = self.get(key)?.clone();
+            let merged = road_merge_weight(&w, &vecs.r1, &vecs.r2);
+            self.set(key, merged)?;
+            let bkey = format!("{key}.bias");
+            let b = self.get(&bkey)?.clone();
+            let merged_b = road_rotate_vec(&b.as_f32(), &vecs.r1, &vecs.r2);
+            self.set(&bkey, HostTensor::f32(b.shape.clone(), merged_b))?;
+        }
+        Ok(())
+    }
+
+    /// Merge a LoRA adapter: W <- W + lb @ la.
+    pub fn merge_lora(&mut self, adapter: &crate::adapters::LoraAdapter) -> Result<()> {
+        for (key, m) in &adapter.per_proj {
+            let w = self.get(key)?.clone();
+            let merged = lora_merge_weight(&w, &m.lb, &m.la, m.rank);
+            self.set(key, merged)?;
+        }
+        Ok(())
+    }
+}
+
+/// Recover the param flattening specs for a config from the manifest.
+pub fn param_specs(manifest: &Manifest, config: &str) -> Result<Vec<(String, Vec<usize>)>> {
+    for e in manifest.entries.values() {
+        if e.config != config {
+            continue;
+        }
+        for group in ["params", "frozen"] {
+            let (start, end) = e.group_range(group);
+            if end > start {
+                return Ok(e.inputs[start..end]
+                    .iter()
+                    .map(|s| (s.name.clone(), s.shape.clone()))
+                    .collect());
+            }
+        }
+        // "full" train entries carry params as the trainable group.
+        if e.method.as_deref() == Some("full") {
+            let (start, end) = e.group_range("trainable");
+            if end > start {
+                return Ok(e.inputs[start..end]
+                    .iter()
+                    .map(|s| (s.name.clone(), s.shape.clone()))
+                    .collect());
+            }
+        }
+    }
+    bail!("no entry with a params group for config {config}")
+}
+
+/// z = R h for the sparse block-diagonal R given by effective vectors
+/// (r1, r2): z = r1*h + r2*pairswap(h).  Host-side oracle used by merging
+/// and by the runtime tests.
+pub fn road_rotate_vec(h: &[f32], r1: &[f32], r2: &[f32]) -> Vec<f32> {
+    let d = h.len();
+    let mut z = vec![0f32; d];
+    for k in 0..d / 2 {
+        let (e, o) = (2 * k, 2 * k + 1);
+        z[e] = r1[e] * h[e] - r2[e] * h[o];
+        z[o] = r2[o] * h[e] + r1[o] * h[o];
+    }
+    z
+}
+
+/// Fold (r1, r2) into W [d_in, d_out] (inputs-left convention): W' = W Rᵀ.
+///
+/// Column pairs transform as:
+///   W'[:, 2k]   = r1[2k]   * W[:, 2k] − r2[2k]   * W[:, 2k+1]
+///   W'[:, 2k+1] = r2[2k+1] * W[:, 2k] + r1[2k+1] * W[:, 2k+1]
+pub fn road_merge_weight(w: &HostTensor, r1: &[f32], r2: &[f32]) -> HostTensor {
+    let (d_in, d_out) = (w.shape[0], w.shape[1]);
+    let wv = w.as_f32();
+    let mut out = vec![0f32; d_in * d_out];
+    for i in 0..d_in {
+        let row = i * d_out;
+        for k in 0..d_out / 2 {
+            let (e, o) = (2 * k, 2 * k + 1);
+            let we = wv[row + e];
+            let wo = wv[row + o];
+            out[row + e] = r1[e] * we - r2[e] * wo;
+            out[row + o] = r2[o] * we + r1[o] * wo;
+        }
+    }
+    HostTensor::f32(w.shape.clone(), out)
+}
+
+/// W' = W + lb @ la with lb [d_in, r] and la [r, d_out] (flat slices).
+pub fn lora_merge_weight(w: &HostTensor, lb: &[f32], la: &[f32], rank: usize) -> HostTensor {
+    let (d_in, d_out) = (w.shape[0], w.shape[1]);
+    assert_eq!(lb.len(), d_in * rank);
+    assert_eq!(la.len(), rank * d_out);
+    let mut out = w.as_f32();
+    for i in 0..d_in {
+        for r in 0..rank {
+            let b = lb[i * rank + r];
+            if b == 0.0 {
+                continue;
+            }
+            let arow = r * d_out;
+            let orow = i * d_out;
+            for j in 0..d_out {
+                out[orow + j] += b * la[arow + j];
+            }
+        }
+    }
+    HostTensor::f32(w.shape.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotate_identity() {
+        let h = vec![1.0, 2.0, 3.0, 4.0];
+        let r1 = vec![1.0; 4];
+        let r2 = vec![0.0; 4];
+        assert_eq!(road_rotate_vec(&h, &r1, &r2), h);
+    }
+
+    #[test]
+    fn rotate_quarter_turn() {
+        // theta = pi/2: r1 = 0, r2 = 1 -> z = pairswap(h) = (-h2, h1, ...)
+        let h = vec![1.0, 2.0, 3.0, 4.0];
+        let r1 = vec![0.0; 4];
+        let r2 = vec![1.0; 4];
+        assert_eq!(road_rotate_vec(&h, &r1, &r2), vec![-2.0, 1.0, -4.0, 3.0]);
+    }
+
+    #[test]
+    fn merge_equals_rotate_after_matmul() {
+        // x @ (W R^T) == R (x @ W) for random-ish data.
+        let d_in = 3;
+        let d_out = 4;
+        let w = HostTensor::f32(
+            vec![d_in, d_out],
+            vec![0.5, -1.0, 2.0, 0.1, 1.5, 0.3, -0.7, 0.9, 0.2, -0.4, 0.8, 1.1],
+        );
+        let theta = [0.3f32, -0.8];
+        let alpha = [1.1f32, 0.9];
+        let mut r1 = vec![0f32; d_out];
+        let mut r2 = vec![0f32; d_out];
+        for k in 0..2 {
+            let c = alpha[k] * theta[k].cos();
+            let s = alpha[k] * theta[k].sin();
+            r1[2 * k] = c;
+            r1[2 * k + 1] = c;
+            r2[2 * k] = s;
+            r2[2 * k + 1] = s;
+        }
+        let x = [0.2f32, -0.5, 1.0];
+        let wv = w.as_f32();
+        let mut h = vec![0f32; d_out];
+        for j in 0..d_out {
+            for i in 0..d_in {
+                h[j] += x[i] * wv[i * d_out + j];
+            }
+        }
+        let want = road_rotate_vec(&h, &r1, &r2);
+        let merged = road_merge_weight(&w, &r1, &r2);
+        let mv = merged.as_f32();
+        let mut got = vec![0f32; d_out];
+        for j in 0..d_out {
+            for i in 0..d_in {
+                got[j] += x[i] * mv[i * d_out + j];
+            }
+        }
+        for j in 0..d_out {
+            assert!((got[j] - want[j]).abs() < 1e-5, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn lora_merge_rank1() {
+        let w = HostTensor::f32(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let lb = vec![1.0, 2.0]; // [2,1]
+        let la = vec![0.5, -0.5]; // [1,2]
+        let m = lora_merge_weight(&w, &lb, &la, 1);
+        assert_eq!(m.as_f32(), vec![1.5, -0.5, 1.0, 0.0]);
+    }
+}

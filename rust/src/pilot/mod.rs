@@ -1,0 +1,461 @@
+//! The paper's pilot studies (§3.1, Figure 2 and Figure B.1).
+//!
+//! * **Study 1** — magnitude vs angular displacement: finetune the backbone
+//!   (full vs LoRA), extract per-layer last-token representations of the
+//!   same inputs from the pretrained and finetuned model through the
+//!   `reps_<mode>_<cfg>` graphs, and report ΔM = |‖x‖−‖x⁰‖|/‖x⁰‖ and
+//!   ΔD = cos(x, x⁰) per layer.
+//! * **Study 2** — disentanglement: freeze the backbone, train the paper's
+//!   two-layer head over frozen representations in three first-layer modes
+//!   (normal / magnitude-only / angle-only) on four classification tasks,
+//!   plus a random-backbone weak baseline.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::adapters::Adapter;
+use crate::model::ParamStore;
+use crate::runtime::{Arg, Runtime};
+use crate::tasks::{Example, Task, TaskSampler};
+use crate::tensor::HostTensor;
+use crate::trainer::{self, Recipe, Trainer};
+use crate::util::rng::Rng;
+
+/// Per-layer (ΔM, ΔD) statistics, averaged over a probe set.
+#[derive(Clone, Debug)]
+pub struct LayerDelta {
+    pub layer: usize,
+    /// Mean relative magnitude change |‖x‖−‖x⁰‖| / ‖x⁰‖.
+    pub delta_m: f64,
+    /// Mean cosine similarity cos(x, x⁰) ∈ [-1, 1] (smaller = more rotation).
+    pub delta_d: f64,
+}
+
+/// Extract [B, n_layers+1, D] hidden states through a reps graph with the
+/// given parameter store (and identity adapters).
+pub fn hidden_states(
+    rt: &Rc<Runtime>,
+    config: &str,
+    mode: &str,
+    params: &ParamStore,
+    adapter: Option<&Adapter>,
+    tokens: &[i32],
+    lengths: &[i32],
+) -> Result<HostTensor> {
+    let name = format!("reps_{mode}_{config}");
+    let exe = rt.load(&name)?;
+    let info = &exe.info;
+    let (b, l) = (info.batch.unwrap(), info.seq_len.unwrap());
+    if tokens.len() != b * l || lengths.len() != b {
+        bail!("reps input shape mismatch (want {b}x{l})");
+    }
+
+    // Adapter banks: n=1 slots; install the trained adapter into slot 0
+    // (all requests use id 0 here).
+    let mut bank = crate::adapters::AdapterBank::new(&exe.info_config(rt)?, mode, 1)?;
+    if let Some(a) = adapter {
+        bank.set_slot(0, a)?;
+    }
+
+    let tok = HostTensor::i32(vec![b, l], tokens.to_vec());
+    let len = HostTensor::i32(vec![b], lengths.to_vec());
+    let ids = HostTensor::i32(vec![b], vec![0; b]);
+    let mut data: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+    data.insert("tokens", &tok);
+    data.insert("lengths", &len);
+    data.insert("ids", &ids);
+
+    let mut owned: Vec<(String, HostTensor)> = Vec::new();
+    for spec in &info.inputs {
+        if spec.group == "adapters" {
+            let t = bank
+                .tensors
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("bank missing {}", spec.name))?;
+            owned.push((spec.name.clone(), t.clone()));
+        }
+    }
+
+    let mut args: Vec<Arg> = Vec::with_capacity(info.inputs.len());
+    let mut oi = 0usize;
+    for spec in &info.inputs {
+        match spec.group.as_str() {
+            "params" => args.push(Arg::Host(params.get(&spec.name)?)),
+            "adapters" => {
+                args.push(Arg::Host(&owned[oi].1));
+                oi += 1;
+            }
+            "data" => args.push(Arg::Host(
+                data.get(spec.name.as_str())
+                    .copied()
+                    .ok_or_else(|| anyhow!("missing reps data {}", spec.name))?,
+            )),
+            g => bail!("unexpected reps input group {g}"),
+        }
+    }
+    let mut outs = exe.run(&args)?;
+    Ok(outs.remove(0))
+}
+
+trait InfoConfig {
+    fn info_config(&self, rt: &Rc<Runtime>) -> Result<crate::manifest::ModelConfigInfo>;
+}
+
+impl InfoConfig for crate::runtime::Executable {
+    fn info_config(&self, rt: &Rc<Runtime>) -> Result<crate::manifest::ModelConfigInfo> {
+        Ok(rt.manifest.config(&self.info.config)?.clone())
+    }
+}
+
+/// Compare per-layer representations of `base` vs `tuned` on a shared
+/// probe batch; returns one [`LayerDelta`] per layer (embedding = layer 0).
+pub fn rep_deltas(
+    rt: &Rc<Runtime>,
+    config: &str,
+    base: &ParamStore,
+    base_mode: &str,
+    base_adapter: Option<&Adapter>,
+    tuned: &ParamStore,
+    tuned_mode: &str,
+    tuned_adapter: Option<&Adapter>,
+    probe_task: &dyn Task,
+    seed: u64,
+) -> Result<Vec<LayerDelta>> {
+    let name = format!("reps_base_{config}");
+    let exe = rt.load(&name)?;
+    let (b, l) = (exe.info.batch.unwrap(), exe.info.seq_len.unwrap());
+    let d = rt.manifest.config(config)?.d_model;
+
+    // Shared probe inputs.
+    let mut rng = Rng::seed_from(seed);
+    let mut tokens = vec![0i32; b * l];
+    let mut lengths = vec![1i32; b];
+    for row in 0..b {
+        let ex: Example = probe_task.sample(&mut rng);
+        let p = &ex.prompt[..ex.prompt.len().min(l)];
+        tokens[row * l..row * l + p.len()].copy_from_slice(p);
+        lengths[row] = p.len() as i32;
+    }
+
+    let h0 = hidden_states(rt, config, base_mode, base, base_adapter, &tokens, &lengths)?;
+    let h1 = hidden_states(rt, config, tuned_mode, tuned, tuned_adapter, &tokens, &lengths)?;
+    let n_layers = h0.shape[1];
+
+    let mut out = Vec::with_capacity(n_layers);
+    for layer in 0..n_layers {
+        let mut dm = 0f64;
+        let mut dd = 0f64;
+        for row in 0..b {
+            let off = (row * n_layers + layer) * d;
+            let x0 = h0.read_f32_range(off, d);
+            let x1 = h1.read_f32_range(off, d);
+            let n0 = norm(&x0);
+            let n1 = norm(&x1);
+            dm += ((n1 - n0).abs() / n0.max(1e-9)) as f64;
+            dd += (dot(&x0, &x1) / (n0 * n1).max(1e-9)) as f64;
+        }
+        out.push(LayerDelta {
+            layer,
+            delta_m: dm / b as f64,
+            delta_d: dd / b as f64,
+        });
+    }
+    Ok(out)
+}
+
+fn norm(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Study-1 driver: finetune with `method` (full or lora) on a probe task,
+/// then report per-layer deltas vs the pretrained backbone (Fig 2 L/M and
+/// Fig B.1 series).
+pub fn study_magnitude_angle(
+    rt: &Rc<Runtime>,
+    config: &str,
+    method: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<LayerDelta>> {
+    let base = ParamStore::load_pretrained(&rt.manifest, config)?;
+    let mut tr = Trainer::new(rt.clone(), config, method)?;
+    let suite = crate::tasks::nlu_suite();
+    let task = &suite[4]; // sst2-x, mirroring the paper's SST-2 pilot
+    let recipe = Recipe::default()
+        .with_lr(Recipe::default_lr(method))
+        .with_steps(steps)
+        .with_seed(seed);
+    let mut src = TaskSampler { task: task.as_ref(), batch: tr.batch, seq_len: tr.seq_len };
+    trainer::train(&mut tr, &recipe, &mut src, None)?;
+
+    match method {
+        "full" => {
+            let tuned = tr.merged_params()?;
+            rep_deltas(rt, config, &base, "base", None, &tuned, "base", None, task.as_ref(), seed)
+        }
+        "lora" => {
+            let adapter = tr.export_adapter()?;
+            rep_deltas(
+                rt,
+                config,
+                &base,
+                "base",
+                None,
+                &base,
+                "lora",
+                Some(&adapter),
+                task.as_ref(),
+                seed,
+            )
+        }
+        m => bail!("study 1 supports full|lora, got {m}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Study 2: disentanglement head (Fig 2 Right)
+// ---------------------------------------------------------------------------
+
+/// Train the two-layer head in `head_mode` (normal / mag / angle) over
+/// frozen-backbone representations of `task`; returns eval accuracy.
+pub struct HeadResult {
+    pub task: String,
+    pub head_mode: String,
+    pub random_backbone: bool,
+    pub score: f64,
+}
+
+pub fn study_disentangle(
+    rt: &Rc<Runtime>,
+    config: &str,
+    head_mode: &str,
+    task: &dyn Task,
+    random_backbone: bool,
+    steps: usize,
+    seed: u64,
+) -> Result<HeadResult> {
+    let params = if random_backbone {
+        // Weak baseline: re-randomized backbone (different seed stream).
+        randomize_params(&ParamStore::load_pretrained(&rt.manifest, config)?, seed ^ 0xbad)
+    } else {
+        ParamStore::load_pretrained(&rt.manifest, config)?
+    };
+
+    let reps_exe = rt.load(&format!("reps_base_{config}"))?;
+    let (rb, rl) = (reps_exe.info.batch.unwrap(), reps_exe.info.seq_len.unwrap());
+    let d = rt.manifest.config(config)?.d_model;
+    let n_layers = rt.manifest.config(config)?.n_layers;
+
+    let head_train = rt.load(&format!("head_train_{head_mode}_{config}"))?;
+    let head_logits = rt.load(&format!("head_logits_{head_mode}_{config}"))?;
+    let hb = head_train.info.batch.unwrap();
+    let n_classes: usize = head_logits.info.outputs[0].shape[1];
+    let labels = task.label_tokens();
+    if labels.len() > n_classes {
+        bail!("task {} has {} classes; head supports {n_classes}", task.name(), labels.len());
+    }
+
+    // Head state (init mirrors train.head_init: normal(0, d^-1/2)).
+    let mut rng = Rng::seed_from(seed);
+    let mut head: Vec<(String, HostTensor)> = vec![
+        ("b1".into(), HostTensor::zeros(vec![d], crate::tensor::DType::F32)),
+        ("b2".into(), HostTensor::zeros(vec![n_classes], crate::tensor::DType::F32)),
+        (
+            "w1".into(),
+            HostTensor::f32(vec![d, d], rng.normal_vec(d * d, (d as f32).powf(-0.5))),
+        ),
+        (
+            "w2".into(),
+            HostTensor::f32(
+                vec![d, n_classes],
+                rng.normal_vec(d * n_classes, (d as f32).powf(-0.5)),
+            ),
+        ),
+    ];
+    let mut opt_m: Vec<HostTensor> =
+        head.iter().map(|(_, t)| HostTensor::zeros(t.shape.clone(), crate::tensor::DType::F32)).collect();
+    let mut opt_v = opt_m.clone();
+
+    // Representation extraction helper: second-last block output, per the
+    // paper's protocol ([CLS] of the penultimate Transformer block).
+    let probe_layer = n_layers.saturating_sub(1); // index into [0..=n_layers]
+    let get_reps = |rng: &mut Rng, n: usize| -> Result<(Vec<f32>, Vec<i32>)> {
+        let mut feats = Vec::with_capacity(n * d);
+        let mut labels_out = Vec::with_capacity(n);
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(rb);
+            let mut tokens = vec![0i32; rb * rl];
+            let mut lengths = vec![1i32; rb];
+            let mut lab = vec![0i32; rb];
+            for row in 0..take {
+                let ex = task.sample(rng);
+                let p = &ex.prompt[..ex.prompt.len().min(rl)];
+                tokens[row * rl..row * rl + p.len()].copy_from_slice(p);
+                lengths[row] = p.len() as i32;
+                lab[row] = ex.answer as i32;
+            }
+            let h = hidden_states(rt, config, "base", &params, None, &tokens, &lengths)?;
+            let per = h.shape[1];
+            for row in 0..take {
+                let off = (row * per + probe_layer) * d;
+                feats.extend(h.read_f32_range(off, d));
+                labels_out.push(lab[row]);
+            }
+            done += take;
+        }
+        Ok((feats, labels_out))
+    };
+
+    // Precompute a fixed representation pool once (the backbone is frozen,
+    // so reps never change — this is the expensive part), then train the
+    // head on minibatches drawn from it.
+    let pool_n = 8 * hb;
+    let (pool_feats, pool_labs) = get_reps(&mut rng, pool_n)?;
+
+    // Train the head.
+    let lr = 1e-3f32;
+    for step in 0..steps {
+        let mut feats = Vec::with_capacity(hb * d);
+        let mut labs = Vec::with_capacity(hb);
+        for _ in 0..hb {
+            let i = rng.below(pool_n);
+            feats.extend_from_slice(&pool_feats[i * d..(i + 1) * d]);
+            labs.push(pool_labs[i]);
+        }
+        let reps_t = HostTensor::f32(vec![hb, d], feats);
+        let labs_t = HostTensor::i32(vec![hb], labs);
+        let step_t = HostTensor::scalar_f32((step + 1) as f32);
+        let lr_t = HostTensor::scalar_f32(lr);
+        let mut args: Vec<Arg> = Vec::new();
+        for (_, t) in &head {
+            args.push(Arg::Host(t));
+        }
+        for t in &opt_m {
+            args.push(Arg::Host(t));
+        }
+        for t in &opt_v {
+            args.push(Arg::Host(t));
+        }
+        args.push(Arg::Host(&step_t));
+        args.push(Arg::Host(&lr_t));
+        args.push(Arg::Host(&reps_t));
+        args.push(Arg::Host(&labs_t));
+        let outs = head_train.run(&args)?;
+        let mut it = outs.into_iter();
+        for (_, t) in head.iter_mut() {
+            *t = it.next().unwrap();
+        }
+        for t in opt_m.iter_mut() {
+            *t = it.next().unwrap();
+        }
+        for t in opt_v.iter_mut() {
+            *t = it.next().unwrap();
+        }
+    }
+
+    // Evaluate.
+    let mut eval_rng = Rng::seed_from(seed ^ 0xe7a1);
+    let n_eval = 4 * hb;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut done = 0usize;
+    while done < n_eval {
+        let (feats, labs) = get_reps(&mut eval_rng, hb)?;
+        let reps_t = HostTensor::f32(vec![hb, d], feats);
+        let mut args: Vec<Arg> = Vec::new();
+        for (_, t) in &head {
+            args.push(Arg::Host(t));
+        }
+        args.push(Arg::Host(&reps_t));
+        let outs = head_logits.run(&args)?;
+        let logits = &outs[0];
+        for row in 0..hb {
+            let lrow = logits.read_f32_range(row * n_classes, n_classes);
+            let pred = lrow
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred == labs[row] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        done += hb;
+    }
+
+    Ok(HeadResult {
+        task: task.name().to_string(),
+        head_mode: head_mode.to_string(),
+        random_backbone,
+        score: correct as f64 / total as f64,
+    })
+}
+
+/// Re-randomize a parameter store (matching magnitudes, fresh directions)
+/// — the paper's "randomly initialized RoBERTa" weak baseline.
+pub fn randomize_params(store: &ParamStore, seed: u64) -> ParamStore {
+    let mut rng = Rng::seed_from(seed);
+    let named: Vec<(String, HostTensor)> = store
+        .names
+        .iter()
+        .zip(&store.tensors)
+        .map(|(n, t)| {
+            let vals = t.as_f32();
+            let scale = (vals.iter().map(|v| v * v).sum::<f32>() / vals.len() as f32)
+                .sqrt()
+                .max(1e-6);
+            // Norm-like params stay at 1 (they gate variance, not direction).
+            if n.ends_with("norm") {
+                (n.clone(), t.clone())
+            } else {
+                (n.clone(), HostTensor::f32(t.shape.clone(), rng.normal_vec(vals.len(), scale)))
+            }
+        })
+        .collect();
+    ParamStore::from_tensors(store.config.clone(), named)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_dot_basics() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randomize_preserves_shapes_and_norm_params() {
+        let cfg = crate::manifest::ModelConfigInfo {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 8,
+            max_seq: 8,
+            head_dim: 2,
+            n_adapters: 2,
+            lora_rank: 2,
+        };
+        let named = vec![
+            ("w".to_string(), HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0])),
+            ("final_norm".to_string(), HostTensor::f32(vec![2], vec![1.0, 1.0])),
+        ];
+        let store = ParamStore::from_tensors(cfg, named);
+        let r = randomize_params(&store, 1);
+        assert_eq!(r.get("w").unwrap().shape, vec![2, 2]);
+        assert_ne!(r.get("w").unwrap().as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get("final_norm").unwrap().as_f32(), vec![1.0, 1.0]);
+    }
+}

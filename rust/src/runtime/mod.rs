@@ -1,0 +1,271 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the serving/training hot paths.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns them).
+//!
+//! `PjRtClient` is `Rc`-based (not Send), so a `Runtime` is owned by a
+//! single engine thread; the coordinator front-end talks to it over
+//! channels (DESIGN.md: std::thread + mpsc in lieu of tokio).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::{EntryInfo, Manifest};
+use crate::tensor::{DType, HostTensor};
+
+/// Input argument: either host data (uploaded per call) or a persistent
+/// device buffer (params/banks uploaded once — the decode hot path).
+pub enum Arg<'a> {
+    Host(&'a HostTensor),
+    Buffer(&'a xla::PjRtBuffer),
+}
+
+pub struct Executable {
+    pub info: EntryInfo,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    /// Cumulative execution statistics (perf accounting).
+    pub calls: RefCell<usize>,
+    pub total_exec: RefCell<std::time::Duration>,
+}
+
+impl Executable {
+    /// Execute with mixed host/device inputs; outputs come back to host.
+    ///
+    /// The lowered computations have a tuple root (`return_tuple=True`), so
+    /// PJRT returns a single tuple buffer which we decompose into one
+    /// `HostTensor` per declared output.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.info.inputs.len() {
+            bail!(
+                "entry {}: {} args provided, {} expected",
+                self.info.name,
+                args.len(),
+                self.info.inputs.len()
+            );
+        }
+        // Upload host args; keep uploads alive until execution finishes.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut ptrs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Buffer(b) => ptrs.push(b),
+                Arg::Host(t) => {
+                    let spec = &self.info.inputs[i];
+                    if t.shape != spec.shape || t.dtype != spec.dtype {
+                        bail!(
+                            "entry {}: arg {} ({}/{}) shape/dtype mismatch: got {:?} want {:?}",
+                            self.info.name,
+                            i,
+                            spec.group,
+                            spec.name,
+                            (&t.shape, t.dtype),
+                            (&spec.shape, spec.dtype)
+                        );
+                    }
+                    owned.push(upload(&self.client, t)?);
+                }
+            }
+        }
+        // Interleave owned uploads back into position order.
+        let mut owned_iter = owned.iter();
+        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::Buffer(b) => all.push(b),
+                Arg::Host(_) => all.push(owned_iter.next().unwrap()),
+            }
+        }
+        drop(ptrs);
+
+        let t0 = Instant::now();
+        let result = self.exe.execute_b(&all).with_context(|| format!("executing {}", self.info.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        *self.calls.borrow_mut() += 1;
+        *self.total_exec.borrow_mut() += t0.elapsed();
+
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "entry {}: {} outputs, manifest says {}",
+                self.info.name,
+                parts.len(),
+                self.info.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.info.outputs) {
+            outs.push(literal_to_host(&lit, spec.dtype)?);
+        }
+        Ok(outs)
+    }
+
+    /// Convenience: all-host-args execution.
+    pub fn run_host(&self, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let wrapped: Vec<Arg> = args.iter().map(|t| Arg::Host(t)).collect();
+        self.run(&wrapped)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+pub fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    match t.dtype {
+        DType::F32 => {
+            if let Some(sl) = t.f32_slice() {
+                Ok(client.buffer_from_host_buffer(sl, &t.shape, None)?)
+            } else {
+                let v = t.as_f32();
+                Ok(client.buffer_from_host_buffer(&v, &t.shape, None)?)
+            }
+        }
+        DType::I32 => {
+            let v = t.as_i32();
+            Ok(client.buffer_from_host_buffer(&v, &t.shape, None)?)
+        }
+    }
+}
+
+fn literal_to_host(lit: &xla::Literal, dtype: DType) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match dtype {
+        DType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+        DType::I32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+    }
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative compile time (reported by `road stats`).
+    pub total_compile: RefCell<std::time::Duration>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            total_compile: RefCell::new(Default::default()),
+        })
+    }
+
+    pub fn from_default_artifacts() -> Result<Runtime> {
+        Runtime::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    /// Load + compile an entry (cached).
+    pub fn load(&self, entry: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(entry) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.entry(entry)?.clone();
+        let path = self.manifest.artifact_path(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry))?;
+        *self.total_compile.borrow_mut() += t0.elapsed();
+        let e = Rc::new(Executable {
+            info,
+            exe,
+            client: self.client.clone(),
+            calls: RefCell::new(0),
+            total_exec: RefCell::new(Default::default()),
+        });
+        self.cache.borrow_mut().insert(entry.to_string(), e.clone());
+        Ok(e)
+    }
+
+    pub fn is_loaded(&self, entry: &str) -> bool {
+        self.cache.borrow().contains_key(entry)
+    }
+
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        upload(&self.client, t)
+    }
+
+    /// Load a golden record: (inputs, expected outputs) in signature order.
+    pub fn load_golden(&self, entry: &str) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        let g = self
+            .manifest
+            .golden
+            .get(entry)
+            .ok_or_else(|| anyhow!("no golden record for {entry}"))?;
+        let info = self.manifest.entry(entry)?;
+        let raw_in = std::fs::read(self.manifest.artifact_path(&g.in_file))?;
+        let mut ins = Vec::new();
+        let mut off = 0usize;
+        for spec in &info.inputs {
+            let n = spec.elem_count() * 4;
+            ins.push(HostTensor::from_bytes(
+                spec.shape.clone(),
+                spec.dtype,
+                raw_in[off..off + n].to_vec(),
+            )?);
+            off += n;
+        }
+        let raw_out = std::fs::read(self.manifest.artifact_path(&g.out_file))?;
+        let mut outs = Vec::new();
+        off = 0;
+        for spec in &g.outputs {
+            let n = spec.elem_count() * 4;
+            outs.push(HostTensor::from_bytes(
+                spec.shape.clone(),
+                spec.dtype,
+                raw_out[off..off + n].to_vec(),
+            )?);
+            off += n;
+        }
+        Ok((ins, outs))
+    }
+}
+
+/// Compare two f32 tensors with relative+absolute tolerance; returns the
+/// worst mismatch if any.
+pub fn allclose(a: &HostTensor, b: &HostTensor, rtol: f32, atol: f32) -> Result<()> {
+    if a.shape != b.shape {
+        bail!("shape mismatch {:?} vs {:?}", a.shape, b.shape);
+    }
+    let av = a.as_f32();
+    let bv = b.as_f32();
+    let mut worst = 0f32;
+    let mut worst_i = 0usize;
+    for i in 0..av.len() {
+        let diff = (av[i] - bv[i]).abs();
+        let bound = atol + rtol * bv[i].abs();
+        if diff > bound && diff > worst {
+            worst = diff;
+            worst_i = i;
+        }
+    }
+    if worst > 0.0 {
+        bail!(
+            "allclose failed: |{} - {}| = {} at flat index {} (rtol={rtol}, atol={atol})",
+            av[worst_i],
+            bv[worst_i],
+            worst,
+            worst_i
+        );
+    }
+    Ok(())
+}

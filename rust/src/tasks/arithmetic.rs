@@ -1,0 +1,179 @@
+//! The arithmetic suite: four evaluation tasks standing in for AQuA /
+//! GSM8K / MAWPS / SVAMP (Table 4), trained on a Math10K-analogue mix.
+//!
+//! Following the paper, a single model is finetuned on the *training mix*
+//! (built from the add/sub/two-step generators, like Math10K is built from
+//! GSM8K+MAWPS+AQuA trains) and evaluated per task: exact-match on the
+//! generated digits for the open-ended tasks, choice accuracy for the
+//! AQuA-style multiple-choice task.
+
+use super::{Example, Metric, Task};
+use crate::util::rng::Rng;
+
+/// MAWPS analogue: single addition, two-digit operands.
+pub struct MawpsX;
+
+impl Task for MawpsX {
+    fn name(&self) -> &'static str {
+        "mawps-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.range(10, 60);
+        let b = rng.range(10, 40);
+        Example::gen(&format!("{a}+{b}="), &format!("{}.", a + b))
+    }
+}
+
+/// SVAMP analogue: single subtraction with a distractor operand the model
+/// must learn to ignore (SVAMP's signature perturbation).
+pub struct SvampX;
+
+impl Task for SvampX {
+    fn name(&self) -> &'static str {
+        "svamp-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.range(50, 99);
+        let b = rng.range(10, 49);
+        let d = rng.range(10, 99); // distractor
+        Example::gen(&format!("{a}-{b}[{d}]="), &format!("{}.", a - b))
+    }
+}
+
+/// GSM8K analogue: two-step chain a+b-c.
+pub struct Gsm8kX;
+
+impl Task for Gsm8kX {
+    fn name(&self) -> &'static str {
+        "gsm8k-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.range(10, 50);
+        let b = rng.range(10, 50);
+        let c = rng.range(1, 10);
+        Example::gen(&format!("{a}+{b}-{c}="), &format!("{}.", a + b - c))
+    }
+}
+
+/// AQuA analogue: multiple-choice addition — pick the option letter whose
+/// value equals a+b (scored as choice accuracy, like AQuA's option letter).
+pub struct AquaX;
+
+impl Task for AquaX {
+    fn name(&self) -> &'static str {
+        "aqua-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.range(10, 60);
+        let b = rng.range(10, 40);
+        let gold = a + b;
+        let mut opts = vec![gold];
+        while opts.len() < 4 {
+            let delta = rng.range(1, 15) * if rng.chance(0.5) { 1 } else { -1 };
+            let v = gold + delta;
+            if !opts.contains(&v) && v > 0 {
+                opts.push(v);
+            }
+        }
+        rng.shuffle(&mut opts[..]);
+        let ans = opts.iter().position(|&v| v == gold).unwrap();
+        let strs: Vec<String> = opts.iter().map(|v| v.to_string()).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        Example::choice(&format!("{a}+{b}=?"), &refs, ans)
+    }
+}
+
+/// The four evaluation tasks in Table-4 column order.
+pub fn eval_tasks() -> Vec<Box<dyn Task>> {
+    vec![Box::new(AquaX), Box::new(Gsm8kX), Box::new(MawpsX), Box::new(SvampX)]
+}
+
+/// The Math10K-analogue training mix: generators covering the operations
+/// the eval tasks need (note: like Math10K, it contains no SVAMP training
+/// split — transfer from the subtraction generator is required).
+pub fn train_mix() -> Vec<Box<dyn Task>> {
+    vec![Box::new(AquaX), Box::new(Gsm8kX), Box::new(MawpsX), Box::new(SubX)]
+}
+
+/// Plain subtraction (training-mix only; SVAMP transfers from this).
+pub struct SubX;
+
+impl Task for SubX {
+    fn name(&self) -> &'static str {
+        "sub-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.range(50, 99);
+        let b = rng.range(10, 49);
+        Example::gen(&format!("{a}-{b}="), &format!("{}.", a - b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answers_are_correct_arithmetic() {
+        let mut rng = Rng::seed_from(55);
+        for _ in 0..200 {
+            let ex = MawpsX.sample(&mut rng);
+            let p = crate::tokenizer::decode(&ex.prompt);
+            let (a, b) = p.trim_end_matches('=').split_once('+').unwrap();
+            let want: i64 = a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap();
+            assert_eq!(crate::tokenizer::decode(&ex.completion), format!("{want}."));
+        }
+    }
+
+    #[test]
+    fn gsm_two_step() {
+        let mut rng = Rng::seed_from(56);
+        let ex = Gsm8kX.sample(&mut rng);
+        let p = crate::tokenizer::decode(&ex.prompt);
+        assert!(p.contains('+') && p.contains('-'));
+    }
+
+    #[test]
+    fn aqua_choices_unique_and_positive() {
+        let mut rng = Rng::seed_from(57);
+        for _ in 0..100 {
+            let ex = AquaX.sample(&mut rng);
+            assert_eq!(ex.choices.len(), 4);
+            let vals: Vec<i64> = ex
+                .choices
+                .iter()
+                .map(|c| crate::tokenizer::decode(c).parse().unwrap())
+                .collect();
+            let mut dedup = vals.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 4);
+            assert!(vals.iter().all(|&v| v > 0));
+        }
+    }
+
+    #[test]
+    fn completion_terminates_with_period() {
+        // The '.' terminator doubles as the generation stop token.
+        let mut rng = Rng::seed_from(58);
+        for t in [&MawpsX as &dyn Task, &SvampX, &Gsm8kX, &SubX] {
+            let ex = t.sample(&mut rng);
+            assert_eq!(*ex.completion.last().unwrap(), b'.' as i32);
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! The commonsense suite: eight multiple-choice tasks standing in for
+//! BoolQ / PIQA / SIQA / HellaSwag / WinoGrande / ARC-e / ARC-c / OBQA
+//! (Table 3).  Like the paper, a *single* model is finetuned on the union
+//! of all eight (templated generatively); evaluation scores each candidate
+//! completion by NLL and picks the argmin — the standard LM-harness
+//! protocol for these datasets.
+
+use super::{Example, Metric, Task};
+use crate::util::rng::Rng;
+
+fn chars(s: &[u8]) -> String {
+    s.iter().map(|&c| c as char).collect()
+}
+
+/// BoolQ analogue: yes/no — does the context contain the query letter?
+pub struct BoolqX;
+
+impl Task for BoolqX {
+    fn name(&self) -> &'static str {
+        "boolq-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let ctx: Vec<u8> = (0..8).map(|_| b'a' + rng.below(10) as u8).collect();
+        let (q, yes) = if rng.chance(0.5) {
+            (ctx[rng.below(8)], true)
+        } else {
+            loop {
+                let c = b'a' + rng.below(10) as u8;
+                if !ctx.contains(&c) {
+                    break (c, false);
+                }
+            }
+        };
+        Example::choice(
+            &format!("B:{}?{}>", chars(&ctx), q as char),
+            &["yes", "no"],
+            usize::from(!yes),
+        )
+    }
+}
+
+/// PIQA analogue: "physical" procedure = continue the periodic pattern;
+/// pick the continuation that matches the established period.
+pub struct PiqaX;
+
+impl Task for PiqaX {
+    fn name(&self) -> &'static str {
+        "piqa-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = b'a' + rng.below(8) as u8;
+        let b = loop {
+            let c = b'a' + rng.below(8) as u8;
+            if c != a {
+                break c;
+            }
+        };
+        // Pattern "ababab" -> correct next two chars "ab".
+        let ctx = [a, b, a, b, a, b];
+        let good = chars(&[a, b]);
+        let bad = chars(&[b, a]);
+        let (c0, c1, ans) =
+            if rng.chance(0.5) { (good.clone(), bad, 0) } else { (bad, good.clone(), 1) };
+        Example::choice(&format!("I:{}+>", chars(&ctx)), &[&c0, &c1], ans)
+    }
+}
+
+/// SIQA analogue: 3-choice relational judgement — is x before (<), after
+/// (>) or equal (=) to y in the alphabet?
+pub struct SiqaX;
+
+impl Task for SiqaX {
+    fn name(&self) -> &'static str {
+        "siqa-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let x = b'a' + rng.below(10) as u8;
+        let y = if rng.chance(0.3) { x } else { b'a' + rng.below(10) as u8 };
+        let ans = match x.cmp(&y) {
+            std::cmp::Ordering::Less => 0,
+            std::cmp::Ordering::Greater => 1,
+            std::cmp::Ordering::Equal => 2,
+        };
+        Example::choice(&format!("S:{}{}?>", x as char, y as char), &["lt", "gt", "eq"], ans)
+    }
+}
+
+/// HellaSwag analogue: 4-choice ending — the correct continuation of a
+/// mod-10 arithmetic digit progression; distractors perturb the step.
+pub struct HellaswagX;
+
+impl Task for HellaswagX {
+    fn name(&self) -> &'static str {
+        "hellaswag-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let start = rng.below(10) as u8;
+        let step = 1 + rng.below(4) as u8;
+        let digit = |i: u8| ((start + step * i) % 10 + b'0') as char;
+        let ctx: String = (0..5).map(digit).collect();
+        let good: String = (5..8).map(digit).collect();
+        let mut cands = vec![good.clone()];
+        while cands.len() < 4 {
+            let d = 1 + rng.below(9) as u8;
+            let alt: String = (5..8).map(|i| ((start + step * i + d) % 10 + b'0') as char).collect();
+            if !cands.contains(&alt) {
+                cands.push(alt);
+            }
+        }
+        rng.shuffle(&mut cands[..]);
+        let ans = cands.iter().position(|c| *c == good).unwrap();
+        let refs: Vec<&str> = cands.iter().map(|s| s.as_str()).collect();
+        Example::choice(&format!("H:{ctx}+>"), &refs, ans)
+    }
+}
+
+/// WinoGrande analogue: coreference — context binds two letters to two
+/// digits; the question asks which digit a letter was bound to.
+pub struct WinograndeX;
+
+impl Task for WinograndeX {
+    fn name(&self) -> &'static str {
+        "winogrande-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let x = b'a' + rng.below(6) as u8;
+        let y = loop {
+            let c = b'a' + rng.below(6) as u8;
+            if c != x {
+                break c;
+            }
+        };
+        let dx = (b'1' + rng.below(9) as u8) as char;
+        let dy = loop {
+            let c = (b'1' + rng.below(9) as u8) as char;
+            if c != dx {
+                break c;
+            }
+        };
+        let ask_x = rng.chance(0.5);
+        let q = if ask_x { x } else { y };
+        let sx = dx.to_string();
+        let sy = dy.to_string();
+        let ans = usize::from(!ask_x);
+        Example::choice(
+            &format!("W:{}{dx}{}{dy}|{}?>", x as char, y as char, q as char),
+            &[&sx, &sy],
+            ans,
+        )
+    }
+}
+
+/// ARC-easy analogue: the maximum of four digits (4-choice over the
+/// digits themselves).
+pub struct ArcEasyX;
+
+impl Task for ArcEasyX {
+    fn name(&self) -> &'static str {
+        "arc-e-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let ds = distinct_digits(rng, 4);
+        let max = *ds.iter().max().unwrap();
+        let cands: Vec<String> = ds.iter().map(|d| d.to_string()).collect();
+        let ans = ds.iter().position(|&d| d == max).unwrap();
+        let refs: Vec<&str> = cands.iter().map(|s| s.as_str()).collect();
+        let ctx: String = ds.iter().map(|d| std::char::from_digit(*d, 10).unwrap()).collect();
+        Example::choice(&format!("E:{ctx}max>"), &refs, ans)
+    }
+}
+
+/// ARC-challenge analogue: the *second*-largest of four digits — same
+/// surface form as ARC-e but a harder induced rule.
+pub struct ArcChallengeX;
+
+impl Task for ArcChallengeX {
+    fn name(&self) -> &'static str {
+        "arc-c-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let ds = distinct_digits(rng, 4);
+        let mut sorted = ds.clone();
+        sorted.sort_unstable();
+        let second = sorted[2];
+        let cands: Vec<String> = ds.iter().map(|d| d.to_string()).collect();
+        let ans = ds.iter().position(|&d| d == second).unwrap();
+        let refs: Vec<&str> = cands.iter().map(|s| s.as_str()).collect();
+        let ctx: String = ds.iter().map(|d| std::char::from_digit(*d, 10).unwrap()).collect();
+        Example::choice(&format!("A:{ctx}2nd>"), &refs, ans)
+    }
+}
+
+/// OBQA analogue: "open-book knowledge" — a fixed random fact table from
+/// two-letter keys to a letter, baked at a constant seed ("the book").
+/// Answering requires memorizing the table during finetuning, which is
+/// what makes the task knowledge-intensive.
+pub struct ObqaX;
+
+impl ObqaX {
+    /// The book: key (i, j) in 12x12 -> letter 'a'..'h', fixed forever.
+    fn fact(i: usize, j: usize) -> u8 {
+        let mut r = Rng::seed_from(0x0b9a + (i * 12 + j) as u64);
+        b'a' + r.below(8) as u8
+    }
+}
+
+impl Task for ObqaX {
+    fn name(&self) -> &'static str {
+        "obqa-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let i = rng.below(12);
+        let j = rng.below(12);
+        let gold = Self::fact(i, j);
+        let mut cands = vec![gold];
+        while cands.len() < 4 {
+            let c = b'a' + rng.below(8) as u8;
+            if !cands.contains(&c) {
+                cands.push(c);
+            }
+        }
+        rng.shuffle(&mut cands[..]);
+        let ans = cands.iter().position(|&c| c == gold).unwrap();
+        let strs: Vec<String> = cands.iter().map(|&c| (c as char).to_string()).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        let key = format!("{}{}", (b'k' + i as u8) as char, (b'k' + j as u8) as char);
+        Example::choice(&format!("O:{key}?>"), &refs, ans)
+    }
+}
+
+fn distinct_digits(rng: &mut Rng, n: usize) -> Vec<u32> {
+    let mut pool: Vec<u32> = (0..10).collect();
+    rng.shuffle(&mut pool);
+    pool.truncate(n);
+    pool
+}
+
+/// The eight tasks in Table-3 column order.
+pub fn all() -> Vec<Box<dyn Task>> {
+    vec![
+        Box::new(BoolqX),
+        Box::new(PiqaX),
+        Box::new(SiqaX),
+        Box::new(HellaswagX),
+        Box::new(WinograndeX),
+        Box::new(ArcEasyX),
+        Box::new(ArcChallengeX),
+        Box::new(ObqaX),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choices_contain_gold_and_are_distinct() {
+        let mut rng = Rng::seed_from(21);
+        for t in all() {
+            for _ in 0..100 {
+                let ex = t.sample(&mut rng);
+                assert!(ex.choices.len() >= 2, "{}", t.name());
+                assert_eq!(ex.choices[ex.answer], ex.completion, "{}", t.name());
+                for i in 0..ex.choices.len() {
+                    for j in i + 1..ex.choices.len() {
+                        assert_ne!(ex.choices[i], ex.choices[j], "{} dup choice", t.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn obqa_facts_are_stable() {
+        assert_eq!(ObqaX::fact(3, 7), ObqaX::fact(3, 7));
+        // At least two different letters exist in the book.
+        let letters: std::collections::BTreeSet<u8> =
+            (0..12).flat_map(|i| (0..12).map(move |j| ObqaX::fact(i, j))).collect();
+        assert!(letters.len() > 2);
+    }
+
+    #[test]
+    fn hellaswag_gold_continues_progression() {
+        let mut rng = Rng::seed_from(33);
+        for _ in 0..100 {
+            let ex = HellaswagX.sample(&mut rng);
+            let ctx = crate::tokenizer::decode(&ex.prompt);
+            let digits: Vec<u8> = ctx
+                .trim_start_matches("H:")
+                .trim_end_matches("+>")
+                .bytes()
+                .map(|b| b - b'0')
+                .collect();
+            let step = (10 + digits[1] - digits[0]) % 10;
+            let next = (digits[4] + step) % 10;
+            assert_eq!(ex.completion[0], (next + b'0') as i32);
+        }
+    }
+
+    #[test]
+    fn arc_answers_follow_rules() {
+        let mut rng = Rng::seed_from(34);
+        for _ in 0..100 {
+            let e = ArcEasyX.sample(&mut rng);
+            let ctx = crate::tokenizer::decode(&e.prompt);
+            let ds: Vec<u32> = ctx
+                .trim_start_matches("E:")
+                .trim_end_matches("max>")
+                .chars()
+                .map(|c| c.to_digit(10).unwrap())
+                .collect();
+            let gold: u32 =
+                crate::tokenizer::decode(&e.completion).parse().unwrap();
+            assert_eq!(gold, *ds.iter().max().unwrap());
+        }
+    }
+}

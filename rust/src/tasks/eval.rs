@@ -1,0 +1,232 @@
+//! Evaluation protocols shared by the experiment drivers: classification
+//! argmax, multiple-choice NLL scoring, generative exact match through the
+//! serving engine, and the LL-judge win rate.
+
+use anyhow::Result;
+
+use super::{lm_batch, Example, Metric, Task};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{Request, SamplingParams};
+use crate::trainer::Trainer;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Result of a classification evaluation.
+#[derive(Clone, Debug)]
+pub struct ClassEval {
+    pub task: String,
+    pub metric: Metric,
+    pub score: f64,
+    pub n: usize,
+}
+
+/// Classification via `last_logits`: argmax restricted to the task's label
+/// tokens, scored with the task's metric (Table 2 / Table 6 protocol).
+pub fn eval_classification(
+    trainer: &Trainer,
+    task: &dyn Task,
+    n: usize,
+    seed: u64,
+) -> Result<ClassEval> {
+    let labels = task.label_tokens();
+    assert!(!labels.is_empty(), "{} is not a classification task", task.name());
+    let mut rng = Rng::seed_from(seed);
+    let examples: Vec<Example> = (0..n).map(|_| task.sample(&mut rng)).collect();
+    let (b, l) = (trainer.batch, trainer.seq_len);
+
+    let mut preds = Vec::with_capacity(n);
+    let mut golds = Vec::with_capacity(n);
+    for chunk in examples.chunks(b) {
+        let mut tokens = vec![0i32; b * l];
+        let mut lengths = vec![1i32; b];
+        for (row, ex) in chunk.iter().enumerate() {
+            let p = &ex.prompt[..ex.prompt.len().min(l)];
+            tokens[row * l..row * l + p.len()].copy_from_slice(p);
+            lengths[row] = p.len() as i32;
+        }
+        let logits = trainer.last_logits(&tokens, &lengths)?;
+        let vocab = trainer.cfg.vocab;
+        for (row, ex) in chunk.iter().enumerate() {
+            let lrow = logits.read_f32_range(row * vocab, vocab);
+            let pred = labels
+                .iter()
+                .enumerate()
+                .max_by(|(_, &a), (_, &b)| {
+                    lrow[a as usize].partial_cmp(&lrow[b as usize]).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            preds.push(pred);
+            golds.push(ex.answer);
+        }
+    }
+
+    let score = match task.metric() {
+        Metric::Accuracy | Metric::ExactMatch | Metric::WinRate => {
+            stats::accuracy(&preds, &golds)
+        }
+        Metric::Matthews => stats::matthews(&preds, &golds),
+        Metric::Pearson => {
+            let p: Vec<f64> = preds.iter().map(|&x| x as f64).collect();
+            let g: Vec<f64> = golds.iter().map(|&x| x as f64).collect();
+            stats::pearson(&p, &g)
+        }
+    };
+    Ok(ClassEval { task: task.name().to_string(), metric: task.metric(), score, n })
+}
+
+/// Multiple-choice via per-candidate NLL (Table 3 protocol): each choice
+/// becomes one eval_loss row; the argmin-NLL candidate is the prediction.
+pub fn eval_choice_accuracy(
+    trainer: &Trainer,
+    task: &dyn Task,
+    n: usize,
+    seed: u64,
+) -> Result<ClassEval> {
+    let mut rng = Rng::seed_from(seed);
+    let examples: Vec<Example> = (0..n).map(|_| task.sample(&mut rng)).collect();
+    let (b, l) = (trainer.batch, trainer.seq_len);
+
+    // Flatten (example, choice) rows, then score in B-sized chunks.
+    let mut rows: Vec<Example> = Vec::new();
+    let mut row_of: Vec<(usize, usize)> = Vec::new(); // (example, choice)
+    for (ei, ex) in examples.iter().enumerate() {
+        assert!(!ex.choices.is_empty(), "{} has no choices", task.name());
+        for (ci, cand) in ex.choices.iter().enumerate() {
+            rows.push(Example {
+                prompt: ex.prompt.clone(),
+                completion: cand.clone(),
+                choices: Vec::new(),
+                answer: 0,
+            });
+            row_of.push((ei, ci));
+        }
+    }
+
+    let mut nll = vec![vec![f32::INFINITY; 0]; examples.len()];
+    for (ei, ex) in examples.iter().enumerate() {
+        nll[ei] = vec![f32::INFINITY; ex.choices.len()];
+    }
+    for (chunk, ids) in rows.chunks(b).zip(row_of.chunks(b)) {
+        let batch = lm_batch(chunk, b, l);
+        let (per_ex, _) = trainer.eval_loss(&batch)?;
+        for (row, &(ei, ci)) in ids.iter().enumerate() {
+            nll[ei][ci] = per_ex[row];
+        }
+    }
+
+    let mut correct = 0usize;
+    for (ei, ex) in examples.iter().enumerate() {
+        let pred = nll[ei]
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == ex.answer {
+            correct += 1;
+        }
+    }
+    Ok(ClassEval {
+        task: task.name().to_string(),
+        metric: Metric::Accuracy,
+        score: correct as f64 / examples.len() as f64,
+        n,
+    })
+}
+
+/// Generative exact match through the serving engine (Table 4 protocol):
+/// greedy decoding, '.' as stop token, compare against the gold digits.
+pub fn eval_exact_match(
+    engine: &mut Engine,
+    adapter: Option<&str>,
+    task: &dyn Task,
+    n: usize,
+    seed: u64,
+) -> Result<ClassEval> {
+    let mut rng = Rng::seed_from(seed);
+    let examples: Vec<Example> = (0..n).map(|_| task.sample(&mut rng)).collect();
+    let stop = b'.' as i32;
+
+    let mut reqs = Vec::with_capacity(n);
+    for (i, ex) in examples.iter().enumerate() {
+        let max_new = ex.completion.len() + 3;
+        let mut r = Request::new((i + 1) as u64, ex.prompt.clone(), max_new).with_sampling(
+            SamplingParams { temperature: 0.0, top_k: 0, seed: 0, stop_token: Some(stop) },
+        );
+        if let Some(a) = adapter {
+            r = r.with_adapter(a);
+        }
+        reqs.push(r);
+    }
+    let outs = engine.run_all(reqs)?;
+
+    let mut correct = 0usize;
+    for out in &outs {
+        let ex = &examples[(out.id - 1) as usize];
+        // Gold completion without the '.' terminator (stripped by the
+        // engine's stop-token handling).
+        let gold = &ex.completion[..ex.completion.len() - 1];
+        if out.tokens == gold {
+            correct += 1;
+        }
+    }
+    Ok(ClassEval {
+        task: task.name().to_string(),
+        metric: Metric::ExactMatch,
+        score: correct as f64 / examples.len() as f64,
+        n,
+    })
+}
+
+/// LL-judge win rate (Table 5 protocol): on shared held-out examples, win
+/// = the finetuned trainer assigns strictly lower NLL to the gold response
+/// than the reference trainer; ties split.
+pub fn eval_win_rate(
+    trained: &Trainer,
+    reference: &Trainer,
+    task: &dyn Task,
+    n: usize,
+    seed: u64,
+) -> Result<ClassEval> {
+    let mut rng = Rng::seed_from(seed);
+    let examples: Vec<Example> = (0..n).map(|_| task.sample(&mut rng)).collect();
+    let (b, l) = (trained.batch, trained.seq_len);
+    let mut wins = 0f64;
+    let mut total = 0usize;
+    for chunk in examples.chunks(b) {
+        let batch = lm_batch(chunk, b, l);
+        let (nll_t, _) = trained.eval_loss(&batch)?;
+        let (nll_r, _) = reference.eval_loss(&batch)?;
+        for row in 0..chunk.len() {
+            if nll_t[row] < nll_r[row] {
+                wins += 1.0;
+            } else if nll_t[row] == nll_r[row] {
+                wins += 0.5;
+            }
+            total += 1;
+        }
+    }
+    Ok(ClassEval {
+        task: task.name().to_string(),
+        metric: Metric::WinRate,
+        score: wins / total as f64,
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_eval_is_plain_data() {
+        let e = ClassEval {
+            task: "t".into(),
+            metric: Metric::Accuracy,
+            score: 0.5,
+            n: 10,
+        };
+        assert_eq!(e.score, 0.5);
+    }
+}

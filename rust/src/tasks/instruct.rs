@@ -1,0 +1,155 @@
+//! Instruction-following suite (Table 5, AlpacaEval-2.0 analogue): byte-
+//! level instruction templates whose execution is deterministic, scored by
+//! an LL-judge (win = the finetuned model assigns lower NLL to the gold
+//! response than the reference model does) instead of GPT-4.
+
+use super::{Example, Metric, Task};
+use crate::util::rng::Rng;
+
+fn rand_word(rng: &mut Rng, n: usize) -> String {
+    (0..n).map(|_| (b'a' + rng.below(16) as u8) as char).collect()
+}
+
+/// One instruction template.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// "rev:abc>" -> "cba."
+    Reverse,
+    /// "upp:abc>" -> "ABC."
+    Upper,
+    /// "dup:abc>" -> "aabbcc."
+    Duplicate,
+    /// "lst:abc>" -> "c." (last character)
+    Last,
+    /// "cnt:abc>" -> "3." (length as a digit)
+    Count,
+}
+
+pub struct InstructX {
+    pub kind: Kind,
+}
+
+impl InstructX {
+    pub fn apply(kind: Kind, word: &str) -> String {
+        let out = match kind {
+            Kind::Reverse => word.chars().rev().collect::<String>(),
+            Kind::Upper => word.to_uppercase(),
+            Kind::Duplicate => word.chars().flat_map(|c| [c, c]).collect(),
+            Kind::Last => word.chars().last().unwrap().to_string(),
+            Kind::Count => word.chars().count().to_string(),
+        };
+        format!("{out}.")
+    }
+
+    fn tag(kind: Kind) -> &'static str {
+        match kind {
+            Kind::Reverse => "rev",
+            Kind::Upper => "upp",
+            Kind::Duplicate => "dup",
+            Kind::Last => "lst",
+            Kind::Count => "cnt",
+        }
+    }
+}
+
+impl Task for InstructX {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            Kind::Reverse => "instr-rev",
+            Kind::Upper => "instr-upp",
+            Kind::Duplicate => "instr-dup",
+            Kind::Last => "instr-lst",
+            Kind::Count => "instr-cnt",
+        }
+    }
+    fn metric(&self) -> Metric {
+        Metric::WinRate
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = 3 + rng.below(5); // 3..=7 chars
+        let word = rand_word(rng, n);
+        Example::gen(
+            &format!("{}:{word}>", Self::tag(self.kind)),
+            &Self::apply(self.kind, &word),
+        )
+    }
+}
+
+/// The five instruction tasks (the "10K cleaned Alpaca" analogue mixes all
+/// of them during finetuning).
+pub fn all() -> Vec<Box<dyn Task>> {
+    vec![
+        Box::new(InstructX { kind: Kind::Reverse }),
+        Box::new(InstructX { kind: Kind::Upper }),
+        Box::new(InstructX { kind: Kind::Duplicate }),
+        Box::new(InstructX { kind: Kind::Last }),
+        Box::new(InstructX { kind: Kind::Count }),
+    ]
+}
+
+/// A second instruction distribution (the "UltraFeedback" analogue):
+/// longer words, skewed template mix.
+pub struct UltraX;
+
+impl Task for UltraX {
+    fn name(&self) -> &'static str {
+        "instr-ultra"
+    }
+    fn metric(&self) -> Metric {
+        Metric::WinRate
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let kind = match rng.weighted(&[3.0, 1.0, 1.0]) {
+            0 => Kind::Reverse,
+            1 => Kind::Last,
+            _ => Kind::Count,
+        };
+        let n = 5 + rng.below(6);
+        let word = rand_word(rng, n);
+        Example::gen(
+            &format!("{}:{word}>", InstructX::tag(kind)),
+            &InstructX::apply(kind, &word),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn templates_execute_correctly() {
+        assert_eq!(InstructX::apply(Kind::Reverse, "abc"), "cba.");
+        assert_eq!(InstructX::apply(Kind::Upper, "abc"), "ABC.");
+        assert_eq!(InstructX::apply(Kind::Duplicate, "ab"), "aabb.");
+        assert_eq!(InstructX::apply(Kind::Last, "abc"), "c.");
+        assert_eq!(InstructX::apply(Kind::Count, "abcd"), "4.");
+    }
+
+    #[test]
+    fn samples_round_trip() {
+        let mut rng = Rng::seed_from(77);
+        let t = InstructX { kind: Kind::Reverse };
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            let p = crate::tokenizer::decode(&ex.prompt);
+            let word = p.trim_start_matches("rev:").trim_end_matches('>');
+            assert_eq!(
+                crate::tokenizer::decode(&ex.completion),
+                InstructX::apply(Kind::Reverse, word)
+            );
+        }
+    }
+
+    #[test]
+    fn ultra_mix_varies_templates() {
+        let mut rng = Rng::seed_from(78);
+        let tags: std::collections::BTreeSet<String> = (0..100)
+            .map(|_| {
+                let ex = UltraX.sample(&mut rng);
+                crate::tokenizer::decode(&ex.prompt)[..3].to_string()
+            })
+            .collect();
+        assert!(tags.len() >= 2, "{tags:?}");
+    }
+}

@@ -1,0 +1,301 @@
+//! Synthetic task suites: the benchmark substitutions for GLUE (Table 2),
+//! the eight commonsense tasks (Table 3), the four arithmetic tasks
+//! (Table 4), instruction following (Table 5) and the multimodal suite
+//! (Table 6).
+//!
+//! The paper's tables compare PEFT methods *against each other on shared
+//! tasks*; these suites preserve that comparison structure with learnable-
+//! but-nontrivial mappings over the byte vocabulary (DESIGN.md §4).  Every
+//! task emits [`Example`]s; shared builders turn them into LM training
+//! batches and the evaluation protocols used by the tables:
+//!
+//! * classification via `last_logits` argmax over label tokens (Table 2/6),
+//! * multiple-choice via per-candidate NLL scoring (Table 3, the standard
+//!   LM-harness protocol),
+//! * generative exact match through the serving engine (Table 4),
+//! * LL-judge win-rate: trained vs identity model NLL (Table 5).
+
+pub mod arithmetic;
+pub mod commonsense;
+pub mod eval;
+pub mod instruct;
+pub mod multimodal;
+pub mod nlu;
+pub mod pretrain;
+
+pub use eval::{
+    eval_choice_accuracy, eval_classification, eval_exact_match, eval_win_rate, ClassEval,
+};
+
+use crate::trainer::TrainBatch;
+use crate::util::rng::Rng;
+
+/// The metric a task reports (mirroring the paper's per-task metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    /// Matthew's correlation (CoLA analogue).
+    Matthews,
+    /// Pearson correlation over graded labels (STS-B analogue).
+    Pearson,
+    /// Generative exact match (arithmetic suite).
+    ExactMatch,
+    /// LL-judge win rate vs the base model (AlpacaEval analogue).
+    WinRate,
+}
+
+/// One synthetic example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// Prompt tokens (byte-level, never 0).
+    pub prompt: Vec<i32>,
+    /// Gold completion tokens.
+    pub completion: Vec<i32>,
+    /// Candidate completions for multiple-choice tasks (empty otherwise).
+    pub choices: Vec<Vec<i32>>,
+    /// Gold class index (classification / choice tasks) or graded label.
+    pub answer: usize,
+}
+
+impl Example {
+    pub fn gen(prompt: &str, completion: &str) -> Example {
+        Example {
+            prompt: crate::tokenizer::encode(prompt),
+            completion: crate::tokenizer::encode(completion),
+            choices: Vec::new(),
+            answer: 0,
+        }
+    }
+
+    /// Multiple-choice example; `answer` indexes `choices`, and the gold
+    /// completion is set to the correct choice.
+    pub fn choice(prompt: &str, choices: &[&str], answer: usize) -> Example {
+        Example {
+            prompt: crate::tokenizer::encode(prompt),
+            completion: crate::tokenizer::encode(choices[answer]),
+            choices: choices.iter().map(|c| crate::tokenizer::encode(c)).collect(),
+            answer,
+        }
+    }
+}
+
+/// A synthetic task: a deterministic-under-seed generator of examples.
+pub trait Task {
+    fn name(&self) -> &'static str;
+    fn metric(&self) -> Metric;
+    /// Label tokens for classification tasks (argmax restricted to these);
+    /// empty for generative/choice tasks.
+    fn label_tokens(&self) -> Vec<i32> {
+        Vec::new()
+    }
+    fn sample(&self, rng: &mut Rng) -> Example;
+}
+
+/// Build an LM training batch from `b` examples: tokens = prompt ++
+/// completion (padded to `l`), next-token targets, mask = 1 only where the
+/// position predicts a completion token (prompt tokens are context).
+pub fn lm_batch(examples: &[Example], b: usize, l: usize) -> TrainBatch {
+    assert!(examples.len() <= b, "{} examples > batch {b}", examples.len());
+    let mut batch = TrainBatch::zeros(b, l);
+    for (row, ex) in examples.iter().enumerate() {
+        let seq: Vec<i32> =
+            ex.prompt.iter().chain(ex.completion.iter()).copied().take(l).collect();
+        let plen = ex.prompt.len().min(seq.len());
+        let base = row * l;
+        for (t, &tok) in seq.iter().enumerate() {
+            batch.tokens[base + t] = tok;
+        }
+        // Position p predicts seq[p + 1]; completion tokens sit at indices
+        // [plen, seq.len()).
+        for p in 0..seq.len().saturating_sub(1) {
+            batch.targets[base + p] = seq[p + 1];
+            if p + 1 >= plen {
+                batch.mask[base + p] = 1.0;
+            }
+        }
+    }
+    batch
+}
+
+/// A batch source drawing uniformly from a set of tasks (the paper's
+/// unified multi-task finetuning protocol for Tables 3/4).
+pub struct SuiteSampler<'a> {
+    pub tasks: &'a [Box<dyn Task>],
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl<'a> SuiteSampler<'a> {
+    pub fn new(tasks: &'a [Box<dyn Task>], batch: usize, seq_len: usize) -> SuiteSampler<'a> {
+        SuiteSampler { tasks, batch, seq_len }
+    }
+
+    pub fn next_batch(&self, rng: &mut Rng) -> TrainBatch {
+        let exs: Vec<Example> = (0..self.batch)
+            .map(|_| self.tasks[rng.below(self.tasks.len())].sample(rng))
+            .collect();
+        lm_batch(&exs, self.batch, self.seq_len)
+    }
+}
+
+impl crate::trainer::loop_::BatchSource for SuiteSampler<'_> {
+    fn next_batch(&mut self, rng: &mut Rng) -> TrainBatch {
+        SuiteSampler::next_batch(self, rng)
+    }
+}
+
+/// Single-task batch source (Table 2: one model per GLUE task).
+pub struct TaskSampler<'a> {
+    pub task: &'a dyn Task,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl crate::trainer::loop_::BatchSource for TaskSampler<'_> {
+    fn next_batch(&mut self, rng: &mut Rng) -> TrainBatch {
+        let exs: Vec<Example> = (0..self.batch).map(|_| self.task.sample(rng)).collect();
+        lm_batch(&exs, self.batch, self.seq_len)
+    }
+}
+
+/// Suite registries.
+pub fn nlu_suite() -> Vec<Box<dyn Task>> {
+    nlu::all()
+}
+
+pub fn commonsense_suite() -> Vec<Box<dyn Task>> {
+    commonsense::all()
+}
+
+pub fn arithmetic_train_suite() -> Vec<Box<dyn Task>> {
+    arithmetic::train_mix()
+}
+
+pub fn arithmetic_eval_suite() -> Vec<Box<dyn Task>> {
+    arithmetic::eval_tasks()
+}
+
+pub fn instruct_suite() -> Vec<Box<dyn Task>> {
+    instruct::all()
+}
+
+pub fn multimodal_suite() -> Vec<Box<dyn Task>> {
+    multimodal::all()
+}
+
+pub fn pretrain_corpus() -> Vec<Box<dyn Task>> {
+    pretrain::corpus()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed;
+    impl Task for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn metric(&self) -> Metric {
+            Metric::Accuracy
+        }
+        fn sample(&self, _rng: &mut Rng) -> Example {
+            Example::gen("ab", "cd")
+        }
+    }
+
+    #[test]
+    fn lm_batch_masks_completion_only() {
+        let ex = Fixed.sample(&mut Rng::seed_from(0));
+        let b = lm_batch(&[ex], 1, 8);
+        // seq = [a, b, c, d]; targets at p: seq[p+1]; mask at p>=1 (plen-1)
+        assert_eq!(&b.tokens[..4], &[97, 98, 99, 100]);
+        assert_eq!(b.targets[0], 98);
+        assert_eq!(b.mask[0], 0.0); // predicts prompt token
+        assert_eq!(b.targets[1], 99);
+        assert_eq!(b.mask[1], 1.0); // predicts first completion token
+        assert_eq!(b.targets[2], 100);
+        assert_eq!(b.mask[2], 1.0);
+        assert_eq!(b.mask[3], 0.0); // past end
+    }
+
+    #[test]
+    fn lm_batch_truncates_to_seq_len() {
+        let ex = Example::gen("aaaaaaaaaa", "bbbbbbbbbb");
+        let b = lm_batch(&[ex], 1, 12);
+        assert_eq!(b.tokens.len(), 12);
+        assert_eq!(b.tokens[11], 98);
+    }
+
+    #[test]
+    fn choice_example_sets_gold_completion() {
+        let ex = Example::choice("q", &["yes", "no"], 1);
+        assert_eq!(ex.completion, crate::tokenizer::encode("no"));
+        assert_eq!(ex.choices.len(), 2);
+    }
+
+    #[test]
+    fn all_suites_nonempty_and_sampleable() {
+        let mut rng = Rng::seed_from(7);
+        for suite in [
+            nlu_suite(),
+            commonsense_suite(),
+            arithmetic_train_suite(),
+            arithmetic_eval_suite(),
+            instruct_suite(),
+            multimodal_suite(),
+        ] {
+            assert!(!suite.is_empty());
+            for t in &suite {
+                for _ in 0..20 {
+                    let ex = t.sample(&mut rng);
+                    assert!(!ex.prompt.is_empty(), "{} empty prompt", t.name());
+                    assert!(!ex.completion.is_empty(), "{} empty completion", t.name());
+                    // Tokens must avoid PAD/EOS = 0.
+                    assert!(ex.prompt.iter().all(|&t| t > 0));
+                    assert!(ex.completion.iter().all(|&t| t > 0));
+                    if !ex.choices.is_empty() {
+                        assert!(ex.answer < ex.choices.len());
+                        assert_eq!(ex.choices[ex.answer], ex.completion);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn train_window_fits_suites() {
+        // Train bucket is [16, 32]: prompt+completion must fit 32 tokens.
+        let mut rng = Rng::seed_from(11);
+        for suite in [
+            nlu_suite(),
+            commonsense_suite(),
+            arithmetic_train_suite(),
+            instruct_suite(),
+            multimodal_suite(),
+        ] {
+            for t in &suite {
+                for _ in 0..50 {
+                    let ex = t.sample(&mut rng);
+                    let n = ex.prompt.len() + ex.completion.len();
+                    assert!(n <= 32, "{}: {} tokens > 32", t.name(), n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_eval_prompts_fit_gen_bucket() {
+        // Generative eval goes through prefill_<mode>_train_b8_l16.
+        let mut rng = Rng::seed_from(13);
+        for t in &arithmetic_eval_suite() {
+            if t.metric() != Metric::ExactMatch {
+                continue;
+            }
+            for _ in 0..100 {
+                let ex = t.sample(&mut rng);
+                assert!(ex.prompt.len() <= 16, "{}: prompt {} > 16", t.name(), ex.prompt.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,449 @@
+//! The NLU suite: eight classification tasks standing in for GLUE
+//! (Table 2).  Each mirrors the *kind* of reasoning its GLUE counterpart
+//! needs — entailment-as-containment, paraphrase-as-permutation, graded
+//! similarity, acceptability-as-grammar — over compact byte strings a
+//! small transformer can learn in a few hundred steps.
+//!
+//! Every task formats as `"<tag>:<payload>>"` with a single label token as
+//! the completion, so a single generative protocol covers the whole suite
+//! (the prompt tag keeps tasks separable even when a shared backbone is
+//! used for quick tests).
+
+use super::{Example, Metric, Task};
+use crate::util::rng::Rng;
+
+const LETTERS: &[u8] = b"abcdefghijklmnop";
+
+fn rand_str(rng: &mut Rng, n: usize, alphabet: &[u8]) -> String {
+    (0..n).map(|_| alphabet[rng.below(alphabet.len())] as char).collect()
+}
+
+fn label_ex(tag: &str, payload: &str, label: usize) -> Example {
+    let mut e = Example::gen(&format!("{tag}:{payload}>"), &label.to_string());
+    e.answer = label;
+    e
+}
+
+fn digit_tokens(k: usize) -> Vec<i32> {
+    (0..k).map(|i| (b'0' + i as u8) as i32).collect()
+}
+
+/// RTE analogue: does the "hypothesis" (3 chars) occur as a contiguous
+/// substring of the "premise" (8 chars)?
+pub struct RteX;
+
+impl Task for RteX {
+    fn name(&self) -> &'static str {
+        "rte-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(2)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let premise = rand_str(rng, 8, &LETTERS[..8]);
+        let (hyp, label) = if rng.chance(0.5) {
+            let start = rng.below(6);
+            (premise[start..start + 3].to_string(), 1)
+        } else {
+            // Random 3-gram, resampled until it's genuinely absent.
+            loop {
+                let h = rand_str(rng, 3, &LETTERS[..8]);
+                if !premise.contains(&h) {
+                    break (h, 0);
+                }
+            }
+        };
+        label_ex("R", &format!("{premise}|{hyp}"), label)
+    }
+}
+
+/// MRPC analogue: is the second 6-char string a permutation (same
+/// multiset) of the first?
+pub struct MrpcX;
+
+impl Task for MrpcX {
+    fn name(&self) -> &'static str {
+        "mrpc-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(2)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a: Vec<u8> = (0..6).map(|_| LETTERS[rng.below(6)]).collect();
+        let mut b = a.clone();
+        rng.shuffle(&mut b);
+        let label = if rng.chance(0.5) {
+            1
+        } else {
+            // Corrupt one position with a differing letter.
+            let i = rng.below(6);
+            let old = b[i];
+            loop {
+                let c = LETTERS[rng.below(6)];
+                if c != old {
+                    b[i] = c;
+                    break;
+                }
+            }
+            0
+        };
+        let a_s: String = a.iter().map(|&c| c as char).collect();
+        let b_s: String = b.iter().map(|&c| c as char).collect();
+        label_ex("M", &format!("{a_s}|{b_s}"), label)
+    }
+}
+
+/// STS-B analogue: graded similarity 0..4 = quantized count of positions
+/// where two 8-char strings agree.  Scored with Pearson correlation.
+pub struct StsbX;
+
+impl Task for StsbX {
+    fn name(&self) -> &'static str {
+        "stsb-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Pearson
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(5)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a: Vec<u8> = (0..8).map(|_| LETTERS[rng.below(4)]).collect();
+        // Choose a target number of matches, then build b accordingly so
+        // grades are uniform.
+        let want = rng.below(5) * 2; // 0,2,4,6,8 matches
+        let mut idx: Vec<usize> = (0..8).collect();
+        rng.shuffle(&mut idx);
+        let mut b = vec![0u8; 8];
+        for (j, &i) in idx.iter().enumerate() {
+            if j < want {
+                b[i] = a[i];
+            } else {
+                loop {
+                    let c = LETTERS[rng.below(4)];
+                    if c != a[i] {
+                        b[i] = c;
+                        break;
+                    }
+                }
+            }
+        }
+        let matches = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        let grade = (matches / 2).min(4);
+        let a_s: String = a.iter().map(|&c| c as char).collect();
+        let b_s: String = b.iter().map(|&c| c as char).collect();
+        label_ex("S", &format!("{a_s}|{b_s}"), grade)
+    }
+}
+
+/// CoLA analogue: "acceptability" = membership in the regular language of
+/// {a,b}-strings with no "bb" factor.  Scored with Matthew's correlation.
+pub struct ColaX;
+
+impl Task for ColaX {
+    fn name(&self) -> &'static str {
+        "cola-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Matthews
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(2)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = 10;
+        let mut s = Vec::with_capacity(n);
+        if rng.chance(0.5) {
+            // Valid walk: after 'b' always emit 'a'.
+            let mut prev_b = false;
+            for _ in 0..n {
+                let c = if prev_b || rng.chance(0.6) { b'a' } else { b'b' };
+                prev_b = c == b'b';
+                s.push(c);
+            }
+            let txt: String = s.iter().map(|&c| c as char).collect();
+            label_ex("C", &txt, 1)
+        } else {
+            // Inject at least one "bb".
+            for _ in 0..n {
+                s.push(if rng.chance(0.5) { b'a' } else { b'b' });
+            }
+            let i = rng.below(n - 1);
+            s[i] = b'b';
+            s[i + 1] = b'b';
+            let txt: String = s.iter().map(|&c| c as char).collect();
+            label_ex("C", &txt, 0)
+        }
+    }
+}
+
+/// SST-2 analogue: majority sentiment of a 10-token string drawn from a
+/// positive lexicon {p,q,r,s}, a negative one {u,v,w,x} and neutral {m,n}.
+pub struct Sst2X;
+
+impl Task for Sst2X {
+    fn name(&self) -> &'static str {
+        "sst2-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(2)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        loop {
+            let mut pos = 0i32;
+            let mut s = String::new();
+            for _ in 0..10 {
+                match rng.below(3) {
+                    0 => {
+                        s.push(b"pqrs"[rng.below(4)] as char);
+                        pos += 1;
+                    }
+                    1 => {
+                        s.push(b"uvwx"[rng.below(4)] as char);
+                        pos -= 1;
+                    }
+                    _ => s.push(b"mn"[rng.below(2)] as char),
+                }
+            }
+            if pos != 0 {
+                return label_ex("T", &s, usize::from(pos > 0));
+            }
+        }
+    }
+}
+
+/// QNLI analogue: does the query character occur in the 8-char context?
+pub struct QnliX;
+
+impl Task for QnliX {
+    fn name(&self) -> &'static str {
+        "qnli-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(2)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let ctx = rand_str(rng, 8, &LETTERS[..10]);
+        let (q, label) = if rng.chance(0.5) {
+            (ctx.as_bytes()[rng.below(8)] as char, 1)
+        } else {
+            loop {
+                let c = LETTERS[rng.below(10)] as char;
+                if !ctx.contains(c) {
+                    break (c, 0);
+                }
+            }
+        };
+        label_ex("Q", &format!("{q}|{ctx}"), label)
+    }
+}
+
+/// QQP analogue: "duplicate questions" = equal 6-char strings up to sorted
+/// order over a small alphabet (duplicates allowed), with hard negatives
+/// that differ in exactly one slot.
+pub struct QqpX;
+
+impl Task for QqpX {
+    fn name(&self) -> &'static str {
+        "qqp-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(2)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let mut a: Vec<u8> = (0..6).map(|_| LETTERS[rng.below(4)]).collect();
+        let mut b = a.clone();
+        rng.shuffle(&mut b);
+        let label = if rng.chance(0.5) {
+            1
+        } else {
+            let i = rng.below(6);
+            let old = b[i];
+            loop {
+                let c = LETTERS[rng.below(4)];
+                if c != old {
+                    b[i] = c;
+                    break;
+                }
+            }
+            0
+        };
+        rng.shuffle(&mut a);
+        let a_s: String = a.iter().map(|&c| c as char).collect();
+        let b_s: String = b.iter().map(|&c| c as char).collect();
+        label_ex("P", &format!("{a_s}|{b_s}"), label)
+    }
+}
+
+/// MNLI analogue (3-way): hypothesis chars all inside the premise
+/// (entailment=0), all outside (contradiction=1), or mixed (neutral=2).
+pub struct MnliX;
+
+impl Task for MnliX {
+    fn name(&self) -> &'static str {
+        "mnli-x"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn label_tokens(&self) -> Vec<i32> {
+        digit_tokens(3)
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let prem: Vec<u8> = {
+            // 6 distinct letters from the first 12.
+            let mut pool: Vec<u8> = LETTERS[..12].to_vec();
+            rng.shuffle(&mut pool);
+            pool.truncate(6);
+            pool
+        };
+        let outside: Vec<u8> =
+            LETTERS[..12].iter().copied().filter(|c| !prem.contains(c)).collect();
+        let label = rng.below(3);
+        let hyp: Vec<u8> = match label {
+            0 => (0..3).map(|_| prem[rng.below(6)]).collect(),
+            1 => (0..3).map(|_| outside[rng.below(outside.len())]).collect(),
+            _ => {
+                vec![
+                    prem[rng.below(6)],
+                    outside[rng.below(outside.len())],
+                    if rng.chance(0.5) {
+                        prem[rng.below(6)]
+                    } else {
+                        outside[rng.below(outside.len())]
+                    },
+                ]
+            }
+        };
+        let p: String = prem.iter().map(|&c| c as char).collect();
+        let h: String = hyp.iter().map(|&c| c as char).collect();
+        label_ex("N", &format!("{p}|{h}"), label)
+    }
+}
+
+/// The eight NLU tasks in Table-2 column order.
+pub fn all() -> Vec<Box<dyn Task>> {
+    vec![
+        Box::new(RteX),
+        Box::new(MrpcX),
+        Box::new(StsbX),
+        Box::new(ColaX),
+        Box::new(Sst2X),
+        Box::new(QnliX),
+        Box::new(QqpX),
+        Box::new(MnliX),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_balance(task: &dyn Task, n_classes: usize) {
+        let mut rng = Rng::seed_from(99);
+        let mut counts = vec![0usize; n_classes];
+        for _ in 0..600 {
+            let ex = task.sample(&mut rng);
+            assert!(ex.answer < n_classes, "{}", task.name());
+            counts[ex.answer] += 1;
+        }
+        for (c, &n) in counts.iter().enumerate() {
+            assert!(
+                n > 600 / n_classes / 3,
+                "{} class {c} underrepresented: {counts:?}",
+                task.name()
+            );
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        check_balance(&RteX, 2);
+        check_balance(&MrpcX, 2);
+        check_balance(&StsbX, 5);
+        check_balance(&ColaX, 2);
+        check_balance(&Sst2X, 2);
+        check_balance(&QnliX, 2);
+        check_balance(&QqpX, 2);
+        check_balance(&MnliX, 3);
+    }
+
+    #[test]
+    fn rte_positive_is_substring() {
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..200 {
+            let ex = RteX.sample(&mut rng);
+            let txt = crate::tokenizer::decode(&ex.prompt);
+            let body = txt.trim_start_matches("R:").trim_end_matches('>');
+            let (p, h) = body.split_once('|').unwrap();
+            assert_eq!(p.contains(h), ex.answer == 1, "{txt}");
+        }
+    }
+
+    #[test]
+    fn mrpc_positive_is_permutation() {
+        let mut rng = Rng::seed_from(6);
+        for _ in 0..200 {
+            let ex = MrpcX.sample(&mut rng);
+            let txt = crate::tokenizer::decode(&ex.prompt);
+            let body = txt.trim_start_matches("M:").trim_end_matches('>');
+            let (a, b) = body.split_once('|').unwrap();
+            let mut av: Vec<char> = a.chars().collect();
+            let mut bv: Vec<char> = b.chars().collect();
+            av.sort();
+            bv.sort();
+            assert_eq!(av == bv, ex.answer == 1, "{txt}");
+        }
+    }
+
+    #[test]
+    fn cola_label_matches_grammar() {
+        let mut rng = Rng::seed_from(8);
+        for _ in 0..200 {
+            let ex = ColaX.sample(&mut rng);
+            let txt = crate::tokenizer::decode(&ex.prompt);
+            let body = txt.trim_start_matches("C:").trim_end_matches('>');
+            assert_eq!(!body.contains("bb"), ex.answer == 1, "{txt}");
+        }
+    }
+
+    #[test]
+    fn stsb_grade_matches_overlap() {
+        let mut rng = Rng::seed_from(4);
+        for _ in 0..200 {
+            let ex = StsbX.sample(&mut rng);
+            let txt = crate::tokenizer::decode(&ex.prompt);
+            let body = txt.trim_start_matches("S:").trim_end_matches('>');
+            let (a, b) = body.split_once('|').unwrap();
+            let m = a.chars().zip(b.chars()).filter(|(x, y)| x == y).count();
+            assert_eq!((m / 2).min(4), ex.answer, "{txt}");
+        }
+    }
+
+    #[test]
+    fn label_completion_is_digit() {
+        let mut rng = Rng::seed_from(3);
+        for t in all() {
+            let ex = t.sample(&mut rng);
+            assert_eq!(ex.completion.len(), 1);
+            let tok = ex.completion[0];
+            assert!(t.label_tokens().contains(&tok), "{}", t.name());
+            assert_eq!(tok, (b'0' + ex.answer as u8) as i32);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! The pretraining corpus: general byte-level competence for the backbone.
+//!
+//! The paper's PEFT methods adapt a *pretrained* LLM; our substitution
+//! needs the same starting point.  `road pretrain` full-finetunes the
+//! random-init backbone on this mixture — generic abilities (letter
+//! statistics, copying, digit sequences, single-digit arithmetic, the
+//! prompt/terminator format) WITHOUT the downstream task mappings — and
+//! saves it as `artifacts/pretrained_<cfg>.bin`.  Every trainer/engine then
+//! starts from it, so finetuning measures specialization, as in the paper.
+
+use super::{Example, Metric, Task};
+use crate::util::rng::Rng;
+
+/// Free-running "text": random words of mixed case joined by spaces.
+pub struct WordsLm;
+
+impl Task for WordsLm {
+    fn name(&self) -> &'static str {
+        "pt-words"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let mut text = String::new();
+        while text.len() < 20 {
+            let n = 2 + rng.below(5);
+            for _ in 0..n {
+                let c = b'a' + rng.below(16) as u8;
+                text.push(if rng.chance(0.2) { c.to_ascii_uppercase() } else { c } as char);
+            }
+            text.push(' ');
+        }
+        // LM objective over the whole window: 1-token prompt, rest target.
+        let prompt = text[..1].to_string();
+        let completion = text[1..].to_string();
+        Example::gen(&prompt, &completion)
+    }
+}
+
+/// Copying: "c:xyz>xyz." — teaches the prompt format, '>' and '.' roles.
+pub struct CopyTask;
+
+impl Task for CopyTask {
+    fn name(&self) -> &'static str {
+        "pt-copy"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = 2 + rng.below(6);
+        let word: String = (0..n)
+            .map(|_| {
+                let c = b'a' + rng.below(16) as u8;
+                (if rng.chance(0.3) { c.to_ascii_uppercase() } else { c }) as char
+            })
+            .collect();
+        Example::gen(&format!("c:{word}>"), &format!("{word}."))
+    }
+}
+
+/// Digit runs: counting up/down by one, mod 10.
+pub struct DigitRuns;
+
+impl Task for DigitRuns {
+    fn name(&self) -> &'static str {
+        "pt-digits"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let start = rng.below(10) as u8;
+        let dir: i32 = if rng.chance(0.5) { 1 } else { -1 };
+        let seq: String = (0..10)
+            .map(|i| (((start as i32 + dir * i).rem_euclid(10)) as u8 + b'0') as char)
+            .collect();
+        Example::gen(&seq[..2].to_string(), &seq[2..].to_string())
+    }
+}
+
+/// Single-digit addition facts: "3+4=7." — digit-arithmetic primitives,
+/// not the multi-digit compositions the arithmetic suite tests.
+pub struct DigitAdd;
+
+impl Task for DigitAdd {
+    fn name(&self) -> &'static str {
+        "pt-add1"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        Example::gen(&format!("{a}+{b}="), &format!("{}.", a + b))
+    }
+}
+
+/// Punctuation/format glue: "k:v|k:v>" lists (teaches separators used by
+/// the downstream suites).
+pub struct KvFormat;
+
+impl Task for KvFormat {
+    fn name(&self) -> &'static str {
+        "pt-kv"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let k1 = (b'a' + rng.below(8) as u8) as char;
+        let v1 = (b'0' + rng.below(10) as u8) as char;
+        let k2 = (b'a' + rng.below(8) as u8) as char;
+        let v2 = (b'0' + rng.below(10) as u8) as char;
+        // Recall the value of the *first* key.
+        Example::gen(&format!("{k1}{v1}|{k2}{v2}|{k1}?"), &format!("{v1}."))
+    }
+}
+
+/// Two-digit number copying: "n:47>47." — teaches multi-digit number
+/// emission (the arithmetic suite needs it; sums themselves stay unseen).
+pub struct NumberCopy;
+
+impl Task for NumberCopy {
+    fn name(&self) -> &'static str {
+        "pt-numcopy"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = rng.range(10, 100);
+        Example::gen(&format!("n:{n}>"), &format!("{n}."))
+    }
+}
+
+/// Two-digit successor: "s:47>48." — number-line structure beyond single
+/// digits.
+pub struct NumberSucc;
+
+impl Task for NumberSucc {
+    fn name(&self) -> &'static str {
+        "pt-numsucc"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = rng.range(10, 98);
+        Example::gen(&format!("s:{n}>"), &format!("{}.", n + 1))
+    }
+}
+
+pub fn corpus() -> Vec<Box<dyn Task>> {
+    vec![
+        Box::new(WordsLm),
+        Box::new(CopyTask),
+        Box::new(DigitRuns),
+        Box::new(DigitAdd),
+        Box::new(KvFormat),
+        Box::new(NumberCopy),
+        Box::new(NumberSucc),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tasks_fit_window_and_avoid_pad() {
+        let mut rng = Rng::seed_from(17);
+        for t in corpus() {
+            for _ in 0..50 {
+                let ex = t.sample(&mut rng);
+                assert!(ex.prompt.len() + ex.completion.len() <= 32, "{}", t.name());
+                assert!(ex.prompt.iter().chain(&ex.completion).all(|&t| t > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn copy_round_trips() {
+        let mut rng = Rng::seed_from(18);
+        let ex = CopyTask.sample(&mut rng);
+        let p = crate::tokenizer::decode(&ex.prompt);
+        let word = p.trim_start_matches("c:").trim_end_matches('>');
+        assert_eq!(crate::tokenizer::decode(&ex.completion), format!("{word}."));
+    }
+
+    #[test]
+    fn kv_recalls_first_key() {
+        let mut rng = Rng::seed_from(19);
+        for _ in 0..50 {
+            let ex = KvFormat.sample(&mut rng);
+            let p = crate::tokenizer::decode(&ex.prompt);
+            let v1 = p.as_bytes()[1] as char;
+            assert_eq!(crate::tokenizer::decode(&ex.completion), format!("{v1}."));
+        }
+    }
+}

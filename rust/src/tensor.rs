@@ -1,0 +1,235 @@
+//! Host-side tensors: the CPU representation flowing between the rust
+//! coordinator and the PJRT runtime.
+//!
+//! Only the two dtypes the AOT contract uses (f32, i32) are supported —
+//! artifacts/manifest.json is the source of truth for shapes and ordering.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor.  Data is kept as raw little-endian bytes so uploads
+/// and binary-file loads are zero-conversion.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    data: Vec<u8>,
+}
+
+/// Bulk-copy a scalar slice into little-endian bytes.  All supported
+/// targets are little-endian, so this is a single memcpy (the previous
+/// per-element `to_le_bytes` loop dominated the decode hot path when
+/// converting multi-MB KV caches — see EXPERIMENTS.md §Perf).
+fn scalars_to_bytes<T: Copy>(values: &[T]) -> Vec<u8> {
+    debug_assert!(cfg!(target_endian = "little"));
+    let n = std::mem::size_of_val(values);
+    let mut data = vec![0u8; n];
+    // SAFETY: T is a plain scalar (f32/i32); sizes match by construction.
+    unsafe {
+        std::ptr::copy_nonoverlapping(values.as_ptr() as *const u8, data.as_mut_ptr(), n);
+    }
+    data
+}
+
+fn bytes_to_scalars<T: Copy + Default>(bytes: &[u8]) -> Vec<T> {
+    debug_assert!(cfg!(target_endian = "little"));
+    let n = bytes.len() / std::mem::size_of::<T>();
+    let mut out = vec![T::default(); n];
+    // SAFETY: out is freshly allocated with exactly n elements; byte count
+    // matches; T is a plain scalar so any bit pattern is valid.
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            bytes.as_ptr(),
+            out.as_mut_ptr() as *mut u8,
+            n * std::mem::size_of::<T>(),
+        );
+    }
+    out
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, values: Vec<f32>) -> HostTensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
+        HostTensor { shape, dtype: DType::F32, data: scalars_to_bytes(&values) }
+    }
+
+    pub fn i32(shape: Vec<usize>, values: Vec<i32>) -> HostTensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>().max(1));
+        HostTensor { shape, dtype: DType::I32, data: scalars_to_bytes(&values) }
+    }
+
+    pub fn zeros(shape: Vec<usize>, dtype: DType) -> HostTensor {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor { shape, dtype, data: vec![0u8; n * 4] }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn from_bytes(shape: Vec<usize>, dtype: DType, data: Vec<u8>) -> Result<HostTensor> {
+        let n = shape.iter().product::<usize>().max(1);
+        if data.len() != n * 4 {
+            bail!("byte count {} != 4 * {}", data.len(), n);
+        }
+        Ok(HostTensor { shape, dtype, data })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        bytes_to_scalars(&self.data)
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        bytes_to_scalars(&self.data)
+    }
+
+    /// Borrow the payload as an f32 slice (alignment-safe: Vec<u8> from our
+    /// constructors is 4-aligned on all supported platforms via realloc, but
+    /// we fall back to a copy if not).
+    pub fn f32_slice(&self) -> Option<&[f32]> {
+        assert_eq!(self.dtype, DType::F32);
+        let ptr = self.data.as_ptr();
+        if (ptr as usize) % std::mem::align_of::<f32>() == 0 {
+            Some(unsafe { std::slice::from_raw_parts(ptr as *const f32, self.elem_count()) })
+        } else {
+            None
+        }
+    }
+
+    pub fn f32_at(&self, idx: usize) -> f32 {
+        let o = idx * 4;
+        f32::from_le_bytes([self.data[o], self.data[o + 1], self.data[o + 2], self.data[o + 3]])
+    }
+
+    pub fn set_f32(&mut self, idx: usize, v: f32) {
+        let o = idx * 4;
+        self.data[o..o + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Overwrite a contiguous element range from an f32 slice (bulk copy).
+    pub fn write_f32_range(&mut self, start_elem: usize, src: &[f32]) {
+        let o = start_elem * 4;
+        self.data[o..o + 4 * src.len()].copy_from_slice(&scalars_to_bytes(src));
+    }
+
+    /// Copy a contiguous element range into an f32 vec (bulk copy).
+    pub fn read_f32_range(&self, start_elem: usize, n: usize) -> Vec<f32> {
+        bytes_to_scalars(&self.data[start_elem * 4..(start_elem + n) * 4])
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+}
+
+/// Load a concatenated flat binary (params_*.bin etc) into tensors
+/// according to `specs` (name, shape) in order.  All-f32 by contract.
+pub fn load_flat_f32(
+    bytes: &[u8],
+    specs: &[(String, Vec<usize>)],
+) -> Result<Vec<(String, HostTensor)>> {
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for (name, shape) in specs {
+        let n = shape.iter().product::<usize>().max(1);
+        let end = off + 4 * n;
+        if end > bytes.len() {
+            bail!("flat file too short at {name} (need {end}, have {})", bytes.len());
+        }
+        out.push((
+            name.clone(),
+            HostTensor::from_bytes(shape.clone(), DType::F32, bytes[off..end].to_vec())?,
+        ));
+        off = end;
+    }
+    if off != bytes.len() {
+        bail!("flat file has {} trailing bytes", bytes.len() - off);
+    }
+    Ok(out)
+}
+
+/// Serialize tensors back to the concatenated flat format.
+pub fn dump_flat(tensors: &[&HostTensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tensors {
+        out.extend_from_slice(t.bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.elem_count(), 6);
+        assert_eq!(t.as_f32(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.f32_at(4), 5.0);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 255]);
+        assert_eq!(t.as_i32(), vec![-1, 0, 7, 255]);
+    }
+
+    #[test]
+    fn scalar() {
+        let t = HostTensor::scalar_f32(3.5);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.elem_count(), 1);
+        assert_eq!(t.as_f32(), vec![3.5]);
+    }
+
+    #[test]
+    fn flat_load() {
+        let specs = vec![("a".to_string(), vec![2]), ("b".to_string(), vec![1, 3])];
+        let mut bytes = Vec::new();
+        for v in [1f32, 2.0, 10.0, 20.0, 30.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let out = load_flat_f32(&bytes, &specs).unwrap();
+        assert_eq!(out[0].1.as_f32(), vec![1.0, 2.0]);
+        assert_eq!(out[1].1.as_f32(), vec![10.0, 20.0, 30.0]);
+        assert!(load_flat_f32(&bytes[..12], &specs).is_err());
+    }
+
+    #[test]
+    fn write_read_range() {
+        let mut t = HostTensor::zeros(vec![8], DType::F32);
+        t.write_f32_range(2, &[1.0, 2.0, 3.0]);
+        assert_eq!(t.read_f32_range(2, 3), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.f32_at(0), 0.0);
+    }
+}

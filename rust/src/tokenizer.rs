@@ -1,0 +1,52 @@
+//! Byte-level tokenizer over the model's 256-token vocabulary.
+//!
+//! Token 0 is reserved as PAD/EOS; task generators avoid emitting it inside
+//! payloads.  This mirrors the vocab=256 presets in python/compile/configs.
+
+pub const PAD: i32 = 0;
+pub const EOS: i32 = 0;
+
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b.max(1) as i32).collect()
+}
+
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .take_while(|&&t| t != EOS)
+        .map(|&t| (t.clamp(0, 255)) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Truncate/pad to a fixed length (right padding with PAD).
+pub fn pad_to(tokens: &[i32], len: usize) -> Vec<i32> {
+    let mut out = tokens.to_vec();
+    out.truncate(len);
+    while out.len() < len {
+        out.push(PAD);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = encode("hello, road!");
+        assert_eq!(decode(&t), "hello, road!");
+    }
+
+    #[test]
+    fn eos_terminates_decode() {
+        assert_eq!(decode(&[104, 105, EOS, 120]), "hi");
+    }
+
+    #[test]
+    fn pad_to_len() {
+        assert_eq!(pad_to(&[1, 2], 4), vec![1, 2, 0, 0]);
+        assert_eq!(pad_to(&[1, 2, 3], 2), vec![1, 2]);
+    }
+}

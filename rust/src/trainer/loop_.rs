@@ -1,0 +1,130 @@
+//! The training loop: recipe-driven iteration over a batch source, with
+//! periodic eval and a recorded loss curve.
+
+use anyhow::Result;
+
+use super::{Recipe, TrainBatch, Trainer};
+use crate::util::rng::Rng;
+
+/// A source of training batches; implemented by the synthetic task suites
+/// ([`crate::tasks`]).
+pub trait BatchSource {
+    /// Produce one [B, L]-shaped batch (shapes fixed by the trainer).
+    fn next_batch(&mut self, rng: &mut Rng) -> TrainBatch;
+}
+
+impl<F: FnMut(&mut Rng) -> TrainBatch> BatchSource for F {
+    fn next_batch(&mut self, rng: &mut Rng) -> TrainBatch {
+        self(rng)
+    }
+}
+
+/// Summary of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub method: String,
+    pub n_trainable: usize,
+    pub steps: usize,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    /// Mean of the last 10% of per-step losses (noise-robust endpoint).
+    pub tail_loss: f32,
+    pub losses: Vec<f32>,
+    pub wall_secs: f64,
+    pub step_secs: f64,
+    /// Periodic eval losses as (step, mean NLL), if eval_every > 0.
+    pub eval_curve: Vec<(usize, f32)>,
+}
+
+impl TrainReport {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<14} #train={:<8} steps={:<5} loss {:.4} -> {:.4} (tail {:.4})  {:.2}s",
+            self.method, self.n_trainable, self.steps, self.first_loss, self.final_loss,
+            self.tail_loss, self.wall_secs
+        )
+    }
+}
+
+/// Run `recipe.steps` optimizer steps pulling batches from `source`.
+///
+/// `eval_source` (when given, with `recipe.eval_every > 0`) is sampled for
+/// a held-out batch at each eval point — the validation split protocol of
+/// paper §C.1.
+pub fn train(
+    trainer: &mut Trainer,
+    recipe: &Recipe,
+    source: &mut dyn BatchSource,
+    mut eval_source: Option<&mut dyn BatchSource>,
+) -> Result<TrainReport> {
+    let mut rng = Rng::seed_from(recipe.seed);
+    let mut eval_rng = Rng::seed_from(recipe.seed ^ 0x5eed_e7a1);
+    let t0 = std::time::Instant::now();
+    let mut eval_curve = Vec::new();
+    let step_t0 = trainer.step_time;
+    let base_step = trainer.steps_done;
+
+    for i in 0..recipe.steps {
+        let batch = source.next_batch(&mut rng);
+        let lr = recipe.lr_at(i);
+        let loss = trainer.step(&batch, lr)?;
+        if recipe.log_every > 0 && (i + 1) % recipe.log_every == 0 {
+            println!(
+                "  [{}] step {:>5}/{} lr={:.2e} loss={:.4}",
+                trainer.method,
+                i + 1,
+                recipe.steps,
+                lr,
+                loss
+            );
+        }
+        if recipe.eval_every > 0 && (i + 1) % recipe.eval_every == 0 {
+            if let Some(src) = eval_source.as_deref_mut() {
+                let eb = src.next_batch(&mut eval_rng);
+                let (_, nll) = trainer.eval_loss(&eb)?;
+                eval_curve.push((i + 1, nll));
+            }
+        }
+    }
+
+    let losses: Vec<f32> =
+        trainer.loss_history[base_step.min(trainer.loss_history.len())..].to_vec();
+    let tail_n = (losses.len() / 10).max(1).min(losses.len().max(1));
+    let tail_loss = if losses.is_empty() {
+        f32::NAN
+    } else {
+        losses[losses.len() - tail_n..].iter().sum::<f32>() / tail_n as f32
+    };
+    Ok(TrainReport {
+        method: trainer.method.clone(),
+        n_trainable: trainer.n_trainable,
+        steps: recipe.steps,
+        first_loss: losses.first().copied().unwrap_or(f32::NAN),
+        final_loss: losses.last().copied().unwrap_or(f32::NAN),
+        tail_loss,
+        losses,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        step_secs: (trainer.step_time - step_t0).as_secs_f64(),
+        eval_curve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closure_is_a_batch_source() {
+        let mut calls = 0usize;
+        {
+            let mut src = |_rng: &mut Rng| {
+                calls += 1;
+                TrainBatch::zeros(1, 2)
+            };
+            let mut r = Rng::seed_from(0);
+            let b = BatchSource::next_batch(&mut src, &mut r);
+            assert_eq!(b.tokens.len(), 2);
+        }
+        assert_eq!(calls, 1);
+    }
+}

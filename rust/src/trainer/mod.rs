@@ -1,0 +1,495 @@
+//! The PEFT trainer: drives `train_<method>_<cfg>` HLO step graphs in a
+//! loop, owning the optimizer state and the learning-rate schedule.
+//!
+//! Training is part of the reproduced system (Tables 2–6, Figure 2/5,
+//! Table D.1): the fwd+bwd+AdamW step is a single AOT-lowered XLA
+//! computation; this module feeds it batches, recycles the returned
+//! (trainable, m, v) state, and exports the result as a serving
+//! [`Adapter`] or a merged [`ParamStore`].
+//!
+//! Python never runs here — the step graph was lowered once by
+//! `python/compile/aot.py`.
+
+pub mod loop_;
+pub mod recipe;
+
+pub use loop_::{train, TrainReport};
+pub use recipe::{linear_lr, Recipe};
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::adapters::{Adapter, Ia3Adapter, LoraAdapter, RoadAdapter};
+use crate::manifest::ModelConfigInfo;
+use crate::model::ParamStore;
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::tensor::{dump_flat, load_flat_f32, DType, HostTensor};
+
+/// One training micro-batch in the fixed train-bucket shape.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    /// [B, L] input tokens (flattened row-major).
+    pub tokens: Vec<i32>,
+    /// [B, L] next-token targets.
+    pub targets: Vec<i32>,
+    /// [B, L] loss mask (1.0 = counted).
+    pub mask: Vec<f32>,
+}
+
+impl TrainBatch {
+    pub fn zeros(b: usize, l: usize) -> TrainBatch {
+        TrainBatch { tokens: vec![0; b * l], targets: vec![0; b * l], mask: vec![0.0; b * l] }
+    }
+}
+
+/// A PEFT trainer bound to one (config, method) step graph.
+pub struct Trainer {
+    pub rt: Rc<Runtime>,
+    pub cfg: ModelConfigInfo,
+    pub method: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    /// Number of trainable scalars (the paper's #Params axis).
+    pub n_trainable: usize,
+    train_exe: Rc<Executable>,
+    /// Frozen backbone, device-resident (uploaded once). Empty for "full".
+    frozen: Option<ParamStore>,
+    frozen_bufs: BTreeMap<String, xla::PjRtBuffer>,
+    /// Current trainable values in manifest flattening (sorted-key) order.
+    trainable: Vec<(String, HostTensor)>,
+    opt_m: Vec<HostTensor>,
+    opt_v: Vec<HostTensor>,
+    /// Element-wise gradient masks (road1_masked / composability only).
+    grad_mask: Option<Vec<HostTensor>>,
+    pub steps_done: usize,
+    pub loss_history: Vec<f32>,
+    pub step_time: Duration,
+}
+
+impl Trainer {
+    /// Build a trainer with the pretrained backbone + identity-init
+    /// trainables from the artifact dumps.
+    pub fn new(rt: Rc<Runtime>, config: &str, method: &str) -> Result<Trainer> {
+        let backbone = ParamStore::load_pretrained(&rt.manifest, config)?;
+        if method == "full" {
+            // Full finetuning: the backbone itself is the trainable set.
+            let trainable: Vec<(String, HostTensor)> = backbone
+                .names
+                .iter()
+                .cloned()
+                .zip(backbone.tensors.iter().cloned())
+                .collect();
+            return Trainer::with_state(rt, config, method, None, trainable);
+        }
+        let mut trainable = load_trainable_init(&rt.manifest, config, method)?;
+        // Methods whose trainables are slices of the backbone (bitfit's
+        // biases/norm scales) must start from the *pretrained* values, not
+        // the dump taken at random init.
+        for (name, t) in trainable.iter_mut() {
+            if let Ok(src) = backbone.get(name) {
+                *t = src.clone();
+            }
+        }
+        Trainer::with_state(rt, config, method, Some(backbone), trainable)
+    }
+
+    /// Build over explicit state (resume / warm-start / custom backbone).
+    pub fn with_state(
+        rt: Rc<Runtime>,
+        config: &str,
+        method: &str,
+        frozen: Option<ParamStore>,
+        trainable: Vec<(String, HostTensor)>,
+    ) -> Result<Trainer> {
+        let cfg = rt.manifest.config(config)?.clone();
+        let entry = format!("train_{method}_{config}");
+        let train_exe =
+            rt.load(&entry).with_context(|| format!("loading train entry {entry}"))?;
+        let info = train_exe.info.clone();
+        let batch = info.batch.ok_or_else(|| anyhow!("train entry lacks batch"))?;
+        let seq_len = info.seq_len.unwrap_or(0);
+
+        // Validate the trainable list against the entry signature.
+        let (ts, te) = info.group_range("trainable");
+        if te - ts != trainable.len() {
+            bail!("{entry}: {} trainables supplied, signature has {}", trainable.len(), te - ts);
+        }
+        for (spec, (name, t)) in info.inputs[ts..te].iter().zip(&trainable) {
+            if &spec.name != name || spec.shape != t.shape {
+                bail!("{entry}: trainable mismatch at {} vs {}", spec.name, name);
+            }
+        }
+        let n_trainable = trainable.iter().map(|(_, t)| t.elem_count()).sum();
+
+        let (fs, fe) = info.group_range("frozen");
+        let mut frozen_bufs = BTreeMap::new();
+        if fe > fs {
+            let store = frozen
+                .as_ref()
+                .ok_or_else(|| anyhow!("{entry} expects frozen params but none supplied"))?;
+            for spec in &info.inputs[fs..fe] {
+                frozen_bufs.insert(spec.name.clone(), rt.upload(store.get(&spec.name)?)?);
+            }
+        }
+
+        let opt_m: Vec<HostTensor> =
+            trainable.iter().map(|(_, t)| HostTensor::zeros(t.shape.clone(), DType::F32)).collect();
+        let opt_v = opt_m.clone();
+        let (gs, ge) = info.group_range("grad_mask");
+        let grad_mask = if ge > gs {
+            Some(
+                trainable
+                    .iter()
+                    .map(|(_, t)| HostTensor::f32(t.shape.clone(), vec![1.0; t.elem_count()]))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+
+        Ok(Trainer {
+            rt,
+            cfg,
+            method: method.to_string(),
+            batch,
+            seq_len,
+            n_trainable,
+            train_exe,
+            frozen,
+            frozen_bufs,
+            trainable,
+            opt_m,
+            opt_v,
+            grad_mask,
+            steps_done: 0,
+            loss_history: Vec::new(),
+            step_time: Duration::default(),
+        })
+    }
+
+    pub fn trainable(&self) -> &[(String, HostTensor)] {
+        &self.trainable
+    }
+
+    pub fn set_trainable(&mut self, named: Vec<(String, HostTensor)>) -> Result<()> {
+        if named.len() != self.trainable.len() {
+            bail!("trainable count mismatch");
+        }
+        for ((n0, t0), (n1, t1)) in self.trainable.iter().zip(&named) {
+            if n0 != n1 || t0.shape != t1.shape {
+                bail!("trainable mismatch at {n0} vs {n1}");
+            }
+        }
+        self.trainable = named;
+        Ok(())
+    }
+
+    pub fn frozen(&self) -> Option<&ParamStore> {
+        self.frozen.as_ref()
+    }
+
+    /// Set the per-tensor element-wise gradient mask (road1_masked only):
+    /// `f(name, flat_index) -> keep?`. This is the composability experiment's
+    /// subspace partitioning (Fig 5): disjoint 2×2 blocks of R are trained
+    /// on different tasks by masking the complementary blocks' gradients.
+    pub fn set_grad_mask(&mut self, f: impl Fn(&str, usize) -> bool) -> Result<()> {
+        let masks = self
+            .grad_mask
+            .as_mut()
+            .ok_or_else(|| anyhow!("method {} has no grad_mask input", self.method))?;
+        for ((name, t), m) in self.trainable.iter().zip(masks.iter_mut()) {
+            let vals: Vec<f32> =
+                (0..t.elem_count()).map(|i| if f(name, i) { 1.0 } else { 0.0 }).collect();
+            *m = HostTensor::f32(t.shape.clone(), vals);
+        }
+        Ok(())
+    }
+
+    /// One AdamW step on `batch` at learning rate `lr`; returns the loss.
+    pub fn step(&mut self, batch: &TrainBatch, lr: f32) -> Result<f32> {
+        let (b, l) = (self.batch, self.seq_len);
+        if batch.tokens.len() != b * l {
+            bail!("batch size mismatch: {} vs {}x{}", batch.tokens.len(), b, l);
+        }
+        let step_no = (self.steps_done + 1) as f32;
+        let step_t = HostTensor::scalar_f32(step_no);
+        let lr_t = HostTensor::scalar_f32(lr);
+        let tokens = HostTensor::i32(vec![b, l], batch.tokens.clone());
+        let targets = HostTensor::i32(vec![b, l], batch.targets.clone());
+        let mask = HostTensor::f32(vec![b, l], batch.mask.clone());
+
+        let info = self.train_exe.info.clone();
+        let mut args: Vec<Arg> = Vec::with_capacity(info.inputs.len());
+        let mut ti = 0usize;
+        let mut mi = 0usize;
+        let mut vi = 0usize;
+        let mut gi = 0usize;
+        for spec in &info.inputs {
+            match spec.group.as_str() {
+                "frozen" => args.push(Arg::Buffer(
+                    self.frozen_bufs
+                        .get(&spec.name)
+                        .ok_or_else(|| anyhow!("missing frozen buffer {}", spec.name))?,
+                )),
+                "trainable" => {
+                    args.push(Arg::Host(&self.trainable[ti].1));
+                    ti += 1;
+                }
+                "opt_m" => {
+                    args.push(Arg::Host(&self.opt_m[mi]));
+                    mi += 1;
+                }
+                "opt_v" => {
+                    args.push(Arg::Host(&self.opt_v[vi]));
+                    vi += 1;
+                }
+                "grad_mask" => {
+                    let gm = self.grad_mask.as_ref().unwrap();
+                    args.push(Arg::Host(&gm[gi]));
+                    gi += 1;
+                }
+                "data" => args.push(Arg::Host(match spec.name.as_str() {
+                    "step" => &step_t,
+                    "lr" => &lr_t,
+                    "tokens" => &tokens,
+                    "targets" => &targets,
+                    "mask" => &mask,
+                    other => bail!("unexpected train data input {other}"),
+                })),
+                g => bail!("unexpected input group {g} in {}", info.name),
+            }
+        }
+
+        let t0 = Instant::now();
+        let outs = self.train_exe.run(&args)?;
+        self.step_time += t0.elapsed();
+
+        let nt = self.trainable.len();
+        if outs.len() != 3 * nt + 1 {
+            bail!("train step returned {} outputs, expected {}", outs.len(), 3 * nt + 1);
+        }
+        let mut it = outs.into_iter();
+        for i in 0..nt {
+            self.trainable[i].1 = it.next().unwrap();
+        }
+        for m in self.opt_m.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        for v in self.opt_v.iter_mut() {
+            *v = it.next().unwrap();
+        }
+        let loss = it.next().unwrap().f32_at(0);
+        self.steps_done += 1;
+        self.loss_history.push(loss);
+        Ok(loss)
+    }
+
+    /// Evaluate mean + per-example NLL on a batch through the
+    /// `eval_loss_<method>_<cfg>` graph.
+    pub fn eval_loss(&self, batch: &TrainBatch) -> Result<(Vec<f32>, f32)> {
+        let name = format!("eval_loss_{}_{}", self.eval_method(), self.cfg.name);
+        let exe = self.rt.load(&name)?;
+        let (b, l) = (self.batch, self.seq_len);
+        let tokens = HostTensor::i32(vec![b, l], batch.tokens.clone());
+        let targets = HostTensor::i32(vec![b, l], batch.targets.clone());
+        let mask = HostTensor::f32(vec![b, l], batch.mask.clone());
+        let data: Vec<(&str, &HostTensor)> =
+            vec![("tokens", &tokens), ("targets", &targets), ("mask", &mask)];
+        let outs = self.run_eval(&exe, &data)?;
+        let per_ex = outs[0].as_f32();
+        let total = outs[1].f32_at(0);
+        Ok((per_ex, total))
+    }
+
+    /// Vocab logits at each example's last valid position (classification
+    /// eval). `tokens` is [B, L] flattened, `lengths` per-example.
+    pub fn last_logits(&self, tokens: &[i32], lengths: &[i32]) -> Result<HostTensor> {
+        let name = format!("last_logits_{}_{}", self.eval_method(), self.cfg.name);
+        let exe = self.rt.load(&name)?;
+        let (b, l) = (self.batch, self.seq_len);
+        if tokens.len() != b * l || lengths.len() != b {
+            bail!("last_logits input shape mismatch");
+        }
+        let tok = HostTensor::i32(vec![b, l], tokens.to_vec());
+        let len = HostTensor::i32(vec![b], lengths.to_vec());
+        let data: Vec<(&str, &HostTensor)> = vec![("tokens", &tok), ("lengths", &len)];
+        let mut outs = self.run_eval(&exe, &data)?;
+        Ok(outs.remove(0))
+    }
+
+    /// road1_masked trains through its own graph but evaluates through
+    /// road1's (identical forward; no grad_mask input there).
+    fn eval_method(&self) -> &str {
+        if self.method == "road1_masked" {
+            "road1"
+        } else {
+            &self.method
+        }
+    }
+
+    /// Shared eval-arg assembly: frozen buffers + current trainables + data.
+    fn run_eval(&self, exe: &Executable, data: &[(&str, &HostTensor)]) -> Result<Vec<HostTensor>> {
+        let info = &exe.info;
+        let mut args: Vec<Arg> = Vec::with_capacity(info.inputs.len());
+        let mut ti = 0usize;
+        for spec in &info.inputs {
+            match spec.group.as_str() {
+                "frozen" => args.push(Arg::Buffer(
+                    self.frozen_bufs
+                        .get(&spec.name)
+                        .ok_or_else(|| anyhow!("missing frozen buffer {}", spec.name))?,
+                )),
+                "trainable" => {
+                    if self.trainable[ti].0 != spec.name {
+                        bail!("eval trainable order mismatch at {}", spec.name);
+                    }
+                    args.push(Arg::Host(&self.trainable[ti].1));
+                    ti += 1;
+                }
+                "data" => {
+                    let t = data
+                        .iter()
+                        .find(|(n, _)| *n == spec.name)
+                        .map(|(_, t)| *t)
+                        .ok_or_else(|| anyhow!("missing eval data {}", spec.name))?;
+                    args.push(Arg::Host(t));
+                }
+                g => bail!("unexpected eval input group {g}"),
+            }
+        }
+        exe.run(&args)
+    }
+
+    /// Export the trained state as a serving adapter (road/lora/ia3 only).
+    pub fn export_adapter(&self) -> Result<Adapter> {
+        match self.method.as_str() {
+            m if m.starts_with("road") => {
+                let variant = match m {
+                    "road2" => 2,
+                    "road4" => 4,
+                    _ => 1,
+                };
+                Ok(Adapter::Road(RoadAdapter::from_trainable(variant, &self.trainable)?))
+            }
+            "lora" => Ok(Adapter::Lora(LoraAdapter::from_trainable(&self.trainable)?)),
+            "ia3" => {
+                let mut a = Ia3Adapter::identity(&self.cfg);
+                for (name, t) in &self.trainable {
+                    if let Some(base) = name.strip_suffix(".s") {
+                        a.per_proj.insert(base.to_string(), t.as_f32());
+                    }
+                }
+                Ok(Adapter::Ia3(a))
+            }
+            m => bail!("method {m} does not export a serving adapter"),
+        }
+    }
+
+    /// Produce a merged, serving-ready parameter store (paper §3.2:
+    /// zero-overhead inference after folding the adapter into W⁰).
+    pub fn merged_params(&self) -> Result<ParamStore> {
+        match self.method.as_str() {
+            "full" => Ok(ParamStore::from_tensors(self.cfg.clone(), self.trainable.clone())),
+            "bitfit" => {
+                let mut store =
+                    self.frozen.clone().ok_or_else(|| anyhow!("bitfit needs frozen params"))?;
+                for (name, t) in &self.trainable {
+                    store.set(name, t.clone())?;
+                }
+                Ok(store)
+            }
+            m if m.starts_with("road") => {
+                let mut store =
+                    self.frozen.clone().ok_or_else(|| anyhow!("road needs frozen params"))?;
+                if let Adapter::Road(a) = self.export_adapter()? {
+                    store.merge_road(&a)?;
+                }
+                Ok(store)
+            }
+            "lora" => {
+                let mut store =
+                    self.frozen.clone().ok_or_else(|| anyhow!("lora needs frozen params"))?;
+                if let Adapter::Lora(a) = self.export_adapter()? {
+                    store.merge_lora(&a)?;
+                }
+                Ok(store)
+            }
+            m => bail!("merge not supported for method {m}"),
+        }
+    }
+
+    /// Save trainables (flat f32, manifest order) for later reload.
+    pub fn save_trainable(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let refs: Vec<&HostTensor> = self.trainable.iter().map(|(_, t)| t).collect();
+        std::fs::write(path, dump_flat(&refs))?;
+        Ok(())
+    }
+
+    pub fn load_trainable(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        let specs: Vec<(String, Vec<usize>)> =
+            self.trainable.iter().map(|(n, t)| (n.clone(), t.shape.clone())).collect();
+        self.trainable = load_flat_f32(&bytes, &specs)?;
+        Ok(())
+    }
+
+    /// Reset optimizer state + step counter (fresh run, same weights).
+    pub fn reset_optimizer(&mut self) {
+        for t in self.opt_m.iter_mut().chain(self.opt_v.iter_mut()) {
+            *t = HostTensor::zeros(t.shape.clone(), DType::F32);
+        }
+        self.steps_done = 0;
+        self.loss_history.clear();
+    }
+}
+
+/// Load a method's identity-preserving trainable init from the artifacts.
+pub fn load_trainable_init(
+    manifest: &crate::manifest::Manifest,
+    config: &str,
+    method: &str,
+) -> Result<Vec<(String, HostTensor)>> {
+    let entry = manifest.entry(&format!("train_{method}_{config}"))?;
+    let (ts, te) = entry.group_range("trainable");
+    let specs: Vec<(String, Vec<usize>)> =
+        entry.inputs[ts..te].iter().map(|s| (s.name.clone(), s.shape.clone())).collect();
+    // road1_masked shares road1's init dump.
+    let file_method = if method == "road1_masked" { "road1" } else { method };
+    let key = format!("{config}/{file_method}");
+    let file = manifest
+        .trainable_files
+        .get(&key)
+        .ok_or_else(|| anyhow!("no trainable init dump for {key}"))?;
+    let bytes = std::fs::read(manifest.artifact_path(file))?;
+    load_flat_f32(&bytes, &specs)
+}
+
+/// Train methods available in the artifact set for a config.
+pub fn available_methods(manifest: &crate::manifest::Manifest, config: &str) -> Vec<String> {
+    let suffix = format!("_{config}");
+    manifest
+        .entries
+        .values()
+        .filter(|e| e.kind == "train_step" && e.config == config)
+        .filter_map(|e| {
+            e.name.strip_prefix("train_").and_then(|s| s.strip_suffix(suffix.as_str()))
+        })
+        .map(String::from)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_batch_zeros_shapes() {
+        let b = TrainBatch::zeros(2, 4);
+        assert_eq!(b.tokens.len(), 8);
+        assert_eq!(b.mask.len(), 8);
+        assert!(b.mask.iter().all(|&m| m == 0.0));
+    }
+}

@@ -1,0 +1,126 @@
+//! Training recipes: hyperparameters + the linear warmup/decay schedule
+//! (paper Table C.2/C.5: AdamW, weight decay 0, warmup ratio 0.1, linear
+//! scheduler).
+
+/// Hyperparameters for one training run.
+#[derive(Clone, Debug)]
+pub struct Recipe {
+    /// Peak learning rate (paper: RoAd prefers ~10x larger LRs, e.g. 3e-3).
+    pub lr: f32,
+    /// Total optimizer steps.
+    pub steps: usize,
+    /// Fraction of steps spent warming up linearly from 0 (paper: 0.1).
+    pub warmup_ratio: f32,
+    /// Workload RNG seed (three random runs in the paper's tables).
+    pub seed: u64,
+    /// Evaluate every N steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Print a log line every N steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for Recipe {
+    fn default() -> Self {
+        Recipe {
+            lr: 3e-3,
+            steps: 200,
+            warmup_ratio: 0.1,
+            seed: 0,
+            eval_every: 0,
+            log_every: 0,
+        }
+    }
+}
+
+impl Recipe {
+    pub fn with_lr(mut self, lr: f32) -> Recipe {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Recipe {
+        self.steps = steps;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Recipe {
+        self.seed = seed;
+        self
+    }
+
+    /// Learning rate for 0-indexed step `i`.
+    pub fn lr_at(&self, i: usize) -> f32 {
+        linear_lr(i, self.steps, self.warmup_ratio, self.lr)
+    }
+
+    /// Default per-method peak LRs (paper Table C.3: RoAd and (IA)³ prefer
+    /// ~10x the LoRA LR because their adapters multiply instead of add).
+    pub fn default_lr(method: &str) -> f32 {
+        match method {
+            m if m.starts_with("road") => 3e-3,
+            "ia3" => 3e-3,
+            "oft2" | "oft16" => 1e-3,
+            "bitfit" => 1e-3,
+            "lora" => 1e-3,
+            "full" => 3e-4,
+            _ => 1e-3,
+        }
+    }
+}
+
+/// Linear warmup to `peak` over `warmup_ratio * total` steps, then linear
+/// decay to 0 at `total`.
+pub fn linear_lr(step: usize, total: usize, warmup_ratio: f32, peak: f32) -> f32 {
+    if total == 0 {
+        return peak;
+    }
+    let warm = ((total as f32) * warmup_ratio).max(1.0);
+    let s = step as f32;
+    if s < warm {
+        // Clamp: with fractional warm the last warmup step would overshoot.
+        peak * ((s + 1.0) / warm).min(1.0)
+    } else {
+        let rest = (total as f32 - warm).max(1.0);
+        peak * (1.0 - (s - warm) / rest).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_decay() {
+        let peak = 1.0;
+        let total = 100;
+        // warmup phase increases
+        assert!(linear_lr(0, total, 0.1, peak) < linear_lr(5, total, 0.1, peak));
+        // peak at end of warmup
+        assert!((linear_lr(9, total, 0.1, peak) - peak).abs() < 1e-6);
+        // decay phase decreases
+        assert!(linear_lr(50, total, 0.1, peak) > linear_lr(90, total, 0.1, peak));
+        // never negative
+        assert!(linear_lr(99, total, 0.1, peak) >= 0.0);
+    }
+
+    #[test]
+    fn zero_total_is_peak() {
+        assert_eq!(linear_lr(0, 0, 0.1, 0.5), 0.5);
+    }
+
+    #[test]
+    fn recipe_builders() {
+        let r = Recipe::default().with_lr(0.01).with_steps(10).with_seed(3);
+        assert_eq!(r.lr, 0.01);
+        assert_eq!(r.steps, 10);
+        assert_eq!(r.seed, 3);
+        assert!(r.lr_at(0) > 0.0);
+    }
+
+    #[test]
+    fn method_lrs_follow_paper_pattern() {
+        // multiplicative adapters get the larger LR
+        assert!(Recipe::default_lr("road1") > Recipe::default_lr("lora"));
+        assert!(Recipe::default_lr("ia3") > Recipe::default_lr("full"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Tiny CLI argument parser (no clap in the offline image).
+//!
+//! Supports `command --flag value --flag=value positional` style. Parsing is
+//! greedy: a bare `--flag` consumes the following token as its value when one
+//! exists and is not itself a flag, so boolean flags should be written
+//! `--flag=true`, placed last, or followed by another `--flag`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = Args::parse(&sv(&["serve", "--mode", "road", "--batch=8", "extra", "--verbose"]));
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("mode"), Some("road"));
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["x"]));
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert!(!a.bool("missing"));
+    }
+}

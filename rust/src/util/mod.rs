@@ -1,0 +1,8 @@
+//! Self-contained utilities (the offline image carries no general-purpose
+//! crates beyond the xla closure; see DESIGN.md §Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,208 @@
+//! Engine-level integration tests on the tiny config: continuous batching,
+//! adapter isolation, merged-vs-unmerged equivalence, and backpressure.
+//!
+//! All tests share one PJRT process; the tiny artifacts keep compiles fast.
+
+use std::rc::Rc;
+
+use road::adapters::{Adapter, RoadAdapter};
+use road::coordinator::engine::{Engine, EngineConfig};
+use road::coordinator::request::{FinishReason, Request, SamplingParams};
+use road::model::ParamStore;
+use road::runtime::Runtime;
+use road::util::rng::Rng;
+
+fn rt() -> Rc<Runtime> {
+    Rc::new(Runtime::from_default_artifacts().expect("run `make artifacts` first"))
+}
+
+fn tiny_engine(rt: &Rc<Runtime>, mode: &str) -> Engine {
+    Engine::new(
+        rt.clone(),
+        EngineConfig {
+            model: "tiny".into(),
+            mode: mode.into(),
+            decode_slots: 2,
+            queue_capacity: 64,
+        },
+    )
+    .unwrap()
+}
+
+fn greedy(prompt: &[i32], max_new: usize) -> Request {
+    Request::new(0, prompt.to_vec(), max_new).with_sampling(SamplingParams {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 0,
+        stop_token: None,
+    })
+}
+
+#[test]
+fn greedy_serving_is_deterministic() {
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "road");
+    let mut rng = Rng::seed_from(3);
+    let a = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.3));
+    eng.register_adapter("a", &a).unwrap();
+
+    let mk = || {
+        vec![
+            greedy(&[10, 20, 30], 8).with_adapter("a"),
+            greedy(&[10, 20, 30], 8),
+        ]
+    };
+    let mut out1 = eng.run_all(mk()).unwrap();
+    let mut out2 = eng.run_all(mk()).unwrap();
+    out1.sort_by_key(|o| o.adapter.clone());
+    out2.sort_by_key(|o| o.adapter.clone());
+    for (x, y) in out1.iter().zip(&out2) {
+        assert_eq!(x.tokens, y.tokens);
+    }
+    // The adapter actually changes the output distribution.
+    assert_ne!(out1[0].tokens, out1[1].tokens, "adapter had no effect");
+}
+
+#[test]
+fn adapter_state_does_not_leak_across_lanes() {
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "road");
+    let mut rng = Rng::seed_from(4);
+    let a = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.3));
+    let b = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.3));
+    eng.register_adapter("a", &a).unwrap();
+    eng.register_adapter("b", &b).unwrap();
+
+    // Solo run with adapter a.
+    let solo = eng.run_all(vec![greedy(&[5, 6, 7], 6).with_adapter("a")]).unwrap();
+    // Mixed batch: a alongside b.
+    let mixed = eng
+        .run_all(vec![
+            greedy(&[5, 6, 7], 6).with_adapter("a"),
+            greedy(&[5, 6, 7], 6).with_adapter("b"),
+        ])
+        .unwrap();
+    let mixed_a = mixed.iter().find(|o| o.adapter.as_deref() == Some("a")).unwrap();
+    assert_eq!(solo[0].tokens, mixed_a.tokens, "lane isolation violated");
+}
+
+#[test]
+fn merged_road_equals_unmerged_road() {
+    let rt = rt();
+    // Unmerged: adapter in the bank, road decode path (Eq. 4).
+    let mut unmerged = tiny_engine(&rt, "road");
+    let mut rng = Rng::seed_from(5);
+    let adapter = RoadAdapter::random(&unmerged.cfg, &mut rng, 0.2);
+    unmerged.register_adapter("x", &Adapter::Road(adapter.clone())).unwrap();
+    let out_u = unmerged.run_all(vec![greedy(&[9, 8, 7, 6], 8).with_adapter("x")]).unwrap();
+
+    // Merged: W <- W R^T folded host-side, base decode path (paper §3.2).
+    let mut params = ParamStore::load_pretrained(&rt.manifest, "tiny").unwrap();
+    params.merge_road(&adapter).unwrap();
+    let econf = EngineConfig {
+        model: "tiny".into(),
+        mode: "base".into(),
+        decode_slots: 2,
+        queue_capacity: 64,
+    };
+    let mut merged = Engine::with_params(rt.clone(), econf, params).unwrap();
+    let out_m = merged.run_all(vec![greedy(&[9, 8, 7, 6], 8)]).unwrap();
+
+    assert_eq!(out_u[0].tokens, out_m[0].tokens, "merge changed the model");
+}
+
+#[test]
+fn more_requests_than_slots_all_complete() {
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "base");
+    let reqs: Vec<Request> =
+        (0..7).map(|i| greedy(&[1 + i as i32, 2, 3], 4)).collect();
+    let outs = eng.run_all(reqs).unwrap();
+    assert_eq!(outs.len(), 7);
+    assert!(outs.iter().all(|o| o.tokens.len() == 4));
+    assert!(outs.iter().all(|o| o.finish == FinishReason::MaxTokens));
+}
+
+#[test]
+fn stop_token_finishes_early_and_is_stripped() {
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "base");
+    // Find what the model greedily emits, then use it as the stop token.
+    let probe = eng.run_all(vec![greedy(&[42, 43], 3)]).unwrap();
+    let first = probe[0].tokens[0];
+    let mut req = greedy(&[42, 43], 8);
+    req.sampling.stop_token = Some(first);
+    let outs = eng.run_all(vec![req]).unwrap();
+    assert_eq!(outs[0].finish, FinishReason::StopToken);
+    assert!(!outs[0].tokens.contains(&first));
+}
+
+#[test]
+fn submit_validates_prompts_and_adapters() {
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "road");
+    // Empty prompt.
+    assert!(eng.submit(greedy(&[], 4)).is_err());
+    // Prompt longer than the largest prefill bucket.
+    let long = vec![1i32; eng.max_prompt_len() + 1];
+    assert!(eng.submit(greedy(&long, 4)).is_err());
+    // Unknown adapter.
+    assert!(eng.submit(greedy(&[1, 2], 4).with_adapter("nope")).is_err());
+    // prompt + max_new beyond max_seq.
+    assert!(eng.submit(greedy(&[1, 2], eng.cfg.max_seq)).is_err());
+}
+
+#[test]
+fn queue_backpressure_rejects_when_full() {
+    let rt = rt();
+    let mut eng = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            model: "tiny".into(),
+            mode: "base".into(),
+            decode_slots: 2,
+            queue_capacity: 2,
+        },
+    )
+    .unwrap();
+    eng.submit(greedy(&[1, 2], 2)).unwrap();
+    eng.submit(greedy(&[1, 2], 2)).unwrap();
+    let err = eng.submit(greedy(&[1, 2], 2)).unwrap_err();
+    assert!(err.to_string().contains("backpressure"), "{err}");
+}
+
+#[test]
+fn metrics_account_for_all_tokens() {
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "base");
+    let outs = eng.run_all(vec![greedy(&[3, 4, 5], 6), greedy(&[6, 7], 6)]).unwrap();
+    let gen: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    assert_eq!(eng.metrics.tokens_generated, gen);
+    assert_eq!(eng.metrics.requests_completed, 2);
+    assert_eq!(eng.metrics.prompt_tokens, 5);
+    assert!(eng.metrics.decode_steps > 0);
+}
+
+#[test]
+fn engine_server_thread_roundtrip() {
+    use road::coordinator::server::EngineServer;
+    let econf = EngineConfig {
+        model: "tiny".into(),
+        mode: "road".into(),
+        decode_slots: 2,
+        queue_capacity: 64,
+    };
+    let dir = road::Manifest::default_dir();
+    let (server, client) = EngineServer::start(econf, dir, |eng| {
+        let mut rng = Rng::seed_from(6);
+        let a = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.2));
+        eng.register_adapter("srv", &a)?;
+        Ok(())
+    })
+    .unwrap();
+    let out = client.generate(greedy(&[11, 12, 13], 5).with_adapter("srv")).unwrap();
+    assert_eq!(out.tokens.len(), 5);
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("requests=1"), "{stats}");
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,102 @@
+//! End-to-end numerics: HLO artifacts produced by python/compile/aot.py,
+//! loaded and executed through the rust PJRT runtime, compared against the
+//! golden records computed by jax at artifact-build time.
+
+use road::runtime::{allclose, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::from_default_artifacts().expect("run `make artifacts` first")
+}
+
+#[test]
+fn golden_decode_road() {
+    let rt = runtime();
+    let (ins, expected) = rt.load_golden("decode_road_tiny_b2").unwrap();
+    let exe = rt.load("decode_road_tiny_b2").unwrap();
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    let outs = exe.run_host(&refs).unwrap();
+    assert_eq!(outs.len(), expected.len());
+    for (o, e) in outs.iter().zip(&expected) {
+        allclose(o, e, 1e-4, 1e-5).unwrap();
+    }
+}
+
+#[test]
+fn golden_decode_base() {
+    let rt = runtime();
+    let (ins, expected) = rt.load_golden("decode_base_tiny_b2").unwrap();
+    let exe = rt.load("decode_base_tiny_b2").unwrap();
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    let outs = exe.run_host(&refs).unwrap();
+    for (o, e) in outs.iter().zip(&expected) {
+        allclose(o, e, 1e-4, 1e-5).unwrap();
+    }
+}
+
+#[test]
+fn golden_prefill_road() {
+    let rt = runtime();
+    let (ins, expected) = rt.load_golden("prefill_road_tiny_b2_l16").unwrap();
+    let exe = rt.load("prefill_road_tiny_b2_l16").unwrap();
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    let outs = exe.run_host(&refs).unwrap();
+    for (o, e) in outs.iter().zip(&expected) {
+        allclose(o, e, 1e-4, 1e-5).unwrap();
+    }
+}
+
+#[test]
+fn golden_train_step_road1() {
+    let rt = runtime();
+    let (ins, expected) = rt.load_golden("train_road1_tiny").unwrap();
+    let exe = rt.load("train_road1_tiny").unwrap();
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    let outs = exe.run_host(&refs).unwrap();
+    // train outputs include the loss scalar as the last element
+    let loss = outs.last().unwrap().as_f32()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    for (o, e) in outs.iter().zip(&expected) {
+        allclose(o, e, 2e-3, 1e-4).unwrap();
+    }
+}
+
+#[test]
+fn golden_eval_loss_road1() {
+    let rt = runtime();
+    let (ins, expected) = rt.load_golden("eval_loss_road1_tiny").unwrap();
+    let exe = rt.load("eval_loss_road1_tiny").unwrap();
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    let outs = exe.run_host(&refs).unwrap();
+    for (o, e) in outs.iter().zip(&expected) {
+        allclose(o, e, 1e-3, 1e-5).unwrap();
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_arity_and_shape() {
+    let rt = runtime();
+    let exe = rt.load("decode_base_tiny_b2").unwrap();
+    assert!(exe.run_host(&[]).is_err());
+    let (mut ins, _) = rt.load_golden("decode_base_tiny_b2").unwrap();
+    // corrupt a shape
+    let bad = road::HostTensor::f32(vec![1], vec![0.0]);
+    ins[0] = bad;
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    assert!(exe.run_host(&refs).is_err());
+}
+
+#[test]
+fn manifest_loads_and_entries_consistent() {
+    let rt = runtime();
+    assert!(rt.manifest.entries.len() >= 90, "{}", rt.manifest.entries.len());
+    for cfg in ["tiny", "serve", "train", "train2"] {
+        assert!(rt.manifest.configs.contains_key(cfg));
+    }
+    // decode buckets advertised by the manifest exist as entries
+    for b in &rt.manifest.serve_decode_batches {
+        for mode in ["base", "road", "lora"] {
+            let name = format!("decode_{mode}_serve_b{b}");
+            assert!(rt.manifest.entries.contains_key(&name), "{name}");
+        }
+    }
+}

