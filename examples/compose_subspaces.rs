@@ -24,6 +24,7 @@ fn main() -> Result<()> {
         mode: "road".into(),
         decode_slots: 8,
         queue_capacity: 256,
+        ..Default::default()
     };
     let mut engine = Engine::new(rt, econf)?;
     let a = compose::ForeignEcho;

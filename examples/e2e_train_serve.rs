@@ -68,7 +68,13 @@ fn main() -> Result<()> {
     );
 
     // --- 3. generative eval through the engine ------------------------------
-    let econf = EngineConfig { model: config.into(), mode: "road".into(), decode_slots: 8, queue_capacity: 1024 };
+    let econf = EngineConfig {
+        model: config.into(),
+        mode: "road".into(),
+        decode_slots: 8,
+        queue_capacity: 1024,
+        ..Default::default()
+    };
     let mut engine = Engine::new(rt.clone(), econf)?;
     let adapter = tr.export_adapter()?;
     engine.register_adapter("math", &adapter)?;

@@ -25,7 +25,13 @@ fn main() -> Result<()> {
     //    device-resident params + an adapter bank.
     let mut engine = Engine::new(
         rt,
-        EngineConfig { model: "serve".into(), mode: "road".into(), decode_slots: 4, queue_capacity: 64 },
+        EngineConfig {
+            model: "serve".into(),
+            mode: "road".into(),
+            decode_slots: 4,
+            queue_capacity: 64,
+            ..Default::default()
+        },
     )?;
 
     // 3. Register per-user adapters (normally loaded from a finetuning

@@ -1,7 +1,9 @@
 //! Microbench of coordinator data structures on the hot path: slot
-//! allocation, queue admission/pop, adapter bank slot writes, and request
-//! construction.  These must stay negligible next to a decode step
-//! (~10ms); the bench prints each op's cost so regressions are visible.
+//! allocation, queue admission/pop, adapter bank slot writes, request
+//! construction, and the decode step's KV transfer cost under host-round-
+//! trip vs device-resident residency.  The data-structure ops must stay
+//! negligible next to a decode step (~10ms); the bench prints each op's
+//! cost so regressions are visible.
 //!
 //! ```bash
 //! cargo bench --bench coordinator_micro
@@ -14,6 +16,8 @@ use road::coordinator::kv::SlotAllocator;
 use road::coordinator::queue::AdmissionQueue;
 use road::coordinator::request::Request;
 use road::manifest::ModelConfigInfo;
+use road::runtime::{buffer_to_host, upload};
+use road::tensor::{DType, HostTensor};
 use road::util::rng::Rng;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -96,4 +100,51 @@ fn main() {
         }
         std::hint::black_box((token, pos, ids));
     });
+
+    // ------------------------------------------------------------------
+    // Per-decode-step KV transfer: host round-trip vs device-resident.
+    //
+    // Host round-trip (the pre-refactor engine): both serve-sized caches
+    // are uploaded as step inputs and downloaded as step outputs, every
+    // step.  Device-resident: the step's output buffers are handed back as
+    // the next step's inputs (a handle move) and only the [B, vocab]
+    // logits are downloaded.  Buffers come from the xla client (the
+    // offline build's host-memory stand-in moves the same byte volumes),
+    // so the printed gap is the transfer work the refactor removes from
+    // every step.
+    // ------------------------------------------------------------------
+    let slots_b = 8usize;
+    let client = xla::PjRtClient::cpu().expect("xla client");
+    let kv_shape = vec![cfg.n_layers, slots_b, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+    let kv_elems: usize = kv_shape.iter().product();
+    let k = HostTensor::zeros(kv_shape.clone(), DType::F32);
+    let v = HostTensor::zeros(kv_shape, DType::F32);
+    let roundtrip_mb = 2.0 * 2.0 * kv_elems as f64 * 4.0 / 1e6; // k+v, up+down
+    let logits = HostTensor::zeros(vec![slots_b, cfg.vocab], DType::F32);
+    let logits_kb = (slots_b * cfg.vocab * 4) as f64 / 1e3;
+
+    bench(
+        &format!("decode-step KV host-roundtrip ({roundtrip_mb:.1} MB moved)"),
+        30,
+        || {
+            let kb = upload(&client, &k).unwrap();
+            let vb = upload(&client, &v).unwrap();
+            std::hint::black_box(buffer_to_host(&kb, DType::F32).unwrap());
+            std::hint::black_box(buffer_to_host(&vb, DType::F32).unwrap());
+            std::hint::black_box(buffer_to_host(&upload(&client, &logits).unwrap(), DType::F32).unwrap());
+        },
+    );
+
+    let mut dev_k = upload(&client, &k).unwrap();
+    let mut dev_v = upload(&client, &v).unwrap();
+    let dev_logits = upload(&client, &logits).unwrap();
+    bench(
+        &format!("decode-step KV device-resident ({logits_kb:.1} KB moved)"),
+        10_000,
+        || {
+            // Installing the step's output buffers is a handle move.
+            std::mem::swap(&mut dev_k, &mut dev_v);
+            std::hint::black_box(buffer_to_host(&dev_logits, DType::F32).unwrap());
+        },
+    );
 }

@@ -1,11 +1,14 @@
 //! Figure 4 bench: end-to-end heterogeneous-batching throughput sweeps
-//! (merged vs unmerged; vs #generated tokens; vs #distinct adapters).
+//! (merged vs unmerged; vs #generated tokens; vs #distinct adapters), plus
+//! the KV residency comparison (device-resident decode vs the full
+//! host-round-trip baseline).
 //!
 //! Plain `harness = false` binary (no criterion in the offline image):
 //! each point is a full engine run; results print as the paper's series.
+//! Skips cleanly when the AOT artifacts have not been built.
 //!
 //! ```bash
-//! cargo bench --bench fig4_batching            # all three panels
+//! cargo bench --bench fig4_batching            # all panels
 //! cargo bench --bench fig4_batching -- quick   # reduced sweep
 //! ```
 
@@ -15,6 +18,9 @@ use road::bench;
 use road::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
+    if !road::Manifest::available_or_note() {
+        return Ok(());
+    }
     let quick = std::env::args().any(|a| a == "quick");
     let rt = Rc::new(Runtime::from_default_artifacts()?);
     let seed = 7;
@@ -35,6 +41,11 @@ fn main() -> anyhow::Result<()> {
     let pts = bench::fig4_right(&rt, &distinct, tokens, seed)?;
     println!("{}", bench::render_points("fig4-right", &pts));
     summarize_ratio(&pts);
+
+    println!("# KV residency: device-resident decode vs host-roundtrip baseline");
+    let pts = bench::kv_residency_comparison(&rt, tokens, seed)?;
+    println!("{}", bench::render_points("kv-residency", &pts));
+    summarize_residency(&pts);
     Ok(())
 }
 
@@ -52,4 +63,21 @@ fn summarize_ratio(pts: &[road::bench::ServingPoint]) {
             );
         }
     }
+}
+
+/// Per-decode-step cost with the cache device-resident vs round-tripped;
+/// the device-resident step must be strictly cheaper (it moves O(B·vocab)
+/// logits instead of the O(layers·B·max_seq·d) caches).
+fn summarize_residency(pts: &[road::bench::ServingPoint]) {
+    let [device, host] = pts else { return };
+    let (Some(d_ms), Some(h_ms)) = (device.ms_per_step(), host.ms_per_step()) else {
+        println!("  decode step comparison unavailable: a run performed no decode steps");
+        return;
+    };
+    println!(
+        "  decode step: device-resident {d_ms:.3} ms vs host-roundtrip {h_ms:.3} ms \
+         ({:.2}x) — device-resident strictly faster: {}",
+        h_ms / d_ms,
+        d_ms < h_ms
+    );
 }

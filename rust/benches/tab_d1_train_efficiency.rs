@@ -13,6 +13,9 @@ use road::bench;
 use road::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
+    if !road::Manifest::available_or_note() {
+        return Ok(());
+    }
     let quick = std::env::args().any(|a| a == "quick");
     let iters = if quick { 10 } else { 50 };
     let rt = Rc::new(Runtime::from_default_artifacts()?);

@@ -140,6 +140,9 @@ impl RoadAdapter {
     /// < split_blocks from `a`, the rest from `b`.  Disjoint blocks are
     /// orthogonal subspaces, so both tasks' rotations coexist in one R.
     pub fn compose(a: &RoadAdapter, b: &RoadAdapter, split_frac: f32) -> Result<RoadAdapter> {
+        if !split_frac.is_finite() {
+            bail!("split_frac must be finite, got {split_frac}");
+        }
         let mut per_proj = BTreeMap::new();
         for (key, va) in &a.per_proj {
             let vb = b
@@ -150,7 +153,7 @@ impl RoadAdapter {
             if vb.dim() != d {
                 bail!("composition dim mismatch at {key}");
             }
-            let split = ((d / 2) as f32 * split_frac) as usize * 2;
+            let split = subspace_split(d, split_frac);
             let mut r1 = va.r1.clone();
             let mut r2 = va.r2.clone();
             r1[split..].copy_from_slice(&vb.r1[split..]);
@@ -159,6 +162,25 @@ impl RoadAdapter {
         }
         Ok(RoadAdapter { per_proj })
     }
+}
+
+/// Element index where the composed subspace boundary falls: `split_frac`
+/// of the `d/2` rotation blocks (rounded to the nearest block, ties
+/// down), times two elements per block.  Always even and within `[0, d]`.
+///
+/// Rounding happens once, in f64, on the *block count* — the earlier
+/// `((d / 2) as f32 * split_frac) as usize` formulation both truncated
+/// (0.7·10 blocks → 6, biased low by f32 representation) and lost integer
+/// precision for d/2 beyond f32's 24-bit mantissa.  Ties round *down*
+/// (`ceil(x - 0.5)`) so that `split_frac = 0.5` over an odd block count
+/// lands on the same `n_blocks / 2` boundary as the trainer's half mask
+/// ([`crate::compose::half_mask_sized`]) — composed halves take exactly
+/// the blocks each task trained.
+pub fn subspace_split(d: usize, split_frac: f32) -> usize {
+    let half = d / 2;
+    let x = split_frac.clamp(0.0, 1.0) as f64 * half as f64;
+    let blocks = (x - 0.5).ceil().max(0.0) as usize;
+    blocks.min(half) * 2
 }
 
 /// A trained LoRA adapter (the unmerged-serving baseline of Figure 4).
@@ -493,6 +515,55 @@ mod tests {
             assert_eq!(&vc.r2[..d / 2], &va.r2[..d / 2]);
             assert_eq!(&vc.r2[d / 2..], &vb.r2[d / 2..]);
         }
+    }
+
+    #[test]
+    fn subspace_split_edges() {
+        // 0.0 → everything from b; 1.0 → everything from a.
+        assert_eq!(subspace_split(8, 0.0), 0);
+        assert_eq!(subspace_split(8, 1.0), 8);
+        // Out-of-range fractions clamp instead of over/underflowing.
+        assert_eq!(subspace_split(8, -0.5), 0);
+        assert_eq!(subspace_split(8, 1.5), 8);
+        // Odd block counts: nearest block, ties down — 0.5 must land on the
+        // trainer's `n_blocks / 2` mask boundary so composed halves take
+        // exactly the blocks each task trained.
+        assert_eq!(subspace_split(6, 0.5), 2); // 3 blocks · 0.5 = 1.5 → 1 block
+        assert_eq!(subspace_split(10, 0.5), 4); // 5 blocks · 0.5 = 2.5 → 2 blocks
+        for d in [6usize, 10, 14, 22] {
+            assert_eq!(subspace_split(d, 0.5), (d / 2 / 2) * 2, "mask alignment at d={d}");
+        }
+        // Non-tie fractions round to nearest (the old f32 formulation
+        // truncated: 0.7 · 10 blocks gave 6).
+        assert_eq!(subspace_split(20, 0.7), 14);
+        assert_eq!(subspace_split(10, 0.49), 4);
+        // Large d: 2^25 + 2 elements has d/2 beyond f32's mantissa; the f32
+        // formulation misplaced the boundary, the f64 one does not.
+        let d = (1usize << 25) + 2;
+        let half = d / 2;
+        assert_eq!(subspace_split(d, 1.0), d);
+        assert_eq!(subspace_split(d, 0.25), (half / 4) * 2);
+        // Every result is even and bounded by d.
+        for frac in [0.0f32, 0.1, 0.3333, 0.5, 0.9999, 1.0] {
+            let s = subspace_split(14, frac);
+            assert_eq!(s % 2, 0);
+            assert!(s <= 14);
+        }
+    }
+
+    #[test]
+    fn compose_edge_fractions_take_whole_adapter() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from(11);
+        let a = RoadAdapter::random(&cfg, &mut rng, 0.3);
+        let b = RoadAdapter::random(&cfg, &mut rng, 0.3);
+        let all_b = RoadAdapter::compose(&a, &b, 0.0).unwrap();
+        let all_a = RoadAdapter::compose(&a, &b, 1.0).unwrap();
+        for key in a.per_proj.keys() {
+            assert_eq!(all_b.per_proj[key], b.per_proj[key]);
+            assert_eq!(all_a.per_proj[key], a.per_proj[key]);
+        }
+        assert!(RoadAdapter::compose(&a, &b, f32::NAN).is_err());
     }
 
     #[test]

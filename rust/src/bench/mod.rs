@@ -35,6 +35,17 @@ pub struct ServingPoint {
     /// Generated tokens per second (the paper's throughput axis).
     pub tokens_per_sec: f64,
     pub decode_steps: usize,
+    /// Time spent inside decode executions (see
+    /// [`ServingPoint::ms_per_step`]; the KV residency comparison's axis).
+    pub decode_secs: f64,
+}
+
+impl ServingPoint {
+    /// Mean decode-step cost in milliseconds; `None` when the run never
+    /// decoded (e.g. every request finished at prefill).
+    pub fn ms_per_step(&self) -> Option<f64> {
+        (self.decode_steps > 0).then(|| self.decode_secs * 1e3 / self.decode_steps as f64)
+    }
 }
 
 /// Build a heterogeneous workload: `n_requests` requests over
@@ -93,7 +104,24 @@ pub fn measure_serving(
         mode: mode.into(),
         decode_slots: slots,
         queue_capacity: 4096,
+        ..Default::default()
     };
+    measure_serving_cfg(rt, econf, distinct, n_requests, new_tokens, seed)
+}
+
+/// Like [`measure_serving`], but over an explicit engine config — the KV
+/// residency comparison uses this to flip `kv_host_roundtrip` with
+/// everything else held fixed.
+pub fn measure_serving_cfg(
+    rt: &Rc<Runtime>,
+    econf: EngineConfig,
+    distinct: usize,
+    n_requests: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Result<ServingPoint> {
+    let slots = econf.decode_slots;
+    let mode = econf.mode.clone();
     let mut engine = Engine::new(rt.clone(), econf)?;
     if distinct > 0 {
         register_adapters(&mut engine, distinct, seed)?;
@@ -115,7 +143,35 @@ pub fn measure_serving(
         wall_secs: wall,
         tokens_per_sec: gen_tokens as f64 / wall,
         decode_steps: engine.metrics.decode_steps,
+        decode_secs: engine.metrics.decode_time.as_secs_f64(),
     })
+}
+
+/// Device-resident vs host-round-trip decode on an otherwise identical
+/// heterogeneous workload (batch 8, road mode).  The second point is the
+/// pre-refactor baseline that moved the full K/V cache host↔device every
+/// step; `decode_secs / decode_steps` is the per-step cost to compare.
+pub fn kv_residency_comparison(
+    rt: &Rc<Runtime>,
+    new_tokens: usize,
+    seed: u64,
+) -> Result<Vec<ServingPoint>> {
+    let mut out = Vec::new();
+    for (label, kv_host_roundtrip) in
+        [("road/device-resident", false), ("road/host-roundtrip", true)]
+    {
+        let econf = EngineConfig {
+            model: "serve".into(),
+            mode: "road".into(),
+            decode_slots: 8,
+            queue_capacity: 4096,
+            kv_host_roundtrip,
+        };
+        let mut p = measure_serving_cfg(rt, econf, 8, 16, new_tokens, seed)?;
+        p.label = label.into();
+        out.push(p);
+    }
+    Ok(out)
 }
 
 /// Figure 4 (Left): merged vs unmerged LoRA.  The merged path is the base
@@ -174,9 +230,10 @@ pub fn fig4_right(
 
 pub fn render_points(title: &str, points: &[ServingPoint]) -> String {
     let mut t = Table::new(&[
-        "config", "batch", "#adapters", "new-toks", "reqs", "wall(s)", "tok/s",
+        "config", "batch", "#adapters", "new-toks", "reqs", "wall(s)", "tok/s", "ms/step",
     ]);
     for p in points {
+        let ms_per_step = p.ms_per_step().unwrap_or(0.0);
         t.row(vec![
             p.label.clone(),
             p.batch.to_string(),
@@ -185,6 +242,7 @@ pub fn render_points(title: &str, points: &[ServingPoint]) -> String {
             p.requests.to_string(),
             fmt_f(p.wall_secs, 2),
             fmt_f(p.tokens_per_sec, 1),
+            fmt_f(ms_per_step, 3),
         ]);
     }
     format!("## {title}\n{}", t.render())
@@ -301,6 +359,7 @@ mod tests {
             wall_secs: 1.5,
             tokens_per_sec: 1365.3,
             decode_steps: 256,
+            decode_secs: 1.28,
         };
         let s = render_points("Fig 4 (Right)", &[p]);
         assert!(s.contains("road/d8"));

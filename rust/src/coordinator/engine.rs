@@ -12,6 +12,12 @@
 //!   2. run ONE decode step across all slots (active lanes advance, empty
 //!      lanes are masked by pos/id 0),
 //!   3. sample, detect finished requests, free their slots.
+//!
+//! The decode loop is device-resident: the K/V cache lives in PJRT buffers
+//! and each step's cache outputs are fed back as the next step's inputs
+//! ([`crate::runtime::Executable::run_device`]); only the logits are
+//! downloaded per step.  `EngineConfig::kv_host_roundtrip` re-enables the
+//! old full-cache host round-trip as a measurable baseline.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -22,12 +28,12 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::adapters::{Adapter, AdapterBank, AdapterRegistry};
 use crate::manifest::{EntryInfo, ModelConfigInfo};
 use crate::model::ParamStore;
-use crate::runtime::{Arg, Executable, Runtime};
-use crate::tensor::HostTensor;
+use crate::runtime::{buffer_to_host, Arg, Executable, Runtime};
+use crate::tensor::{DType, HostTensor};
 
 use super::kv::{KvState, SlotAllocator};
 use super::metrics::Metrics;
-use super::queue::AdmissionQueue;
+use super::queue::{AdmissionQueue, EngineError};
 use super::request::{ActiveRequest, FinishReason, Request, RequestOutput};
 use super::sampler;
 
@@ -42,6 +48,11 @@ pub struct EngineConfig {
     /// artifact.
     pub decode_slots: usize,
     pub queue_capacity: usize,
+    /// Baseline escape hatch: round-trip the full K/V cache host↔device on
+    /// every decode step (the pre-device-resident behavior).  Used by the
+    /// fig4 bench to measure what staying on device saves; leave `false`
+    /// for serving.
+    pub kv_host_roundtrip: bool,
 }
 
 impl Default for EngineConfig {
@@ -51,6 +62,7 @@ impl Default for EngineConfig {
             mode: "road".into(),
             decode_slots: 8,
             queue_capacity: 1024,
+            kv_host_roundtrip: false,
         }
     }
 }
@@ -164,7 +176,9 @@ impl Engine {
         self.prefill_buckets.iter().map(|b| b.prompt_len).max().unwrap_or(0)
     }
 
-    /// Enqueue a request (backpressure error if the queue is full).
+    /// Enqueue a request (typed [`EngineError::QueueFull`] backpressure
+    /// error when the queue is at capacity).  Stamps the submission time so
+    /// TTFT/e2e metrics include queueing delay.
     pub fn submit(&mut self, mut req: Request) -> Result<u64> {
         if req.prompt.is_empty() {
             bail!("empty prompt");
@@ -190,6 +204,9 @@ impl Engine {
         }
         self.next_id = self.next_id.max(req.id) + 1;
         let id = req.id;
+        if req.submitted_at.is_none() {
+            req.submitted_at = Some(Instant::now());
+        }
         self.queue.push(req)?;
         Ok(id)
     }
@@ -215,11 +232,13 @@ impl Engine {
     }
 
     /// Assemble the positional argument list for an entry: device-resident
-    /// params/banks + per-call host data tensors.
+    /// params/banks, per-call host `data` tensors, and loop-carried device
+    /// buffers (`dev`, checked before `data` — the decode K/V caches).
     fn build_args<'a>(
         &'a self,
         info: &EntryInfo,
         data: &BTreeMap<&'static str, &'a HostTensor>,
+        dev: &BTreeMap<&'static str, &'a xla::PjRtBuffer>,
     ) -> Result<Vec<Arg<'a>>> {
         let mut args = Vec::with_capacity(info.inputs.len());
         for spec in &info.inputs {
@@ -234,11 +253,17 @@ impl Engine {
                         .get(&spec.name)
                         .ok_or_else(|| anyhow!("missing bank tensor {}", spec.name))?,
                 )),
-                "data" => args.push(Arg::Host(
-                    data.get(spec.name.as_str())
-                        .copied()
-                        .ok_or_else(|| anyhow!("missing data input {}", spec.name))?,
-                )),
+                "data" => {
+                    if let Some(b) = dev.get(spec.name.as_str()) {
+                        args.push(Arg::Buffer(b));
+                    } else {
+                        args.push(Arg::Host(
+                            data.get(spec.name.as_str())
+                                .copied()
+                                .ok_or_else(|| anyhow!("missing data input {}", spec.name))?,
+                        ));
+                    }
+                }
                 g => bail!("unexpected input group {g} in {}", info.name),
             }
         }
@@ -276,14 +301,13 @@ impl Engine {
                 }
             }
             let Some(bi) = best else { return Ok(()) };
-            let (bucket_b, bucket_l) =
-                (self.prefill_buckets[bi].batch, self.prefill_buckets[bi].prompt_len);
+            let bucket_b = self.prefill_buckets[bi].batch;
+            let bucket_l = self.prefill_buckets[bi].prompt_len;
             let take = self.queue.pop_fitting(n_free.min(bucket_b), bucket_l);
             if take.is_empty() {
                 return Ok(());
             }
             self.prefill_batch(bi, take)?;
-            let _ = (bucket_b, bucket_l);
         }
     }
 
@@ -310,6 +334,10 @@ impl Engine {
                 .copy_from_slice(&req.prompt);
             lengths[lane] = req.prompt.len() as i32;
             ids[lane] = slot_adapter as i32;
+            // Queue wait = submit → admission into a prefill batch.
+            if let Some(s) = req.submitted_at {
+                self.metrics.queue_wait.record(now.duration_since(s));
+            }
             actives.push(ActiveRequest::new(req, slot_adapter, now));
         }
 
@@ -321,7 +349,7 @@ impl Engine {
         data.insert("tokens", &tokens_t);
         data.insert("lengths", &lengths_t);
         let exe = self.prefill_buckets[bucket_idx].exe.clone();
-        let args = self.build_args(&exe.info, &data)?;
+        let args = self.build_args(&exe.info, &data, &BTreeMap::new())?;
         let t0 = Instant::now();
         let outs = exe.run(&args)?;
         drop(args);
@@ -330,6 +358,12 @@ impl Engine {
 
         let logits = &outs[0]; // [b, vocab]
         let (pk, pv) = (&outs[1], &outs[2]);
+        // Lane adoption is a host-side scatter; when the decode loop left
+        // the cache on device this downloads it once per admitted batch
+        // (NOT per decode step — see KvState's residency model).
+        if self.kv.materialize_host()? {
+            self.metrics.kv_host_syncs += 1;
+        }
         let vocab = self.cfg.vocab;
         for (lane, mut ar) in actives.into_iter().enumerate() {
             // Sample the first generated token from the prefill logits.
@@ -376,32 +410,81 @@ impl Engine {
             return Ok(());
         }
 
-        // KV caches are passed by reference — no per-step clone of the
-        // multi-MB cache tensors (EXPERIMENTS.md §Perf).
         let ids_t = HostTensor::i32(vec![b], ids);
         let token_t = HostTensor::i32(vec![b], token);
         let pos_t = HostTensor::i32(vec![b], pos);
         let exe = self.decode_exe.clone();
-        let (outs, elapsed) = {
-            let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
-            data.insert("ids", &ids_t);
-            data.insert("token", &token_t);
-            data.insert("pos", &pos_t);
-            data.insert("k_cache", &self.kv.k);
-            data.insert("v_cache", &self.kv.v);
-            let args = self.build_args(&exe.info, &data)?;
-            let t0 = Instant::now();
-            let outs = exe.run(&args)?;
-            (outs, t0.elapsed())
-        };
-        self.metrics.decode_time += elapsed;
-        self.metrics.decode_steps += 1;
 
-        let mut outs = outs.into_iter();
-        let logits = outs.next().unwrap();
-        let k_new = outs.next().unwrap();
-        let v_new = outs.next().unwrap();
-        self.kv.replace(k_new, v_new)?;
+        let logits = if self.econf.kv_host_roundtrip {
+            // Baseline: the full [n_layers, B, n_heads, max_seq, head_dim]
+            // K/V pair is uploaded and downloaded every step — kept only as
+            // the measurable comparison point for the device-resident path.
+            if self.kv.materialize_host()? {
+                self.metrics.kv_host_syncs += 1;
+            }
+            let (outs, elapsed) = {
+                let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
+                data.insert("ids", &ids_t);
+                data.insert("token", &token_t);
+                data.insert("pos", &pos_t);
+                data.insert("k_cache", self.kv.host_k()?);
+                data.insert("v_cache", self.kv.host_v()?);
+                let args = self.build_args(&exe.info, &data, &BTreeMap::new())?;
+                let t0 = Instant::now();
+                let outs = exe.run(&args)?;
+                (outs, t0.elapsed())
+            };
+            self.metrics.decode_time += elapsed;
+            // This step moved the full cache up (Arg::Host inputs) and back
+            // down (outputs) — count it so the report reflects the baseline's
+            // actual transfer behavior.
+            self.metrics.kv_uploads += 1;
+            self.metrics.kv_host_syncs += 1;
+            if outs.len() != 3 {
+                bail!("decode entry {} returned {} outputs, expected 3", exe.info.name, outs.len());
+            }
+            let mut outs = outs.into_iter();
+            let logits = outs.next().unwrap();
+            let k_new = outs.next().unwrap();
+            let v_new = outs.next().unwrap();
+            self.kv.replace(k_new, v_new)?;
+            logits
+        } else {
+            // Device-resident hot path: the caches stay in PJRT buffers and
+            // each step's outputs are handed straight back as the next
+            // step's inputs; the only per-step transfer is the [B, vocab]
+            // logits download.
+            if self.kv.ensure_device(&self.rt.client)? {
+                self.metrics.kv_uploads += 1;
+            }
+            let t0 = Instant::now();
+            let outs = {
+                let (kb, vb) = self.kv.device_pair()?;
+                let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
+                data.insert("ids", &ids_t);
+                data.insert("token", &token_t);
+                data.insert("pos", &pos_t);
+                let mut dev: BTreeMap<&'static str, &xla::PjRtBuffer> = BTreeMap::new();
+                dev.insert("k_cache", kb);
+                dev.insert("v_cache", vb);
+                let args = self.build_args(&exe.info, &data, &dev)?;
+                exe.run_device(&args)?
+            };
+            // Same positional contract as the host path: [logits, k, v].
+            if outs.len() != 3 {
+                bail!("decode entry {} returned {} outputs, expected 3", exe.info.name, outs.len());
+            }
+            let mut outs = outs.into_iter();
+            let l_buf = outs.next().unwrap();
+            let k_buf = outs.next().unwrap();
+            let v_buf = outs.next().unwrap();
+            let logits_dtype = exe.info.outputs.first().map_or(DType::F32, |s| s.dtype);
+            let logits = buffer_to_host(&l_buf, logits_dtype)?;
+            self.metrics.decode_time += t0.elapsed();
+            self.kv.install_device(k_buf, v_buf)?;
+            logits
+        };
+        self.metrics.decode_steps += 1;
 
         let vocab = self.cfg.vocab;
         for s in 0..b {
@@ -458,6 +541,7 @@ impl Engine {
     /// during this iteration.
     pub fn step(&mut self) -> Result<Vec<RequestOutput>> {
         self.metrics.start();
+        self.metrics.queue_depth.record_value(self.queue.len() as f64);
         let mut outputs = Vec::new();
         self.maybe_prefill()?;
         // A request can finish at prefill time (max_new_tokens == 1).
@@ -480,17 +564,32 @@ impl Engine {
     }
 
     /// Submit a workload and run to completion (bench/example driver).
+    ///
+    /// Backpressure is detected by downcasting to the typed
+    /// [`EngineError::QueueFull`] — full queues park the remaining requests
+    /// and drain a scheduler step; any other submit error aborts.
     pub fn run_all(&mut self, reqs: Vec<Request>) -> Result<Vec<RequestOutput>> {
         let mut pending: std::collections::VecDeque<Request> = reqs.into();
         let mut outputs = Vec::new();
         while !pending.is_empty() || self.has_work() {
-            while let Some(r) = pending.pop_front() {
-                if let Err(e) = self.submit(r.clone()) {
-                    if e.to_string().contains("backpressure") {
+            while let Some(mut r) = pending.pop_front() {
+                // Stamp before the first attempt: a backpressured request
+                // keeps its original clock across re-submits, so its
+                // reported latency includes the time it spent parked here.
+                if r.submitted_at.is_none() {
+                    r.submitted_at = Some(Instant::now());
+                }
+                match self.submit(r.clone()) {
+                    Ok(_) => {}
+                    Err(e) if matches!(
+                        e.downcast_ref::<EngineError>(),
+                        Some(EngineError::QueueFull { .. })
+                    ) =>
+                    {
                         pending.push_front(r);
                         break;
                     }
-                    return Err(e);
+                    Err(e) => return Err(e),
                 }
             }
             outputs.extend(self.step()?);

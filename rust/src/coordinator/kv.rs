@@ -5,10 +5,26 @@
 //! lanes (each lane tracks its own sequence position — the per-slot `pos`
 //! vector of the decode entry point).  The cache layout matches the HLO
 //! signature: [n_layers, B, n_heads, max_seq, head_dim], f32.
+//!
+//! # Residency
+//!
+//! [`KvState`] is a two-residency cache: exactly one of the host tensors or
+//! the device buffers is authoritative at any time.
+//!
+//! * **Device** is the steady state of the decode loop: step `t`'s output
+//!   buffers are installed via [`KvState::install_device`] and fed straight
+//!   back in at step `t+1` ([`KvState::device_pair`]) with no host copy.
+//! * **Host** is the escape hatch: [`KvState::materialize_host`] downloads
+//!   the cache for operations PJRT has no artifact for — prefill lane
+//!   adoption ([`KvState::adopt_prefill_lane`]), slot clearing, tests, and
+//!   golden-record comparison.  Prefill admission therefore costs one full
+//!   cache round-trip *per admitted batch*; the per-step decode transfers
+//!   stay O(B·vocab) (logits only).
 
 use anyhow::{bail, Result};
 
 use crate::manifest::ModelConfigInfo;
+use crate::runtime::{buffer_to_host, upload};
 use crate::tensor::{DType, HostTensor};
 
 /// Free-list slot allocator with double-free protection.
@@ -54,10 +70,22 @@ impl SlotAllocator {
     }
 }
 
-/// Host-resident K/V caches for all decode slots.
+/// Which side of the host/device boundary currently owns the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    Host,
+    Device,
+}
+
+/// K/V caches for all decode slots (see module docs for the residency
+/// model).
 pub struct KvState {
-    pub k: HostTensor,
-    pub v: HostTensor,
+    /// Host-side tensors; authoritative only when `residency == Host`.
+    hk: HostTensor,
+    hv: HostTensor,
+    /// Device-side buffers; `Some` exactly when `residency == Device`.
+    dev: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    residency: Residency,
     pub n_layers: usize,
     pub n_slots: usize,
     pub n_heads: usize,
@@ -69,13 +97,107 @@ impl KvState {
     pub fn new(cfg: &ModelConfigInfo, n_slots: usize) -> KvState {
         let shape = vec![cfg.n_layers, n_slots, cfg.n_heads, cfg.max_seq, cfg.head_dim];
         KvState {
-            k: HostTensor::zeros(shape.clone(), DType::F32),
-            v: HostTensor::zeros(shape, DType::F32),
+            hk: HostTensor::zeros(shape.clone(), DType::F32),
+            hv: HostTensor::zeros(shape, DType::F32),
+            dev: None,
+            residency: Residency::Host,
             n_layers: cfg.n_layers,
             n_slots,
             n_heads: cfg.n_heads,
             max_seq: cfg.max_seq,
             head_dim: cfg.head_dim,
+        }
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        vec![self.n_layers, self.n_slots, self.n_heads, self.max_seq, self.head_dim]
+    }
+
+    pub fn residency(&self) -> Residency {
+        self.residency
+    }
+
+    /// Host-materialization escape hatch: download the cache if it is
+    /// device-resident.  Returns `true` when a transfer actually happened.
+    ///
+    /// Downloads complete before any state is committed, so a failed
+    /// transfer leaves the cache device-resident and retryable rather than
+    /// wedged between residencies.
+    pub fn materialize_host(&mut self) -> Result<bool> {
+        let Some((kb, vb)) = self.dev.as_ref() else {
+            return Ok(false);
+        };
+        let k = buffer_to_host(kb, DType::F32)?;
+        let v = buffer_to_host(vb, DType::F32)?;
+        let want = self.shape();
+        if k.shape != want || v.shape != want {
+            bail!("device cache shape {:?}/{:?}, expected {:?}", k.shape, v.shape, want);
+        }
+        self.dev = None;
+        self.hk = k;
+        self.hv = v;
+        self.residency = Residency::Host;
+        Ok(true)
+    }
+
+    /// Upload the cache if it is host-resident.  Returns `true` when a
+    /// transfer actually happened.
+    ///
+    /// The host tensors are released after the upload — they are stale
+    /// while device-resident, and at serve size they are the largest host
+    /// allocation; `materialize_host` reallocates them from the download.
+    pub fn ensure_device(&mut self, client: &xla::PjRtClient) -> Result<bool> {
+        if self.residency == Residency::Device {
+            return Ok(false);
+        }
+        let kb = upload(client, &self.hk)?;
+        let vb = upload(client, &self.hv)?;
+        self.hk = HostTensor::zeros(vec![0], DType::F32);
+        self.hv = HostTensor::zeros(vec![0], DType::F32);
+        self.dev = Some((kb, vb));
+        self.residency = Residency::Device;
+        Ok(true)
+    }
+
+    /// The device buffers to pass as the decode step's `k_cache`/`v_cache`
+    /// inputs.  Call [`KvState::ensure_device`] first.
+    pub fn device_pair(&self) -> Result<(&xla::PjRtBuffer, &xla::PjRtBuffer)> {
+        match &self.dev {
+            Some((k, v)) => Ok((k, v)),
+            None => bail!("KV cache is host-resident; call ensure_device first"),
+        }
+    }
+
+    /// Install a decode step's output buffers as the new cache (the
+    /// zero-copy hand-off that keeps the loop device-resident).
+    pub fn install_device(&mut self, k: xla::PjRtBuffer, v: xla::PjRtBuffer) -> Result<()> {
+        let want: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        if k.dims() != want || v.dims() != want {
+            bail!(
+                "decode returned cache dims {:?}/{:?}, expected {:?}",
+                k.dims(),
+                v.dims(),
+                want
+            );
+        }
+        self.dev = Some((k, v));
+        self.residency = Residency::Device;
+        Ok(())
+    }
+
+    /// Host view of the K cache (host residency required).
+    pub fn host_k(&self) -> Result<&HostTensor> {
+        match self.residency {
+            Residency::Host => Ok(&self.hk),
+            Residency::Device => bail!("KV cache is device-resident; materialize_host first"),
+        }
+    }
+
+    /// Host view of the V cache (host residency required).
+    pub fn host_v(&self) -> Result<&HostTensor> {
+        match self.residency {
+            Residency::Host => Ok(&self.hv),
+            Residency::Device => bail!("KV cache is device-resident; materialize_host first"),
         }
     }
 
@@ -86,6 +208,8 @@ impl KvState {
 
     /// Copy one request's cache lane out of a prefill output
     /// ([n_layers, b_prefill, n_heads, max_seq, head_dim]) into `slot`.
+    /// Materializes the cache to host if needed (the admission-time escape
+    /// hatch; see module docs).
     pub fn adopt_prefill_lane(
         &mut self,
         pk: &HostTensor,
@@ -94,6 +218,7 @@ impl KvState {
         slot: usize,
         prompt_len: usize,
     ) -> Result<()> {
+        self.materialize_host()?;
         let b_pre = pk.shape[1];
         if prefill_lane >= b_pre || slot >= self.n_slots {
             bail!("lane {prefill_lane}/{b_pre} or slot {slot}/{} out of range", self.n_slots);
@@ -107,35 +232,41 @@ impl KvState {
                     ((l * b_pre + prefill_lane) * self.n_heads + h) * self.max_seq * self.head_dim;
                 let dst = self.lane_offset(l, slot, h);
                 let kd = pk.read_f32_range(src, row);
-                self.k.write_f32_range(dst, &kd);
+                self.hk.write_f32_range(dst, &kd);
                 let vd = pv.read_f32_range(src, row);
-                self.v.write_f32_range(dst, &vd);
+                self.hv.write_f32_range(dst, &vd);
             }
         }
         Ok(())
     }
 
-    /// Replace both caches with the decode step's outputs (same shape).
+    /// Replace both caches with host tensors (the host-round-trip baseline
+    /// path; the device-resident loop uses [`KvState::install_device`]).
     pub fn replace(&mut self, k: HostTensor, v: HostTensor) -> Result<()> {
-        if k.shape != self.k.shape || v.shape != self.v.shape {
-            bail!("kv shape changed: {:?} vs {:?}", k.shape, self.k.shape);
+        let want = self.shape();
+        if k.shape != want || v.shape != want {
+            bail!("kv shape changed: {:?} vs {:?}", k.shape, want);
         }
-        self.k = k;
-        self.v = v;
+        self.hk = k;
+        self.hv = v;
+        self.dev = None;
+        self.residency = Residency::Host;
         Ok(())
     }
 
     /// Zero a slot's lanes (hygiene on release; correctness does not depend
     /// on it because prefill overwrites and masks exclude stale positions).
-    pub fn clear_slot(&mut self, slot: usize) {
+    pub fn clear_slot(&mut self, slot: usize) -> Result<()> {
+        self.materialize_host()?;
         let zeros = vec![0f32; self.max_seq * self.head_dim];
         for l in 0..self.n_layers {
             for h in 0..self.n_heads {
                 let off = self.lane_offset(l, slot, h);
-                self.k.write_f32_range(off, &zeros);
-                self.v.write_f32_range(off, &zeros);
+                self.hk.write_f32_range(off, &zeros);
+                self.hv.write_f32_range(off, &zeros);
             }
         }
+        Ok(())
     }
 }
 
@@ -191,23 +322,94 @@ mod tests {
         assert!(n > 0);
         kv.adopt_prefill_lane(&pk, &pv, 1, 2, 3).unwrap();
         // slot 2 has the marker in the first 3 positions of every lane
+        let hk = kv.host_k().unwrap().clone();
         for l in 0..c.n_layers {
             for h in 0..c.n_heads {
                 let off = kv.lane_offset(l, 2, h);
-                assert_eq!(kv.k.read_f32_range(off, 3 * c.head_dim), vec![7.5; 3 * c.head_dim]);
-                assert_eq!(kv.k.f32_at(off + 3 * c.head_dim), 0.0);
+                assert_eq!(hk.read_f32_range(off, 3 * c.head_dim), vec![7.5; 3 * c.head_dim]);
+                assert_eq!(hk.f32_at(off + 3 * c.head_dim), 0.0);
             }
         }
         // other slots untouched
-        assert_eq!(kv.k.f32_at(kv.lane_offset(0, 1, 0)), 0.0);
+        assert_eq!(hk.f32_at(kv.lane_offset(0, 1, 0)), 0.0);
     }
 
     #[test]
     fn clear_slot_zeroes() {
         let c = cfg();
         let mut kv = KvState::new(&c, 2);
-        kv.k.write_f32_range(kv.lane_offset(0, 1, 0), &[9.0; 4]);
-        kv.clear_slot(1);
-        assert_eq!(kv.k.f32_at(kv.lane_offset(0, 1, 0)), 0.0);
+        let off = kv.lane_offset(0, 1, 0);
+        kv.hk.write_f32_range(off, &[9.0; 4]);
+        kv.clear_slot(1).unwrap();
+        assert_eq!(kv.host_k().unwrap().f32_at(off), 0.0);
+    }
+
+    #[test]
+    fn device_roundtrip_preserves_cache() {
+        let c = cfg();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut kv = KvState::new(&c, 2);
+        let marker = kv.lane_offset(1, 1, 1);
+        kv.hk.write_f32_range(marker, &[3.25; 4]);
+        kv.hv.write_f32_range(marker, &[-1.5; 4]);
+
+        assert_eq!(kv.residency(), Residency::Host);
+        assert!(kv.ensure_device(&client).unwrap(), "first upload transfers");
+        assert_eq!(kv.residency(), Residency::Device);
+        assert!(!kv.ensure_device(&client).unwrap(), "already device-resident");
+        assert!(kv.host_k().is_err(), "host view requires materialization");
+        kv.device_pair().unwrap();
+
+        assert!(kv.materialize_host().unwrap(), "download transfers");
+        assert!(!kv.materialize_host().unwrap(), "already host-resident");
+        assert_eq!(kv.host_k().unwrap().read_f32_range(marker, 4), vec![3.25; 4]);
+        assert_eq!(kv.host_v().unwrap().read_f32_range(marker, 4), vec![-1.5; 4]);
+        assert!(kv.device_pair().is_err());
+    }
+
+    #[test]
+    fn install_device_swaps_in_decode_outputs() {
+        let c = cfg();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut kv = KvState::new(&c, 2);
+        let shape = kv.shape();
+        let n: usize = shape.iter().product();
+        // Pretend these are the decode step's k/v output buffers.
+        let k_new = HostTensor::f32(shape.clone(), vec![2.0; n]);
+        let v_new = HostTensor::f32(shape.clone(), vec![4.0; n]);
+        let kb = upload(&client, &k_new).unwrap();
+        let vb = upload(&client, &v_new).unwrap();
+        kv.install_device(kb, vb).unwrap();
+        assert_eq!(kv.residency(), Residency::Device);
+
+        kv.materialize_host().unwrap();
+        assert_eq!(kv.host_k().unwrap().f32_at(n - 1), 2.0);
+        assert_eq!(kv.host_v().unwrap().f32_at(0), 4.0);
+
+        // Shape mismatches are rejected.
+        let bad = upload(&client, &HostTensor::f32(vec![2], vec![0.0, 1.0])).unwrap();
+        let ok = upload(&client, &k_new).unwrap();
+        assert!(kv.install_device(bad, ok).is_err());
+    }
+
+    #[test]
+    fn adopt_materializes_device_cache_first() {
+        let c = cfg();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut kv = KvState::new(&c, 2);
+        kv.ensure_device(&client).unwrap();
+
+        let shape = vec![c.n_layers, 1, c.n_heads, c.max_seq, c.head_dim];
+        let n: usize = shape.iter().product();
+        let pk = HostTensor::f32(shape.clone(), vec![1.25; n]);
+        let pv = HostTensor::f32(shape, vec![0.5; n]);
+        kv.adopt_prefill_lane(&pk, &pv, 0, 1, 2).unwrap();
+
+        assert_eq!(kv.residency(), Residency::Host, "adoption is a host operation");
+        let off = kv.lane_offset(0, 1, 0);
+        assert_eq!(kv.host_k().unwrap().read_f32_range(off, 2 * c.head_dim), vec![
+            1.25;
+            2 * c.head_dim
+        ]);
     }
 }

@@ -1,5 +1,11 @@
 //! Serving metrics: throughput, TTFT, per-token and end-to-end latency,
-//! step-time accounting split by phase.
+//! queueing delay/depth, step-time accounting split by phase, and KV-cache
+//! transfer counters.
+//!
+//! Latency clocks start at `Engine::submit` (the request's
+//! `submitted_at` stamp), so TTFT and e2e include time spent waiting in
+//! the admission queue — what a client actually observes — not just
+//! compute after admission.
 
 use std::time::{Duration, Instant};
 
@@ -12,10 +18,25 @@ pub struct Metrics {
     pub prompt_tokens: usize,
     pub prefill_batches: usize,
     pub decode_steps: usize,
+    /// Submit → first generated token (queue wait included).
     pub ttft: LatencyRecorder,
+    /// Submit → request finished (queue wait included).
     pub e2e: LatencyRecorder,
+    /// Submit → admission into a prefill batch (the queueing component of
+    /// ttft/e2e, recorded separately so saturation is visible).
+    pub queue_wait: LatencyRecorder,
+    /// Admission-queue depth sampled at each scheduler step (a depth
+    /// histogram, not a latency — samples are request counts).
+    pub queue_depth: LatencyRecorder,
     pub prefill_time: Duration,
     pub decode_time: Duration,
+    /// Full K/V cache device→host transfers.  Device-resident decode:
+    /// admission-time materializations only (tracks prefill batches, not
+    /// decode steps).  `kv_host_roundtrip` baseline: one per decode step.
+    pub kv_host_syncs: usize,
+    /// Full K/V cache host→device transfers (mirror of `kv_host_syncs`:
+    /// re-uploads after materialization, or per-step in baseline mode).
+    pub kv_uploads: usize,
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
 }
@@ -57,14 +78,25 @@ impl Metrics {
         self.e2e.summary()
     }
 
+    pub fn queue_wait_summary(&self) -> Summary {
+        self.queue_wait.summary()
+    }
+
+    pub fn queue_depth_summary(&self) -> Summary {
+        self.queue_depth.summary()
+    }
+
     pub fn report(&self) -> String {
         let t = self.ttft_summary();
         let e = self.e2e_summary();
+        let qw = self.queue_wait_summary();
+        let qd = self.queue_depth_summary();
         format!(
             "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s \
              prefill_batches={} decode_steps={} \
              ttft(p50/p90)={:.1}/{:.1}ms e2e(p50/p90)={:.1}/{:.1}ms \
-             prefill={:.2}s decode={:.2}s",
+             queue_wait(p50/p90)={:.1}/{:.1}ms queue_depth(p50/max)={:.0}/{:.0} \
+             prefill={:.2}s decode={:.2}s kv_dl/ul={}/{}",
             self.requests_completed,
             self.tokens_generated,
             self.wall(),
@@ -75,8 +107,35 @@ impl Metrics {
             t.p90 / 1e3,
             e.p50 / 1e3,
             e.p90 / 1e3,
+            qw.p50 / 1e3,
+            qw.p90 / 1e3,
+            qd.p50,
+            qd.max,
             self.prefill_time.as_secs_f64(),
             self.decode_time.as_secs_f64(),
+            self.kv_host_syncs,
+            self.kv_uploads,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_includes_queue_and_kv_fields() {
+        let mut m = Metrics::default();
+        m.queue_wait.record(Duration::from_millis(4));
+        m.queue_depth.record_value(3.0);
+        m.queue_depth.record_value(7.0);
+        m.kv_host_syncs = 2;
+        m.kv_uploads = 2;
+        let r = m.report();
+        assert!(r.contains("queue_wait"), "{r}");
+        assert!(r.contains("queue_depth(p50/max)"), "{r}");
+        assert!(r.contains("kv_dl/ul=2/2"), "{r}");
+        assert!((m.queue_wait_summary().p50 - 4000.0).abs() < 1e-6);
+        assert_eq!(m.queue_depth_summary().max, 7.0);
     }
 }

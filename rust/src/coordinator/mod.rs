@@ -12,5 +12,6 @@ pub mod sampler;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig};
+pub use queue::EngineError;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
 pub use server::{EngineClient, EngineServer};

@@ -2,10 +2,32 @@
 //! coordinator).
 
 use std::collections::VecDeque;
-
-use anyhow::{bail, Result};
+use std::fmt;
 
 use super::request::Request;
+
+/// Typed engine-level errors that callers are expected to match on.
+///
+/// Carried as the root of an `anyhow::Error`, so schedulers detect
+/// backpressure with `e.downcast_ref::<EngineError>()` instead of string
+/// matching on the rendered message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The admission queue is at capacity; retry later or shed load.
+    QueueFull { waiting: usize },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::QueueFull { waiting } => {
+                write!(f, "admission queue full ({waiting} waiting); backpressure")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 pub struct AdmissionQueue {
     q: VecDeque<Request>,
@@ -19,12 +41,13 @@ impl AdmissionQueue {
         AdmissionQueue { q: VecDeque::new(), capacity, admitted: 0, rejected: 0 }
     }
 
-    /// Admit a request; errors when the queue is full (backpressure — the
-    /// caller is expected to retry or shed load).
-    pub fn push(&mut self, r: Request) -> Result<()> {
+    /// Admit a request; returns the typed [`EngineError::QueueFull`] when
+    /// the queue is at capacity (the caller is expected to retry or shed
+    /// load).
+    pub fn push(&mut self, r: Request) -> Result<(), EngineError> {
         if self.q.len() >= self.capacity {
             self.rejected += 1;
-            bail!("queue full ({} waiting); backpressure", self.q.len());
+            return Err(EngineError::QueueFull { waiting: self.q.len() });
         }
         self.admitted += 1;
         self.q.push_back(r);
@@ -88,14 +111,28 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_at_capacity() {
+    fn backpressure_at_capacity_is_typed() {
         let mut q = AdmissionQueue::new(2);
         q.push(req(1, 1)).unwrap();
         q.push(req(2, 1)).unwrap();
-        assert!(q.push(req(3, 1)).is_err());
+        let err = q.push(req(3, 1)).unwrap_err();
+        assert_eq!(err, EngineError::QueueFull { waiting: 2 });
         assert_eq!(q.rejected, 1);
         q.pop();
         q.push(req(3, 1)).unwrap();
+    }
+
+    #[test]
+    fn queue_full_downcasts_through_anyhow() {
+        let mut q = AdmissionQueue::new(1);
+        q.push(req(1, 1)).unwrap();
+        let any: anyhow::Error = q.push(req(2, 1)).unwrap_err().into();
+        match any.downcast_ref::<EngineError>() {
+            Some(EngineError::QueueFull { waiting }) => assert_eq!(*waiting, 1),
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // The rendered message still names backpressure for humans.
+        assert!(any.to_string().contains("backpressure"), "{any}");
     }
 
     #[test]

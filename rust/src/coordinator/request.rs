@@ -27,11 +27,22 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sampling: SamplingParams,
+    /// Stamped by `Engine::submit` at enqueue time and carried through the
+    /// admission queue so TTFT/e2e include queueing delay.  `None` until
+    /// submitted.
+    pub submitted_at: Option<Instant>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
-        Request { id, adapter: None, prompt, max_new_tokens, sampling: Default::default() }
+        Request {
+            id,
+            adapter: None,
+            prompt,
+            max_new_tokens,
+            sampling: Default::default(),
+            submitted_at: None,
+        }
     }
 
     pub fn with_adapter(mut self, name: &str) -> Request {
@@ -77,13 +88,17 @@ pub struct ActiveRequest {
 }
 
 impl ActiveRequest {
-    pub fn new(req: Request, slot_adapter: usize, submitted: Instant) -> ActiveRequest {
+    /// `admitted` is when the scheduler pulled the request into a prefill
+    /// batch; `submitted` is taken from the request's submit stamp when
+    /// present, so latency metrics start the clock at the front door
+    /// (queue wait included), not at admission.
+    pub fn new(req: Request, slot_adapter: usize, admitted: Instant) -> ActiveRequest {
         let seed = req.sampling.seed ^ req.id.wrapping_mul(0x9e3779b97f4a7c15);
         ActiveRequest {
             slot_adapter,
             pos: req.prompt.len(),
             generated: Vec::with_capacity(req.max_new_tokens),
-            submitted,
+            submitted: req.submitted_at.unwrap_or(admitted),
             first_token_at: None,
             rng_state: crate::util::rng::Rng::seed_from(seed),
             req,

@@ -233,6 +233,7 @@ pub fn gen_engine(rt: &Rc<Runtime>, config: &str, tr: &Trainer) -> Result<(Engin
         mode: mode.into(),
         decode_slots: 8,
         queue_capacity: 4096,
+        ..Default::default()
     };
     if mode == "base" {
         let params = tr.merged_params()?;

@@ -4,14 +4,14 @@
 //!
 //! ```text
 //! road serve       [--mode road|lora|base] [--slots 8] [--requests 32]
-//!                  [--distinct 8] [--tokens 64]
+//!                  [--distinct 8] [--tokens 64] [--host-roundtrip-kv=true]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
 //!                  [--steps 200] [--seed 0]
 //! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero [--tokens 64]
+//! road bench-serving          --study merge|tokens|hetero|kv [--tokens 64]
 //! road bench-train-efficiency [--iters 50]
 //! road verify      (golden-record numerics check)
 //! ```
@@ -89,6 +89,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mode: mode.clone(),
         decode_slots: slots,
         queue_capacity: 4096,
+        // Diagnostic baseline: --host-roundtrip-kv=true restores the
+        // pre-device-resident full-cache transfer on every decode step.
+        kv_host_roundtrip: args.bool("host-roundtrip-kv"),
     };
     let mut engine = Engine::new(rt, econf)?;
     if distinct > 0 {
@@ -317,6 +320,7 @@ fn cmd_compose(args: &Args) -> Result<()> {
         mode: "road".into(),
         decode_slots: 8,
         queue_capacity: 1024,
+        ..Default::default()
     };
     let mut engine = Engine::new(rt.clone(), econf)?;
     let task_a = compose::ForeignEcho;
@@ -367,7 +371,11 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             let pts = bench::fig4_right(&rt, &counts, tokens, seed)?;
             bench::render_points("Figure 4 (Right) analogue: throughput vs #distinct adapters", &pts)
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero)"),
+        "kv" => {
+            let pts = bench::kv_residency_comparison(&rt, tokens, seed)?;
+            bench::render_points("KV residency: device-resident vs host-roundtrip decode", &pts)
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

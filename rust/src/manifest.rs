@@ -236,6 +236,23 @@ impl Manifest {
         self.dir.join(file)
     }
 
+    /// True when the default artifacts directory holds a manifest.
+    /// Artifact-dependent integration tests and benches use this to skip
+    /// cleanly (instead of erroring) when `make artifacts` has not run.
+    pub fn available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    /// [`Manifest::available`], printing the canonical skip notice when
+    /// artifacts are absent — the one message every gated test/bench shows.
+    pub fn available_or_note() -> bool {
+        let ok = Manifest::available();
+        if !ok {
+            eprintln!("skipped: AOT artifacts not found (run `make artifacts` first)");
+        }
+        ok
+    }
+
     /// Default artifacts directory: $ROAD_ARTIFACTS or ./artifacts.
     pub fn default_dir() -> PathBuf {
         std::env::var("ROAD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
@@ -252,4 +269,17 @@ impl Manifest {
             }
         })
     }
+}
+
+/// Skip the enclosing `#[test]` (early-return) when the AOT artifacts have
+/// not been built, printing the canonical notice via
+/// [`Manifest::available_or_note`].  Shared by every artifact-gated
+/// integration test.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !$crate::Manifest::available_or_note() {
+            return;
+        }
+    };
 }

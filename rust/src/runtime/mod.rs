@@ -9,6 +9,32 @@
 //! `PjRtClient` is `Rc`-based (not Send), so a `Runtime` is owned by a
 //! single engine thread; the coordinator front-end talks to it over
 //! channels (DESIGN.md: std::thread + mpsc in lieu of tokio).
+//!
+//! # Host/device buffer lifecycle
+//!
+//! Three kinds of tensor flow through an [`Executable`]:
+//!
+//! * **Persistent device buffers** ([`Arg::Buffer`]) — parameters, adapter
+//!   banks, frozen backbones.  Uploaded once by their owner (engine,
+//!   trainer) and referenced by every subsequent call; they live as long as
+//!   the owner holds the `xla::PjRtBuffer`.
+//! * **Per-call host tensors** ([`Arg::Host`]) — step inputs (token ids,
+//!   positions, adapter slot ids).  Uploaded inside [`Executable::run`] /
+//!   [`Executable::run_device`] and dropped when the call returns; these
+//!   are small (O(batch)) by design.
+//! * **Loop-carried state** — the decode K/V caches.  These enter as
+//!   `Arg::Buffer` and must *leave* as device buffers too, or the loop pays
+//!   a full cache round-trip every step.  [`Executable::run`] downloads all
+//!   outputs to host (fine for prefill/training, whose outputs are consumed
+//!   host-side); the decode loop instead uses [`Executable::run_device`],
+//!   which returns one `xla::PjRtBuffer` per output so the caller can feed
+//!   the step-`t` K/V outputs straight back in as the step-`t+1` inputs and
+//!   download only the logits ([`buffer_to_host`]).  Per-step transfer
+//!   volume drops from O(layers·B·max_seq·d) to O(B·vocab).
+//!
+//! Ownership rule of thumb: whoever will pass the tensor to the *next* call
+//! keeps the buffer; anything only read by the host is downloaded
+//! immediately and the buffer dropped.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -21,7 +47,7 @@ use crate::manifest::{EntryInfo, Manifest};
 use crate::tensor::{DType, HostTensor};
 
 /// Input argument: either host data (uploaded per call) or a persistent
-/// device buffer (params/banks uploaded once — the decode hot path).
+/// device buffer (params/banks/loop-carried state — the decode hot path).
 pub enum Arg<'a> {
     Host(&'a HostTensor),
     Buffer(&'a xla::PjRtBuffer),
@@ -37,12 +63,10 @@ pub struct Executable {
 }
 
 impl Executable {
-    /// Execute with mixed host/device inputs; outputs come back to host.
-    ///
-    /// The lowered computations have a tuple root (`return_tuple=True`), so
-    /// PJRT returns a single tuple buffer which we decompose into one
-    /// `HostTensor` per declared output.
-    pub fn run(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+    /// Validate `args` against the manifest signature and upload the host
+    /// args.  The returned uploads must stay alive until execution
+    /// finishes; [`positional`] interleaves them back into argument order.
+    fn upload_host_args(&self, args: &[Arg]) -> Result<Vec<xla::PjRtBuffer>> {
         if args.len() != self.info.inputs.len() {
             bail!(
                 "entry {}: {} args provided, {} expected",
@@ -51,45 +75,45 @@ impl Executable {
                 self.info.inputs.len()
             );
         }
-        // Upload host args; keep uploads alive until execution finishes.
         let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut ptrs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
         for (i, a) in args.iter().enumerate() {
-            match a {
-                Arg::Buffer(b) => ptrs.push(b),
-                Arg::Host(t) => {
-                    let spec = &self.info.inputs[i];
-                    if t.shape != spec.shape || t.dtype != spec.dtype {
-                        bail!(
-                            "entry {}: arg {} ({}/{}) shape/dtype mismatch: got {:?} want {:?}",
-                            self.info.name,
-                            i,
-                            spec.group,
-                            spec.name,
-                            (&t.shape, t.dtype),
-                            (&spec.shape, spec.dtype)
-                        );
-                    }
-                    owned.push(upload(&self.client, t)?);
+            if let Arg::Host(t) = a {
+                let spec = &self.info.inputs[i];
+                if t.shape != spec.shape || t.dtype != spec.dtype {
+                    bail!(
+                        "entry {}: arg {} ({}/{}) shape/dtype mismatch: got {:?} want {:?}",
+                        self.info.name,
+                        i,
+                        spec.group,
+                        spec.name,
+                        (&t.shape, t.dtype),
+                        (&spec.shape, spec.dtype)
+                    );
                 }
+                owned.push(upload(&self.client, t)?);
             }
         }
-        // Interleave owned uploads back into position order.
-        let mut owned_iter = owned.iter();
-        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        for a in args {
-            match a {
-                Arg::Buffer(b) => all.push(b),
-                Arg::Host(_) => all.push(owned_iter.next().unwrap()),
-            }
-        }
-        drop(ptrs);
+        Ok(owned)
+    }
+
+    /// Execute with mixed host/device inputs; **all outputs come back to
+    /// host**.  Use for prefill/training/eval entries whose outputs are
+    /// consumed host-side.  The lowered computations have a tuple root
+    /// (`return_tuple=True`), so PJRT returns a single tuple buffer which
+    /// we decompose into one `HostTensor` per declared output.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let owned = self.upload_host_args(args)?;
+        let refs = positional(args, &owned);
 
         let t0 = Instant::now();
-        let result = self.exe.execute_b(&all).with_context(|| format!("executing {}", self.info.name))?;
+        let result = self
+            .exe
+            .execute_b(&refs)
+            .with_context(|| format!("executing {}", self.info.name))?;
         let lit = result[0][0].to_literal_sync()?;
         *self.calls.borrow_mut() += 1;
         *self.total_exec.borrow_mut() += t0.elapsed();
+        drop(owned);
 
         let parts = lit.to_tuple()?;
         if parts.len() != self.info.outputs.len() {
@@ -107,6 +131,37 @@ impl Executable {
         Ok(outs)
     }
 
+    /// Execute with mixed host/device inputs; **outputs stay on device**,
+    /// one `xla::PjRtBuffer` per declared output (untupled execution).
+    ///
+    /// This is the decode hot path: the caller feeds the returned K/V
+    /// buffers back in as the next step's `Arg::Buffer` inputs and
+    /// downloads only what the host actually reads (the logits, via
+    /// [`buffer_to_host`]).
+    pub fn run_device(&self, args: &[Arg]) -> Result<Vec<xla::PjRtBuffer>> {
+        let owned = self.upload_host_args(args)?;
+        let refs = positional(args, &owned);
+
+        let t0 = Instant::now();
+        let outs = self
+            .exe
+            .execute_untupled(&refs)
+            .with_context(|| format!("executing {} (device outputs)", self.info.name))?;
+        *self.calls.borrow_mut() += 1;
+        *self.total_exec.borrow_mut() += t0.elapsed();
+        drop(owned);
+
+        if outs.len() != self.info.outputs.len() {
+            bail!(
+                "entry {}: {} device outputs, manifest says {}",
+                self.info.name,
+                outs.len(),
+                self.info.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
     /// Convenience: all-host-args execution.
     pub fn run_host(&self, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let wrapped: Vec<Arg> = args.iter().map(|t| Arg::Host(t)).collect();
@@ -116,6 +171,18 @@ impl Executable {
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
+}
+
+/// Interleave per-call uploads back into positional argument order
+/// alongside the caller-owned persistent buffers.
+fn positional<'b>(args: &'b [Arg<'b>], owned: &'b [xla::PjRtBuffer]) -> Vec<&'b xla::PjRtBuffer> {
+    let mut owned_iter = owned.iter();
+    args.iter()
+        .map(|a| match a {
+            Arg::Buffer(b) => *b,
+            Arg::Host(_) => owned_iter.next().expect("one upload per host arg"),
+        })
+        .collect()
 }
 
 pub fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
@@ -133,6 +200,13 @@ pub fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffe
             Ok(client.buffer_from_host_buffer(&v, &t.shape, None)?)
         }
     }
+}
+
+/// Download a device buffer to a host tensor (the only per-step transfer
+/// the device-resident decode loop performs, on the logits).
+pub fn buffer_to_host(buf: &xla::PjRtBuffer, dtype: DType) -> Result<HostTensor> {
+    let lit = buf.to_literal_sync()?;
+    literal_to_host(&lit, dtype)
 }
 
 fn literal_to_host(lit: &xla::Literal, dtype: DType) -> Result<HostTensor> {
@@ -268,4 +342,28 @@ pub fn allclose(a: &HostTensor, b: &HostTensor, rtol: f32, atol: f32) -> Result<
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_download_roundtrip_via_stub() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let buf = upload(&client, &t).unwrap();
+        let back = buffer_to_host(&buf, DType::F32).unwrap();
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        let b = HostTensor::f32(vec![2], vec![1.0 + 1e-6, 2.0]);
+        allclose(&a, &b, 1e-4, 1e-5).unwrap();
+        let c = HostTensor::f32(vec![2], vec![1.5, 2.0]);
+        assert!(allclose(&a, &c, 1e-4, 1e-5).is_err());
+    }
 }

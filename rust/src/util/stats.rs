@@ -124,6 +124,12 @@ impl LatencyRecorder {
         self.samples_us.push(us);
     }
 
+    /// Record a unitless sample (the recorder doubles as a plain value
+    /// histogram, e.g. for queue depths).
+    pub fn record_value(&mut self, v: f64) {
+        self.samples_us.push(v);
+    }
+
     pub fn summary(&self) -> Summary {
         summarize(&self.samples_us)
     }

@@ -1,16 +1,20 @@
 //! Engine-level integration tests on the tiny config: continuous batching,
-//! adapter isolation, merged-vs-unmerged equivalence, and backpressure.
+//! adapter isolation, merged-vs-unmerged equivalence, backpressure, and
+//! device-resident vs host-round-trip KV parity.
 //!
 //! All tests share one PJRT process; the tiny artifacts keep compiles fast.
+//! Without artifacts (`make artifacts`) every test skips cleanly.
 
 use std::rc::Rc;
 
 use road::adapters::{Adapter, RoadAdapter};
 use road::coordinator::engine::{Engine, EngineConfig};
+use road::coordinator::queue::EngineError;
 use road::coordinator::request::{FinishReason, Request, SamplingParams};
 use road::model::ParamStore;
 use road::runtime::Runtime;
 use road::util::rng::Rng;
+use road::require_artifacts;
 
 fn rt() -> Rc<Runtime> {
     Rc::new(Runtime::from_default_artifacts().expect("run `make artifacts` first"))
@@ -24,6 +28,7 @@ fn tiny_engine(rt: &Rc<Runtime>, mode: &str) -> Engine {
             mode: mode.into(),
             decode_slots: 2,
             queue_capacity: 64,
+            ..Default::default()
         },
     )
     .unwrap()
@@ -40,6 +45,7 @@ fn greedy(prompt: &[i32], max_new: usize) -> Request {
 
 #[test]
 fn greedy_serving_is_deterministic() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = tiny_engine(&rt, "road");
     let mut rng = Rng::seed_from(3);
@@ -63,8 +69,60 @@ fn greedy_serving_is_deterministic() {
     assert_ne!(out1[0].tokens, out1[1].tokens, "adapter had no effect");
 }
 
+/// The device-resident decode loop must be a pure transfer optimization:
+/// greedy outputs are token-identical to the host-round-trip baseline.
+#[test]
+fn device_resident_kv_matches_host_roundtrip() {
+    require_artifacts!();
+    let rt = rt();
+    let mut rng = Rng::seed_from(12);
+    let adapter = Adapter::Road(RoadAdapter::random(
+        &rt.manifest.config("tiny").unwrap().clone(),
+        &mut rng,
+        0.3,
+    ));
+    let mk_reqs = || {
+        vec![
+            greedy(&[10, 20, 30], 8).with_adapter("x"),
+            greedy(&[5, 6], 6),
+            greedy(&[9, 8, 7, 6], 7).with_adapter("x"),
+        ]
+    };
+    let run = |kv_host_roundtrip: bool| {
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                model: "tiny".into(),
+                mode: "road".into(),
+                decode_slots: 2,
+                queue_capacity: 64,
+                kv_host_roundtrip,
+            },
+        )
+        .unwrap();
+        eng.register_adapter("x", &adapter).unwrap();
+        let mut outs = eng.run_all(mk_reqs()).unwrap();
+        outs.sort_by_key(|o| o.id);
+        (outs, eng.metrics.kv_host_syncs, eng.metrics.decode_steps)
+    };
+    let (device, device_syncs, device_steps) = run(false);
+    let (host, _, host_steps) = run(true);
+    assert_eq!(device.len(), host.len());
+    for (d, h) in device.iter().zip(&host) {
+        assert_eq!(d.tokens, h.tokens, "device-resident decode changed outputs");
+    }
+    assert_eq!(device_steps, host_steps);
+    // Device path materializes at admissions only — strictly fewer full
+    // cache downloads than decode steps.
+    assert!(
+        device_syncs < device_steps,
+        "kv syncs {device_syncs} should be < decode steps {device_steps}"
+    );
+}
+
 #[test]
 fn adapter_state_does_not_leak_across_lanes() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = tiny_engine(&rt, "road");
     let mut rng = Rng::seed_from(4);
@@ -88,6 +146,7 @@ fn adapter_state_does_not_leak_across_lanes() {
 
 #[test]
 fn merged_road_equals_unmerged_road() {
+    require_artifacts!();
     let rt = rt();
     // Unmerged: adapter in the bank, road decode path (Eq. 4).
     let mut unmerged = tiny_engine(&rt, "road");
@@ -104,6 +163,7 @@ fn merged_road_equals_unmerged_road() {
         mode: "base".into(),
         decode_slots: 2,
         queue_capacity: 64,
+        ..Default::default()
     };
     let mut merged = Engine::with_params(rt.clone(), econf, params).unwrap();
     let out_m = merged.run_all(vec![greedy(&[9, 8, 7, 6], 8)]).unwrap();
@@ -113,6 +173,7 @@ fn merged_road_equals_unmerged_road() {
 
 #[test]
 fn more_requests_than_slots_all_complete() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = tiny_engine(&rt, "base");
     let reqs: Vec<Request> =
@@ -125,6 +186,7 @@ fn more_requests_than_slots_all_complete() {
 
 #[test]
 fn stop_token_finishes_early_and_is_stripped() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = tiny_engine(&rt, "base");
     // Find what the model greedily emits, then use it as the stop token.
@@ -139,6 +201,7 @@ fn stop_token_finishes_early_and_is_stripped() {
 
 #[test]
 fn submit_validates_prompts_and_adapters() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = tiny_engine(&rt, "road");
     // Empty prompt.
@@ -154,6 +217,7 @@ fn submit_validates_prompts_and_adapters() {
 
 #[test]
 fn queue_backpressure_rejects_when_full() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = Engine::new(
         rt.clone(),
@@ -162,17 +226,24 @@ fn queue_backpressure_rejects_when_full() {
             mode: "base".into(),
             decode_slots: 2,
             queue_capacity: 2,
+            ..Default::default()
         },
     )
     .unwrap();
     eng.submit(greedy(&[1, 2], 2)).unwrap();
     eng.submit(greedy(&[1, 2], 2)).unwrap();
     let err = eng.submit(greedy(&[1, 2], 2)).unwrap_err();
+    // Typed backpressure, downcastable through the anyhow boundary.
+    assert!(matches!(
+        err.downcast_ref::<EngineError>(),
+        Some(EngineError::QueueFull { waiting: 2 })
+    ));
     assert!(err.to_string().contains("backpressure"), "{err}");
 }
 
 #[test]
 fn metrics_account_for_all_tokens() {
+    require_artifacts!();
     let rt = rt();
     let mut eng = tiny_engine(&rt, "base");
     let outs = eng.run_all(vec![greedy(&[3, 4, 5], 6), greedy(&[6, 7], 6)]).unwrap();
@@ -183,14 +254,39 @@ fn metrics_account_for_all_tokens() {
     assert!(eng.metrics.decode_steps > 0);
 }
 
+/// TTFT/e2e clocks start at submit: a request that waits behind a full set
+/// of slots reports e2e ≥ its queue wait, and the queue-wait histogram
+/// records one sample per admitted request.
+#[test]
+fn latency_metrics_include_queue_wait() {
+    require_artifacts!();
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "base");
+    // 5 requests through 2 slots: at least 3 must wait for a free slot.
+    let reqs: Vec<Request> = (0..5).map(|i| greedy(&[1 + i as i32, 2], 4)).collect();
+    let outs = eng.run_all(reqs).unwrap();
+    assert_eq!(outs.len(), 5);
+    assert_eq!(eng.metrics.queue_wait.count(), 5, "one wait sample per admission");
+    for o in &outs {
+        assert!(o.e2e >= o.ttft, "e2e {} < ttft {}", o.e2e, o.ttft);
+        assert!(o.ttft >= 0.0);
+    }
+    // Depth was sampled every scheduler step and saw the initial backlog.
+    let depth = eng.metrics.queue_depth_summary();
+    assert!(depth.n >= eng.metrics.decode_steps);
+    assert!(depth.max >= 3.0, "max depth {}", depth.max);
+}
+
 #[test]
 fn engine_server_thread_roundtrip() {
+    require_artifacts!();
     use road::coordinator::server::EngineServer;
     let econf = EngineConfig {
         model: "tiny".into(),
         mode: "road".into(),
         decode_slots: 2,
         queue_capacity: 64,
+        ..Default::default()
     };
     let dir = road::Manifest::default_dir();
     let (server, client) = EngineServer::start(econf, dir, |eng| {

@@ -1,8 +1,11 @@
 //! End-to-end numerics: HLO artifacts produced by python/compile/aot.py,
 //! loaded and executed through the rust PJRT runtime, compared against the
 //! golden records computed by jax at artifact-build time.
+//!
+//! Without artifacts (`make artifacts`) every test skips cleanly.
 
-use road::runtime::{allclose, Runtime};
+use road::runtime::{allclose, buffer_to_host, Arg, Runtime};
+use road::require_artifacts;
 
 fn runtime() -> Runtime {
     Runtime::from_default_artifacts().expect("run `make artifacts` first")
@@ -10,6 +13,7 @@ fn runtime() -> Runtime {
 
 #[test]
 fn golden_decode_road() {
+    require_artifacts!();
     let rt = runtime();
     let (ins, expected) = rt.load_golden("decode_road_tiny_b2").unwrap();
     let exe = rt.load("decode_road_tiny_b2").unwrap();
@@ -21,8 +25,48 @@ fn golden_decode_road() {
     }
 }
 
+/// `run_device` must agree with `run`: same entry, same inputs, device
+/// outputs downloaded afterwards equal the host outputs (and the golden
+/// record).  This is the runtime-level contract the device-resident decode
+/// loop depends on.
+#[test]
+fn golden_decode_device_outputs_match_host_outputs() {
+    require_artifacts!();
+    let rt = runtime();
+    let (ins, expected) = rt.load_golden("decode_road_tiny_b2").unwrap();
+    let exe = rt.load("decode_road_tiny_b2").unwrap();
+
+    // Mixed-residency call: upload the K/V cache inputs once and pass them
+    // as persistent buffers, exactly like the engine's decode loop.
+    let is_cache = |name: &str| name == "k_cache" || name == "v_cache";
+    let mut bufs = Vec::new();
+    for (t, spec) in ins.iter().zip(&exe.info.inputs) {
+        if is_cache(&spec.name) {
+            bufs.push(rt.upload(t).unwrap());
+        }
+    }
+    let mut args: Vec<Arg> = Vec::new();
+    let mut bi = 0;
+    for (t, spec) in ins.iter().zip(&exe.info.inputs) {
+        if is_cache(&spec.name) {
+            args.push(Arg::Buffer(&bufs[bi]));
+            bi += 1;
+        } else {
+            args.push(Arg::Host(t));
+        }
+    }
+
+    let dev_outs = exe.run_device(&args).unwrap();
+    assert_eq!(dev_outs.len(), expected.len());
+    for ((buf, spec), e) in dev_outs.iter().zip(&exe.info.outputs).zip(&expected) {
+        let host = buffer_to_host(buf, spec.dtype).unwrap();
+        allclose(&host, e, 1e-4, 1e-5).unwrap();
+    }
+}
+
 #[test]
 fn golden_decode_base() {
+    require_artifacts!();
     let rt = runtime();
     let (ins, expected) = rt.load_golden("decode_base_tiny_b2").unwrap();
     let exe = rt.load("decode_base_tiny_b2").unwrap();
@@ -35,6 +79,7 @@ fn golden_decode_base() {
 
 #[test]
 fn golden_prefill_road() {
+    require_artifacts!();
     let rt = runtime();
     let (ins, expected) = rt.load_golden("prefill_road_tiny_b2_l16").unwrap();
     let exe = rt.load("prefill_road_tiny_b2_l16").unwrap();
@@ -47,6 +92,7 @@ fn golden_prefill_road() {
 
 #[test]
 fn golden_train_step_road1() {
+    require_artifacts!();
     let rt = runtime();
     let (ins, expected) = rt.load_golden("train_road1_tiny").unwrap();
     let exe = rt.load("train_road1_tiny").unwrap();
@@ -62,6 +108,7 @@ fn golden_train_step_road1() {
 
 #[test]
 fn golden_eval_loss_road1() {
+    require_artifacts!();
     let rt = runtime();
     let (ins, expected) = rt.load_golden("eval_loss_road1_tiny").unwrap();
     let exe = rt.load("eval_loss_road1_tiny").unwrap();
@@ -74,6 +121,7 @@ fn golden_eval_loss_road1() {
 
 #[test]
 fn executable_rejects_wrong_arity_and_shape() {
+    require_artifacts!();
     let rt = runtime();
     let exe = rt.load("decode_base_tiny_b2").unwrap();
     assert!(exe.run_host(&[]).is_err());
@@ -87,6 +135,7 @@ fn executable_rejects_wrong_arity_and_shape() {
 
 #[test]
 fn manifest_loads_and_entries_consistent() {
+    require_artifacts!();
     let rt = runtime();
     assert!(rt.manifest.entries.len() >= 90, "{}", rt.manifest.entries.len());
     for cfg in ["tiny", "serve", "train", "train2"] {

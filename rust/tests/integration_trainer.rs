@@ -8,6 +8,7 @@ use road::runtime::Runtime;
 use road::tasks::{lm_batch, Example};
 use road::trainer::{linear_lr, TrainBatch, Trainer};
 use road::util::rng::Rng;
+use road::require_artifacts;
 
 fn rt() -> Rc<Runtime> {
     Rc::new(Runtime::from_default_artifacts().expect("run `make artifacts` first"))
@@ -30,6 +31,7 @@ fn tiny_batch(rng: &mut Rng) -> TrainBatch {
 
 #[test]
 fn road1_training_reduces_loss_on_tiny() {
+    require_artifacts!();
     let rt = rt();
     let mut tr = Trainer::new(rt, "tiny", "road1").unwrap();
     assert_eq!((tr.batch, tr.seq_len), (4, 16));
@@ -50,6 +52,7 @@ fn road1_training_reduces_loss_on_tiny() {
 
 #[test]
 fn trainable_save_load_roundtrip_preserves_eval() {
+    require_artifacts!();
     let rt = rt();
     let mut tr = Trainer::new(rt.clone(), "tiny", "road1").unwrap();
     let mut rng = Rng::seed_from(2);
@@ -72,6 +75,7 @@ fn trainable_save_load_roundtrip_preserves_eval() {
 
 #[test]
 fn identity_init_matches_base_model_loss() {
+    require_artifacts!();
     // theta=0, alpha=1 must be a no-op (the paper's "preserve the starting
     // point" init): eval through road1 == eval through the base model.
     let rt = rt();
@@ -88,6 +92,7 @@ fn identity_init_matches_base_model_loss() {
 
 #[test]
 fn exported_adapter_has_identity_blocks_before_training() {
+    require_artifacts!();
     let rt = rt();
     let tr = Trainer::new(rt, "tiny", "road1").unwrap();
     match tr.export_adapter().unwrap() {
@@ -103,6 +108,7 @@ fn exported_adapter_has_identity_blocks_before_training() {
 
 #[test]
 fn last_logits_shape_and_determinism() {
+    require_artifacts!();
     let rt = rt();
     let tr = Trainer::new(rt, "tiny", "road1").unwrap();
     let (b, l) = (tr.batch, tr.seq_len);
@@ -116,6 +122,7 @@ fn last_logits_shape_and_determinism() {
 
 #[test]
 fn grad_mask_freezes_complementary_subspace() {
+    require_artifacts!();
     // road1_masked exists on the "train" config: mask the lower half and
     // verify those theta/alpha entries never move (the composability
     // mechanism, Fig 5).
@@ -156,6 +163,7 @@ fn grad_mask_freezes_complementary_subspace() {
 
 #[test]
 fn available_methods_cover_the_paper_baselines() {
+    require_artifacts!();
     let rt = rt();
     let methods = road::trainer::available_methods(&rt.manifest, "train");
     for want in [
@@ -168,6 +176,7 @@ fn available_methods_cover_the_paper_baselines() {
 
 #[test]
 fn road1_fc1_has_fewer_trainables_than_road1() {
+    require_artifacts!();
     // Table 2's RoAd1(fc1) row: adapter on the first feed-forward layer
     // only -> a strict subset of the parameters.
     let rt = rt();

@@ -145,7 +145,7 @@ fn prop_compose_blocks_come_from_the_right_parent() {
         let c = RoadAdapter::compose(&a, &b, frac).unwrap();
         for (k, vc) in &c.per_proj {
             let d = vc.dim();
-            let split = ((d / 2) as f32 * frac) as usize * 2;
+            let split = road::adapters::subspace_split(d, frac);
             assert_eq!(&vc.r1[..split], &a.per_proj[k].r1[..split]);
             assert_eq!(&vc.r1[split..], &b.per_proj[k].r1[split..]);
             assert_eq!(&vc.r2[..split], &a.per_proj[k].r2[..split]);

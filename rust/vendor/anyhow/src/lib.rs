@@ -1,0 +1,186 @@
+//! Offline shim of the `anyhow` API surface the `road` crate uses.
+//!
+//! The build image carries no crates.io registry, so this path crate stands
+//! in for the real `anyhow`.  It provides:
+//!
+//! * [`Error`] — a context-carrying error with `downcast_ref` to the
+//!   original typed error (used by the engine to detect
+//!   `EngineError::QueueFull` without string matching),
+//! * [`Result`] with a defaulted error type,
+//! * [`anyhow!`] / [`bail!`] macros,
+//! * the [`Context`] extension trait (`.context` / `.with_context`).
+//!
+//! Display intentionally renders the full context chain outermost-first
+//! ("loading x: reading y: No such file"); the real anyhow reserves that for
+//! `{:#}` and shows only the outermost layer in `{}`.  Every call site in
+//! this repository treats the message as human-facing text, so the richer
+//! default is the safer substitution.
+
+use std::any::Any;
+use std::fmt;
+
+/// Object-safe carrier for the original error: formatting plus `Any` for
+/// typed downcasts.  Blanket-implemented for anything `Display + Debug`.
+trait ErrObj: Any + Send + Sync {
+    fn msg(&self) -> String;
+    fn as_any(&self) -> &dyn Any;
+}
+
+impl<E: fmt::Display + fmt::Debug + Send + Sync + 'static> ErrObj for E {
+    fn msg(&self) -> String {
+        format!("{self}")
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// A dynamic error with a stack of context strings around a typed root.
+pub struct Error {
+    /// Context layers, outermost first.
+    ctx: Vec<String>,
+    root: Box<dyn ErrObj>,
+}
+
+/// Root payload for errors born from a message (`anyhow!("...")`).
+#[derive(Debug)]
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Error {
+    /// Build an error from a plain message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { ctx: Vec::new(), root: Box::new(Message(m.to_string())) }
+    }
+
+    /// Wrap with an outer context layer (what `Context::context` uses).
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.ctx.insert(0, c.to_string());
+        self
+    }
+
+    /// Borrow the original typed root error, if it is a `T`.
+    ///
+    /// Context layers do not change the root, so an `EngineError` pushed
+    /// through several `.context(...)` wrappers still downcasts.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.root.as_any().downcast_ref::<T>()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.ctx {
+            write!(f, "{c}: ")?;
+        }
+        f.write_str(&self.root.msg())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { ctx: Vec::new(), root: Box::new(e) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(c)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    #[derive(Debug, PartialEq)]
+    struct Marker(u32);
+
+    impl std::fmt::Display for Marker {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "marker {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Marker {}
+
+    #[test]
+    fn message_and_context_chain() {
+        let e: Error = crate::anyhow!("root {}", 7);
+        assert_eq!(e.to_string(), "root 7");
+        let r: Result<()> = Err(e);
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root 7");
+    }
+
+    #[test]
+    fn downcast_survives_context() {
+        let r: Result<()> = Err(Marker(3).into());
+        let e = r.with_context(|| "wrapped").unwrap_err();
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(3)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        assert_eq!(e.to_string(), "wrapped: marker 3");
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn inner() -> Result<()> {
+            crate::bail!("boom {}", 1)
+        }
+        fn outer() -> Result<()> {
+            inner().context("ctx")?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "ctx: boom 1");
+    }
+}

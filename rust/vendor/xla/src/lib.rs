@@ -1,0 +1,279 @@
+//! Offline stand-in for the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build image bakes no `xla_extension` native library, so this path
+//! crate supplies the API surface the `road` runtime compiles against:
+//!
+//! * **Functional**: client construction, host→"device" uploads
+//!   ([`PjRtClient::buffer_from_host_buffer`]), "device"→host downloads
+//!   ([`PjRtBuffer::to_literal_sync`]), literal decomposition.  Buffers are
+//!   host-memory blocks behind `Rc` handles, so upload/download carry real
+//!   memcpy cost and handle moves are free — the same cost *ordering* as a
+//!   real PJRT device, which keeps the coordinator's transfer-avoidance
+//!   logic observable (and benchmarkable) without hardware.
+//! * **Stubbed**: [`PjRtLoadedExecutable::execute_b`] /
+//!   [`PjRtLoadedExecutable::execute_untupled`] return an error — running
+//!   HLO needs the native runtime.  Integration tests that execute
+//!   artifacts skip when artifacts are absent, and fail with this error if
+//!   artifacts exist but the native runtime does not.
+//!
+//! Swapping in the real bindings is a Cargo.toml change: replace the
+//! `vendor/xla` path dependency with `xla-rs` + `xla_extension`, and
+//! provide `execute_untupled` as `execute` with
+//! `ExecuteOptions::untuple_result = true`.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type for all stub operations (`Debug`-formatted by callers).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Scalar types that can cross the host/buffer boundary.
+pub trait NativeType: Copy + Default + 'static {
+    const PRIM: PrimitiveType;
+}
+
+impl NativeType for f32 {
+    const PRIM: PrimitiveType = PrimitiveType::F32;
+}
+
+impl NativeType for i32 {
+    const PRIM: PrimitiveType = PrimitiveType::S32;
+}
+
+fn to_bytes<T: NativeType>(values: &[T]) -> Vec<u8> {
+    let n = std::mem::size_of_val(values);
+    let mut out = vec![0u8; n];
+    // SAFETY: T is a plain scalar; lengths match by construction.
+    unsafe {
+        std::ptr::copy_nonoverlapping(values.as_ptr() as *const u8, out.as_mut_ptr(), n);
+    }
+    out
+}
+
+fn from_bytes<T: NativeType>(bytes: &[u8]) -> Vec<T> {
+    let n = bytes.len() / std::mem::size_of::<T>();
+    let mut out = vec![T::default(); n];
+    // SAFETY: out has exactly n elements; T accepts any bit pattern.
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            bytes.as_ptr(),
+            out.as_mut_ptr() as *mut u8,
+            n * std::mem::size_of::<T>(),
+        );
+    }
+    out
+}
+
+struct BufferData {
+    prim: PrimitiveType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+/// A "device" buffer: host memory behind a cheap handle.  Like the real
+/// binding, it is single-threaded (`Rc`) and not clonable by value — moving
+/// a `PjRtBuffer` moves the handle, not the payload.
+pub struct PjRtBuffer {
+    data: Rc<BufferData>,
+}
+
+impl PjRtBuffer {
+    /// Download: copies the payload out (the expensive direction).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal {
+            prim: self.data.prim,
+            dims: self.data.dims.clone(),
+            bytes: self.data.bytes.clone(),
+            tuple: None,
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.data.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.dims.iter().product::<i64>().max(1) as usize
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side value: either one array or a tuple of literals.
+pub struct Literal {
+    prim: PrimitiveType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(XlaError("array_shape on a tuple literal".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(XlaError("to_vec on a tuple literal".into()));
+        }
+        if self.prim != T::PRIM {
+            return Err(XlaError(format!(
+                "literal is {:?}, requested {:?}",
+                self.prim,
+                T::PRIM
+            )));
+        }
+        Ok(from_bytes(&self.bytes))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| XlaError("to_tuple on an array literal".into()))
+    }
+}
+
+/// Parsed HLO module (the stub only checks the artifact is readable; the
+/// native binding reparses instruction ids from the text form).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text_len: usize,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text_len: text.len() })
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    fn unavailable<T>() -> Result<T> {
+        Err(XlaError(
+            "HLO execution needs the native PJRT runtime (xla_extension); \
+             this build uses the offline host-memory stub — swap the \
+             vendor/xla path dependency for xla-rs to execute artifacts"
+                .into(),
+        ))
+    }
+
+    /// Execute with a tuple root; `result[0][0]` is the tuple buffer.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Self::unavailable()
+    }
+
+    /// Execute with `untuple_result`: one device buffer per output, never
+    /// materialized on host.  (On the native binding: `execute` with
+    /// `ExecuteOptions::untuple_result = true`.)
+    pub fn execute_untupled(&self, _args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        Self::unavailable()
+    }
+}
+
+/// Handle to the (stub) CPU platform.  Cheap to clone, not `Send` — same
+/// contract as the real `Rc`-based client.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: Rc::new(()) })
+    }
+
+    /// Upload: copies host data into a fresh buffer (the expensive
+    /// direction).
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        if n != data.len() {
+            return Err(XlaError(format!(
+                "host buffer has {} elements, shape {dims:?} wants {n}",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {
+            data: Rc::new(BufferData {
+                prim: T::PRIM,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                bytes: to_bytes(data),
+            }),
+        })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer(&[1.0f32, 2.0, 3.0, 4.0], &[2, 2], None).unwrap();
+        assert_eq!(b.dims(), &[2, 2]);
+        let lit = b.to_literal_sync().unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer(&[1i32, 2], &[3], None).is_err());
+    }
+
+    #[test]
+    fn execution_is_unavailable() {
+        let exe = PjRtLoadedExecutable;
+        assert!(exe.execute_b(&[]).is_err());
+        assert!(exe.execute_untupled(&[]).is_err());
+    }
+}
