@@ -1,17 +1,19 @@
 //! Microbench of coordinator data structures on the hot path: slot
-//! allocation, queue admission/pop, adapter bank slot writes, request
-//! construction, and the decode step's KV transfer cost under host-round-
-//! trip vs device-resident residency.  The data-structure ops must stay
-//! negligible next to a decode step (~10ms); the bench prints each op's
-//! cost so regressions are visible.
+//! allocation, queue admission/pop, adapter bank slot writes, LRU paging
+//! bookkeeping, per-slot vs whole-bank upload cost, request construction,
+//! and the decode step's KV transfer cost under host-round-trip vs
+//! device-resident residency.  The data-structure ops must stay negligible
+//! next to a decode step (~10ms); the bench prints each op's cost so
+//! regressions are visible.
 //!
 //! ```bash
 //! cargo bench --bench coordinator_micro
 //! ```
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use road::adapters::{Adapter, AdapterBank, RoadAdapter};
+use road::adapters::{Adapter, AdapterBank, AdapterRegistry, PageOutcome, RoadAdapter};
 use road::coordinator::kv::SlotAllocator;
 use road::coordinator::queue::AdmissionQueue;
 use road::coordinator::request::Request;
@@ -75,6 +77,69 @@ fn main() {
     bench("adapter bank set_slot (serve-size road)", 2_000, || {
         bank.set_slot(3, &adapter).unwrap();
     });
+
+    // LRU paging bookkeeping: a worst-case miss+evict page-in on a fully
+    // occupied bank (store lookup, victim scan, set_slot, map updates).
+    {
+        let n_adapters = 64;
+        let mut reg =
+            AdapterRegistry::new(AdapterBank::new(&cfg, "road", cfg.n_adapters).unwrap());
+        for i in 0..n_adapters {
+            let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.2));
+            reg.register(&format!("user-{i}"), &a).unwrap();
+        }
+        let mut next = 0usize;
+        bench("registry page-in (miss+evict, 64 adapters)", 2_000, || {
+            let out = reg.ensure_resident(&format!("user-{next}")).unwrap();
+            std::hint::black_box(&out);
+            next = (next + 1) % n_adapters; // cycling 64 names through 15 slots: always a miss
+        });
+        let resident = reg.resident_names()[0].to_string();
+        bench("registry page hit (resident adapter)", 100_000, || {
+            match reg.ensure_resident(&resident).unwrap() {
+                PageOutcome::Hit(s) => {
+                    std::hint::black_box(s);
+                }
+                o => panic!("expected hit, got {o:?}"),
+            }
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Bank refresh after a single-slot change: paged per-slot rows vs the
+    // whole-bank re-upload baseline.  The byte figures are what crosses
+    // the host/device boundary as *bank content* on each path; the paged
+    // stub path additionally rebuilds the stacked buffers in place of the
+    // device-side scatter a native backend would run (see
+    // AdapterBank::upload_dirty).
+    // ------------------------------------------------------------------
+    {
+        let client = xla::PjRtClient::cpu().expect("xla client");
+        let mut bank = AdapterBank::new(&cfg, "road", cfg.n_adapters).unwrap();
+        let mut bufs = BTreeMap::new();
+        bank.upload_dirty(&client, &mut bufs, true).unwrap();
+        let slot_kb = bank.slot_bytes() as f64 / 1e3;
+        let total_kb = bank.total_bytes() as f64 / 1e3;
+        // NB: compare the KB figures, not the ns/op — the stub's paged
+        // path also executes the scatter stand-in (a full host-mirror
+        // refresh), so its wall time is an upper bound, not the win.
+        bench(
+            &format!("bank refresh, paged ({slot_kb:.1} KB traffic/slot + scatter stand-in)"),
+            500,
+            || {
+                bank.set_slot(3, &adapter).unwrap();
+                std::hint::black_box(bank.upload_dirty(&client, &mut bufs, true).unwrap());
+            },
+        );
+        bench(
+            &format!("bank refresh, whole-bank ({total_kb:.1} KB bank traffic)"),
+            500,
+            || {
+                bank.set_slot(3, &adapter).unwrap();
+                std::hint::black_box(bank.upload_dirty(&client, &mut bufs, false).unwrap());
+            },
+        );
+    }
 
     bench("request construction (8-token prompt)", 100_000, || {
         std::hint::black_box(

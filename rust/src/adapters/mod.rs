@@ -1,12 +1,31 @@
-//! Adapter representations, banks and the serving-side registry.
+//! Adapter representations, the host-side adapter store, and the
+//! device-bank page cache behind the serving registry.
 //!
 //! All three RoAd variants share the serving representation of two
 //! effective vectors (R1, R2) per adapted projection (Eq. 4); training
 //! parameterizations (theta/alpha in 1/2/4-way sharing, Table 1) convert
 //! through [`RoadVectors::from_theta_alpha`].  LoRA and (IA)³ adapters are
 //! carried for the Figure-4 baseline comparison.
+//!
+//! # Virtualized adapter storage
+//!
+//! The paper's serving pitch is per-user adapters at near-zero batching
+//! cost, which implies far more registered adapters than any fixed device
+//! bank can hold.  Storage is therefore split in two:
+//!
+//! * [`AdapterStore`] — host-side, unbounded, name-keyed.  Registration
+//!   always succeeds; this is where "thousands of trained adapters" live.
+//! * [`AdapterBank`] — the device-facing `[n_slots, ...]` tensors matching
+//!   the HLO bank inputs, reinterpreted as a page cache over the store.
+//!
+//! [`AdapterRegistry`] manages the mapping: admission pages a request's
+//! adapter into a free-or-LRU-evictable bank slot
+//! ([`AdapterRegistry::ensure_resident`]) and pins slots referenced by
+//! in-flight decode lanes so eviction can never corrupt an active request.
+//! Dirty state is tracked per slot, so re-uploads move only the rows that
+//! changed ([`AdapterBank::upload_dirty`]).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -77,7 +96,7 @@ impl RoadVectors {
 }
 
 /// A trained RoAd adapter: effective vectors per adapted projection, keyed
-/// "blocks.<i>.<proj>".
+/// `blocks.<i>.<proj>`.
 #[derive(Clone, Debug, Default)]
 pub struct RoadAdapter {
     pub per_proj: BTreeMap<String, RoadVectors>,
@@ -298,14 +317,33 @@ impl Adapter {
 }
 
 /// Bank of adapter slots matching the HLO bank inputs: per bank key a
-/// [n_slots, ...] tensor.  Slot 0 is pinned to identity so unoccupied
+/// [n_slots, ...] tensor.  Slot 0 is reserved for identity so unoccupied
 /// decode lanes are no-ops.
+///
+/// Dirty state is tracked *per slot*: installing one adapter marks only
+/// that slot's rows stale, and [`AdapterBank::upload_dirty`] moves only
+/// those rows host-to-device instead of re-shipping the whole bank.
 pub struct AdapterBank {
     pub mode: String,
     pub n_slots: usize,
     /// bank key ("blocks.i.proj.r1" / ".lb" / ...) -> stacked tensor.
     pub tensors: BTreeMap<String, HostTensor>,
-    pub dirty: bool,
+    /// Slots whose host rows are newer than the device copy.
+    dirty_slots: BTreeSet<usize>,
+    /// A fresh bank (or an explicit invalidation) re-uploads everything.
+    all_dirty: bool,
+}
+
+/// What one [`AdapterBank::upload_dirty`] call actually transferred.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BankUpload {
+    /// Host-to-device bytes attributable to bank content (full tensors on
+    /// a whole-bank upload, only the touched slot rows on a paged upload).
+    pub bytes: usize,
+    /// Per-slot row tensors staged through the runtime on the paged path.
+    pub staged_rows: usize,
+    /// True when the whole bank was (re)uploaded.
+    pub full: bool,
 }
 
 impl AdapterBank {
@@ -356,7 +394,121 @@ impl AdapterBank {
                 }
             }
         }
-        Ok(AdapterBank { mode: mode.to_string(), n_slots, tensors, dirty: true })
+        Ok(AdapterBank {
+            mode: mode.to_string(),
+            n_slots,
+            tensors,
+            dirty_slots: BTreeSet::new(),
+            all_dirty: true,
+        })
+    }
+
+    /// Any slot (or the whole bank) newer on host than on device?
+    pub fn is_dirty(&self) -> bool {
+        self.all_dirty || !self.dirty_slots.is_empty()
+    }
+
+    /// Slots with stale device rows (empty when `all_dirty` covers them).
+    pub fn dirty_slots(&self) -> Vec<usize> {
+        self.dirty_slots.iter().copied().collect()
+    }
+
+    /// Force the next upload to re-ship every tensor.
+    pub fn mark_all_dirty(&mut self) {
+        self.all_dirty = true;
+    }
+
+    /// Drop a slot's dirty mark without uploading (used when the slot is
+    /// freed: its rows are unreferenced, so shipping them would be wasted
+    /// traffic — re-occupation re-marks it via `set_slot`).
+    pub fn clear_slot_dirty(&mut self, slot: usize) {
+        self.dirty_slots.remove(&slot);
+    }
+
+    /// Host bytes of one slot's rows across every bank key.
+    pub fn slot_bytes(&self) -> usize {
+        self.tensors
+            .values()
+            .map(|t| t.bytes().len() / self.n_slots.max(1))
+            .sum()
+    }
+
+    /// Host bytes of the full bank (every key, every slot).
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes().len()).sum()
+    }
+
+    /// Copy of one slot's row for `key`, shaped `[1, ...]` like a single
+    /// page (the staging tensor for a per-slot upload).
+    pub fn slot_row(&self, key: &str, slot: usize) -> Result<HostTensor> {
+        let t = self.tensors.get(key).ok_or_else(|| anyhow!("bank missing {key}"))?;
+        if slot >= self.n_slots {
+            bail!("slot {slot} out of range ({})", self.n_slots);
+        }
+        let row_elems = t.elem_count() / self.n_slots;
+        let mut shape = t.shape.clone();
+        shape[0] = 1;
+        Ok(HostTensor::f32(shape, t.read_f32_range(slot * row_elems, row_elems)))
+    }
+
+    /// Refresh the device copies in `bufs` from the host tensors, moving as
+    /// little as the dirty state allows.  Returns `None` when nothing was
+    /// stale (or the bank carries no tensors — base mode).
+    ///
+    /// * Whole-bank path (`paged = false`, a fresh bank, or an explicit
+    ///   [`AdapterBank::mark_all_dirty`]): every stacked tensor is
+    ///   re-uploaded; `bytes` counts the full bank.
+    /// * Paged path: each dirty slot's rows are staged through real
+    ///   per-row uploads and `bytes` counts only those rows — the
+    ///   host-to-device traffic a paged bank actually pays.  On a native
+    ///   PJRT backend the staged row would then be scattered into the
+    ///   resident bank buffer by a compiled `dynamic-update-slice` step
+    ///   (device-side, no further host traffic); the offline stub cannot
+    ///   execute HLO, so the scatter is stood in for by refreshing the
+    ///   stacked buffer from the already-current host mirror.
+    pub fn upload_dirty(
+        &mut self,
+        client: &xla::PjRtClient,
+        bufs: &mut BTreeMap<String, xla::PjRtBuffer>,
+        paged: bool,
+    ) -> Result<Option<BankUpload>> {
+        if self.tensors.is_empty() {
+            return Ok(None);
+        }
+        let fresh = bufs.len() != self.tensors.len();
+        if !self.is_dirty() && !fresh {
+            return Ok(None);
+        }
+        let mut up = BankUpload::default();
+        if fresh || self.all_dirty || !paged {
+            for (name, t) in &self.tensors {
+                bufs.insert(name.clone(), crate::runtime::upload(client, t)?);
+                up.bytes += t.bytes().len();
+            }
+            up.full = true;
+        } else {
+            for &slot in &self.dirty_slots {
+                for key in self.tensors.keys() {
+                    let row = self.slot_row(key, slot)?;
+                    // The page transfer itself: one row host-to-device (on
+                    // a native backend the staged buffer is consumed by
+                    // the device-side scatter below).
+                    let _staged = crate::runtime::upload(client, &row)?;
+                    up.bytes += row.bytes().len();
+                    up.staged_rows += 1;
+                }
+            }
+            // Stand-in for the device-side scatter of the staged rows (see
+            // doc comment): rebuild the stacked buffers from the host
+            // mirror.  Not counted as bank traffic — on a real backend this
+            // step never crosses the host/device boundary.
+            for (name, t) in &self.tensors {
+                bufs.insert(name.clone(), crate::runtime::upload(client, t)?);
+            }
+        }
+        self.dirty_slots.clear();
+        self.all_dirty = false;
+        Ok(Some(up))
     }
 
     /// Install an adapter into bank slot `slot`.
@@ -400,62 +552,291 @@ impl AdapterBank {
             }
             (a, m) => bail!("adapter mode {} incompatible with bank mode {m}", a.mode()),
         }
-        self.dirty = true;
+        self.dirty_slots.insert(slot);
         Ok(())
     }
 }
 
-/// Registry mapping user-visible adapter names to bank slots.
+/// Host-side store of trained adapters, keyed by user-visible name.
 ///
-/// Slot 0 is reserved for identity (requests without an adapter).
+/// Unbounded: registration never fails for capacity reasons — device
+/// residency is a separate, paged concern ([`AdapterRegistry`]).
+pub struct AdapterStore {
+    mode: String,
+    adapters: BTreeMap<String, Adapter>,
+}
+
+impl AdapterStore {
+    pub fn new(mode: &str) -> AdapterStore {
+        AdapterStore { mode: mode.to_string(), adapters: BTreeMap::new() }
+    }
+
+    /// Insert or replace `name`.  Only mode mismatches fail — there is no
+    /// capacity limit.
+    pub fn insert(&mut self, name: &str, adapter: &Adapter) -> Result<()> {
+        if adapter.mode() != self.mode {
+            bail!("adapter mode {} incompatible with store mode {}", adapter.mode(), self.mode);
+        }
+        self.adapters.insert(name.to_string(), adapter.clone());
+        Ok(())
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Adapter> {
+        self.adapters.remove(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Adapter> {
+        self.adapters.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.adapters.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.adapters.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+}
+
+/// Result of paging an adapter toward device residency.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PageOutcome {
+    /// Already resident in this bank slot (LRU stamp refreshed).
+    Hit(usize),
+    /// Paged into `slot`; `evicted` names the adapter that lost the slot.
+    Paged { slot: usize, evicted: Option<String> },
+    /// Every pageable slot is pinned by an in-flight request; the caller
+    /// should leave the request queued and retry after a lane frees up.
+    Stalled,
+}
+
+/// Per-slot paging state (slot 0 is the reserved identity page).
+#[derive(Clone, Debug, Default)]
+struct SlotState {
+    name: Option<String>,
+    /// In-flight decode lanes referencing this slot.  Pinned slots are
+    /// never eviction victims, so paging cannot corrupt active requests.
+    pins: usize,
+    /// LRU stamp (registry clock at last touch).
+    last_used: u64,
+}
+
+/// The serving-side registry: an unbounded [`AdapterStore`] fronted by the
+/// device [`AdapterBank`] acting as an LRU page cache of bank slots.
+///
+/// Slot 0 is reserved for identity (requests without an adapter) and is
+/// never paged or evicted.  `usable` may be smaller than the bank's tensor
+/// slot count to model a tighter device budget than the compiled artifact
+/// allows (the adapter-churn bench pins it to a few slots).
 pub struct AdapterRegistry {
     pub bank: AdapterBank,
-    by_name: BTreeMap<String, usize>,
-    next_slot: usize,
+    pub store: AdapterStore,
+    slots: Vec<SlotState>,
+    resident: BTreeMap<String, usize>,
+    clock: u64,
+    usable: usize,
 }
 
 impl AdapterRegistry {
     pub fn new(bank: AdapterBank) -> AdapterRegistry {
-        AdapterRegistry { bank, by_name: BTreeMap::new(), next_slot: 1 }
+        let usable = bank.n_slots;
+        AdapterRegistry::with_usable_slots(bank, usable)
     }
 
-    /// Register a named adapter; returns its slot id.
-    pub fn register(&mut self, name: &str, adapter: &Adapter) -> Result<usize> {
-        if let Some(&slot) = self.by_name.get(name) {
-            self.bank.set_slot(slot, adapter)?;
-            return Ok(slot);
+    /// Like [`AdapterRegistry::new`], but only slots `1..usable` are
+    /// pageable (clamped to the bank's real slot count).
+    pub fn with_usable_slots(bank: AdapterBank, usable: usize) -> AdapterRegistry {
+        let usable = usable.min(bank.n_slots);
+        let store = AdapterStore::new(&bank.mode);
+        AdapterRegistry {
+            slots: vec![SlotState::default(); bank.n_slots],
+            resident: BTreeMap::new(),
+            clock: 0,
+            usable,
+            bank,
+            store,
         }
-        if self.next_slot >= self.bank.n_slots {
+    }
+
+    /// Register (or replace) a named adapter in the host store.  Always
+    /// succeeds for new names — capacity is the store's, not the bank's.
+    ///
+    /// Replacing an adapter that is currently pinned by an in-flight
+    /// request is rejected so active lanes keep the weights they started
+    /// with; replacing a merely-resident adapter rewrites its slot in
+    /// place.
+    pub fn register(&mut self, name: &str, adapter: &Adapter) -> Result<()> {
+        if adapter.mode() != self.bank.mode {
             bail!(
-                "adapter bank full ({} slots); unregister something first",
-                self.bank.n_slots
+                "adapter mode {} incompatible with bank mode {}",
+                adapter.mode(),
+                self.bank.mode
             );
         }
-        let slot = self.next_slot;
+        if let Some(&slot) = self.resident.get(name) {
+            if self.slots[slot].pins > 0 {
+                bail!(
+                    "adapter {name:?} is serving in-flight requests (bank slot {slot} is \
+                     pinned); re-register after they finish"
+                );
+            }
+            self.bank.set_slot(slot, adapter)?;
+        }
+        self.store.insert(name, adapter)
+    }
+
+    /// Remove `name` from the store (and its bank slot, when resident).
+    /// Rejected while the adapter is pinned by an in-flight request.
+    pub fn unregister(&mut self, name: &str) -> Result<()> {
+        if !self.store.contains(name) {
+            bail!("unknown adapter {name:?}");
+        }
+        if let Some(&slot) = self.resident.get(name) {
+            if self.slots[slot].pins > 0 {
+                bail!(
+                    "adapter {name:?} is serving in-flight requests (bank slot {slot} is \
+                     pinned); unregister after they finish"
+                );
+            }
+            self.resident.remove(name);
+            self.slots[slot] = SlotState::default();
+            self.bank.clear_slot_dirty(slot);
+        }
+        self.store.remove(name);
+        Ok(())
+    }
+
+    /// Drop `name` from the device bank but keep it in the store.  Returns
+    /// whether a slot was actually freed (false = registered but not
+    /// resident); unknown names and pinned adapters are rejected.
+    pub fn evict(&mut self, name: &str) -> Result<bool> {
+        if !self.store.contains(name) {
+            bail!("unknown adapter {name:?}");
+        }
+        let Some(&slot) = self.resident.get(name) else {
+            return Ok(false);
+        };
+        if self.slots[slot].pins > 0 {
+            bail!("adapter {name:?} is pinned by an in-flight request; cannot evict");
+        }
+        self.resident.remove(name);
+        self.slots[slot] = SlotState::default();
+        self.bank.clear_slot_dirty(slot);
+        Ok(true)
+    }
+
+    /// Make `name` device-resident, paging it into a free or LRU-evictable
+    /// slot if needed.  [`PageOutcome::Stalled`] means every pageable slot
+    /// is pinned — the caller defers admission rather than corrupting an
+    /// active lane.
+    pub fn ensure_resident(&mut self, name: &str) -> Result<PageOutcome> {
+        if !self.store.contains(name) {
+            bail!("unknown adapter {name:?}");
+        }
+        self.clock += 1;
+        if let Some(&slot) = self.resident.get(name) {
+            self.slots[slot].last_used = self.clock;
+            return Ok(PageOutcome::Hit(slot));
+        }
+        // Victim selection over pageable slots 1..usable: any free slot
+        // first, else the least-recently-used unpinned slot.
+        let mut victim: Option<usize> = None;
+        for s in 1..self.usable {
+            match &self.slots[s].name {
+                None => {
+                    victim = Some(s);
+                    break;
+                }
+                // A candidate victim here is always occupied (a free slot
+                // breaks out above), so LRU stamp order decides.
+                Some(_) if self.slots[s].pins == 0 => {
+                    let better = match victim {
+                        None => true,
+                        Some(v) => self.slots[s].last_used < self.slots[v].last_used,
+                    };
+                    if better {
+                        victim = Some(s);
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+        let Some(slot) = victim else {
+            return Ok(PageOutcome::Stalled);
+        };
+        let evicted = self.slots[slot].name.take();
+        if let Some(old) = &evicted {
+            self.resident.remove(old);
+        }
+        let adapter = self.store.get(name).expect("checked above");
         self.bank.set_slot(slot, adapter)?;
-        self.by_name.insert(name.to_string(), slot);
-        self.next_slot += 1;
-        Ok(slot)
+        self.slots[slot] = SlotState {
+            name: Some(name.to_string()),
+            pins: 0,
+            last_used: self.clock,
+        };
+        self.resident.insert(name.to_string(), slot);
+        Ok(PageOutcome::Paged { slot, evicted })
     }
 
+    /// Pin `slot` for an in-flight request (no-op for the identity slot).
+    pub fn pin(&mut self, slot: usize) {
+        if slot > 0 && slot < self.slots.len() {
+            self.slots[slot].pins += 1;
+        }
+    }
+
+    /// Release one pin on `slot` (no-op for the identity slot).
+    pub fn unpin(&mut self, slot: usize) {
+        if slot > 0 && slot < self.slots.len() {
+            debug_assert!(self.slots[slot].pins > 0, "unpin of unpinned slot {slot}");
+            self.slots[slot].pins = self.slots[slot].pins.saturating_sub(1);
+        }
+    }
+
+    pub fn is_pinned(&self, slot: usize) -> bool {
+        self.slots.get(slot).map(|s| s.pins > 0).unwrap_or(false)
+    }
+
+    /// Device slot of `name`, when resident.
     pub fn slot_of(&self, name: &str) -> Option<usize> {
-        self.by_name.get(name).copied()
+        self.resident.get(name).copied()
     }
 
+    /// Names currently holding a device slot.
+    pub fn resident_names(&self) -> Vec<&str> {
+        self.resident.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// All registered names (resident or not).
     pub fn names(&self) -> Vec<&str> {
-        self.by_name.keys().map(|s| s.as_str()).collect()
+        self.store.names()
     }
 
+    /// Registered adapter count (the store's, not the bank's).
     pub fn len(&self) -> usize {
-        self.by_name.len()
+        self.store.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.by_name.is_empty()
+        self.store.is_empty()
     }
 
+    /// Pageable device slots (slot 0 is reserved for identity).
     pub fn capacity(&self) -> usize {
-        self.bank.n_slots - 1
+        self.usable.saturating_sub(1)
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
     }
 }
 
@@ -581,20 +962,180 @@ mod tests {
         assert_ne!(r1.read_f32_range(16, 8), vec![1.0; 8]);
     }
 
-    #[test]
-    fn registry_assigns_and_reuses_slots() {
+    fn road_reg(n_slots: usize) -> (AdapterRegistry, Rng) {
         let cfg = tiny_cfg();
-        let bank = AdapterBank::new(&cfg, "road", 4).unwrap();
-        let mut reg = AdapterRegistry::new(bank);
-        let mut rng = Rng::seed_from(2);
-        let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3));
-        let s1 = reg.register("user-a", &a).unwrap();
-        let s2 = reg.register("user-b", &a).unwrap();
-        assert_eq!((s1, s2), (1, 2));
-        assert_eq!(reg.register("user-a", &a).unwrap(), 1); // update in place
-        assert_eq!(reg.slot_of("user-b"), Some(2));
-        let _ = reg.register("user-c", &a).unwrap();
-        assert!(reg.register("user-d", &a).is_err()); // bank full (slot 0 reserved)
+        let bank = AdapterBank::new(&cfg, "road", n_slots).unwrap();
+        (AdapterRegistry::new(bank), Rng::seed_from(2))
+    }
+
+    fn rand_adapter(rng: &mut Rng) -> Adapter {
+        Adapter::Road(RoadAdapter::random(&tiny_cfg(), rng, 0.3))
+    }
+
+    #[test]
+    fn registration_always_succeeds_beyond_bank_capacity() {
+        let (mut reg, mut rng) = road_reg(4);
+        for i in 0..50 {
+            let a = rand_adapter(&mut rng);
+            reg.register(&format!("user-{i}"), &a).unwrap();
+        }
+        assert_eq!(reg.len(), 50);
+        assert_eq!(reg.capacity(), 3);
+        assert_eq!(reg.resident_len(), 0, "registration does not page in");
+        // Paging makes them resident on demand, never more than capacity.
+        for i in 0..50 {
+            let out = reg.ensure_resident(&format!("user-{i}")).unwrap();
+            assert!(matches!(out, PageOutcome::Paged { .. } | PageOutcome::Hit(_)));
+            assert!(reg.resident_len() <= reg.capacity());
+        }
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let (mut reg, mut rng) = road_reg(3); // 2 pageable slots
+        for name in ["a", "b", "c"] {
+            reg.register(name, &rand_adapter(&mut rng)).unwrap();
+        }
+        let sa = match reg.ensure_resident("a").unwrap() {
+            PageOutcome::Paged { slot, evicted: None } => slot,
+            o => panic!("expected clean page-in, got {o:?}"),
+        };
+        let _sb = match reg.ensure_resident("b").unwrap() {
+            PageOutcome::Paged { slot, evicted: None } => slot,
+            o => panic!("expected clean page-in, got {o:?}"),
+        };
+        // Touch "a" so "b" becomes least recently used.
+        assert_eq!(reg.ensure_resident("a").unwrap(), PageOutcome::Hit(sa));
+        match reg.ensure_resident("c").unwrap() {
+            PageOutcome::Paged { evicted: Some(victim), .. } => assert_eq!(victim, "b"),
+            o => panic!("expected eviction of b, got {o:?}"),
+        }
+        assert_eq!(reg.slot_of("b"), None);
+        assert!(reg.store.contains("b"), "eviction keeps the store copy");
+        // Paging "b" back now evicts "a" (older stamp than "c").
+        match reg.ensure_resident("b").unwrap() {
+            PageOutcome::Paged { evicted: Some(victim), .. } => assert_eq!(victim, "a"),
+            o => panic!("expected eviction of a, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn pinned_slots_are_never_evicted() {
+        let (mut reg, mut rng) = road_reg(3);
+        for name in ["a", "b", "c"] {
+            reg.register(name, &rand_adapter(&mut rng)).unwrap();
+        }
+        let sa = match reg.ensure_resident("a").unwrap() {
+            PageOutcome::Paged { slot, .. } => slot,
+            o => panic!("{o:?}"),
+        };
+        let sb = match reg.ensure_resident("b").unwrap() {
+            PageOutcome::Paged { slot, .. } => slot,
+            o => panic!("{o:?}"),
+        };
+        reg.pin(sa);
+        reg.pin(sb);
+        // Both pageable slots pinned: paging "c" must stall, not evict.
+        assert_eq!(reg.ensure_resident("c").unwrap(), PageOutcome::Stalled);
+        reg.unpin(sb);
+        match reg.ensure_resident("c").unwrap() {
+            PageOutcome::Paged { slot, evicted: Some(victim) } => {
+                assert_eq!(slot, sb);
+                assert_eq!(victim, "b", "only the unpinned slot is a victim");
+            }
+            o => panic!("{o:?}"),
+        }
+        assert_eq!(reg.slot_of("a"), Some(sa), "pinned adapter kept its slot");
+    }
+
+    #[test]
+    fn unregister_of_in_flight_adapter_is_rejected() {
+        let (mut reg, mut rng) = road_reg(4);
+        reg.register("busy", &rand_adapter(&mut rng)).unwrap();
+        let slot = match reg.ensure_resident("busy").unwrap() {
+            PageOutcome::Paged { slot, .. } => slot,
+            o => panic!("{o:?}"),
+        };
+        reg.pin(slot);
+        assert!(reg.unregister("busy").is_err(), "pinned adapter must not unregister");
+        assert!(reg.evict("busy").is_err(), "pinned adapter must not evict");
+        let replacement = rand_adapter(&mut rng);
+        assert!(reg.register("busy", &replacement).is_err(), "pinned adapter must not be replaced");
+        reg.unpin(slot);
+        reg.unregister("busy").unwrap();
+        assert!(!reg.store.contains("busy"));
+        assert_eq!(reg.slot_of("busy"), None);
+        assert!(reg.unregister("busy").is_err(), "double unregister is unknown");
+    }
+
+    #[test]
+    fn evict_clears_dirty_mark_of_freed_slot() {
+        let (mut reg, mut rng) = road_reg(4);
+        reg.register("a", &rand_adapter(&mut rng)).unwrap();
+        let slot = match reg.ensure_resident("a").unwrap() {
+            PageOutcome::Paged { slot, .. } => slot,
+            o => panic!("{o:?}"),
+        };
+        assert_eq!(reg.bank.dirty_slots(), vec![slot]);
+        assert!(reg.evict("a").unwrap());
+        assert!(
+            reg.bank.dirty_slots().is_empty(),
+            "freed slot must not be staged on the next upload"
+        );
+        // Same through unregister.
+        reg.register("b", &rand_adapter(&mut rng)).unwrap();
+        reg.ensure_resident("b").unwrap();
+        assert!(!reg.bank.dirty_slots().is_empty());
+        reg.unregister("b").unwrap();
+        assert!(reg.bank.dirty_slots().is_empty());
+    }
+
+    #[test]
+    fn reregister_resident_rewrites_slot_in_place() {
+        let (mut reg, mut rng) = road_reg(4);
+        reg.register("u", &rand_adapter(&mut rng)).unwrap();
+        let slot = match reg.ensure_resident("u").unwrap() {
+            PageOutcome::Paged { slot, .. } => slot,
+            o => panic!("{o:?}"),
+        };
+        let before = reg.bank.tensors["blocks.0.wq.r1"].read_f32_range(slot * 8, 8);
+        reg.register("u", &rand_adapter(&mut rng)).unwrap();
+        assert_eq!(reg.slot_of("u"), Some(slot), "still resident in the same slot");
+        let after = reg.bank.tensors["blocks.0.wq.r1"].read_f32_range(slot * 8, 8);
+        assert_ne!(before, after, "slot rows updated with the new weights");
+    }
+
+    #[test]
+    fn per_slot_dirty_tracking_and_paged_upload() {
+        let cfg = tiny_cfg();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut bank = AdapterBank::new(&cfg, "road", 4).unwrap();
+        let mut bufs = std::collections::BTreeMap::new();
+        // Fresh bank: full upload of every tensor.
+        let up = bank.upload_dirty(&client, &mut bufs, true).unwrap().unwrap();
+        assert!(up.full);
+        assert_eq!(up.bytes, bank.total_bytes());
+        assert_eq!(bufs.len(), bank.tensors.len());
+        // Clean bank: nothing moves.
+        assert!(bank.upload_dirty(&client, &mut bufs, true).unwrap().is_none());
+
+        // One slot changes: the paged path moves only that slot's rows.
+        let mut rng = Rng::seed_from(3);
+        let a = rand_adapter(&mut rng);
+        bank.set_slot(2, &a).unwrap();
+        assert_eq!(bank.dirty_slots(), vec![2]);
+        let up = bank.upload_dirty(&client, &mut bufs, true).unwrap().unwrap();
+        assert!(!up.full);
+        assert_eq!(up.staged_rows, bank.tensors.len(), "one row staged per bank key");
+        assert_eq!(up.bytes, bank.slot_bytes());
+        assert!(up.bytes * 4 == bank.total_bytes(), "4-slot bank: one slot is a quarter");
+
+        // The whole-bank baseline re-ships everything for the same change.
+        bank.set_slot(2, &a).unwrap();
+        let up = bank.upload_dirty(&client, &mut bufs, false).unwrap().unwrap();
+        assert!(up.full);
+        assert_eq!(up.bytes, bank.total_bytes());
+        assert!(!bank.is_dirty());
     }
 
     #[test]
@@ -603,5 +1144,8 @@ mod tests {
         let mut bank = AdapterBank::new(&cfg, "road", 2).unwrap();
         let l = Adapter::Lora(LoraAdapter::zeros(&cfg));
         assert!(bank.set_slot(1, &l).is_err());
+        let mut reg = AdapterRegistry::new(AdapterBank::new(&cfg, "road", 2).unwrap());
+        assert!(reg.register("l", &Adapter::Lora(LoraAdapter::zeros(&cfg))).is_err());
+        assert!(!reg.store.contains("l"), "rejected registration leaves no store entry");
     }
 }

@@ -7,6 +7,12 @@
 //!              heterogeneous adapters),
 //!   * Right  — RoAd vs unmerged LoRA vs #distinct adapters in the batch.
 //!
+//! The bank-churn study ([`bank_churn_study`]) goes past the paper's
+//! figure: many more registered adapters than device bank slots, a
+//! Zipf-distributed request-to-adapter assignment, and paged vs
+//! whole-bank-upload engines compared on hit/miss/eviction counts and
+//! host-to-device upload bytes.
+//!
 //! Table D.1 times the per-step cost of each finetuning method (RoAd's
 //! inherent orthogonality vs OFT's Cayley solves) and reports the
 //! optimizer-state footprint.
@@ -38,6 +44,11 @@ pub struct ServingPoint {
     /// Time spent inside decode executions (see
     /// [`ServingPoint::ms_per_step`]; the KV residency comparison's axis).
     pub decode_secs: f64,
+    /// Adapter-bank paging counters (the bank study's axes).
+    pub bank_hits: usize,
+    pub bank_misses: usize,
+    pub bank_evictions: usize,
+    pub bank_upload_bytes: usize,
 }
 
 impl ServingPoint {
@@ -67,6 +78,48 @@ pub fn hetero_workload(
             );
             if distinct > 0 {
                 r = r.with_adapter(&format!("adapter-{}", i % distinct));
+            }
+            r
+        })
+        .collect()
+}
+
+/// Sample from a Zipf(s) distribution over ranks `0..n` (rank 0 most
+/// popular): the canonical popularity skew for per-user adapter traffic —
+/// a few hot adapters dominate while a long tail stays cold, which is the
+/// regime an LRU-paged bank exploits.
+pub fn zipf_sample(rng: &mut Rng, n: usize, s: f64) -> usize {
+    rng.weighted(&zipf_weights(n, s))
+}
+
+/// Unnormalized Zipf(s) weights over ranks `0..n` (precompute once when
+/// sampling repeatedly — [`zipf_workload`] does).
+pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    assert!(n > 0, "zipf distribution needs at least one rank");
+    (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect()
+}
+
+/// Build an adapter-churn workload: `n_requests` requests over `distinct`
+/// registered adapters with a Zipf(s)-distributed request→adapter
+/// assignment (instead of [`hetero_workload`]'s uniform round-robin).
+pub fn zipf_workload(
+    rng: &mut Rng,
+    n_requests: usize,
+    distinct: usize,
+    zipf_s: f64,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> Vec<Request> {
+    let weights = (distinct > 0).then(|| zipf_weights(distinct, zipf_s));
+    (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..prompt_len).map(|_| 1 + rng.below(255) as i32).collect();
+            let mut r = Request::new((i + 1) as u64, prompt, new_tokens).with_sampling(
+                SamplingParams { temperature: 0.0, top_k: 0, seed: i as u64, stop_token: None },
+            );
+            if let Some(w) = &weights {
+                let k = rng.weighted(w);
+                r = r.with_adapter(&format!("adapter-{k}"));
             }
             r
         })
@@ -120,7 +173,6 @@ pub fn measure_serving_cfg(
     new_tokens: usize,
     seed: u64,
 ) -> Result<ServingPoint> {
-    let slots = econf.decode_slots;
     let mode = econf.mode.clone();
     let mut engine = Engine::new(rt.clone(), econf)?;
     if distinct > 0 {
@@ -129,14 +181,25 @@ pub fn measure_serving_cfg(
     let mut rng = Rng::seed_from(seed ^ 0xbe7c);
     let prompt_len = 8;
     let reqs = hetero_workload(&mut rng, n_requests, distinct, prompt_len, new_tokens);
+    run_workload(&mut engine, &format!("{mode}/d{distinct}"), distinct, new_tokens, reqs)
+}
 
+/// Drive `reqs` to completion on `engine` and package the measurement.
+fn run_workload(
+    engine: &mut Engine,
+    label: &str,
+    distinct: usize,
+    new_tokens: usize,
+    reqs: Vec<Request>,
+) -> Result<ServingPoint> {
+    let n_requests = reqs.len();
     let t0 = std::time::Instant::now();
     let outs = engine.run_all(reqs)?;
     let wall = t0.elapsed().as_secs_f64();
     let gen_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
     Ok(ServingPoint {
-        label: format!("{mode}/d{distinct}"),
-        batch: slots,
+        label: label.to_string(),
+        batch: engine.econf.decode_slots,
         distinct_adapters: distinct,
         new_tokens,
         requests: n_requests,
@@ -144,7 +207,44 @@ pub fn measure_serving_cfg(
         tokens_per_sec: gen_tokens as f64 / wall,
         decode_steps: engine.metrics.decode_steps,
         decode_secs: engine.metrics.decode_time.as_secs_f64(),
+        bank_hits: engine.metrics.bank_hits,
+        bank_misses: engine.metrics.bank_misses,
+        bank_evictions: engine.metrics.bank_evictions,
+        bank_upload_bytes: engine.metrics.bank_upload_bytes,
     })
+}
+
+/// The adapter-churn study: `n_adapters` registered adapters paged through
+/// a `bank_slots`-slot device bank (adapters ≫ slots) under a Zipf(1.1)
+/// request mix, measured with paged per-slot uploads vs the whole-bank
+/// re-upload baseline.  Every request must complete — registration can no
+/// longer fail on capacity, and eviction never touches a pinned slot.
+pub fn bank_churn_study(
+    rt: &Rc<Runtime>,
+    n_adapters: usize,
+    bank_slots: usize,
+    n_requests: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Result<Vec<ServingPoint>> {
+    let mut out = Vec::new();
+    for (label, paged) in [("road/paged-bank", true), ("road/whole-bank-upload", false)] {
+        let econf = EngineConfig {
+            model: "serve".into(),
+            mode: "road".into(),
+            decode_slots: 8,
+            queue_capacity: 4096,
+            bank_slots: Some(bank_slots),
+            paged_bank_uploads: paged,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(rt.clone(), econf)?;
+        register_adapters(&mut engine, n_adapters, seed)?;
+        let mut rng = Rng::seed_from(seed ^ 0x21f7);
+        let reqs = zipf_workload(&mut rng, n_requests, n_adapters, 1.1, 8, new_tokens);
+        out.push(run_workload(&mut engine, label, n_adapters, new_tokens, reqs)?);
+    }
+    Ok(out)
 }
 
 /// Device-resident vs host-round-trip decode on an otherwise identical
@@ -166,6 +266,7 @@ pub fn kv_residency_comparison(
             decode_slots: 8,
             queue_capacity: 4096,
             kv_host_roundtrip,
+            ..Default::default()
         };
         let mut p = measure_serving_cfg(rt, econf, 8, 16, new_tokens, seed)?;
         p.label = label.into();
@@ -226,6 +327,35 @@ pub fn fig4_right(
         }
     }
     Ok(out)
+}
+
+/// Render the bank-churn study with its paging counters; the `upload(KB)`
+/// column is the comparison the study exists for (paged rows strictly
+/// below the whole-bank baseline).
+pub fn render_bank_points(title: &str, points: &[ServingPoint]) -> String {
+    let mut t = Table::new(&[
+        "config", "batch", "#adapters", "reqs", "tok/s", "hits", "misses", "evictions",
+        "upload(KB)",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.label.clone(),
+            p.batch.to_string(),
+            p.distinct_adapters.to_string(),
+            p.requests.to_string(),
+            fmt_f(p.tokens_per_sec, 1),
+            p.bank_hits.to_string(),
+            p.bank_misses.to_string(),
+            p.bank_evictions.to_string(),
+            fmt_f(p.bank_upload_bytes as f64 / 1e3, 1),
+        ]);
+    }
+    format!(
+        "## {title}\n{}\nupload(KB) is the comparison axis (host-to-device bank traffic). \
+         On the offline stub, paged wall-time additionally pays the device-side scatter \
+         stand-in (see AdapterBank::upload_dirty), so tok/s there favors no side.\n",
+        t.render()
+    )
 }
 
 pub fn render_points(title: &str, points: &[ServingPoint]) -> String {
@@ -360,9 +490,48 @@ mod tests {
             tokens_per_sec: 1365.3,
             decode_steps: 256,
             decode_secs: 1.28,
+            bank_hits: 12,
+            bank_misses: 4,
+            bank_evictions: 1,
+            bank_upload_bytes: 8192,
         };
-        let s = render_points("Fig 4 (Right)", &[p]);
+        let s = render_points("Fig 4 (Right)", &[p.clone()]);
         assert!(s.contains("road/d8"));
         assert!(s.contains("1365.3"));
+        let b = render_bank_points("Bank churn", &[p]);
+        assert!(b.contains("hits"), "{b}");
+        assert!(b.contains("12"), "{b}");
+        assert!(b.contains("8.2"), "upload KB column: {b}");
+    }
+
+    #[test]
+    fn zipf_workload_skews_to_head_adapters() {
+        let mut rng = Rng::seed_from(5);
+        let n = 64;
+        let reqs = zipf_workload(&mut rng, 512, n, 1.1, 8, 16);
+        assert_eq!(reqs.len(), 512);
+        let mut counts = vec![0usize; n];
+        for r in &reqs {
+            let name = r.adapter.as_deref().unwrap();
+            let k: usize = name.strip_prefix("adapter-").unwrap().parse().unwrap();
+            counts[k] += 1;
+        }
+        let head: usize = counts[..4].iter().sum();
+        let tail: usize = counts[n - 4..].iter().sum();
+        assert!(head > tail * 4, "zipf head {head} should dominate tail {tail}");
+        // Rank 0 is the most popular adapter.
+        let max = counts.iter().copied().max().unwrap();
+        assert_eq!(counts[0], max, "{counts:?}");
+    }
+
+    #[test]
+    fn zipf_sample_in_range_and_deterministic() {
+        let mut a = Rng::seed_from(9);
+        let mut b = Rng::seed_from(9);
+        for _ in 0..200 {
+            let x = zipf_sample(&mut a, 7, 1.0);
+            assert!(x < 7);
+            assert_eq!(x, zipf_sample(&mut b, 7, 1.0));
+        }
     }
 }

@@ -18,14 +18,23 @@
 //! ([`crate::runtime::Executable::run_device`]); only the logits are
 //! downloaded per step.  `EngineConfig::kv_host_roundtrip` re-enables the
 //! old full-cache host round-trip as a measurable baseline.
+//!
+//! Adapters are virtualized: registration lands in an unbounded host
+//! [`crate::adapters::AdapterStore`], and admission pages a request's
+//! adapter into the device bank (an LRU slot cache) before the request
+//! enters a prefill batch.  Slots referenced by in-flight lanes are pinned
+//! so eviction can never corrupt an active request; when every pageable
+//! slot is pinned, the request simply stays queued.  Bank uploads move
+//! only dirty slot rows (`EngineConfig::paged_bank_uploads` flips the
+//! whole-bank re-upload baseline back on for comparison).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::adapters::{Adapter, AdapterBank, AdapterRegistry};
+use crate::adapters::{Adapter, AdapterBank, AdapterRegistry, PageOutcome};
 use crate::manifest::{EntryInfo, ModelConfigInfo};
 use crate::model::ParamStore;
 use crate::runtime::{buffer_to_host, Arg, Executable, Runtime};
@@ -44,7 +53,7 @@ pub struct EngineConfig {
     /// Adapter execution mode: "base" (merged / no adapters), "road"
     /// (element-wise Eq. 4 path), "lora" (bmm baseline), "ia3".
     pub mode: String,
-    /// Decode slot count; must have a matching decode_<mode>_<model>_b<N>
+    /// Decode slot count; must have a matching `decode_<mode>_<model>_b<N>`
     /// artifact.
     pub decode_slots: usize,
     pub queue_capacity: usize,
@@ -53,6 +62,15 @@ pub struct EngineConfig {
     /// fig4 bench to measure what staying on device saves; leave `false`
     /// for serving.
     pub kv_host_roundtrip: bool,
+    /// Usable device bank slots, including the reserved identity slot 0
+    /// (`None` = every slot the compiled artifact carries).  The
+    /// adapter-churn bench pins this below the registered-adapter count to
+    /// exercise paging.
+    pub bank_slots: Option<usize>,
+    /// `true` (default): dirty-slot rows are paged up individually.
+    /// `false`: any change re-uploads the whole bank — the measurable
+    /// baseline for `road bench-serving --study bank`.
+    pub paged_bank_uploads: bool,
 }
 
 impl Default for EngineConfig {
@@ -63,6 +81,8 @@ impl Default for EngineConfig {
             decode_slots: 8,
             queue_capacity: 1024,
             kv_host_roundtrip: false,
+            bank_slots: None,
+            paged_bank_uploads: true,
         }
     }
 }
@@ -142,7 +162,14 @@ impl Engine {
 
         let n_bank = cfg.n_adapters;
         let bank = AdapterBank::new(&cfg, &econf.mode, n_bank)?;
-        let registry = AdapterRegistry::new(bank);
+        let usable = econf.bank_slots.unwrap_or(n_bank).min(n_bank);
+        if econf.mode != "base" && usable < 2 {
+            bail!(
+                "bank_slots = {usable} leaves no pageable slot (slot 0 is the reserved \
+                 identity page); need at least 2"
+            );
+        }
+        let registry = AdapterRegistry::with_usable_slots(bank, usable);
 
         let kv = KvState::new(&cfg, econf.decode_slots);
         let slots = (0..econf.decode_slots).map(|_| None).collect();
@@ -165,11 +192,29 @@ impl Engine {
         })
     }
 
-    pub fn register_adapter(&mut self, name: &str, adapter: &Adapter) -> Result<usize> {
+    /// Register (or replace) a named adapter in the host store.  Never
+    /// fails for capacity — device residency is paged in at admission.
+    pub fn register_adapter(&mut self, name: &str, adapter: &Adapter) -> Result<()> {
         if self.econf.mode == "base" {
             bail!("engine in merged/base mode serves no per-request adapters");
         }
         self.registry.register(name, adapter)
+    }
+
+    /// Remove a named adapter from the store.  Rejected while any of its
+    /// requests are in flight (the bank slot stays pinned) or still
+    /// waiting in the admission queue.
+    pub fn unregister_adapter(&mut self, name: &str) -> Result<()> {
+        if self.queue.contains_adapter(name) {
+            bail!("adapter {name:?} has queued requests; unregister after they drain");
+        }
+        self.registry.unregister(name)
+    }
+
+    /// Drop a named adapter's device slot but keep it registered; a later
+    /// request pages it back in.  Returns whether a slot was freed.
+    pub fn evict_adapter(&mut self, name: &str) -> Result<bool> {
+        self.registry.evict(name)
     }
 
     pub fn max_prompt_len(&self) -> usize {
@@ -195,8 +240,8 @@ impl Engine {
             bail!("prompt+max_new = {total} exceeds max_seq {}", self.cfg.max_seq);
         }
         if let Some(a) = &req.adapter {
-            if self.registry.slot_of(a).is_none() {
-                bail!("unknown adapter {a:?}");
+            if !self.registry.store.contains(a) {
+                bail!("unknown adapter {a:?} (register it first)");
             }
         }
         if req.id == 0 {
@@ -219,15 +264,20 @@ impl Engine {
         self.n_active() > 0 || !self.queue.is_empty()
     }
 
+    /// Refresh the device bank from dirty slots ([`AdapterBank::upload_dirty`]
+    /// does the transfer accounting: per-slot rows on the paged path, the
+    /// whole bank on the baseline).
     fn upload_bank_if_dirty(&mut self) -> Result<()> {
-        if !self.registry.bank.dirty && !self.bank_bufs.is_empty() {
-            return Ok(());
+        let paged = self.econf.paged_bank_uploads;
+        if let Some(up) =
+            self.registry.bank.upload_dirty(&self.rt.client, &mut self.bank_bufs, paged)?
+        {
+            self.metrics.bank_upload_bytes += up.bytes;
+            self.metrics.bank_staged_rows += up.staged_rows;
+            if up.full {
+                self.metrics.bank_full_uploads += 1;
+            }
         }
-        self.bank_bufs.clear();
-        for (name, t) in &self.registry.bank.tensors {
-            self.bank_bufs.insert(name.clone(), self.rt.upload(t)?);
-        }
-        self.registry.bank.dirty = false;
         Ok(())
     }
 
@@ -271,6 +321,12 @@ impl Engine {
     }
 
     /// Admit queued requests into free slots via bucketed prefill.
+    ///
+    /// Admission is gated on adapter residency: a request is only popped
+    /// when its adapter is (or can be paged) device-resident; the paged-in
+    /// slot is pinned immediately so nothing admitted later in the same
+    /// batch can evict it.  Requests whose adapter cannot be paged (every
+    /// pageable slot pinned) keep their queue position.
     fn maybe_prefill(&mut self) -> Result<()> {
         loop {
             let n_free = self.alloc.n_free();
@@ -303,15 +359,48 @@ impl Engine {
             let Some(bi) = best else { return Ok(()) };
             let bucket_b = self.prefill_buckets[bi].batch;
             let bucket_l = self.prefill_buckets[bi].prompt_len;
-            let take = self.queue.pop_fitting(n_free.min(bucket_b), bucket_l);
+            let mut paged_ids: BTreeSet<u64> = BTreeSet::new();
+            let registry = &mut self.registry;
+            let metrics = &mut self.metrics;
+            let take = self.queue.pop_admissible(n_free.min(bucket_b), bucket_l, |req| {
+                let Some(name) = req.adapter.as_deref() else { return true };
+                match registry.ensure_resident(name) {
+                    Ok(PageOutcome::Hit(slot)) => {
+                        metrics.bank_hits += 1;
+                        registry.pin(slot);
+                        true
+                    }
+                    Ok(PageOutcome::Paged { slot, evicted }) => {
+                        metrics.bank_misses += 1;
+                        if evicted.is_some() {
+                            metrics.bank_evictions += 1;
+                        }
+                        paged_ids.insert(req.id);
+                        registry.pin(slot);
+                        true
+                    }
+                    // All pageable slots pinned by in-flight lanes: leave
+                    // the request queued; a finishing lane unblocks it.
+                    Ok(PageOutcome::Stalled) => false,
+                    // Unregistered mid-queue (unregister raced a waiting
+                    // request): leave it queued rather than corrupting the
+                    // batch; submit() validates, so this is exceptional.
+                    Err(_) => false,
+                }
+            });
             if take.is_empty() {
                 return Ok(());
             }
-            self.prefill_batch(bi, take)?;
+            self.prefill_batch(bi, take, &paged_ids)?;
         }
     }
 
-    fn prefill_batch(&mut self, bucket_idx: usize, reqs: Vec<Request>) -> Result<()> {
+    fn prefill_batch(
+        &mut self,
+        bucket_idx: usize,
+        reqs: Vec<Request>,
+        paged_ids: &BTreeSet<u64>,
+    ) -> Result<()> {
         self.upload_bank_if_dirty()?;
         let (b, l) = (
             self.prefill_buckets[bucket_idx].batch,
@@ -334,9 +423,14 @@ impl Engine {
                 .copy_from_slice(&req.prompt);
             lengths[lane] = req.prompt.len() as i32;
             ids[lane] = slot_adapter as i32;
-            // Queue wait = submit → admission into a prefill batch.
+            // Queue wait = submit → admission into a prefill batch; bank
+            // misses also land in the paged-adapter histogram so the
+            // queueing cost of paging is separately visible.
             if let Some(s) = req.submitted_at {
                 self.metrics.queue_wait.record(now.duration_since(s));
+                if paged_ids.contains(&req.id) {
+                    self.metrics.paged_wait.record(now.duration_since(s));
+                }
             }
             actives.push(ActiveRequest::new(req, slot_adapter, now));
         }
@@ -514,6 +608,9 @@ impl Engine {
         reason: FinishReason,
         outputs: &mut Vec<RequestOutput>,
     ) {
+        // The lane no longer references its adapter slot; release the pin
+        // so the pager may evict it (identity slot 0 is a no-op).
+        self.registry.unpin(ar.slot_adapter);
         let now = Instant::now();
         let ttft = ar
             .first_token_at

@@ -1,6 +1,7 @@
 //! Serving metrics: throughput, TTFT, per-token and end-to-end latency,
-//! queueing delay/depth, step-time accounting split by phase, and KV-cache
-//! transfer counters.
+//! queueing delay/depth, step-time accounting split by phase, KV-cache
+//! transfer counters, and adapter-bank paging counters
+//! (hits/misses/evictions and host-to-device upload bytes).
 //!
 //! Latency clocks start at `Engine::submit` (the request's
 //! `submitted_at` stamp), so TTFT and e2e include time spent waiting in
@@ -10,6 +11,7 @@
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{LatencyRecorder, Summary};
+use crate::util::table::kv_table;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -37,6 +39,22 @@ pub struct Metrics {
     /// Full K/V cache host→device transfers (mirror of `kv_host_syncs`:
     /// re-uploads after materialization, or per-step in baseline mode).
     pub kv_uploads: usize,
+    /// Admissions whose adapter was already device-resident.
+    pub bank_hits: usize,
+    /// Admissions that had to page their adapter into a bank slot.
+    pub bank_misses: usize,
+    /// Page-ins that displaced another resident adapter (LRU victim).
+    pub bank_evictions: usize,
+    /// Host→device bytes attributed to adapter-bank content (per-slot rows
+    /// on the paged path, full tensors on the whole-bank baseline).
+    pub bank_upload_bytes: usize,
+    /// Whole-bank uploads (first upload, or every change in baseline mode).
+    pub bank_full_uploads: usize,
+    /// Per-slot row tensors staged on the paged upload path.
+    pub bank_staged_rows: usize,
+    /// Submit → admission for requests that suffered a bank miss (the
+    /// queue-wait cost of paging, recorded separately from `queue_wait`).
+    pub paged_wait: LatencyRecorder,
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
 }
@@ -86,6 +104,10 @@ impl Metrics {
         self.queue_depth.summary()
     }
 
+    pub fn paged_wait_summary(&self) -> Summary {
+        self.paged_wait.summary()
+    }
+
     pub fn report(&self) -> String {
         let t = self.ttft_summary();
         let e = self.e2e_summary();
@@ -96,7 +118,8 @@ impl Metrics {
              prefill_batches={} decode_steps={} \
              ttft(p50/p90)={:.1}/{:.1}ms e2e(p50/p90)={:.1}/{:.1}ms \
              queue_wait(p50/p90)={:.1}/{:.1}ms queue_depth(p50/max)={:.0}/{:.0} \
-             prefill={:.2}s decode={:.2}s kv_dl/ul={}/{}",
+             prefill={:.2}s decode={:.2}s kv_dl/ul={}/{} \
+             bank(h/m/e)={}/{}/{} bank_upload={}B",
             self.requests_completed,
             self.tokens_generated,
             self.wall(),
@@ -115,7 +138,44 @@ impl Metrics {
             self.decode_time.as_secs_f64(),
             self.kv_host_syncs,
             self.kv_uploads,
+            self.bank_hits,
+            self.bank_misses,
+            self.bank_evictions,
+            self.bank_upload_bytes,
         )
+    }
+
+    /// Full serving report as a two-column markdown table (`road serve
+    /// --stats`), including the bank paging counters the one-line
+    /// [`Metrics::report`] summarizes.
+    pub fn report_table(&self) -> String {
+        let t = self.ttft_summary();
+        let e = self.e2e_summary();
+        let qw = self.queue_wait_summary();
+        let pw = self.paged_wait_summary();
+        let qd = self.queue_depth_summary();
+        kv_table(&[
+            ("requests completed", self.requests_completed.to_string()),
+            ("tokens generated", self.tokens_generated.to_string()),
+            ("throughput (tok/s)", format!("{:.1}", self.throughput())),
+            ("prefill batches", self.prefill_batches.to_string()),
+            ("decode steps", self.decode_steps.to_string()),
+            ("ttft p50/p90 (ms)", format!("{:.1} / {:.1}", t.p50 / 1e3, t.p90 / 1e3)),
+            ("e2e p50/p90 (ms)", format!("{:.1} / {:.1}", e.p50 / 1e3, e.p90 / 1e3)),
+            ("queue wait p50/p90 (ms)", format!("{:.1} / {:.1}", qw.p50 / 1e3, qw.p90 / 1e3)),
+            (
+                "paged-adapter wait p50/p90 (ms)",
+                format!("{:.1} / {:.1}", pw.p50 / 1e3, pw.p90 / 1e3),
+            ),
+            ("queue depth p50/max", format!("{:.0} / {:.0}", qd.p50, qd.max)),
+            ("kv downloads/uploads", format!("{} / {}", self.kv_host_syncs, self.kv_uploads)),
+            ("bank hits", self.bank_hits.to_string()),
+            ("bank misses", self.bank_misses.to_string()),
+            ("bank evictions", self.bank_evictions.to_string()),
+            ("bank upload bytes", self.bank_upload_bytes.to_string()),
+            ("bank full uploads", self.bank_full_uploads.to_string()),
+            ("bank staged rows", self.bank_staged_rows.to_string()),
+        ])
     }
 }
 
@@ -137,5 +197,31 @@ mod tests {
         assert!(r.contains("kv_dl/ul=2/2"), "{r}");
         assert!((m.queue_wait_summary().p50 - 4000.0).abs() < 1e-6);
         assert_eq!(m.queue_depth_summary().max, 7.0);
+    }
+
+    #[test]
+    fn report_includes_bank_paging_counters() {
+        let mut m = Metrics::default();
+        m.paged_wait.record(Duration::from_millis(8));
+        m.bank_hits = 10;
+        m.bank_misses = 3;
+        m.bank_evictions = 2;
+        m.bank_upload_bytes = 4096;
+        let r = m.report();
+        assert!(r.contains("bank(h/m/e)=10/3/2"), "{r}");
+        assert!(r.contains("bank_upload=4096B"), "{r}");
+        let t = m.report_table();
+        let needles = [
+            "bank hits",
+            "bank misses",
+            "bank evictions",
+            "bank upload bytes",
+            "10",
+            "4096",
+            "paged-adapter wait",
+        ];
+        for needle in needles {
+            assert!(t.contains(needle), "missing {needle:?} in\n{t}");
+        }
     }
 }

@@ -1,7 +1,7 @@
 //! Layer-3 coordinator: the paper's serving contribution as a running
-//! system — request admission, adapter registry, continuous batching over
-//! decode slots, KV-slot management, sampling, metrics, and a threaded
-//! server front-end.
+//! system — request admission, a virtualized adapter registry (host store
+//! + LRU-paged device bank), continuous batching over decode slots,
+//! KV-slot management, sampling, metrics, and a threaded server front-end.
 
 pub mod engine;
 pub mod kv;

@@ -63,10 +63,25 @@ impl AdmissionQueue {
     /// their place (no starvation: longer prompts are handled by the bigger
     /// prefill bucket on a later iteration).
     pub fn pop_fitting(&mut self, n: usize, max_len: usize) -> Vec<Request> {
+        self.pop_admissible(n, max_len, |_| true)
+    }
+
+    /// Like [`AdmissionQueue::pop_fitting`], but a request is only taken
+    /// when `admit` also accepts it — the engine's hook for gating
+    /// admission on adapter residency (paging the adapter in is a side
+    /// effect of the predicate).  `admit` is called once per candidate
+    /// that already fits the length/count limits, in FIFO order; rejected
+    /// requests keep their queue position for a later scheduler step.
+    pub fn pop_admissible(
+        &mut self,
+        n: usize,
+        max_len: usize,
+        mut admit: impl FnMut(&Request) -> bool,
+    ) -> Vec<Request> {
         let mut taken = Vec::new();
         let mut keep = VecDeque::new();
         while let Some(r) = self.q.pop_front() {
-            if taken.len() < n && r.prompt.len() <= max_len {
+            if taken.len() < n && r.prompt.len() <= max_len && admit(&r) {
                 taken.push(r);
             } else {
                 keep.push_back(r);
@@ -82,6 +97,12 @@ impl AdmissionQueue {
 
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
+    }
+
+    /// Any waiting request referencing this adapter?  (Unregistering an
+    /// adapter with queued work is rejected to keep admission live.)
+    pub fn contains_adapter(&self, name: &str) -> bool {
+        self.q.iter().any(|r| r.adapter.as_deref() == Some(name))
     }
 
     pub fn max_prompt_len(&self) -> usize {
@@ -145,6 +166,34 @@ mod tests {
         assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
         assert_eq!(q.len(), 1);
         assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn pop_admissible_skips_rejected_but_keeps_them_queued() {
+        let mut q = AdmissionQueue::new(10);
+        for i in 1..=5 {
+            q.push(req(i, 4)).unwrap();
+        }
+        // Reject odd ids (e.g. "adapter not pageable right now").
+        let taken = q.pop_admissible(10, 16, |r| r.id % 2 == 0);
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert_eq!(q.len(), 3, "rejected requests stay queued");
+        assert_eq!(q.pop().unwrap().id, 1, "FIFO order preserved among kept");
+    }
+
+    #[test]
+    fn pop_admissible_stops_calling_predicate_at_n() {
+        let mut q = AdmissionQueue::new(10);
+        for i in 1..=4 {
+            q.push(req(i, 2)).unwrap();
+        }
+        let mut calls = 0;
+        let taken = q.pop_admissible(2, 16, |_| {
+            calls += 1;
+            true
+        });
+        assert_eq!(taken.len(), 2);
+        assert_eq!(calls, 2, "predicate (and its paging side effects) not run past n");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Threaded front-end for the engine: clients talk to a dedicated engine
 //! thread over mpsc channels (the PJRT client is not Send; and the image
 //! carries no tokio — std::thread + channels is the documented
-//! substitution, DESIGN.md §Substitutions).
+//! substitution, docs/DESIGN.md §Substitutions).
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -15,7 +15,8 @@ use super::request::{Request, RequestOutput};
 
 enum Cmd {
     Submit(Request, Sender<Result<RequestOutput, String>>),
-    Register(String, Box<Adapter>, Sender<Result<usize, String>>),
+    Register(String, Box<Adapter>, Sender<Result<(), String>>),
+    Unregister(String, Sender<Result<(), String>>),
     Stats(Sender<String>),
     Shutdown,
 }
@@ -41,10 +42,22 @@ impl EngineClient {
         Ok(rx)
     }
 
-    pub fn register_adapter(&self, name: &str, adapter: Adapter) -> Result<usize> {
+    /// Register a named adapter into the engine's host store (device
+    /// residency is paged in on demand at admission).
+    pub fn register_adapter(&self, name: &str, adapter: Adapter) -> Result<()> {
         let (tx, rx) = channel();
         self.tx
             .send(Cmd::Register(name.to_string(), Box::new(adapter), tx))
+            .map_err(|_| anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Remove a named adapter (rejected while it has queued or in-flight
+    /// requests).
+    pub fn unregister_adapter(&self, name: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Unregister(name.to_string(), tx))
             .map_err(|_| anyhow!("engine stopped"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
     }
@@ -163,6 +176,10 @@ fn engine_thread(
                     let _ = resp.send(
                         engine.register_adapter(&name, &adapter).map_err(|e| format!("{e:#}")),
                     );
+                }
+                Cmd::Unregister(name, resp) => {
+                    let _ = resp
+                        .send(engine.unregister_adapter(&name).map_err(|e| format!("{e:#}")));
                 }
                 Cmd::Stats(resp) => {
                     let _ = resp.send(engine.metrics.report());

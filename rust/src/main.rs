@@ -5,13 +5,15 @@
 //! ```text
 //! road serve       [--mode road|lora|base] [--slots 8] [--requests 32]
 //!                  [--distinct 8] [--tokens 64] [--host-roundtrip-kv=true]
+//!                  [--bank-slots N] [--whole-bank-uploads=true] [--stats=true]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
 //!                  [--steps 200] [--seed 0]
 //! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero|kv [--tokens 64]
+//! road bench-serving          --study merge|tokens|hetero|kv|bank
+//!                  [--tokens 64] [--adapters 64] [--bank-slots 4]
 //! road bench-train-efficiency [--iters 50]
 //! road verify      (golden-record numerics check)
 //! ```
@@ -92,6 +94,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // Diagnostic baseline: --host-roundtrip-kv=true restores the
         // pre-device-resident full-cache transfer on every decode step.
         kv_host_roundtrip: args.bool("host-roundtrip-kv"),
+        // --bank-slots caps the pageable device bank below the artifact's
+        // slot count (adapters beyond it page through LRU slots).
+        bank_slots: args.get("bank-slots").and_then(|s| s.parse().ok()),
+        // --whole-bank-uploads=true restores the re-upload-everything
+        // baseline that paged per-slot uploads replace.
+        paged_bank_uploads: !args.bool("whole-bank-uploads"),
     };
     let mut engine = Engine::new(rt, econf)?;
     if distinct > 0 {
@@ -109,6 +117,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let gen: usize = outs.iter().map(|o| o.tokens.len()).sum();
     println!("{}", engine.metrics.report());
+    if args.bool("stats") {
+        // Full metric table, including the bank paging counters.
+        println!("\n{}", engine.metrics.report_table());
+    }
     println!(
         "completed {} requests, {gen} tokens in {wall:.2}s  ->  {:.1} tok/s",
         outs.len(),
@@ -375,7 +387,18 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             let pts = bench::kv_residency_comparison(&rt, tokens, seed)?;
             bench::render_points("KV residency: device-resident vs host-roundtrip decode", &pts)
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero|kv)"),
+        "bank" => {
+            let n_adapters = args.usize_or("adapters", 64);
+            let bank_slots = args.usize_or("bank-slots", 4);
+            let n_requests = args.usize_or("requests", n_adapters * 2);
+            let pts =
+                bench::bank_churn_study(&rt, n_adapters, bank_slots, n_requests, tokens, seed)?;
+            bench::render_bank_points(
+                "Adapter-bank churn: paged per-slot uploads vs whole-bank baseline",
+                &pts,
+            )
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

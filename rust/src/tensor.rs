@@ -112,9 +112,9 @@ impl HostTensor {
         bytes_to_scalars(&self.data)
     }
 
-    /// Borrow the payload as an f32 slice (alignment-safe: Vec<u8> from our
-    /// constructors is 4-aligned on all supported platforms via realloc, but
-    /// we fall back to a copy if not).
+    /// Borrow the payload as an f32 slice (alignment-safe: `Vec<u8>` from
+    /// our constructors is 4-aligned on all supported platforms via
+    /// realloc, but we fall back to a copy if not).
     pub fn f32_slice(&self) -> Option<&[f32]> {
         assert_eq!(self.dtype, DType::F32);
         let ptr = self.data.as_ptr();

@@ -47,6 +47,16 @@ impl Table {
     }
 }
 
+/// Render `(metric, value)` pairs as a two-column markdown table — the
+/// serving stats presentation (`Metrics::report_table`).
+pub fn kv_table(pairs: &[(&str, String)]) -> String {
+    let mut t = Table::new(&["metric", "value"]);
+    for (k, v) in pairs {
+        t.row(vec![k.to_string(), v.clone()]);
+    }
+    t.render()
+}
+
 pub fn fmt_f(x: f64, digits: usize) -> String {
     format!("{:.*}", digits, x)
 }
@@ -67,6 +77,15 @@ mod tests {
         let s = t.render();
         assert!(s.contains("| Method |"));
         assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn kv_table_two_columns() {
+        let s = kv_table(&[("bank hits", "12".to_string()), ("bank misses", "3".to_string())]);
+        assert!(s.contains("| metric"), "{s}");
+        assert!(s.contains("| bank hits"), "{s}");
+        assert!(s.contains("| 12"), "{s}");
+        assert_eq!(s.lines().count(), 4);
     }
 
     #[test]

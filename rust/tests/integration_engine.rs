@@ -97,6 +97,7 @@ fn device_resident_kv_matches_host_roundtrip() {
                 decode_slots: 2,
                 queue_capacity: 64,
                 kv_host_roundtrip,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -275,6 +276,101 @@ fn latency_metrics_include_queue_wait() {
     let depth = eng.metrics.queue_depth_summary();
     assert!(depth.n >= eng.metrics.decode_steps);
     assert!(depth.max >= 3.0, "max depth {}", depth.max);
+}
+
+/// Store-capacity churn: far more registered adapters than pageable bank
+/// slots, Zipf-distributed traffic.  The paged engine must (a) accept every
+/// registration, (b) serve every request to completion with token output
+/// identical to a large-bank run, and (c) on the paged-upload path move
+/// strictly fewer bank bytes than the whole-bank-upload baseline.
+#[test]
+fn bank_churn_token_identical_to_large_bank() {
+    require_artifacts!();
+    let rt = rt();
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    if cfg.n_adapters < 4 {
+        eprintln!("tiny config has {} bank slots; churn test needs >= 4", cfg.n_adapters);
+        return;
+    }
+    // Fits entirely in the large bank, overflows the 2 pageable slots of
+    // the small one.
+    let distinct = cfg.n_adapters - 1;
+    let mut rng = Rng::seed_from(21);
+    let adapters: Vec<Adapter> = (0..distinct)
+        .map(|_| Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.25)))
+        .collect();
+    // Round-robin over the adapters: every adapter recurs with others in
+    // between, so a 2-slot pager is guaranteed to miss and evict (the
+    // Zipf-skewed variant of this workload is the bench study's job).
+    let mk_reqs = || {
+        let mut wrng = Rng::seed_from(33);
+        road::bench::hetero_workload(&mut wrng, 3 * distinct, distinct, 4, 5)
+    };
+    let run = |bank_slots: Option<usize>, paged: bool| {
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                model: "tiny".into(),
+                mode: "road".into(),
+                decode_slots: 2,
+                queue_capacity: 256,
+                bank_slots,
+                paged_bank_uploads: paged,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for (i, a) in adapters.iter().enumerate() {
+            eng.register_adapter(&format!("adapter-{i}"), a).unwrap();
+        }
+        let mut outs = eng.run_all(mk_reqs()).unwrap();
+        outs.sort_by_key(|o| o.id);
+        (
+            outs,
+            eng.metrics.bank_misses,
+            eng.metrics.bank_evictions,
+            eng.metrics.bank_upload_bytes,
+        )
+    };
+    let (big, _, big_evict, _) = run(None, true);
+    let (paged, misses, evictions, paged_bytes) = run(Some(3), true);
+    let (whole, _, _, whole_bytes) = run(Some(3), false);
+
+    assert_eq!(big.len(), 3 * distinct, "every request completes");
+    assert_eq!(paged.len(), big.len());
+    for (p, b) in paged.iter().zip(&big) {
+        assert_eq!(p.tokens, b.tokens, "paging changed request {} output", p.id);
+    }
+    for (p, w) in paged.iter().zip(&whole) {
+        assert_eq!(p.tokens, w.tokens, "upload policy changed request {} output", p.id);
+    }
+    assert_eq!(big_evict, 0, "large bank never evicts when all adapters fit");
+    assert!(misses > 0, "small bank must page");
+    assert!(evictions > 0, "adapters beyond slots must evict");
+    assert!(
+        paged_bytes < whole_bytes,
+        "per-slot uploads ({paged_bytes}B) must move less than whole-bank ({whole_bytes}B)"
+    );
+}
+
+/// Unregister is rejected while the adapter still has queued work, and
+/// succeeds once its requests have drained.
+#[test]
+fn unregister_waits_for_queued_requests() {
+    require_artifacts!();
+    let rt = rt();
+    let mut eng = tiny_engine(&rt, "road");
+    let mut rng = Rng::seed_from(8);
+    let a = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.3));
+    eng.register_adapter("tmp", &a).unwrap();
+    eng.submit(greedy(&[4, 5], 3).with_adapter("tmp")).unwrap();
+    assert!(eng.unregister_adapter("tmp").is_err(), "queued request blocks unregister");
+    while eng.has_work() {
+        eng.step().unwrap();
+    }
+    eng.unregister_adapter("tmp").unwrap();
+    // Gone: new submissions referencing it are rejected.
+    assert!(eng.submit(greedy(&[4, 5], 3).with_adapter("tmp")).is_err());
 }
 
 #[test]

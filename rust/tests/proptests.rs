@@ -2,7 +2,7 @@
 //! crate): randomized invariants over the coordinator's state machines and
 //! the RoAd math, each run across many seeded cases.
 
-use road::adapters::{Adapter, AdapterBank, AdapterRegistry, RoadAdapter, RoadVectors};
+use road::adapters::{Adapter, AdapterBank, AdapterRegistry, PageOutcome, RoadAdapter, RoadVectors};
 use road::coordinator::kv::SlotAllocator;
 use road::coordinator::queue::AdmissionQueue;
 use road::coordinator::request::Request;
@@ -211,24 +211,97 @@ fn prop_queue_pop_fitting_preserves_order_and_bounds() {
 }
 
 #[test]
-fn prop_registry_slots_unique_and_stable() {
+fn prop_registry_paging_invariants() {
+    // Random register / page-in / pin / unpin / evict / unregister
+    // sequences over a bank with far fewer slots than adapters.  Checked
+    // invariants:
+    //  * registration always succeeds (the store is unbounded),
+    //  * resident slots are unique, non-zero, and within the pageable
+    //    range (never more residents than capacity),
+    //  * a pinned adapter keeps its slot across arbitrary paging,
+    //  * unregister/evict of a pinned adapter is rejected.
     let cfg = tiny_cfg();
     let mut rng = Rng::seed_from(107);
-    for _ in 0..20 {
+    for _case in 0..20 {
         let bank = AdapterBank::new(&cfg, "road", cfg.n_adapters).unwrap();
         let mut reg = AdapterRegistry::new(bank);
-        let mut seen = std::collections::BTreeMap::new();
-        for i in 0..cfg.n_adapters - 1 {
+        let n_names = cfg.n_adapters * 3; // adapters >> slots
+        for i in 0..n_names {
             let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.2));
-            let name = format!("u{i}");
-            let slot = reg.register(&name, &a).unwrap();
-            assert!(slot > 0, "slot 0 is reserved for identity");
-            assert!(seen.insert(slot, name.clone()).is_none(), "slot reuse");
-            // Re-register updates in place.
-            assert_eq!(reg.register(&name, &a).unwrap(), slot);
+            reg.register(&format!("u{i}"), &a).unwrap();
         }
-        let overflow = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.2));
-        assert!(reg.register("overflow", &overflow).is_err());
+        assert_eq!(reg.len(), n_names);
+
+        let mut pinned: std::collections::BTreeMap<String, usize> = Default::default();
+        for _op in 0..120 {
+            let name = format!("u{}", rng.below(n_names));
+            match rng.below(5) {
+                // Page in (the admission path) and sometimes pin.
+                0 | 1 => match reg.ensure_resident(&name) {
+                    Ok(PageOutcome::Hit(slot)) | Ok(PageOutcome::Paged { slot, .. }) => {
+                        assert!(slot > 0, "identity slot never paged");
+                        if pinned.len() < reg.capacity() - 1 && rng.chance(0.5) {
+                            reg.pin(slot);
+                            *pinned.entry(name.clone()).or_insert(0) += 1;
+                            // a double pin must also be safe
+                            if rng.chance(0.25) {
+                                reg.pin(slot);
+                                *pinned.get_mut(&name).unwrap() += 1;
+                            }
+                        }
+                    }
+                    Ok(PageOutcome::Stalled) => {
+                        assert!(
+                            !pinned.is_empty(),
+                            "stall without pinned slots is a pager bug"
+                        );
+                    }
+                    Err(e) => panic!("ensure_resident({name}) failed: {e}"),
+                },
+                // Unpin one layer of a random pinned adapter.
+                2 => {
+                    if let Some(n) = pinned.keys().next().cloned() {
+                        let slot = reg.slot_of(&n).expect("pinned implies resident");
+                        reg.unpin(slot);
+                        let left = pinned.get_mut(&n).unwrap();
+                        *left -= 1;
+                        if *left == 0 {
+                            pinned.remove(&n);
+                        }
+                    }
+                }
+                // Evict: allowed iff not pinned; never touches the store.
+                3 => {
+                    if pinned.contains_key(&name) {
+                        assert!(reg.evict(&name).is_err(), "evicted a pinned adapter");
+                    } else {
+                        let _ = reg.evict(&name).unwrap();
+                        assert!(reg.store.contains(&name));
+                    }
+                }
+                // Re-register: allowed iff not pinned.
+                _ => {
+                    let a = Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.2));
+                    if pinned.contains_key(&name) {
+                        assert!(reg.register(&name, &a).is_err(), "replaced a pinned adapter");
+                    } else {
+                        reg.register(&name, &a).unwrap();
+                    }
+                }
+            }
+            // Invariants after every op.
+            assert!(reg.resident_len() <= reg.capacity());
+            let mut slots_seen = std::collections::BTreeSet::new();
+            for n in reg.resident_names() {
+                let s = reg.slot_of(n).unwrap();
+                assert!(s > 0 && s < cfg.n_adapters, "slot {s} out of pageable range");
+                assert!(slots_seen.insert(s), "slot {s} assigned twice");
+            }
+            for n in pinned.keys() {
+                let s = reg.slot_of(n).expect("pinned adapter lost residency");
+                assert!(reg.is_pinned(s));
+            }
+        }
     }
 }
 
