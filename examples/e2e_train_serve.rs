@@ -94,7 +94,7 @@ fn main() -> Result<()> {
         let prompt = if i % 2 == 0 { "12+34=" } else { "7+8=" };
         let adapter = if i % 2 == 0 { "math" } else { "other-user" };
         reqs.push(
-            Request::new(i + 1, road::tokenizer::encode(prompt), 6)
+            Request::new(road::tokenizer::encode(prompt), 6)
                 .with_adapter(adapter)
                 .with_sampling(SamplingParams { temperature: 0.0, top_k: 0, seed: 0, stop_token: Some(b'.' as i32) }),
         );

@@ -44,9 +44,9 @@ fn main() -> Result<()> {
     //    the paper's heterogeneous-batching scenario, handled by the
     //    element-wise Eq.-4 path in a single decode executable.
     let reqs = vec![
-        Request::new(1, road::tokenizer::encode("hello"), 12).with_adapter("alice"),
-        Request::new(2, road::tokenizer::encode("hello"), 12).with_adapter("bob"),
-        Request::new(3, road::tokenizer::encode("hello"), 12), // base model
+        Request::new(road::tokenizer::encode("hello"), 12).with_adapter("alice"),
+        Request::new(road::tokenizer::encode("hello"), 12).with_adapter("bob"),
+        Request::new(road::tokenizer::encode("hello"), 12), // base model
     ];
     let outs = engine.run_all(reqs)?;
     for o in &outs {

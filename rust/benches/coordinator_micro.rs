@@ -63,8 +63,8 @@ fn main() {
 
     bench("queue push+pop_fitting (32 requests)", 10_000, || {
         let mut q = AdmissionQueue::new(64);
-        for i in 0..32 {
-            q.push(Request::new(i as u64 + 1, vec![1; 8], 16)).unwrap();
+        for _ in 0..32 {
+            q.push(Request::new(vec![1; 8], 16)).unwrap();
         }
         while !q.is_empty() {
             std::hint::black_box(q.pop_fitting(8, 16));
@@ -143,7 +143,7 @@ fn main() {
 
     bench("request construction (8-token prompt)", 100_000, || {
         std::hint::black_box(
-            Request::new(1, vec![1, 2, 3, 4, 5, 6, 7, 8], 64).with_adapter("user-1"),
+            Request::new(vec![1, 2, 3, 4, 5, 6, 7, 8], 64).with_adapter("user-1"),
         );
     });
 

@@ -73,7 +73,7 @@ pub fn hetero_workload(
         .map(|i| {
             let prompt: Vec<i32> =
                 (0..prompt_len).map(|_| 1 + rng.below(255) as i32).collect();
-            let mut r = Request::new((i + 1) as u64, prompt, new_tokens).with_sampling(
+            let mut r = Request::new(prompt, new_tokens).with_sampling(
                 SamplingParams { temperature: 0.0, top_k: 0, seed: i as u64, stop_token: None },
             );
             if distinct > 0 {
@@ -114,7 +114,7 @@ pub fn zipf_workload(
     (0..n_requests)
         .map(|i| {
             let prompt: Vec<i32> = (0..prompt_len).map(|_| 1 + rng.below(255) as i32).collect();
-            let mut r = Request::new((i + 1) as u64, prompt, new_tokens).with_sampling(
+            let mut r = Request::new(prompt, new_tokens).with_sampling(
                 SamplingParams { temperature: 0.0, top_k: 0, seed: i as u64, stop_token: None },
             );
             if let Some(w) = &weights {
@@ -273,6 +273,166 @@ pub fn kv_residency_comparison(
         out.push(p);
     }
     Ok(out)
+}
+
+/// One streaming-serving measurement (the open-loop study's row).
+#[derive(Clone, Debug)]
+pub struct StreamingPoint {
+    pub label: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub cancelled: usize,
+    /// Requests that never reached a `Finished` event (submit rejected or
+    /// stream ended in `Error`) — kept out of `completed` so the
+    /// run-to-completion vs cancel comparison stays honest.
+    pub errored: usize,
+    /// Token events observed client-side across all requests.
+    pub tokens_streamed: usize,
+    pub wall_secs: f64,
+    /// Client-observed TTFT (submit call → first `Token` event received),
+    /// in milliseconds — the latency a real caller sees through the
+    /// channel, not the engine's internal stamp.
+    pub observed_ttft_p50_ms: f64,
+    pub observed_ttft_p90_ms: f64,
+}
+
+/// Open-loop streaming study over the threaded server: clients submit on
+/// an arrival clock (independent of completions), consume `StreamEvent`s,
+/// and measure *observed* TTFT.  The second scenario cancels every other
+/// request after `cancel_after` observed tokens — the cancellation-reclaim
+/// comparison: reclaimed decode lanes shrink wall time and streamed-token
+/// volume versus running every request to completion.
+pub fn streaming_study(
+    artifacts_dir: std::path::PathBuf,
+    model: &str,
+    n_requests: usize,
+    new_tokens: usize,
+    cancel_after: usize,
+    seed: u64,
+) -> Result<Vec<StreamingPoint>> {
+    use crate::coordinator::request::StreamEvent;
+    use crate::coordinator::server::EngineServer;
+
+    let distinct = 8usize;
+    let mut out = Vec::new();
+    for (label, cancel_half) in [
+        ("stream/run-to-completion", false),
+        ("stream/cancel-half", true),
+    ] {
+        let econf = EngineConfig {
+            model: model.into(),
+            mode: "road".into(),
+            decode_slots: 8,
+            queue_capacity: 4096,
+            ..Default::default()
+        };
+        let (server, client) = EngineServer::start(econf, artifacts_dir.clone(), move |eng| {
+            register_adapters(eng, distinct, seed)
+        })?;
+        let mut rng = Rng::seed_from(seed ^ 0x57e4);
+        let reqs = hetero_workload(&mut rng, n_requests, distinct, 8, new_tokens);
+
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for (i, req) in reqs.into_iter().enumerate() {
+            let client = client.clone();
+            let cancel_at = (cancel_half && i % 2 == 1).then_some(cancel_after);
+            // Per-request terminal outcome: Some(true) = cancelled,
+            // Some(false) = completed, None = submit rejected or the
+            // stream ended in an Error event.
+            handles.push(std::thread::spawn(move || -> (Option<f64>, usize, Option<bool>) {
+                // Open-loop arrival clock: request i enters at i*2ms
+                // whether or not earlier requests have finished.
+                std::thread::sleep(std::time::Duration::from_millis(2 * i as u64));
+                let submitted = std::time::Instant::now();
+                let Ok(mut generation) = client.submit(req) else {
+                    return (None, 0, None);
+                };
+                let mut ttft = None;
+                let mut seen = 0usize;
+                let mut cancel_sent = false;
+                let mut outcome = None;
+                while let Some(ev) = generation.recv() {
+                    match ev {
+                        StreamEvent::Token { .. } => {
+                            ttft.get_or_insert_with(|| submitted.elapsed().as_secs_f64());
+                            seen += 1;
+                            if !cancel_sent && cancel_at.is_some_and(|k| seen >= k) {
+                                generation.cancel();
+                                cancel_sent = true;
+                            }
+                        }
+                        StreamEvent::Finished(o) => {
+                            let c = crate::coordinator::request::FinishReason::Cancelled;
+                            outcome = Some(o.finish == c);
+                            break;
+                        }
+                        StreamEvent::Error { .. } => break,
+                        StreamEvent::Admitted { .. } => {}
+                    }
+                }
+                (ttft, seen, outcome)
+            }));
+        }
+        let mut ttfts_ms = Vec::new();
+        let (mut completed, mut cancelled, mut errored) = (0usize, 0usize, 0usize);
+        let mut tokens_streamed = 0usize;
+        for h in handles {
+            let (ttft, seen, outcome) = h.join().expect("client thread panicked");
+            if let Some(t) = ttft {
+                ttfts_ms.push(t * 1e3);
+            }
+            tokens_streamed += seen;
+            match outcome {
+                Some(true) => cancelled += 1,
+                Some(false) => completed += 1,
+                None => errored += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown()?;
+        let s = crate::util::stats::summarize(&ttfts_ms);
+        out.push(StreamingPoint {
+            label: label.into(),
+            requests: n_requests,
+            completed,
+            cancelled,
+            errored,
+            tokens_streamed,
+            wall_secs: wall,
+            observed_ttft_p50_ms: s.p50,
+            observed_ttft_p90_ms: s.p90,
+        });
+    }
+    Ok(out)
+}
+
+/// Render the streaming study; the cancel row's smaller streamed-token
+/// volume and wall time are the reclaim the study exists to show.
+pub fn render_streaming_points(title: &str, points: &[StreamingPoint]) -> String {
+    let mut t = Table::new(&[
+        "config", "reqs", "completed", "cancelled", "errored", "tok-streamed", "wall(s)",
+        "obs-ttft p50(ms)", "obs-ttft p90(ms)",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.label.clone(),
+            p.requests.to_string(),
+            p.completed.to_string(),
+            p.cancelled.to_string(),
+            p.errored.to_string(),
+            p.tokens_streamed.to_string(),
+            fmt_f(p.wall_secs, 2),
+            fmt_f(p.observed_ttft_p50_ms, 1),
+            fmt_f(p.observed_ttft_p90_ms, 1),
+        ]);
+    }
+    format!(
+        "## {title}\n{}\nobs-ttft is measured at the client (submit call → first Token \
+         event through the channel); cancelled lanes are reclaimed for waiting work, \
+         which is the wall/token delta between the rows.\n",
+        t.render()
+    )
 }
 
 /// Figure 4 (Left): merged vs unmerged LoRA.  The merged path is the base
@@ -502,6 +662,25 @@ mod tests {
         assert!(b.contains("hits"), "{b}");
         assert!(b.contains("12"), "{b}");
         assert!(b.contains("8.2"), "upload KB column: {b}");
+    }
+
+    #[test]
+    fn render_streaming_table_has_reclaim_columns() {
+        let p = StreamingPoint {
+            label: "stream/cancel-half".into(),
+            requests: 16,
+            completed: 7,
+            cancelled: 8,
+            errored: 1,
+            tokens_streamed: 512,
+            wall_secs: 2.5,
+            observed_ttft_p50_ms: 12.5,
+            observed_ttft_p90_ms: 31.0,
+        };
+        let s = render_streaming_points("Streaming", &[p]);
+        for needle in ["cancelled", "errored", "tok-streamed", "obs-ttft p50(ms)", "12.5", "512"] {
+            assert!(s.contains(needle), "missing {needle:?} in\n{s}");
+        }
     }
 
     #[test]

@@ -207,27 +207,27 @@ pub fn sample_responses(
     max_new: usize,
 ) -> Result<Vec<Transcript>> {
     let mut reqs = Vec::new();
-    for (i, p) in prompts.iter().enumerate() {
+    for p in prompts.iter() {
         reqs.push(
-            crate::coordinator::request::Request::new(
-                (i + 1) as u64,
-                crate::tokenizer::encode(p),
-                max_new,
-            )
-            .with_adapter(adapter_name)
-            .with_sampling(crate::coordinator::request::SamplingParams {
-                temperature: 0.0,
-                top_k: 0,
-                seed: 0,
-                stop_token: Some(b'.' as i32),
-            }),
+            crate::coordinator::request::Request::new(crate::tokenizer::encode(p), max_new)
+                .with_adapter(adapter_name)
+                .with_sampling(crate::coordinator::request::SamplingParams {
+                    temperature: 0.0,
+                    top_k: 0,
+                    seed: 0,
+                    stop_token: Some(b'.' as i32),
+                }),
         );
     }
-    let outs = engine.run_all(reqs)?;
+    let mut outs = engine.run_all(reqs)?;
+    // Engine-issued ids are monotonic in submission order: sort to pair
+    // outputs back with their prompts.
+    outs.sort_by_key(|o| o.id);
     let mut ts: Vec<Transcript> = outs
         .into_iter()
-        .map(|o| Transcript {
-            prompt: prompts[(o.id - 1) as usize].clone(),
+        .zip(prompts)
+        .map(|(o, p)| Transcript {
+            prompt: p.clone(),
             subspace: adapter_name.to_string(),
             response: crate::tokenizer::decode(&o.tokens),
         })

@@ -43,7 +43,7 @@ use crate::tensor::{DType, HostTensor};
 use super::kv::{KvState, SlotAllocator};
 use super::metrics::Metrics;
 use super::queue::{AdmissionQueue, EngineError};
-use super::request::{ActiveRequest, FinishReason, Request, RequestOutput};
+use super::request::{ActiveRequest, FinishReason, Request, RequestOutput, StreamEvent};
 use super::sampler;
 
 #[derive(Clone, Debug)]
@@ -109,6 +109,9 @@ pub struct Engine {
     pub queue: AdmissionQueue,
     pub metrics: Metrics,
     next_id: u64,
+    /// Events produced inside the current scheduler iteration, drained by
+    /// [`Engine::step`].
+    events: Vec<StreamEvent>,
 }
 
 impl Engine {
@@ -188,6 +191,7 @@ impl Engine {
             queue: AdmissionQueue::new(econf.queue_capacity),
             metrics: Metrics::default(),
             next_id: 1,
+            events: Vec::new(),
             econf,
         })
     }
@@ -221,39 +225,96 @@ impl Engine {
         self.prefill_buckets.iter().map(|b| b.prompt_len).max().unwrap_or(0)
     }
 
-    /// Enqueue a request (typed [`EngineError::QueueFull`] backpressure
-    /// error when the queue is at capacity).  Stamps the submission time so
-    /// TTFT/e2e metrics include queueing delay.
-    pub fn submit(&mut self, mut req: Request) -> Result<u64> {
+    /// Enqueue a request and return its engine-issued id.  Every failure
+    /// mode is a typed [`EngineError`]: validation problems are
+    /// [`EngineError::Invalid`], unknown adapters are
+    /// [`EngineError::AdapterNotFound`], and a queue at capacity is
+    /// [`EngineError::QueueFull`] backpressure.  Stamps the submission time
+    /// so TTFT/e2e metrics (and deadline budgets) start at the front door.
+    pub fn submit(&mut self, mut req: Request) -> std::result::Result<u64, EngineError> {
+        let invalid = |reason: String| EngineError::Invalid { reason };
         if req.prompt.is_empty() {
-            bail!("empty prompt");
+            return Err(invalid("empty prompt".into()));
         }
         if req.prompt.len() > self.max_prompt_len() {
-            bail!(
+            return Err(invalid(format!(
                 "prompt of {} tokens exceeds the largest prefill bucket ({})",
                 req.prompt.len(),
                 self.max_prompt_len()
-            );
+            )));
         }
-        let total = req.prompt.len() + req.max_new_tokens;
-        if total > self.cfg.max_seq {
-            bail!("prompt+max_new = {total} exceeds max_seq {}", self.cfg.max_seq);
+        // checked_add: wire clients can send arbitrary max_new_tokens, and
+        // a wrapping sum in release mode would slip past this guard (and
+        // then decode forever — done() could never reach MaxTokens).
+        let total = req.prompt.len().checked_add(req.max_new_tokens);
+        if total.map_or(true, |t| t > self.cfg.max_seq) {
+            return Err(invalid(format!(
+                "prompt {} + max_new {} exceeds max_seq {}",
+                req.prompt.len(),
+                req.max_new_tokens,
+                self.cfg.max_seq
+            )));
         }
         if let Some(a) = &req.adapter {
             if !self.registry.store.contains(a) {
-                bail!("unknown adapter {a:?} (register it first)");
+                return Err(EngineError::AdapterNotFound { name: a.clone() });
             }
         }
-        if req.id == 0 {
-            req.id = self.next_id;
-        }
-        self.next_id = self.next_id.max(req.id) + 1;
+        // Ids are engine-issued, unconditionally: a caller-stamped id is
+        // overwritten, so correlation goes through the returned id.
+        req.id = self.next_id;
+        self.next_id += 1;
         let id = req.id;
         if req.submitted_at.is_none() {
             req.submitted_at = Some(Instant::now());
         }
         self.queue.push(req)?;
         Ok(id)
+    }
+
+    /// Cancel a request wherever it currently lives.
+    ///
+    /// * Still queued: removed before it ever occupies a slot.
+    /// * In a decode lane: the slot is freed and the adapter bank pin is
+    ///   released immediately — the next scheduler step can admit waiting
+    ///   work into the reclaimed lane.
+    ///
+    /// Returns the terminal [`RequestOutput`] (finish =
+    /// [`FinishReason::Cancelled`], tokens generated so far) or `None` when
+    /// the id is unknown or already finished — cancellation races resolve
+    /// as no-ops.
+    pub fn cancel(&mut self, id: u64) -> Option<RequestOutput> {
+        let now = Instant::now();
+        if let Some(req) = self.queue.cancel(id) {
+            self.metrics.requests_cancelled += 1;
+            let e2e = req.submitted_at.map(|s| (now - s).as_secs_f64()).unwrap_or_default();
+            return Some(RequestOutput {
+                id,
+                adapter: req.adapter,
+                tokens: Vec::new(),
+                finish: FinishReason::Cancelled,
+                ttft: 0.0,
+                e2e,
+            });
+        }
+        let s = self
+            .slots
+            .iter()
+            .position(|slot| slot.as_ref().is_some_and(|ar| ar.req.id == id))?;
+        let ar = self.slots[s].take().expect("position() found an occupied slot");
+        // The allocator cannot refuse: `s` was found occupied above.
+        self.alloc.release(s).expect("cancelled slot was allocated");
+        self.registry.unpin(ar.slot_adapter);
+        self.metrics.requests_cancelled += 1;
+        let ttft = ar.first_token_at.map(|t| (t - ar.submitted).as_secs_f64()).unwrap_or_default();
+        Some(RequestOutput {
+            id,
+            adapter: ar.req.adapter,
+            tokens: ar.generated,
+            finish: FinishReason::Cancelled,
+            ttft,
+            e2e: (now - ar.submitted).as_secs_f64(),
+        })
     }
 
     pub fn n_active(&self) -> usize {
@@ -432,6 +493,7 @@ impl Engine {
                     self.metrics.paged_wait.record(now.duration_since(s));
                 }
             }
+            self.events.push(StreamEvent::Admitted { id: req.id });
             actives.push(ActiveRequest::new(req, slot_adapter, now));
         }
 
@@ -472,6 +534,18 @@ impl Engine {
             ar.first_token_at = Some(Instant::now());
             self.metrics.tokens_generated += 1;
             self.metrics.prompt_tokens += ar.req.prompt.len();
+            // Stream the first token with its TTFT; a stop token is
+            // terminal and never emitted (it is also stripped from the
+            // finished output, keeping the stream concatenation exact).
+            if !matches!(ar.done(), Some(FinishReason::StopToken)) {
+                let ttft = (ar.first_token_at.unwrap() - ar.submitted).as_secs_f64();
+                self.events.push(StreamEvent::Token {
+                    id: ar.req.id,
+                    token: tok,
+                    pos: 0,
+                    ttft_hint: Some(ttft),
+                });
+            }
 
             let slot = self
                 .alloc
@@ -485,7 +559,7 @@ impl Engine {
     }
 
     /// One decode step across all slots.
-    fn decode_once(&mut self, outputs: &mut Vec<RequestOutput>) -> Result<()> {
+    fn decode_once(&mut self) -> Result<()> {
         self.upload_bank_if_dirty()?;
         let b = self.econf.decode_slots;
         let mut token = vec![0i32; b];
@@ -582,32 +656,37 @@ impl Engine {
 
         let vocab = self.cfg.vocab;
         for s in 0..b {
-            let Some(ar) = self.slots[s].as_mut() else { continue };
-            ar.pos += 1;
-            let row = logits.read_f32_range(s * vocab, vocab);
-            let tok = sampler::sample(
-                &row,
-                ar.req.sampling.temperature,
-                ar.req.sampling.top_k,
-                &mut ar.rng_state,
-            );
-            ar.generated.push(tok);
+            let (id, tok, pos, reason) = {
+                let Some(ar) = self.slots[s].as_mut() else { continue };
+                ar.pos += 1;
+                let row = logits.read_f32_range(s * vocab, vocab);
+                let tok = sampler::sample(
+                    &row,
+                    ar.req.sampling.temperature,
+                    ar.req.sampling.top_k,
+                    &mut ar.rng_state,
+                );
+                ar.generated.push(tok);
+                (ar.req.id, tok, ar.generated.len() - 1, ar.done())
+            };
             self.metrics.tokens_generated += 1;
-            if let Some(reason) = ar.done() {
+            // Stop tokens are terminal and stripped from the output, so
+            // they are never streamed either.
+            if !matches!(reason, Some(FinishReason::StopToken)) {
+                self.events.push(StreamEvent::Token { id, token: tok, pos, ttft_hint: None });
+            }
+            if let Some(reason) = reason {
                 let ar = self.slots[s].take().unwrap();
                 self.alloc.release(s)?;
-                self.finish(ar, reason, outputs);
+                self.finish(ar, reason);
             }
         }
         Ok(())
     }
 
-    fn finish(
-        &mut self,
-        ar: ActiveRequest,
-        reason: FinishReason,
-        outputs: &mut Vec<RequestOutput>,
-    ) {
+    /// Complete a request: release its bank pin, record latency metrics,
+    /// and emit the terminal [`StreamEvent::Finished`].
+    fn finish(&mut self, ar: ActiveRequest, reason: FinishReason) {
         // The lane no longer references its adapter slot; release the pin
         // so the pager may evict it (identity slot 0 is a no-op).
         self.registry.unpin(ar.slot_adapter);
@@ -624,24 +703,50 @@ impl Engine {
         self.metrics.ttft.record_us(ttft * 1e6);
         let e2e = (now - ar.submitted).as_secs_f64();
         self.metrics.e2e.record_us(e2e * 1e6);
-        outputs.push(RequestOutput {
+        self.events.push(StreamEvent::Finished(RequestOutput {
             id: ar.req.id,
             adapter: ar.req.adapter,
             tokens,
             finish: reason,
             ttft,
             e2e,
-        });
+        }));
     }
 
-    /// One scheduler iteration: admit + decode.  Returns requests finished
-    /// during this iteration.
-    pub fn step(&mut self) -> Result<Vec<RequestOutput>> {
+    /// Reap requests whose deadline passed: shed expired queued work before
+    /// it is admitted, and free decode lanes holding expired requests
+    /// before spending another decode step on them.  Each reaped request
+    /// ends its stream with [`EngineError::DeadlineExceeded`].
+    fn enforce_deadlines(&mut self) -> Result<()> {
+        let now = Instant::now();
+        for req in self.queue.shed_expired(now) {
+            self.metrics.deadline_shed += 1;
+            self.events
+                .push(StreamEvent::Error { id: req.id, error: EngineError::DeadlineExceeded });
+        }
+        for s in 0..self.slots.len() {
+            if self.slots[s].as_ref().is_some_and(|ar| ar.req.expired(now)) {
+                let ar = self.slots[s].take().unwrap();
+                self.alloc.release(s)?;
+                self.registry.unpin(ar.slot_adapter);
+                self.metrics.deadline_shed += 1;
+                self.events
+                    .push(StreamEvent::Error { id: ar.req.id, error: EngineError::DeadlineExceeded });
+            }
+        }
+        Ok(())
+    }
+
+    /// One scheduler iteration: enforce deadlines, admit, decode.  Returns
+    /// every [`StreamEvent`] produced while lanes advanced this iteration —
+    /// `Admitted`/`Token` progress plus terminal `Finished`/`Error` events.
+    pub fn step(&mut self) -> Result<Vec<StreamEvent>> {
         self.metrics.start();
         self.metrics.queue_depth.record_value(self.queue.len() as f64);
-        let mut outputs = Vec::new();
+        self.enforce_deadlines()?;
         self.maybe_prefill()?;
-        // A request can finish at prefill time (max_new_tokens == 1).
+        // A request can finish at prefill time (max_new_tokens == 1, or a
+        // stop token sampled from the prefill logits).
         let finished_at_prefill: Vec<usize> = self
             .slots
             .iter()
@@ -654,17 +759,22 @@ impl Engine {
             let ar = self.slots[s].take().unwrap();
             let reason = ar.done().unwrap();
             self.alloc.release(s)?;
-            self.finish(ar, reason, &mut outputs);
+            self.finish(ar, reason);
         }
-        self.decode_once(&mut outputs)?;
-        Ok(outputs)
+        self.decode_once()?;
+        Ok(std::mem::take(&mut self.events))
     }
 
     /// Submit a workload and run to completion (bench/example driver).
+    /// Returns terminal outputs only; streaming consumers use
+    /// [`Engine::step`] (or the threaded [`super::server::EngineClient`])
+    /// to observe per-token events.
     ///
-    /// Backpressure is detected by downcasting to the typed
-    /// [`EngineError::QueueFull`] — full queues park the remaining requests
-    /// and drain a scheduler step; any other submit error aborts.
+    /// Typed [`EngineError::QueueFull`] backpressure parks the remaining
+    /// requests and drains a scheduler step; any other submit error aborts.
+    /// A request that dies mid-run (e.g. a deadline shed) aborts too —
+    /// callers of this API zip outputs against inputs by sorted id and
+    /// must never silently lose a request from the returned set.
     pub fn run_all(&mut self, reqs: Vec<Request>) -> Result<Vec<RequestOutput>> {
         let mut pending: std::collections::VecDeque<Request> = reqs.into();
         let mut outputs = Vec::new();
@@ -678,18 +788,23 @@ impl Engine {
                 }
                 match self.submit(r.clone()) {
                     Ok(_) => {}
-                    Err(e) if matches!(
-                        e.downcast_ref::<EngineError>(),
-                        Some(EngineError::QueueFull { .. })
-                    ) =>
-                    {
+                    Err(EngineError::QueueFull { .. }) => {
                         pending.push_front(r);
                         break;
                     }
-                    Err(e) => return Err(e),
+                    Err(e) => return Err(e.into()),
                 }
             }
-            outputs.extend(self.step()?);
+            for ev in self.step()? {
+                match ev {
+                    StreamEvent::Finished(out) => outputs.push(out),
+                    StreamEvent::Error { id, error } => {
+                        return Err(error)
+                            .with_context(|| format!("request {id} died during run_all"));
+                    }
+                    StreamEvent::Admitted { .. } | StreamEvent::Token { .. } => {}
+                }
+            }
         }
         self.metrics.stop();
         Ok(outputs)

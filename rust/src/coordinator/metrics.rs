@@ -1,21 +1,34 @@
 //! Serving metrics: throughput, TTFT, per-token and end-to-end latency,
 //! queueing delay/depth, step-time accounting split by phase, KV-cache
-//! transfer counters, and adapter-bank paging counters
-//! (hits/misses/evictions and host-to-device upload bytes).
+//! transfer counters, adapter-bank paging counters
+//! (hits/misses/evictions and host-to-device upload bytes), and the
+//! streaming-lifecycle counters (cancellations, deadline sheds).
 //!
 //! Latency clocks start at `Engine::submit` (the request's
 //! `submitted_at` stamp), so TTFT and e2e include time spent waiting in
 //! the admission queue — what a client actually observes — not just
 //! compute after admission.
+//!
+//! The live [`Metrics`] struct is engine-thread-only (it owns histogram
+//! buffers); everything that crosses a channel is a [`MetricsSnapshot`] —
+//! a plain serializable value with the rendered reports as methods and a
+//! JSON form for the NDJSON `stats` op.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{self, Json};
 use crate::util::stats::{LatencyRecorder, Summary};
 use crate::util::table::kv_table;
 
 #[derive(Default)]
 pub struct Metrics {
     pub requests_completed: usize,
+    /// Requests cancelled after submission (explicit `cancel`, dropped
+    /// stream handles) — their decode slot and bank pin were reclaimed.
+    pub requests_cancelled: usize,
+    /// Requests that blew their deadline: shed from the queue at admission
+    /// or reaped from a decode slot between steps.
+    pub deadline_shed: usize,
     pub tokens_generated: usize,
     pub prompt_tokens: usize,
     pub prefill_batches: usize,
@@ -108,34 +121,105 @@ impl Metrics {
         self.paged_wait.summary()
     }
 
+    /// Freeze the current state into a plain serializable value — the only
+    /// form that crosses the engine-thread channel boundary.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_completed: self.requests_completed,
+            requests_cancelled: self.requests_cancelled,
+            deadline_shed: self.deadline_shed,
+            tokens_generated: self.tokens_generated,
+            prompt_tokens: self.prompt_tokens,
+            prefill_batches: self.prefill_batches,
+            decode_steps: self.decode_steps,
+            wall_secs: self.wall(),
+            throughput: self.throughput(),
+            ttft: self.ttft_summary(),
+            e2e: self.e2e_summary(),
+            queue_wait: self.queue_wait_summary(),
+            paged_wait: self.paged_wait_summary(),
+            queue_depth: self.queue_depth_summary(),
+            prefill_secs: self.prefill_time.as_secs_f64(),
+            decode_secs: self.decode_time.as_secs_f64(),
+            kv_host_syncs: self.kv_host_syncs,
+            kv_uploads: self.kv_uploads,
+            bank_hits: self.bank_hits,
+            bank_misses: self.bank_misses,
+            bank_evictions: self.bank_evictions,
+            bank_upload_bytes: self.bank_upload_bytes,
+            bank_full_uploads: self.bank_full_uploads,
+            bank_staged_rows: self.bank_staged_rows,
+        }
+    }
+
+    /// One-line rendering of [`Metrics::snapshot`].
     pub fn report(&self) -> String {
-        let t = self.ttft_summary();
-        let e = self.e2e_summary();
-        let qw = self.queue_wait_summary();
-        let qd = self.queue_depth_summary();
+        self.snapshot().report()
+    }
+
+    /// Two-column table rendering of [`Metrics::snapshot`].
+    pub fn report_table(&self) -> String {
+        self.snapshot().report_table()
+    }
+}
+
+/// Frozen, serializable metrics value: what `EngineClient::stats` returns
+/// and what the NDJSON `stats` op puts on the wire ([`MetricsSnapshot::to_json`]).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests_completed: usize,
+    pub requests_cancelled: usize,
+    pub deadline_shed: usize,
+    pub tokens_generated: usize,
+    pub prompt_tokens: usize,
+    pub prefill_batches: usize,
+    pub decode_steps: usize,
+    pub wall_secs: f64,
+    pub throughput: f64,
+    pub ttft: Summary,
+    pub e2e: Summary,
+    pub queue_wait: Summary,
+    pub paged_wait: Summary,
+    pub queue_depth: Summary,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub kv_host_syncs: usize,
+    pub kv_uploads: usize,
+    pub bank_hits: usize,
+    pub bank_misses: usize,
+    pub bank_evictions: usize,
+    pub bank_upload_bytes: usize,
+    pub bank_full_uploads: usize,
+    pub bank_staged_rows: usize,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s \
+            "requests={} cancelled={} shed={} tokens={} wall={:.2}s throughput={:.1} tok/s \
              prefill_batches={} decode_steps={} \
              ttft(p50/p90)={:.1}/{:.1}ms e2e(p50/p90)={:.1}/{:.1}ms \
              queue_wait(p50/p90)={:.1}/{:.1}ms queue_depth(p50/max)={:.0}/{:.0} \
              prefill={:.2}s decode={:.2}s kv_dl/ul={}/{} \
              bank(h/m/e)={}/{}/{} bank_upload={}B",
             self.requests_completed,
+            self.requests_cancelled,
+            self.deadline_shed,
             self.tokens_generated,
-            self.wall(),
-            self.throughput(),
+            self.wall_secs,
+            self.throughput,
             self.prefill_batches,
             self.decode_steps,
-            t.p50 / 1e3,
-            t.p90 / 1e3,
-            e.p50 / 1e3,
-            e.p90 / 1e3,
-            qw.p50 / 1e3,
-            qw.p90 / 1e3,
-            qd.p50,
-            qd.max,
-            self.prefill_time.as_secs_f64(),
-            self.decode_time.as_secs_f64(),
+            self.ttft.p50 / 1e3,
+            self.ttft.p90 / 1e3,
+            self.e2e.p50 / 1e3,
+            self.e2e.p90 / 1e3,
+            self.queue_wait.p50 / 1e3,
+            self.queue_wait.p90 / 1e3,
+            self.queue_depth.p50,
+            self.queue_depth.max,
+            self.prefill_secs,
+            self.decode_secs,
             self.kv_host_syncs,
             self.kv_uploads,
             self.bank_hits,
@@ -147,17 +231,16 @@ impl Metrics {
 
     /// Full serving report as a two-column markdown table (`road serve
     /// --stats`), including the bank paging counters the one-line
-    /// [`Metrics::report`] summarizes.
+    /// [`MetricsSnapshot::report`] summarizes.
     pub fn report_table(&self) -> String {
-        let t = self.ttft_summary();
-        let e = self.e2e_summary();
-        let qw = self.queue_wait_summary();
-        let pw = self.paged_wait_summary();
-        let qd = self.queue_depth_summary();
+        let (t, e, qw, pw, qd) =
+            (&self.ttft, &self.e2e, &self.queue_wait, &self.paged_wait, &self.queue_depth);
         kv_table(&[
             ("requests completed", self.requests_completed.to_string()),
+            ("requests cancelled", self.requests_cancelled.to_string()),
+            ("deadline shed", self.deadline_shed.to_string()),
             ("tokens generated", self.tokens_generated.to_string()),
-            ("throughput (tok/s)", format!("{:.1}", self.throughput())),
+            ("throughput (tok/s)", format!("{:.1}", self.throughput)),
             ("prefill batches", self.prefill_batches.to_string()),
             ("decode steps", self.decode_steps.to_string()),
             ("ttft p50/p90 (ms)", format!("{:.1} / {:.1}", t.p50 / 1e3, t.p90 / 1e3)),
@@ -175,6 +258,44 @@ impl Metrics {
             ("bank upload bytes", self.bank_upload_bytes.to_string()),
             ("bank full uploads", self.bank_full_uploads.to_string()),
             ("bank staged rows", self.bank_staged_rows.to_string()),
+        ])
+    }
+
+    /// JSON form for the wire (`{"op":"stats"}` on the NDJSON front end).
+    pub fn to_json(&self) -> Json {
+        let summary = |s: &Summary| {
+            json::obj(vec![
+                ("n", json::num(s.n as f64)),
+                ("mean_us", json::num(s.mean)),
+                ("p50_us", json::num(s.p50)),
+                ("p90_us", json::num(s.p90)),
+                ("p99_us", json::num(s.p99)),
+                ("max_us", json::num(s.max)),
+            ])
+        };
+        json::obj(vec![
+            ("requests_completed", json::num(self.requests_completed as f64)),
+            ("requests_cancelled", json::num(self.requests_cancelled as f64)),
+            ("deadline_shed", json::num(self.deadline_shed as f64)),
+            ("tokens_generated", json::num(self.tokens_generated as f64)),
+            ("prompt_tokens", json::num(self.prompt_tokens as f64)),
+            ("prefill_batches", json::num(self.prefill_batches as f64)),
+            ("decode_steps", json::num(self.decode_steps as f64)),
+            ("wall_secs", json::num(self.wall_secs)),
+            ("throughput_tok_s", json::num(self.throughput)),
+            ("ttft", summary(&self.ttft)),
+            ("e2e", summary(&self.e2e)),
+            ("queue_wait", summary(&self.queue_wait)),
+            ("paged_wait", summary(&self.paged_wait)),
+            ("queue_depth", summary(&self.queue_depth)),
+            ("kv_host_syncs", json::num(self.kv_host_syncs as f64)),
+            ("kv_uploads", json::num(self.kv_uploads as f64)),
+            ("bank_hits", json::num(self.bank_hits as f64)),
+            ("bank_misses", json::num(self.bank_misses as f64)),
+            ("bank_evictions", json::num(self.bank_evictions as f64)),
+            ("bank_upload_bytes", json::num(self.bank_upload_bytes as f64)),
+            ("bank_full_uploads", json::num(self.bank_full_uploads as f64)),
+            ("bank_staged_rows", json::num(self.bank_staged_rows as f64)),
         ])
     }
 }
@@ -223,5 +344,65 @@ mod tests {
         for needle in needles {
             assert!(t.contains(needle), "missing {needle:?} in\n{t}");
         }
+    }
+
+    #[test]
+    fn snapshot_freezes_counters_and_reports_lifecycle() {
+        let mut m = Metrics::default();
+        m.requests_completed = 5;
+        m.requests_cancelled = 2;
+        m.deadline_shed = 1;
+        m.tokens_generated = 40;
+        m.ttft.record(Duration::from_millis(3));
+        let s = m.snapshot();
+        assert_eq!(s.requests_completed, 5);
+        assert_eq!(s.requests_cancelled, 2);
+        assert_eq!(s.deadline_shed, 1);
+        assert_eq!(s.ttft.n, 1);
+        let line = s.report();
+        assert!(line.contains("cancelled=2"), "{line}");
+        assert!(line.contains("shed=1"), "{line}");
+        let table = s.report_table();
+        assert!(table.contains("requests cancelled"), "{table}");
+        assert!(table.contains("deadline shed"), "{table}");
+    }
+
+    #[test]
+    fn snapshot_json_is_parseable_and_complete() {
+        let mut m = Metrics::default();
+        m.requests_completed = 3;
+        m.requests_cancelled = 1;
+        m.bank_full_uploads = 2;
+        m.bank_staged_rows = 9;
+        m.e2e.record(Duration::from_millis(9));
+        let j = m.snapshot().to_json();
+        // Round-trips through the serializer (compact form is one line —
+        // the NDJSON invariant).
+        let compact = j.to_string_compact();
+        assert!(!compact.contains('\n'), "{compact}");
+        let back = Json::parse(&compact).unwrap();
+        assert_eq!(back.get("requests_completed").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.get("requests_cancelled").unwrap().as_usize().unwrap(), 1);
+        assert!(back.get("e2e").unwrap().get("p50_us").unwrap().as_f64().unwrap() > 0.0);
+        // Every scalar counter the table report exposes is on the wire too.
+        for key in [
+            "deadline_shed",
+            "tokens_generated",
+            "prompt_tokens",
+            "prefill_batches",
+            "decode_steps",
+            "kv_host_syncs",
+            "kv_uploads",
+            "bank_hits",
+            "bank_misses",
+            "bank_evictions",
+            "bank_upload_bytes",
+            "bank_full_uploads",
+            "bank_staged_rows",
+        ] {
+            assert!(back.opt(key).is_some(), "stats JSON missing {key}");
+        }
+        assert_eq!(back.get("bank_full_uploads").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.get("bank_staged_rows").unwrap().as_usize().unwrap(), 9);
     }
 }

@@ -1,17 +1,21 @@
 //! Layer-3 coordinator: the paper's serving contribution as a running
 //! system — request admission, a virtualized adapter registry (host store
 //! + LRU-paged device bank), continuous batching over decode slots,
-//! KV-slot management, sampling, metrics, and a threaded server front-end.
+//! KV-slot management, sampling, metrics, a streaming client API with
+//! first-class cancellation and deadlines, and an NDJSON-over-TCP front
+//! end for external clients.
 
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod net;
 pub mod queue;
 pub mod request;
 pub mod sampler;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig};
+pub use metrics::MetricsSnapshot;
 pub use queue::EngineError;
-pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
-pub use server::{EngineClient, EngineServer};
+pub use request::{FinishReason, Request, RequestOutput, SamplingParams, StreamEvent};
+pub use server::{EngineClient, EngineServer, Generation};

@@ -1,0 +1,377 @@
+//! NDJSON-over-TCP front end: the engine's wire protocol (std::net +
+//! threads; the image carries no tokio or HTTP stack — docs/DESIGN.md
+//! §Substitutions).
+//!
+//! One JSON object per line in, one JSON event per line out
+//! (docs/DESIGN.md §Streaming protocol for the full grammar):
+//!
+//! ```text
+//! → {"op":"generate","text":"hello","max_new_tokens":8,"adapter":"a","tag":1}
+//! ← {"event":"admitted","id":3,"tag":1}
+//! ← {"event":"token","id":3,"token":104,"pos":0,"ttft_ms":2.1,"tag":1}
+//! ← {"event":"finished","id":3,"finish":"max_tokens","tokens":[...],"text":"...","tag":1}
+//! → {"op":"cancel","id":3}
+//! → {"op":"stats"}
+//! ← {"event":"stats","stats":{...}}
+//! ```
+//!
+//! Requests on one connection run concurrently (each `generate` gets a
+//! streaming thread; lines are interleaved per event, never split).  The
+//! optional `tag` is echoed verbatim on every event of that request so
+//! clients can correlate before they learn the engine-issued id.  A
+//! dropped connection cancels its in-flight requests via the
+//! [`Generation`] drop path — a hung-up client frees its decode slots.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+use super::queue::EngineError;
+use super::request::{Request, RequestOutput, SamplingParams, StreamEvent};
+use super::server::{EngineClient, Generation};
+
+/// Accept loop: one handler thread per connection, forever.  Callers bind
+/// the listener themselves (so `--listen 127.0.0.1:0` can report the
+/// chosen port before entering the loop).
+pub fn serve(listener: TcpListener, client: EngineClient) -> Result<()> {
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let client = client.clone();
+                let spawned =
+                    std::thread::Builder::new().name("road-conn".into()).spawn(move || {
+                        let peer = stream
+                            .peer_addr()
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|_| "<unknown>".into());
+                        if let Err(e) = handle_conn(stream, client) {
+                            eprintln!("[serve] connection {peer}: {e:#}");
+                        }
+                    });
+                // A transient spawn failure (fd/thread pressure) costs one
+                // connection, not the whole front door — same policy as an
+                // accept error below.
+                if let Err(e) = spawned {
+                    eprintln!("[serve] could not spawn connection thread: {e}");
+                }
+            }
+            Err(e) => eprintln!("[serve] accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// One parsed request line.
+enum WireCmd {
+    Generate(Request, Option<Json>),
+    Cancel(u64),
+    Stats,
+}
+
+fn handle_conn(stream: TcpStream, client: EngineClient) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let writer = Arc::new(Mutex::new(stream));
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(&line) {
+            Ok(WireCmd::Generate(req, tag)) => {
+                let client = client.clone();
+                let writer = writer.clone();
+                std::thread::Builder::new().name("road-stream".into()).spawn(move || {
+                    stream_generation(&client, req, tag, &writer);
+                })?;
+            }
+            Ok(WireCmd::Cancel(id)) => {
+                // Best-effort; unknown/finished ids are no-ops by design.
+                let _ = client.cancel(id);
+            }
+            Ok(WireCmd::Stats) => {
+                let line = match client.stats() {
+                    Ok(snap) => json::obj(vec![
+                        ("event", json::s("stats")),
+                        ("stats", snap.to_json()),
+                    ]),
+                    Err(e) => error_event(None, None, &e),
+                };
+                write_line(&writer, &line)?;
+            }
+            Err(e) => {
+                let err = EngineError::Invalid { reason: format!("{e:#}") };
+                write_line(&writer, &error_event(None, None, &err))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Drive one generation, relaying every stream event as an NDJSON line.
+/// A failed write means the client hung up: returning drops the
+/// [`Generation`], which auto-cancels the request in the engine.
+fn stream_generation(
+    client: &EngineClient,
+    req: Request,
+    tag: Option<Json>,
+    writer: &Arc<Mutex<TcpStream>>,
+) {
+    let mut generation: Generation = match client.submit(req) {
+        Ok(g) => g,
+        Err(e) => {
+            let _ = write_line(writer, &error_event(None, tag.as_ref(), &e));
+            return;
+        }
+    };
+    while let Some(ev) = generation.recv() {
+        if write_line(writer, &event_json(&ev, tag.as_ref())).is_err() {
+            return;
+        }
+        if ev.is_terminal() {
+            return;
+        }
+    }
+}
+
+fn write_line(writer: &Arc<Mutex<TcpStream>>, v: &Json) -> Result<()> {
+    let mut line = v.to_string_compact();
+    line.push('\n');
+    let mut w = writer.lock().map_err(|_| anyhow!("writer poisoned"))?;
+    w.write_all(line.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+fn parse_line(line: &str) -> Result<WireCmd> {
+    let v = Json::parse(line)?;
+    let op = v.opt("op").map(|o| o.as_str()).transpose()?.unwrap_or("generate");
+    match op {
+        "generate" => {
+            let req = parse_generate(&v)?;
+            Ok(WireCmd::Generate(req, v.opt("tag").cloned()))
+        }
+        "cancel" => {
+            let id = v.get("id")?.as_f64()? as u64;
+            Ok(WireCmd::Cancel(id))
+        }
+        "stats" => Ok(WireCmd::Stats),
+        other => bail!("unknown op {other:?} (generate|cancel|stats)"),
+    }
+}
+
+fn parse_generate(v: &Json) -> Result<Request> {
+    let prompt: Vec<i32> = match (v.opt("prompt"), v.opt("text")) {
+        (Some(arr), _) => arr
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_f64().map(|f| f as i32))
+            .collect::<Result<_>>()?,
+        (None, Some(text)) => crate::tokenizer::encode(text.as_str()?),
+        (None, None) => bail!("generate needs \"prompt\" (token array) or \"text\""),
+    };
+    let max_new = v.opt("max_new_tokens").map(|n| n.as_usize()).transpose()?.unwrap_or(16);
+    let mut req = Request::new(prompt, max_new);
+    if let Some(a) = v.opt("adapter") {
+        req = req.with_adapter(a.as_str()?);
+    }
+    if let Some(ms) = v.opt("deadline_ms") {
+        let ms = ms.as_f64()?;
+        // Validate before Duration::from_secs_f64, which panics on
+        // negative/NaN/overflowing input — a malformed field must produce
+        // the typed `invalid` error event, not kill the connection thread.
+        if !ms.is_finite() || !(0.0..=1e13).contains(&ms) {
+            bail!("deadline_ms must be a finite number of milliseconds in [0, 1e13], got {ms}");
+        }
+        req = req.with_deadline(Duration::from_secs_f64(ms / 1e3));
+    }
+    let sampling = SamplingParams {
+        temperature: v.opt("temperature").map(|t| t.as_f64()).transpose()?.unwrap_or(0.0) as f32,
+        top_k: v.opt("top_k").map(|t| t.as_usize()).transpose()?.unwrap_or(0),
+        seed: v.opt("seed").map(|t| t.as_f64()).transpose()?.unwrap_or(0.0) as u64,
+        // `null` means "no stop token"; anything else must be a number —
+        // swallowing a malformed value here would silently run the request
+        // to max_new_tokens while every other field errors loudly.
+        stop_token: v
+            .opt("stop_token")
+            .filter(|t| !matches!(t, Json::Null))
+            .map(|t| t.as_f64().map(|f| f as i32))
+            .transpose()?,
+    };
+    Ok(req.with_sampling(sampling))
+}
+
+fn with_tag(mut pairs: Vec<(&'static str, Json)>, tag: Option<&Json>) -> Json {
+    if let Some(t) = tag {
+        pairs.push(("tag", t.clone()));
+    }
+    json::obj(pairs)
+}
+
+fn event_json(ev: &StreamEvent, tag: Option<&Json>) -> Json {
+    match ev {
+        StreamEvent::Admitted { id } => with_tag(
+            vec![("event", json::s("admitted")), ("id", json::num(*id as f64))],
+            tag,
+        ),
+        StreamEvent::Token { id, token, pos, ttft_hint } => {
+            let mut pairs = vec![
+                ("event", json::s("token")),
+                ("id", json::num(*id as f64)),
+                ("token", json::num(*token as f64)),
+                ("pos", json::num(*pos as f64)),
+            ];
+            if let Some(t) = ttft_hint {
+                pairs.push(("ttft_ms", json::num(t * 1e3)));
+            }
+            with_tag(pairs, tag)
+        }
+        StreamEvent::Finished(out) => finished_event(out, tag),
+        StreamEvent::Error { id, error } => with_tag(
+            vec![
+                ("event", json::s("error")),
+                ("id", json::num(*id as f64)),
+                ("error", json::s(error.kind())),
+                ("message", json::s(&error.to_string())),
+            ],
+            tag,
+        ),
+    }
+}
+
+fn finished_event(out: &RequestOutput, tag: Option<&Json>) -> Json {
+    let mut pairs = vec![
+        ("event", json::s("finished")),
+        ("id", json::num(out.id as f64)),
+        ("finish", json::s(out.finish.as_str())),
+        (
+            "tokens",
+            json::arr(out.tokens.iter().map(|&t| json::num(t as f64)).collect()),
+        ),
+        ("text", json::s(&crate::tokenizer::decode(&out.tokens))),
+        ("ttft_ms", json::num(out.ttft * 1e3)),
+        ("e2e_ms", json::num(out.e2e * 1e3)),
+    ];
+    if let Some(a) = &out.adapter {
+        pairs.push(("adapter", json::s(a)));
+    }
+    with_tag(pairs, tag)
+}
+
+fn error_event(id: Option<u64>, tag: Option<&Json>, e: &EngineError) -> Json {
+    with_tag(
+        vec![
+            ("event", json::s("error")),
+            ("id", id.map(|i| json::num(i as f64)).unwrap_or(Json::Null)),
+            ("error", json::s(e.kind())),
+            ("message", json::s(&e.to_string())),
+        ],
+        tag,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    #[test]
+    fn parses_generate_with_all_fields() {
+        let line = r#"{"op":"generate","prompt":[1,2,3],"max_new_tokens":5,"adapter":"a",
+                       "temperature":0.5,"top_k":4,"seed":9,"stop_token":46,
+                       "deadline_ms":250,"tag":"x"}"#
+            .replace('\n', " ");
+        let WireCmd::Generate(req, tag) = parse_line(&line).unwrap() else {
+            panic!("expected generate")
+        };
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.max_new_tokens, 5);
+        assert_eq!(req.adapter.as_deref(), Some("a"));
+        assert_eq!(req.sampling.top_k, 4);
+        assert_eq!(req.sampling.seed, 9);
+        assert_eq!(req.sampling.stop_token, Some(46));
+        assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(tag, Some(json::s("x")));
+    }
+
+    #[test]
+    fn generate_is_the_default_op_and_text_tokenizes() {
+        let WireCmd::Generate(req, tag) = parse_line(r#"{"text":"hi"}"#).unwrap() else {
+            panic!("expected generate")
+        };
+        assert_eq!(req.prompt, crate::tokenizer::encode("hi"));
+        assert_eq!(req.max_new_tokens, 16, "default budget");
+        assert!(tag.is_none());
+    }
+
+    #[test]
+    fn rejects_missing_prompt_and_unknown_op() {
+        assert!(parse_line(r#"{"op":"generate"}"#).is_err());
+        assert!(parse_line(r#"{"op":"frobnicate"}"#).is_err());
+        assert!(parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_unconvertible_deadlines_instead_of_panicking() {
+        // Duration::from_secs_f64 panics on these; the parser must turn
+        // them into typed errors before they reach it.
+        assert!(parse_line(r#"{"text":"x","deadline_ms":-5}"#).is_err());
+        assert!(parse_line(r#"{"text":"x","deadline_ms":1e300}"#).is_err());
+        assert!(parse_line(r#"{"text":"x","deadline_ms":0}"#).is_ok(), "zero budget is valid");
+    }
+
+    #[test]
+    fn stop_token_is_strict_but_nullable() {
+        let WireCmd::Generate(req, _) =
+            parse_line(r#"{"text":"x","stop_token":null}"#).unwrap()
+        else {
+            panic!("expected generate")
+        };
+        assert_eq!(req.sampling.stop_token, None, "null means no stop token");
+        assert!(
+            parse_line(r#"{"text":"x","stop_token":"."}"#).is_err(),
+            "non-numeric stop_token must error loudly, not run to max_new_tokens"
+        );
+    }
+
+    #[test]
+    fn parses_cancel_and_stats() {
+        assert!(matches!(parse_line(r#"{"op":"cancel","id":7}"#).unwrap(), WireCmd::Cancel(7)));
+        assert!(matches!(parse_line(r#"{"op":"stats"}"#).unwrap(), WireCmd::Stats));
+        assert!(parse_line(r#"{"op":"cancel"}"#).is_err(), "cancel needs an id");
+    }
+
+    #[test]
+    fn event_lines_are_single_line_json_with_tag_echo() {
+        let tag = json::num(42.0);
+        let events = [
+            StreamEvent::Admitted { id: 3 },
+            StreamEvent::Token { id: 3, token: 104, pos: 0, ttft_hint: Some(0.002) },
+            StreamEvent::Finished(RequestOutput {
+                id: 3,
+                adapter: Some("a".into()),
+                tokens: vec![104, 105],
+                finish: FinishReason::MaxTokens,
+                ttft: 0.002,
+                e2e: 0.01,
+            }),
+            StreamEvent::Error { id: 3, error: EngineError::DeadlineExceeded },
+        ];
+        for ev in &events {
+            let line = event_json(ev, Some(&tag)).to_string_compact();
+            assert!(!line.contains('\n'), "{line}");
+            let back = Json::parse(&line).unwrap();
+            assert_eq!(back.get("id").unwrap().as_usize().unwrap(), 3);
+            assert_eq!(back.get("tag").unwrap().as_usize().unwrap(), 42);
+        }
+        let fin = event_json(&events[2], None);
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "max_tokens");
+        assert_eq!(fin.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        let err = event_json(&events[3], None);
+        assert_eq!(err.get("error").unwrap().as_str().unwrap(), "deadline_exceeded");
+    }
+}

@@ -3,18 +3,50 @@
 
 use std::collections::VecDeque;
 use std::fmt;
+use std::time::Instant;
 
 use super::request::Request;
 
-/// Typed engine-level errors that callers are expected to match on.
+/// Typed engine-level errors: the only error type that crosses the
+/// client↔engine channel boundary, and the payload of
+/// [`super::request::StreamEvent::Error`].
 ///
-/// Carried as the root of an `anyhow::Error`, so schedulers detect
-/// backpressure with `e.downcast_ref::<EngineError>()` instead of string
-/// matching on the rendered message.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Callers match on variants (or `e.downcast_ref::<EngineError>()` when the
+/// error rides inside an `anyhow::Error`), never on rendered strings.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineError {
     /// The admission queue is at capacity; retry later or shed load.
     QueueFull { waiting: usize },
+    /// The request names an adapter the host store has never seen (or no
+    /// longer holds).  Register it first.
+    AdapterNotFound { name: String },
+    /// The request's deadline passed before it finished; it was shed from
+    /// the queue or reaped from its decode slot.
+    DeadlineExceeded,
+    /// The request was cancelled (explicitly or by a dropped
+    /// [`super::server::Generation`] handle).
+    Cancelled,
+    /// The engine thread is shutting down or gone; no further requests are
+    /// accepted and in-flight streams end with this error.
+    EngineStopped,
+    /// The request (or adapter operation) failed validation; `reason` is
+    /// human-readable context, not a matching surface.
+    Invalid { reason: String },
+}
+
+impl EngineError {
+    /// Stable wire name for the NDJSON protocol (docs/DESIGN.md
+    /// §Streaming protocol).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::QueueFull { .. } => "queue_full",
+            EngineError::AdapterNotFound { .. } => "adapter_not_found",
+            EngineError::DeadlineExceeded => "deadline_exceeded",
+            EngineError::Cancelled => "cancelled",
+            EngineError::EngineStopped => "engine_stopped",
+            EngineError::Invalid { .. } => "invalid",
+        }
+    }
 }
 
 impl fmt::Display for EngineError {
@@ -23,6 +55,13 @@ impl fmt::Display for EngineError {
             EngineError::QueueFull { waiting } => {
                 write!(f, "admission queue full ({waiting} waiting); backpressure")
             }
+            EngineError::AdapterNotFound { name } => {
+                write!(f, "unknown adapter {name:?} (register it first)")
+            }
+            EngineError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            EngineError::Cancelled => write!(f, "request cancelled"),
+            EngineError::EngineStopped => write!(f, "engine stopped"),
+            EngineError::Invalid { reason } => write!(f, "invalid request: {reason}"),
         }
     }
 }
@@ -91,6 +130,29 @@ impl AdmissionQueue {
         taken
     }
 
+    /// Remove a waiting request by id (cancellation before admission).
+    /// Returns the request so the caller can synthesize its terminal event.
+    pub fn cancel(&mut self, id: u64) -> Option<Request> {
+        let idx = self.q.iter().position(|r| r.id == id)?;
+        self.q.remove(idx)
+    }
+
+    /// Remove every waiting request whose deadline has passed — the
+    /// admission-time shed that keeps expired work from ever occupying a
+    /// decode slot.  FIFO order among survivors is preserved.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut shed = Vec::new();
+        self.q.retain(|r| {
+            if r.expired(now) {
+                shed.push(r.clone());
+                false
+            } else {
+                true
+            }
+        });
+        shed
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -119,7 +181,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64, plen: usize) -> Request {
-        Request::new(id, vec![1; plen], 4)
+        // Ids are engine-issued in production; unit tests stamp them
+        // directly to exercise the queue in isolation.
+        let mut r = Request::new(vec![1; plen], 4);
+        r.id = id;
+        r
     }
 
     #[test]
@@ -194,6 +260,53 @@ mod tests {
         });
         assert_eq!(taken.len(), 2);
         assert_eq!(calls, 2, "predicate (and its paging side effects) not run past n");
+    }
+
+    #[test]
+    fn cancel_removes_by_id_and_preserves_order() {
+        let mut q = AdmissionQueue::new(10);
+        for i in 1..=4 {
+            q.push(req(i, 2)).unwrap();
+        }
+        let cancelled = q.cancel(2).expect("queued request is cancellable");
+        assert_eq!(cancelled.id, 2);
+        assert!(q.cancel(2).is_none(), "second cancel is a no-op");
+        assert!(q.cancel(99).is_none(), "unknown id is a no-op");
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn shed_expired_drops_only_past_deadline() {
+        use std::time::{Duration, Instant};
+        let now = Instant::now();
+        let stamp = |mut r: Request, deadline: Option<Duration>| {
+            r.submitted_at = Some(now - Duration::from_millis(10));
+            r.deadline = deadline;
+            r
+        };
+        let mut q = AdmissionQueue::new(10);
+        q.push(stamp(req(1, 2), Some(Duration::from_millis(1)))).unwrap();
+        q.push(stamp(req(2, 2), None)).unwrap();
+        q.push(stamp(req(3, 2), Some(Duration::from_secs(60)))).unwrap();
+        q.push(stamp(req(4, 2), Some(Duration::ZERO))).unwrap();
+        let shed: Vec<u64> = q.shed_expired(now).iter().map(|r| r.id).collect();
+        assert_eq!(shed, vec![1, 4]);
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![2, 3], "unexpired requests keep FIFO order");
+    }
+
+    #[test]
+    fn error_kinds_are_stable_wire_names() {
+        assert_eq!(EngineError::QueueFull { waiting: 1 }.kind(), "queue_full");
+        assert_eq!(
+            EngineError::AdapterNotFound { name: "x".into() }.kind(),
+            "adapter_not_found"
+        );
+        assert_eq!(EngineError::DeadlineExceeded.kind(), "deadline_exceeded");
+        assert_eq!(EngineError::Cancelled.kind(), "cancelled");
+        assert_eq!(EngineError::EngineStopped.kind(), "engine_stopped");
+        assert_eq!(EngineError::Invalid { reason: "r".into() }.kind(), "invalid");
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Request/response types for the multi-adapter serving engine.
+//! Request/response/event types for the multi-adapter serving engine.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use super::queue::EngineError;
 
 #[derive(Clone, Debug)]
 pub struct SamplingParams {
@@ -21,6 +23,10 @@ impl Default for SamplingParams {
 
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Engine-issued request id: [`super::engine::Engine::submit`] assigns
+    /// the next id unconditionally, so any value set here is overwritten.
+    /// Callers correlate submissions through the id `submit` returns (or
+    /// [`super::server::Generation::id`]), never by stamping their own.
     pub id: u64,
     /// Registered adapter name; None = base model (identity slot 0).
     pub adapter: Option<String>,
@@ -31,17 +37,23 @@ pub struct Request {
     /// admission queue so TTFT/e2e include queueing delay.  `None` until
     /// submitted.
     pub submitted_at: Option<Instant>,
+    /// Per-request deadline, measured from `submitted_at`.  Expired
+    /// requests are shed from the queue at admission and reaped from their
+    /// decode slot between steps, producing
+    /// [`EngineError::DeadlineExceeded`] on the event stream.
+    pub deadline: Option<Duration>,
 }
 
 impl Request {
-    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Request {
         Request {
-            id,
+            id: 0,
             adapter: None,
             prompt,
             max_new_tokens,
             sampling: Default::default(),
             submitted_at: None,
+            deadline: None,
         }
     }
 
@@ -54,6 +66,22 @@ impl Request {
         self.sampling = s;
         self
     }
+
+    /// Give the request `d` of budget from submission; see
+    /// [`Request::deadline`].
+    pub fn with_deadline(mut self, d: Duration) -> Request {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Whether the deadline has passed as of `now`.  Never true for
+    /// requests without a deadline or not yet submitted.
+    pub fn expired(&self, now: Instant) -> bool {
+        match (self.submitted_at, self.deadline) {
+            (Some(s), Some(d)) => now.checked_duration_since(s).is_some_and(|e| e > d),
+            _ => false,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,8 +91,20 @@ pub enum FinishReason {
     Cancelled,
 }
 
+impl FinishReason {
+    /// Wire name (NDJSON protocol, docs/DESIGN.md §Streaming protocol).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RequestOutput {
+    /// Engine-issued id (see [`Request::id`]).
     pub id: u64,
     pub adapter: Option<String>,
     pub tokens: Vec<i32>,
@@ -73,6 +113,50 @@ pub struct RequestOutput {
     pub ttft: f64,
     /// End-to-end latency (seconds).
     pub e2e: f64,
+}
+
+/// One event on a request's stream, emitted from inside
+/// [`super::engine::Engine::step`] as lanes advance.
+///
+/// Per-request event grammar (docs/DESIGN.md §Streaming protocol):
+///
+/// ```text
+/// Admitted  Token*  (Finished | Error)        — admitted requests
+/// (Finished | Error)                          — cancelled/shed in queue
+/// ```
+///
+/// `Finished`/`Error` are terminal; the concatenation of `Token` payloads
+/// is exactly `Finished`'s `RequestOutput::tokens` (stop tokens are never
+/// emitted as `Token` events, matching their absence from the output).
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// The request left the admission queue and entered a prefill batch.
+    Admitted { id: u64 },
+    /// One generated token.  `pos` is the token's index in the generated
+    /// sequence (0-based); `ttft_hint` is the submit→first-token latency in
+    /// seconds, present on the first token only.
+    Token { id: u64, token: i32, pos: usize, ttft_hint: Option<f64> },
+    /// Terminal: the request completed (including `FinishReason::Cancelled`
+    /// for cancellations that reclaimed a decode slot).
+    Finished(RequestOutput),
+    /// Terminal: the request died with a typed error (deadline shed,
+    /// engine shutdown).
+    Error { id: u64, error: EngineError },
+}
+
+impl StreamEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            StreamEvent::Admitted { id } | StreamEvent::Token { id, .. } => *id,
+            StreamEvent::Finished(out) => out.id,
+            StreamEvent::Error { id, .. } => *id,
+        }
+    }
+
+    /// Terminal events end the request's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, StreamEvent::Finished(_) | StreamEvent::Error { .. })
+    }
 }
 
 /// In-flight request state pinned to a decode slot.
@@ -115,5 +199,52 @@ impl ActiveRequest {
             return Some(FinishReason::MaxTokens);
         }
         None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expiry_requires_submission() {
+        let now = Instant::now();
+        let r = Request::new(vec![1], 4).with_deadline(Duration::ZERO);
+        assert!(!r.expired(now), "unsubmitted requests never expire");
+        let mut r = r;
+        r.submitted_at = Some(now - Duration::from_millis(5));
+        assert!(r.expired(now), "elapsed 5ms > 0ms budget");
+        r.deadline = Some(Duration::from_secs(60));
+        assert!(!r.expired(now));
+        r.deadline = None;
+        assert!(!r.expired(now), "no deadline, no expiry");
+    }
+
+    #[test]
+    fn stream_event_ids_and_terminality() {
+        let fin = StreamEvent::Finished(RequestOutput {
+            id: 7,
+            adapter: None,
+            tokens: vec![],
+            finish: FinishReason::Cancelled,
+            ttft: 0.0,
+            e2e: 0.0,
+        });
+        assert_eq!(fin.id(), 7);
+        assert!(fin.is_terminal());
+        let tok = StreamEvent::Token { id: 3, token: 9, pos: 0, ttft_hint: Some(0.1) };
+        assert_eq!(tok.id(), 3);
+        assert!(!tok.is_terminal());
+        assert!(!StreamEvent::Admitted { id: 3 }.is_terminal());
+        let err = StreamEvent::Error { id: 4, error: EngineError::DeadlineExceeded };
+        assert!(err.is_terminal());
+        assert_eq!(err.id(), 4);
+    }
+
+    #[test]
+    fn finish_reason_wire_names() {
+        assert_eq!(FinishReason::MaxTokens.as_str(), "max_tokens");
+        assert_eq!(FinishReason::StopToken.as_str(), "stop_token");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
     }
 }

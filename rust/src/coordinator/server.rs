@@ -2,22 +2,40 @@
 //! thread over mpsc channels (the PJRT client is not Send; and the image
 //! carries no tokio — std::thread + channels is the documented
 //! substitution, docs/DESIGN.md §Substitutions).
+//!
+//! The client surface is streaming-first: [`EngineClient::submit`] returns
+//! a [`Generation`] handle whose channel yields [`StreamEvent`]s as the
+//! engine's lanes advance — `Admitted`, per-token `Token`s (so TTFT is a
+//! property the caller *observes*, not just a metric the engine records),
+//! and a terminal `Finished`/`Error`.  Cancellation is first-class:
+//! [`Generation::cancel`] asks the engine to free the request's decode
+//! slot and bank pin immediately, and a dropped handle auto-cancels so a
+//! hung-up client can never strand a lane or leak a waiter entry.
+//!
+//! Every channel payload is typed: errors are [`EngineError`] variants
+//! (never strings) and stats cross as a [`MetricsSnapshot`] value.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::adapters::Adapter;
 
 use super::engine::{Engine, EngineConfig};
-use super::request::{Request, RequestOutput};
+use super::metrics::MetricsSnapshot;
+use super::queue::EngineError;
+use super::request::{FinishReason, Request, RequestOutput, StreamEvent};
 
 enum Cmd {
-    Submit(Request, Sender<Result<RequestOutput, String>>),
-    Register(String, Box<Adapter>, Sender<Result<(), String>>),
-    Unregister(String, Sender<Result<(), String>>),
-    Stats(Sender<String>),
+    /// Submit a request: the second sender is the rendezvous for the
+    /// engine-issued id (or the typed rejection), the first receives the
+    /// event stream.
+    Submit(Request, Sender<StreamEvent>, Sender<Result<u64, EngineError>>),
+    Cancel(u64),
+    Register(String, Box<Adapter>, Sender<Result<(), EngineError>>),
+    Unregister(String, Sender<Result<(), EngineError>>),
+    Stats(Sender<MetricsSnapshot>),
     Shutdown,
 }
 
@@ -27,45 +45,147 @@ pub struct EngineClient {
     tx: Sender<Cmd>,
 }
 
-impl EngineClient {
-    /// Submit and wait for the full response.
-    pub fn generate(&self, req: Request) -> Result<RequestOutput> {
-        let (tx, rx) = channel();
-        self.tx.send(Cmd::Submit(req, tx)).map_err(|_| anyhow!("engine stopped"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
+/// A live request's event stream.
+///
+/// Iterate (or call [`Generation::recv`]) to observe `Admitted`, `Token`,
+/// and the terminal `Finished`/`Error` event; [`Generation::wait`] drains
+/// to the terminal outcome for one-shot callers.  Dropping the handle
+/// before the terminal event cancels the request in the engine — the
+/// decode slot is freed, the adapter bank pin released, and the output
+/// (nobody is listening) discarded.
+pub struct Generation {
+    id: u64,
+    rx: Receiver<StreamEvent>,
+    tx: Sender<Cmd>,
+    done: bool,
+}
+
+impl Generation {
+    /// The engine-issued request id (valid immediately — submission is a
+    /// rendezvous with the engine thread).
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
-    /// Submit without waiting; the receiver yields the output when done.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Result<RequestOutput, String>>> {
-        let (tx, rx) = channel();
-        self.tx.send(Cmd::Submit(req, tx)).map_err(|_| anyhow!("engine stopped"))?;
-        Ok(rx)
+    /// Block for the next event; `None` after the terminal event.  An
+    /// engine that dies mid-stream yields a final
+    /// [`EngineError::EngineStopped`] event rather than silence.
+    pub fn recv(&mut self) -> Option<StreamEvent> {
+        if self.done {
+            return None;
+        }
+        let ev = self.rx.recv().unwrap_or(StreamEvent::Error {
+            id: self.id,
+            error: EngineError::EngineStopped,
+        });
+        self.done = ev.is_terminal();
+        Some(ev)
+    }
+
+    /// Ask the engine to cancel this request (idempotent; a race with
+    /// completion resolves as a no-op).  The stream still terminates with
+    /// `Finished(FinishReason::Cancelled)` carrying the tokens generated
+    /// before the cancel landed.
+    pub fn cancel(&self) {
+        let _ = self.tx.send(Cmd::Cancel(self.id));
+    }
+
+    /// Drain to the terminal outcome: the one-shot convenience over the
+    /// stream.  A request cancelled out from under a one-shot caller (via
+    /// [`EngineClient::cancel`] or the wire `cancel` op) returns
+    /// [`EngineError::Cancelled`] — a one-shot caller wants the full
+    /// output or a typed error, never a silent truncation.  Streaming
+    /// consumers who want the partial tokens use [`Generation::recv`],
+    /// where cancellation is a `Finished` output with
+    /// `FinishReason::Cancelled`.
+    pub fn wait(mut self) -> Result<RequestOutput, EngineError> {
+        while let Some(ev) = self.recv() {
+            match ev {
+                StreamEvent::Finished(out) if out.finish == FinishReason::Cancelled => {
+                    return Err(EngineError::Cancelled)
+                }
+                StreamEvent::Finished(out) => return Ok(out),
+                StreamEvent::Error { error, .. } => return Err(error),
+                StreamEvent::Admitted { .. } | StreamEvent::Token { .. } => {}
+            }
+        }
+        Err(EngineError::EngineStopped)
+    }
+}
+
+impl Iterator for Generation {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        self.recv()
+    }
+}
+
+impl Drop for Generation {
+    fn drop(&mut self) {
+        // A handle dropped mid-stream is a hung-up client: cancel so the
+        // decode slot and bank pin are reclaimed instead of generating to
+        // completion for nobody.
+        if !self.done {
+            let _ = self.tx.send(Cmd::Cancel(self.id));
+        }
+    }
+}
+
+impl EngineClient {
+    /// Submit a request and stream its events.  Returns as soon as the
+    /// engine has issued an id; typed rejections (`QueueFull`,
+    /// `AdapterNotFound`, `Invalid`, `EngineStopped`) surface here rather
+    /// than on the stream.
+    pub fn submit(&self, req: Request) -> Result<Generation, EngineError> {
+        let (ev_tx, ev_rx) = channel();
+        let (id_tx, id_rx) = channel();
+        self.tx
+            .send(Cmd::Submit(req, ev_tx, id_tx))
+            .map_err(|_| EngineError::EngineStopped)?;
+        let id = id_rx.recv().map_err(|_| EngineError::EngineStopped)??;
+        Ok(Generation { id, rx: ev_rx, tx: self.tx.clone(), done: false })
+    }
+
+    /// Submit and wait for the full response (one-shot convenience over
+    /// [`EngineClient::submit`]).
+    pub fn generate(&self, req: Request) -> Result<RequestOutput, EngineError> {
+        self.submit(req)?.wait()
+    }
+
+    /// Cancel a request by id without holding its [`Generation`] (e.g. a
+    /// wire-protocol cancel op).  Unknown/finished ids are no-ops.
+    pub fn cancel(&self, id: u64) -> Result<(), EngineError> {
+        self.tx.send(Cmd::Cancel(id)).map_err(|_| EngineError::EngineStopped)
     }
 
     /// Register a named adapter into the engine's host store (device
     /// residency is paged in on demand at admission).
-    pub fn register_adapter(&self, name: &str, adapter: Adapter) -> Result<()> {
+    pub fn register_adapter(&self, name: &str, adapter: Adapter) -> Result<(), EngineError> {
         let (tx, rx) = channel();
         self.tx
             .send(Cmd::Register(name.to_string(), Box::new(adapter), tx))
-            .map_err(|_| anyhow!("engine stopped"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
+            .map_err(|_| EngineError::EngineStopped)?;
+        rx.recv().map_err(|_| EngineError::EngineStopped)?
     }
 
     /// Remove a named adapter (rejected while it has queued or in-flight
     /// requests).
-    pub fn unregister_adapter(&self, name: &str) -> Result<()> {
+    pub fn unregister_adapter(&self, name: &str) -> Result<(), EngineError> {
         let (tx, rx) = channel();
         self.tx
             .send(Cmd::Unregister(name.to_string(), tx))
-            .map_err(|_| anyhow!("engine stopped"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped request"))?.map_err(|e| anyhow!(e))
+            .map_err(|_| EngineError::EngineStopped)?;
+        rx.recv().map_err(|_| EngineError::EngineStopped)?
     }
 
-    pub fn stats(&self) -> Result<String> {
+    /// Serializable metrics snapshot (render with
+    /// [`MetricsSnapshot::report`]/[`MetricsSnapshot::report_table`], or
+    /// ship as JSON via [`MetricsSnapshot::to_json`]).
+    pub fn stats(&self) -> Result<MetricsSnapshot, EngineError> {
         let (tx, rx) = channel();
-        self.tx.send(Cmd::Stats(tx)).map_err(|_| anyhow!("engine stopped"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped request"))
+        self.tx.send(Cmd::Stats(tx)).map_err(|_| EngineError::EngineStopped)?;
+        rx.recv().map_err(|_| EngineError::EngineStopped)
     }
 }
 
@@ -84,14 +204,14 @@ impl EngineServer {
         setup: impl FnOnce(&mut Engine) -> Result<()> + Send + 'static,
     ) -> Result<(EngineServer, EngineClient)> {
         let (tx, rx) = channel::<Cmd>();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let (ready_tx, ready_rx) = channel::<Result<(), EngineError>>();
         let handle = std::thread::Builder::new()
             .name("road-engine".into())
             .spawn(move || engine_thread(econf, artifacts_dir, rx, ready_tx, setup))?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(anyhow!("engine init failed: {e}")),
-            Err(_) => return Err(anyhow!("engine thread died during init")),
+            Ok(Err(e)) => return Err(anyhow::anyhow!("engine init failed: {e}")),
+            Err(_) => return Err(anyhow::anyhow!("engine thread died during init")),
         }
         Ok((EngineServer { tx: tx.clone(), handle: Some(handle) }, EngineClient { tx }))
     }
@@ -99,7 +219,7 @@ impl EngineServer {
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Cmd::Shutdown);
         if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow!("engine thread panicked"))??;
+            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
         }
         Ok(())
     }
@@ -118,7 +238,7 @@ fn engine_thread(
     econf: EngineConfig,
     artifacts_dir: std::path::PathBuf,
     rx: Receiver<Cmd>,
-    ready: Sender<Result<(), String>>,
+    ready: Sender<Result<(), EngineError>>,
     setup: impl FnOnce(&mut Engine) -> Result<()>,
 ) -> Result<()> {
     let init = (|| -> Result<Engine> {
@@ -134,14 +254,15 @@ fn engine_thread(
             e
         }
         Err(e) => {
-            let _ = ready.send(Err(format!("{e:#}")));
+            let _ = ready.send(Err(EngineError::Invalid { reason: format!("{e:#}") }));
             return Err(e);
         }
     };
 
-    // id -> response channel
-    let mut waiters: std::collections::HashMap<u64, Sender<Result<RequestOutput, String>>> =
-        Default::default();
+    // id -> live event stream.  Entries leave on the terminal event, on
+    // cancel, or when a send fails (receiver dropped → auto-cancel); no
+    // path leaks a waiter.
+    let mut waiters: std::collections::HashMap<u64, Sender<StreamEvent>> = Default::default();
     let mut shutting_down = false;
 
     loop {
@@ -164,37 +285,72 @@ fn engine_thread(
             };
             let Some(cmd) = cmd else { break };
             match cmd {
-                Cmd::Submit(req, resp) => match engine.submit(req) {
-                    Ok(id) => {
-                        waiters.insert(id, resp);
+                Cmd::Submit(req, events, id_resp) => {
+                    let result = if shutting_down {
+                        Err(EngineError::EngineStopped)
+                    } else {
+                        engine.submit(req)
+                    };
+                    if let Ok(id) = &result {
+                        waiters.insert(*id, events);
                     }
-                    Err(e) => {
-                        let _ = resp.send(Err(format!("{e:#}")));
+                    let _ = id_resp.send(result);
+                }
+                Cmd::Cancel(id) => {
+                    // The reclaim happens in the engine regardless of
+                    // whether anyone still listens for the terminal event.
+                    if let Some(out) = engine.cancel(id) {
+                        if let Some(w) = waiters.remove(&id) {
+                            let _ = w.send(StreamEvent::Finished(out));
+                        }
                     }
-                },
+                }
                 Cmd::Register(name, adapter, resp) => {
                     let _ = resp.send(
-                        engine.register_adapter(&name, &adapter).map_err(|e| format!("{e:#}")),
+                        engine
+                            .register_adapter(&name, &adapter)
+                            .map_err(|e| EngineError::Invalid { reason: format!("{e:#}") }),
                     );
                 }
                 Cmd::Unregister(name, resp) => {
-                    let _ = resp
-                        .send(engine.unregister_adapter(&name).map_err(|e| format!("{e:#}")));
+                    let _ = resp.send(
+                        engine
+                            .unregister_adapter(&name)
+                            .map_err(|e| EngineError::Invalid { reason: format!("{e:#}") }),
+                    );
                 }
                 Cmd::Stats(resp) => {
-                    let _ = resp.send(engine.metrics.report());
+                    let _ = resp.send(engine.metrics.snapshot());
                 }
                 Cmd::Shutdown => shutting_down = true,
             }
         }
 
         if engine.has_work() {
-            for out in engine.step()? {
-                if let Some(w) = waiters.remove(&out.id) {
-                    let _ = w.send(Ok(out));
+            for ev in engine.step()? {
+                let id = ev.id();
+                let terminal = ev.is_terminal();
+                let hung_up = match waiters.get(&id) {
+                    Some(w) => w.send(ev).is_err(),
+                    // Already cancelled/terminated; drop stragglers.
+                    None => false,
+                };
+                if hung_up {
+                    // Receiver dropped without the Cancel command having
+                    // landed yet: reclaim the lane now and forget the
+                    // waiter so nothing leaks.
+                    waiters.remove(&id);
+                    let _ = engine.cancel(id);
+                } else if terminal {
+                    waiters.remove(&id);
                 }
             }
         } else if shutting_down {
+            // No work left; any stragglers (nothing should remain — work
+            // implies waiters) get a typed goodbye rather than a hangup.
+            for (id, w) in waiters.drain() {
+                let _ = w.send(StreamEvent::Error { id, error: EngineError::EngineStopped });
+            }
             return Ok(());
         }
     }

@@ -6,14 +6,16 @@
 //! road serve       [--mode road|lora|base] [--slots 8] [--requests 32]
 //!                  [--distinct 8] [--tokens 64] [--host-roundtrip-kv=true]
 //!                  [--bank-slots N] [--whole-bank-uploads=true] [--stats=true]
+//!                  [--queue-capacity 4096] [--listen 127.0.0.1:7433]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
 //!                  [--steps 200] [--seed 0]
 //! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero|kv|bank
+//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream
 //!                  [--tokens 64] [--adapters 64] [--bank-slots 4]
+//!                  [--cancel-after 16]
 //! road bench-train-efficiency [--iters 50]
 //! road verify      (golden-record numerics check)
 //! ```
@@ -78,19 +80,14 @@ fn save_result(name: &str, content: &str) -> Result<()> {
 
 // ---------------------------------------------------------------------------
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let mode = args.get_or("mode", "road");
-    let slots = args.usize_or("slots", 8);
-    let n_requests = args.usize_or("requests", 32);
-    let distinct = args.usize_or("distinct", if mode == "base" { 0 } else { 8 });
-    let tokens = args.usize_or("tokens", 64);
-
-    let rt = runtime()?;
-    let econf = EngineConfig {
+fn serve_config(args: &Args, mode: &str, slots: usize) -> EngineConfig {
+    EngineConfig {
         model: args.get_or("model", "serve"),
-        mode: mode.clone(),
+        mode: mode.to_string(),
         decode_slots: slots,
-        queue_capacity: 4096,
+        // --queue-capacity bounds admission (typed QueueFull backpressure
+        // past it), like the other knobs instead of a hardcoded constant.
+        queue_capacity: args.usize_or("queue-capacity", 4096),
         // Diagnostic baseline: --host-roundtrip-kv=true restores the
         // pre-device-resident full-cache transfer on every decode step.
         kv_host_roundtrip: args.bool("host-roundtrip-kv"),
@@ -100,7 +97,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // --whole-bank-uploads=true restores the re-upload-everything
         // baseline that paged per-slot uploads replace.
         paged_bank_uploads: !args.bool("whole-bank-uploads"),
-    };
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mode = args.get_or("mode", "road");
+    let slots = args.usize_or("slots", 8);
+    let distinct = args.usize_or("distinct", if mode == "base" { 0 } else { 8 });
+    let econf = serve_config(args, &mode, slots);
+
+    // --listen switches from the self-driving bench workload to the real
+    // front door: an NDJSON-over-TCP server over the streaming client API.
+    if let Some(addr) = args.get("listen") {
+        return cmd_serve_listen(addr, econf, distinct);
+    }
+
+    let n_requests = args.usize_or("requests", 32);
+    let tokens = args.usize_or("tokens", 64);
+    let rt = runtime()?;
     let mut engine = Engine::new(rt, econf)?;
     if distinct > 0 {
         bench::register_adapters(&mut engine, distinct, 7)?;
@@ -127,6 +141,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         gen as f64 / wall
     );
     Ok(())
+}
+
+/// `road serve --listen <addr>`: engine on its own thread, NDJSON front
+/// door on a TCP listener.  `--listen 127.0.0.1:0` picks a free port; the
+/// chosen address is printed as `listening on <addr>` before the accept
+/// loop starts (scripts/serve_smoke.py parses that line).
+fn cmd_serve_listen(addr: &str, econf: EngineConfig, distinct: usize) -> Result<()> {
+    let mode = econf.mode.clone();
+    let (server, client) = road::coordinator::EngineServer::start(
+        econf,
+        road::Manifest::default_dir(),
+        move |eng| {
+            if distinct > 0 {
+                bench::register_adapters(eng, distinct, 7)?;
+                println!("registered {distinct} {mode} adapters");
+            }
+            Ok(())
+        },
+    )?;
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding NDJSON listener on {addr}"))?;
+    println!("listening on {}", listener.local_addr()?);
+    let result = road::coordinator::net::serve(listener, client);
+    server.shutdown()?;
+    result
 }
 
 /// Full-finetune the random-init backbone on the generic pretraining
@@ -398,7 +437,24 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
                 &pts,
             )
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank)"),
+        "stream" => {
+            let n_requests = args.usize_or("requests", 16);
+            let cancel_after = args.usize_or("cancel-after", tokens / 4);
+            drop(rt); // the study drives the threaded server, which owns its own runtime
+            let pts = bench::streaming_study(
+                road::Manifest::default_dir(),
+                "serve",
+                n_requests,
+                tokens,
+                cancel_after.max(1),
+                seed,
+            )?;
+            bench::render_streaming_points(
+                "Open-loop streaming: observed TTFT and cancellation reclaim",
+                &pts,
+            )
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

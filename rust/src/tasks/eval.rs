@@ -149,9 +149,9 @@ pub fn eval_exact_match(
     let stop = b'.' as i32;
 
     let mut reqs = Vec::with_capacity(n);
-    for (i, ex) in examples.iter().enumerate() {
+    for ex in examples.iter() {
         let max_new = ex.completion.len() + 3;
-        let mut r = Request::new((i + 1) as u64, ex.prompt.clone(), max_new).with_sampling(
+        let mut r = Request::new(ex.prompt.clone(), max_new).with_sampling(
             SamplingParams { temperature: 0.0, top_k: 0, seed: 0, stop_token: Some(stop) },
         );
         if let Some(a) = adapter {
@@ -159,11 +159,13 @@ pub fn eval_exact_match(
         }
         reqs.push(r);
     }
-    let outs = engine.run_all(reqs)?;
+    let mut outs = engine.run_all(reqs)?;
+    // Ids are engine-issued in submission order, so sorting by id restores
+    // the example order regardless of completion interleaving.
+    outs.sort_by_key(|o| o.id);
 
     let mut correct = 0usize;
-    for out in &outs {
-        let ex = &examples[(out.id - 1) as usize];
+    for (out, ex) in outs.iter().zip(&examples) {
         // Gold completion without the '.' terminator (stripped by the
         // engine's stop-token handling).
         let gold = &ex.completion[..ex.completion.len() - 1];

@@ -83,6 +83,51 @@ impl Json {
         s
     }
 
+    /// Single-line rendering — the NDJSON wire format requires exactly one
+    /// `\n`-free line per value (string escapes keep embedded newlines out).
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -353,6 +398,16 @@ mod tests {
     fn unicode_and_escapes() {
         let v = Json::parse(r#""café \"quoted\"""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "café \"quoted\"");
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let src = r#"{"a": [1, 2.5, -3], "b": {"c": "x\ny", "d": true, "e": null}}"#;
+        let v = Json::parse(src).unwrap();
+        let compact = v.to_string_compact();
+        assert!(!compact.contains('\n'), "{compact}");
+        assert!(!compact.contains("  "), "{compact}");
+        assert_eq!(Json::parse(&compact).unwrap(), v);
     }
 
     #[test]

@@ -35,7 +35,7 @@ fn tiny_engine(rt: &Rc<Runtime>, mode: &str) -> Engine {
 }
 
 fn greedy(prompt: &[i32], max_new: usize) -> Request {
-    Request::new(0, prompt.to_vec(), max_new).with_sampling(SamplingParams {
+    Request::new(prompt.to_vec(), max_new).with_sampling(SamplingParams {
         temperature: 0.0,
         top_k: 0,
         seed: 0,
@@ -206,14 +206,26 @@ fn submit_validates_prompts_and_adapters() {
     let rt = rt();
     let mut eng = tiny_engine(&rt, "road");
     // Empty prompt.
-    assert!(eng.submit(greedy(&[], 4)).is_err());
+    assert!(matches!(
+        eng.submit(greedy(&[], 4)),
+        Err(EngineError::Invalid { .. })
+    ));
     // Prompt longer than the largest prefill bucket.
     let long = vec![1i32; eng.max_prompt_len() + 1];
-    assert!(eng.submit(greedy(&long, 4)).is_err());
-    // Unknown adapter.
-    assert!(eng.submit(greedy(&[1, 2], 4).with_adapter("nope")).is_err());
+    assert!(matches!(
+        eng.submit(greedy(&long, 4)),
+        Err(EngineError::Invalid { .. })
+    ));
+    // Unknown adapter is its own typed variant.
+    assert!(matches!(
+        eng.submit(greedy(&[1, 2], 4).with_adapter("nope")),
+        Err(EngineError::AdapterNotFound { name }) if name == "nope"
+    ));
     // prompt + max_new beyond max_seq.
-    assert!(eng.submit(greedy(&[1, 2], eng.cfg.max_seq)).is_err());
+    assert!(matches!(
+        eng.submit(greedy(&[1, 2], eng.cfg.max_seq)),
+        Err(EngineError::Invalid { .. })
+    ));
 }
 
 #[test]
@@ -233,12 +245,9 @@ fn queue_backpressure_rejects_when_full() {
     .unwrap();
     eng.submit(greedy(&[1, 2], 2)).unwrap();
     eng.submit(greedy(&[1, 2], 2)).unwrap();
+    // Typed backpressure straight off the submit path.
     let err = eng.submit(greedy(&[1, 2], 2)).unwrap_err();
-    // Typed backpressure, downcastable through the anyhow boundary.
-    assert!(matches!(
-        err.downcast_ref::<EngineError>(),
-        Some(EngineError::QueueFull { waiting: 2 })
-    ));
+    assert_eq!(err, EngineError::QueueFull { waiting: 2 });
     assert!(err.to_string().contains("backpressure"), "{err}");
 }
 
@@ -394,7 +403,10 @@ fn engine_server_thread_roundtrip() {
     .unwrap();
     let out = client.generate(greedy(&[11, 12, 13], 5).with_adapter("srv")).unwrap();
     assert_eq!(out.tokens.len(), 5);
+    // Stats cross the channel as a typed snapshot, rendered client-side.
     let stats = client.stats().unwrap();
-    assert!(stats.contains("requests=1"), "{stats}");
+    assert_eq!(stats.requests_completed, 1);
+    assert_eq!(stats.tokens_generated, 5);
+    assert!(stats.report().contains("requests=1"), "{}", stats.report());
     server.shutdown().unwrap();
 }

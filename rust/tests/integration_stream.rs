@@ -1,0 +1,420 @@
+//! Streaming-lifecycle integration tests on the tiny config: event
+//! grammar, stream↔one-shot token identity, cancellation reclaim (slot +
+//! bank pin), deadline shedding (queued and in-flight), dropped-handle
+//! auto-cancel, and the NDJSON-over-TCP front door.
+//!
+//! Without artifacts (`make artifacts`) every test skips cleanly.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use road::adapters::{Adapter, RoadAdapter};
+use road::coordinator::engine::{Engine, EngineConfig};
+use road::coordinator::queue::EngineError;
+use road::coordinator::request::{FinishReason, Request, SamplingParams, StreamEvent};
+use road::coordinator::server::EngineServer;
+use road::require_artifacts;
+use road::runtime::Runtime;
+use road::util::rng::Rng;
+
+fn rt() -> Rc<Runtime> {
+    Rc::new(Runtime::from_default_artifacts().expect("run `make artifacts` first"))
+}
+
+fn tiny_econf(mode: &str) -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        mode: mode.into(),
+        decode_slots: 2,
+        queue_capacity: 64,
+        ..Default::default()
+    }
+}
+
+fn greedy(prompt: &[i32], max_new: usize) -> Request {
+    Request::new(prompt.to_vec(), max_new).with_sampling(SamplingParams {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 0,
+        stop_token: None,
+    })
+}
+
+/// Deterministic adapter shared between the one-shot and streaming engines.
+fn tiny_adapter(rt: &Rc<Runtime>, seed: u64) -> Adapter {
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let mut rng = Rng::seed_from(seed);
+    Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3))
+}
+
+/// The redesign's equivalence guarantee: per-token streaming is a pure
+/// observability change — the concatenated `Token` events equal the
+/// terminal output, which equals the pre-redesign one-shot (`run_all`)
+/// result token for token.
+#[test]
+fn streamed_tokens_concatenate_to_one_shot_output() {
+    require_artifacts!();
+    let rt = rt();
+    let adapter = tiny_adapter(&rt, 17);
+    let mk_reqs = || {
+        vec![
+            greedy(&[10, 20, 30], 8).with_adapter("x"),
+            greedy(&[5, 6], 6),
+            greedy(&[9, 8, 7, 6], 7).with_adapter("x"),
+        ]
+    };
+
+    // One-shot reference path: direct engine, run_all.
+    let mut eng = Engine::new(rt.clone(), tiny_econf("road")).unwrap();
+    eng.register_adapter("x", &adapter).unwrap();
+    let mut one_shot = eng.run_all(mk_reqs()).unwrap();
+    one_shot.sort_by_key(|o| o.id);
+
+    // Streaming path: threaded server, same config and adapter.
+    let dir = road::Manifest::default_dir();
+    let (server, client) = EngineServer::start(tiny_econf("road"), dir, move |eng| {
+        eng.register_adapter("x", &adapter)?;
+        Ok(())
+    })
+    .unwrap();
+    let generations: Vec<_> =
+        mk_reqs().into_iter().map(|r| client.submit(r).unwrap()).collect();
+    let mut streamed = Vec::new();
+    for generation in generations {
+        let id = generation.id();
+        let events: Vec<StreamEvent> = generation.collect();
+        assert!(
+            matches!(events.first(), Some(StreamEvent::Admitted { id: a }) if *a == id),
+            "stream must open with Admitted: {events:?}"
+        );
+        let tokens: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        // ttft_hint rides on the first token only; positions are dense.
+        for (i, ev) in events
+            .iter()
+            .filter(|e| matches!(e, StreamEvent::Token { .. }))
+            .enumerate()
+        {
+            let StreamEvent::Token { pos, ttft_hint, .. } = ev else { unreachable!() };
+            assert_eq!(*pos, i, "token positions must be dense");
+            assert_eq!(ttft_hint.is_some(), i == 0, "ttft hint on first token only");
+        }
+        let Some(StreamEvent::Finished(out)) = events.last() else {
+            panic!("stream must end with Finished: {events:?}");
+        };
+        assert_eq!(out.finish, FinishReason::MaxTokens);
+        assert_eq!(tokens, out.tokens, "streamed tokens must concatenate to the output");
+        streamed.push(out.clone());
+    }
+    streamed.sort_by_key(|o| o.id);
+    assert_eq!(streamed.len(), one_shot.len());
+    for (s, o) in streamed.iter().zip(&one_shot) {
+        assert_eq!(s.tokens, o.tokens, "streaming changed request {} output", s.id);
+    }
+    server.shutdown().unwrap();
+}
+
+/// Cancellation mid-decode reclaims everything: the decode slot frees, the
+/// adapter's bank slot unpins (evictable again), metrics count the
+/// cancellation, and the freed lane serves new work.
+#[test]
+fn cancel_mid_decode_frees_slot_and_unpins_bank() {
+    require_artifacts!();
+    let rt = rt();
+    let adapter = tiny_adapter(&rt, 4);
+    let mut eng = Engine::new(rt.clone(), tiny_econf("road")).unwrap();
+    eng.register_adapter("a", &adapter).unwrap();
+
+    let id = eng.submit(greedy(&[1, 2, 3], 32).with_adapter("a")).unwrap();
+    // Admit + decode a few tokens.
+    let mut tokens_seen = 0usize;
+    for _ in 0..3 {
+        for ev in eng.step().unwrap() {
+            if matches!(ev, StreamEvent::Token { .. }) {
+                tokens_seen += 1;
+            }
+        }
+    }
+    assert!(tokens_seen >= 2, "request should be mid-decode");
+    assert_eq!(eng.n_active(), 1);
+    let bank_slot = eng.registry.slot_of("a").expect("adapter resident while in flight");
+    assert!(eng.registry.is_pinned(bank_slot), "in-flight lane pins its bank slot");
+
+    let out = eng.cancel(id).expect("in-flight request is cancellable");
+    assert_eq!(out.finish, FinishReason::Cancelled);
+    assert_eq!(out.tokens.len(), tokens_seen, "partial output carries streamed tokens");
+    assert_eq!(eng.n_active(), 0, "decode slot freed");
+    assert!(!eng.registry.is_pinned(bank_slot), "bank pin released");
+    assert_eq!(eng.metrics.requests_cancelled, 1);
+    assert!(eng.cancel(id).is_none(), "second cancel is a no-op");
+
+    // The reclaimed lane serves new work.
+    let outs = eng.run_all(vec![greedy(&[4, 5], 3)]).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+}
+
+/// Cancelling a still-queued request never touches a slot and yields an
+/// empty Cancelled output.
+#[test]
+fn cancel_queued_request_before_admission() {
+    require_artifacts!();
+    let rt = rt();
+    let mut eng = Engine::new(rt.clone(), tiny_econf("base")).unwrap();
+    // Fill both slots, then queue a third.
+    eng.submit(greedy(&[1, 2], 16)).unwrap();
+    eng.submit(greedy(&[3, 4], 16)).unwrap();
+    let queued = eng.submit(greedy(&[5, 6], 16)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.n_active(), 2);
+    let out = eng.cancel(queued).expect("queued request is cancellable");
+    assert_eq!(out.finish, FinishReason::Cancelled);
+    assert!(out.tokens.is_empty());
+    assert_eq!(eng.metrics.requests_cancelled, 1);
+    // The two in-flight requests are unaffected.
+    let mut finished = 0;
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            if matches!(ev, StreamEvent::Finished(_)) {
+                finished += 1;
+            }
+        }
+    }
+    assert_eq!(finished, 2);
+}
+
+/// Deadline enforcement at admission: expired queued work is shed with a
+/// typed `DeadlineExceeded` before it ever occupies a decode slot.
+#[test]
+fn expired_queued_requests_are_shed() {
+    require_artifacts!();
+    let rt = rt();
+    let mut eng = Engine::new(rt.clone(), tiny_econf("base")).unwrap();
+    // Two long-running requests occupy both slots…
+    eng.submit(greedy(&[1, 2], 12)).unwrap();
+    eng.submit(greedy(&[3, 4], 12)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.n_active(), 2);
+    // …so this deadline-bearing request waits in the queue past its budget.
+    let doomed = eng
+        .submit(greedy(&[5, 6], 4).with_deadline(Duration::from_millis(1)))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let events = eng.step().unwrap();
+    assert!(
+        events.iter().any(|e| matches!(
+            e,
+            StreamEvent::Error { id, error: EngineError::DeadlineExceeded } if *id == doomed
+        )),
+        "expected DeadlineExceeded for {doomed}: {events:?}"
+    );
+    assert_eq!(eng.metrics.deadline_shed, 1);
+    // The shed request never became active; the survivors finish.
+    let mut finished = 0;
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            assert!(ev.id() != doomed, "shed request must not produce further events");
+            if matches!(ev, StreamEvent::Finished(_)) {
+                finished += 1;
+            }
+        }
+    }
+    assert_eq!(finished, 2);
+}
+
+/// Deadline enforcement per decode step: an admitted request whose budget
+/// runs out mid-generation is reaped — slot freed, typed error emitted.
+#[test]
+fn expired_inflight_request_is_reaped() {
+    require_artifacts!();
+    let rt = rt();
+    let mut eng = Engine::new(rt.clone(), tiny_econf("base")).unwrap();
+    let id = eng
+        .submit(greedy(&[1, 2, 3], 64).with_deadline(Duration::from_millis(25)))
+        .unwrap();
+    // The first step starts well inside the budget, so the request is
+    // admitted; deadlines are only enforced between steps, so sleeping past
+    // the budget before the next step deterministically forces the reap.
+    let events = eng.step().unwrap();
+    assert!(
+        events.iter().any(|e| matches!(e, StreamEvent::Admitted { .. })),
+        "request admitted before its deadline: {events:?}"
+    );
+    assert_eq!(eng.n_active(), 1);
+    std::thread::sleep(Duration::from_millis(100));
+    let events = eng.step().unwrap();
+    assert!(
+        events.iter().any(|e| matches!(
+            e,
+            StreamEvent::Error { id: i, error: EngineError::DeadlineExceeded } if *i == id
+        )),
+        "expected in-flight reap: {events:?}"
+    );
+    assert_eq!(eng.n_active(), 0, "reaped lane is freed");
+    assert_eq!(eng.metrics.deadline_shed, 1);
+    assert!(!eng.has_work());
+}
+
+/// A dropped `Generation` handle is a hung-up client: the engine cancels
+/// the request (slot + pin reclaimed, `requests_cancelled` counted) and
+/// the waiter entry does not leak — the engine goes fully idle and keeps
+/// serving.
+#[test]
+fn dropped_generation_cancels_and_does_not_leak() {
+    require_artifacts!();
+    let dir = road::Manifest::default_dir();
+    let (server, client) = EngineServer::start(tiny_econf("base"), dir, |_| Ok(())).unwrap();
+
+    let mut generation = client.submit(greedy(&[7, 8, 9], 120)).unwrap();
+    // Wait until it is decoding so the drop exercises the mid-flight path.
+    loop {
+        match generation.recv().expect("stream ended before first token") {
+            StreamEvent::Token { .. } => break,
+            StreamEvent::Finished(_) | StreamEvent::Error { .. } => {
+                panic!("120-token request finished before cancel")
+            }
+            StreamEvent::Admitted { .. } => {}
+        }
+    }
+    drop(generation);
+
+    // The cancel lands asynchronously; poll stats until it shows up.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = client.stats().unwrap();
+        if stats.requests_cancelled == 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "engine never recorded the drop-cancel: {}",
+            stats.report()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Engine is healthy and the lane is reusable.
+    let out = client.generate(greedy(&[1, 2], 4)).unwrap();
+    assert_eq!(out.tokens.len(), 4);
+    server.shutdown().unwrap();
+}
+
+/// Explicit `Generation::cancel` terminates the stream with a
+/// `Finished(Cancelled)` carrying the tokens observed so far.
+#[test]
+fn explicit_cancel_yields_cancelled_finish() {
+    require_artifacts!();
+    let dir = road::Manifest::default_dir();
+    let (server, client) = EngineServer::start(tiny_econf("base"), dir, |_| Ok(())).unwrap();
+    let mut generation = client.submit(greedy(&[3, 1, 4], 120)).unwrap();
+    let mut seen = 0usize;
+    let out = loop {
+        match generation.recv().expect("engine died mid-stream") {
+            StreamEvent::Token { .. } => {
+                seen += 1;
+                if seen == 2 {
+                    generation.cancel();
+                }
+            }
+            StreamEvent::Finished(out) => break out,
+            StreamEvent::Error { error, .. } => panic!("unexpected error: {error}"),
+            StreamEvent::Admitted { .. } => {}
+        }
+    };
+    assert_eq!(out.finish, FinishReason::Cancelled);
+    assert!(
+        out.tokens.len() >= 2 && out.tokens.len() < 120,
+        "cancel should land mid-generation ({} tokens)",
+        out.tokens.len()
+    );
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.requests_cancelled, 1);
+
+    // The one-shot path sees the same outcome as a typed error: a caller
+    // using wait()/generate() gets EngineError::Cancelled, never a
+    // silently truncated Ok.
+    let generation = client.submit(greedy(&[2, 7, 1], 120)).unwrap();
+    client.cancel(generation.id()).unwrap();
+    assert!(matches!(generation.wait(), Err(EngineError::Cancelled)));
+    server.shutdown().unwrap();
+}
+
+/// The NDJSON front door end to end over loopback: one request line in,
+/// streamed event lines out (admitted → token* → finished), tag echoed,
+/// stats op answered — the CI smoke test's in-process twin.
+#[test]
+fn ndjson_loopback_round_trip() {
+    require_artifacts!();
+    use road::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+
+    let adapter = {
+        let rt = rt();
+        tiny_adapter(&rt, 6)
+    };
+    let dir = road::Manifest::default_dir();
+    let (server, client) = EngineServer::start(tiny_econf("road"), dir, move |eng| {
+        eng.register_adapter("srv", &adapter)?;
+        Ok(())
+    })
+    .unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = road::coordinator::net::serve(listener, client);
+    });
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    conn.write_all(
+        b"{\"op\":\"generate\",\"prompt\":[11,12,13],\"max_new_tokens\":5,\
+          \"adapter\":\"srv\",\"tag\":\"t1\"}\n",
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut kinds = Vec::new();
+    let mut tokens = Vec::new();
+    let finished = loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "connection closed early");
+        let ev = Json::parse(line.trim()).unwrap();
+        assert_eq!(ev.get("tag").unwrap().as_str().unwrap(), "t1", "tag echo on {line}");
+        let kind = ev.get("event").unwrap().as_str().unwrap().to_string();
+        if kind == "token" {
+            tokens.push(ev.get("token").unwrap().as_f64().unwrap() as i32);
+        }
+        kinds.push(kind.clone());
+        if kind == "finished" {
+            break ev;
+        }
+        assert_ne!(kind, "error", "unexpected wire error: {line}");
+    };
+    assert_eq!(kinds.first().map(String::as_str), Some("admitted"));
+    assert_eq!(tokens.len(), 5);
+    let wire_tokens: Vec<i32> = finished
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(tokens, wire_tokens, "streamed lines concatenate to the finished payload");
+    assert_eq!(finished.get("finish").unwrap().as_str().unwrap(), "max_tokens");
+    assert_eq!(finished.get("adapter").unwrap().as_str().unwrap(), "srv");
+
+    // The stats op answers on the same connection.
+    conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    let ev = Json::parse(line.trim()).unwrap();
+    assert_eq!(ev.get("event").unwrap().as_str().unwrap(), "stats");
+    assert_eq!(
+        ev.get("stats").unwrap().get("requests_completed").unwrap().as_usize().unwrap(),
+        1
+    );
+    server.shutdown().unwrap();
+}

@@ -194,7 +194,11 @@ fn prop_queue_pop_fitting_preserves_order_and_bounds() {
         let n_items = rng.below(30);
         for i in 0..n_items {
             let plen = 1 + rng.below(20);
-            q.push(Request::new(i as u64 + 1, vec![1; plen], 4)).unwrap();
+            // Ids are engine-issued in production; the property test
+            // stamps them to check FIFO order below.
+            let mut r = Request::new(vec![1; plen], 4);
+            r.id = i as u64 + 1;
+            q.push(r).unwrap();
         }
         let take = rng.below(8);
         let max_len = 1 + rng.below(20);

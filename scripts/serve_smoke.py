@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Smoke test for the NDJSON serving front door.
+
+Starts `road serve --listen 127.0.0.1:0` (the engine picks a free port and
+prints it), round-trips one NDJSON generate request over loopback, and
+asserts the streamed event grammar ends in a `finished` event.
+
+Mirrors the artifact-gated integration tests: when the AOT artifacts are
+absent (no `make artifacts` yet), it skips cleanly with exit 0 — CI runs it
+unconditionally.
+
+Environment:
+  ROAD_BIN          path to the road binary (default target/release/road)
+  ROAD_ARTIFACTS    artifacts dir (default: walk up from cwd, like the
+                    rust runtime)
+  ROAD_SMOKE_MODEL  model config to serve (default "tiny", the test config)
+"""
+
+import json
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def artifacts_dir():
+    env = os.environ.get("ROAD_ARTIFACTS")
+    if env:
+        p = pathlib.Path(env)
+        return p if (p / "manifest.json").exists() else None
+    # Walk up from cwd, mirroring Manifest::default_dir.
+    d = pathlib.Path.cwd()
+    while True:
+        cand = d / "artifacts"
+        if (cand / "manifest.json").exists():
+            return cand
+        if d.parent == d:
+            return None
+        d = d.parent
+
+
+def main():
+    if artifacts_dir() is None:
+        print("serve smoke: AOT artifacts not found (run `make artifacts` first); skipping")
+        return 0
+
+    binary = os.environ.get("ROAD_BIN", str(ROOT / "target" / "release" / "road"))
+    model = os.environ.get("ROAD_SMOKE_MODEL", "tiny")
+    cmd = [
+        binary, "serve", "--listen", "127.0.0.1:0",
+        "--model", model, "--mode", "base", "--slots", "2", "--distinct", "0",
+    ]
+    print("serve smoke:", " ".join(cmd))
+    proc = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+    )
+    try:
+        # The server prints `listening on <addr>` once the engine thread is
+        # up and the listener is bound.
+        addr = None
+        for line in proc.stdout:
+            print("[road]", line.rstrip())
+            if line.startswith("listening on "):
+                addr = line.split()[-1]
+                break
+        if addr is None:
+            print("serve smoke: FAIL — server exited before listening")
+            return 1
+
+        host, port = addr.rsplit(":", 1)
+        events = []
+        with socket.create_connection((host, int(port)), timeout=60) as s:
+            req = {"op": "generate", "prompt": [11, 12, 13],
+                   "max_new_tokens": 4, "tag": "smoke"}
+            s.sendall((json.dumps(req) + "\n").encode())
+            reader = s.makefile("r")
+            deadline = time.time() + 120
+            while True:
+                if time.time() > deadline:
+                    print("serve smoke: FAIL — timed out waiting for finished")
+                    return 1
+                line = reader.readline()
+                if not line:
+                    print("serve smoke: FAIL — connection closed early")
+                    return 1
+                ev = json.loads(line)
+                print("[event]", json.dumps(ev))
+                events.append(ev["event"])
+                if ev["event"] == "error":
+                    print("serve smoke: FAIL — error event:", ev)
+                    return 1
+                if ev["event"] == "finished":
+                    assert ev["finish"] == "max_tokens", ev
+                    assert len(ev["tokens"]) == 4, ev
+                    assert ev.get("tag") == "smoke", ev
+                    break
+
+        assert events[0] == "admitted", events
+        assert events.count("token") == 4, events
+        print("serve smoke: OK —", " → ".join(events))
+        return 0
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
