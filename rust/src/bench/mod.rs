@@ -17,15 +17,20 @@
 //! inherent orthogonality vs OFT's Cayley solves) and reports the
 //! optimizer-state footprint.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::adapters::{Adapter, LoraAdapter, RoadAdapter};
 use crate::coordinator::engine::{Engine, EngineConfig};
-use crate::coordinator::request::{Request, SamplingParams};
+use crate::coordinator::request::{Request, SamplingParams, StreamEvent};
+use crate::coordinator::sched::{PolicyKind, SchedSim, SimOutcome, SimRecord};
 use crate::runtime::Runtime;
 use crate::trainer::{Recipe, TrainBatch, Trainer};
+use crate::util::clock::Clock;
+use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_f, Table};
 
@@ -302,6 +307,15 @@ pub struct StreamingPoint {
 /// request after `cancel_after` observed tokens — the cancellation-reclaim
 /// comparison: reclaimed decode lanes shrink wall time and streamed-token
 /// volume versus running every request to completion.
+///
+/// Arrivals are driven by `clock`, which the engine shares, and paced by
+/// the submitting thread itself so the arrival *order* is deterministic
+/// on either clock: request `i` enters at `i*2ms` of clock time (a real
+/// sleep on the wall clock, a virtual jump on a manual one — no sleeps
+/// anywhere in the bench itself).  Consumer threads only drain events,
+/// so their scheduling cannot reorder submissions.  Client-observed
+/// latencies still carry thread-timing noise; the byte-reproducible
+/// study is `sched_study_sim`.
 pub fn streaming_study(
     artifacts_dir: std::path::PathBuf,
     model: &str,
@@ -309,8 +323,8 @@ pub fn streaming_study(
     new_tokens: usize,
     cancel_after: usize,
     seed: u64,
+    clock: Clock,
 ) -> Result<Vec<StreamingPoint>> {
-    use crate::coordinator::request::StreamEvent;
     use crate::coordinator::server::EngineServer;
 
     let distinct = 8usize;
@@ -324,6 +338,7 @@ pub fn streaming_study(
             mode: "road".into(),
             decode_slots: 8,
             queue_capacity: 4096,
+            clock: clock.clone(),
             ..Default::default()
         };
         let (server, client) = EngineServer::start(econf, artifacts_dir.clone(), move |eng| {
@@ -333,21 +348,30 @@ pub fn streaming_study(
         let reqs = hetero_workload(&mut rng, n_requests, distinct, 8, new_tokens);
 
         let t0 = std::time::Instant::now();
+        let start = clock.now();
         let mut handles = Vec::new();
         for (i, req) in reqs.into_iter().enumerate() {
-            let client = client.clone();
             let cancel_at = (cancel_half && i % 2 == 1).then_some(cancel_after);
+            // Open-loop arrival clock, paced here on the submitting
+            // thread: request i enters at i*2ms of clock time whether or
+            // not earlier requests have finished, and submissions happen
+            // in arrival order on both clock kinds.
+            clock.sleep_until(start + Duration::from_millis(2 * i as u64));
+            let submitted = std::time::Instant::now();
+            let generation = match client.submit(req) {
+                Ok(g) => g,
+                Err(_) => {
+                    // Terminal outcome None = submit rejected (counted as
+                    // errored below, like a stream that dies in Error).
+                    handles.push(std::thread::spawn(move || (None, 0, None)));
+                    continue;
+                }
+            };
             // Per-request terminal outcome: Some(true) = cancelled,
-            // Some(false) = completed, None = submit rejected or the
-            // stream ended in an Error event.
+            // Some(false) = completed, None = the stream ended in an
+            // Error event.
             handles.push(std::thread::spawn(move || -> (Option<f64>, usize, Option<bool>) {
-                // Open-loop arrival clock: request i enters at i*2ms
-                // whether or not earlier requests have finished.
-                std::thread::sleep(std::time::Duration::from_millis(2 * i as u64));
-                let submitted = std::time::Instant::now();
-                let Ok(mut generation) = client.submit(req) else {
-                    return (None, 0, None);
-                };
+                let mut generation = generation;
                 let mut ttft = None;
                 let mut seen = 0usize;
                 let mut cancel_sent = false;
@@ -431,6 +455,373 @@ pub fn render_streaming_points(title: &str, points: &[StreamingPoint]) -> String
         "## {title}\n{}\nobs-ttft is measured at the client (submit call → first Token \
          event through the channel); cancelled lanes are reclaimed for waiting work, \
          which is the wall/token delta between the rows.\n",
+        t.render()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Admission-scheduling study (`road bench-serving --study sched`)
+// ---------------------------------------------------------------------------
+
+/// Per-adapter queue-wait aggregate in one sched-study row — the
+/// fairness axis (one hot adapter must not starve the rest).
+#[derive(Clone, Debug)]
+pub struct AdapterWait {
+    pub adapter: String,
+    pub requests: usize,
+    pub wait_p50_ms: f64,
+    pub wait_p99_ms: f64,
+    pub wait_max_ms: f64,
+}
+
+/// One policy's row in the admission-scheduling study.
+#[derive(Clone, Debug)]
+pub struct SchedPoint {
+    pub policy: String,
+    pub requests: usize,
+    pub finished: usize,
+    pub shed: usize,
+    /// Sheds over deadline-bearing requests (0 when none carry deadlines).
+    pub deadline_miss_rate: f64,
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p99_ms: f64,
+    /// Worst time any single request spent waiting in the queue (time to
+    /// admission, or to its terminal event if it never got a lane) — the
+    /// starvation axis.
+    pub starvation_ms: f64,
+    pub per_adapter: Vec<AdapterWait>,
+}
+
+/// Decorate a Zipf workload for the sched study: every 3rd request
+/// carries a deadline and every 4th a priority tier, both derived from
+/// the request index so the workload is a pure function of `seed`.
+fn sched_workload(
+    n_requests: usize,
+    distinct: usize,
+    zipf_s: f64,
+    new_tokens: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::seed_from(seed ^ 0x5c4ed);
+    let mut reqs = zipf_workload(&mut rng, n_requests, distinct, zipf_s, 8, new_tokens);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            r.deadline = Some(Duration::from_millis(200 + (i as u64 % 5) * 50));
+        }
+        if i % 4 == 0 {
+            r.priority = (i % 3) as u8 + 1;
+        }
+    }
+    reqs
+}
+
+/// Fold terminal records into one study row.  Works over [`SimRecord`]s
+/// whether they came from the [`SchedSim`] harness or from replaying a
+/// real engine's event stream.
+fn aggregate_sched(policy: &str, requests: usize, records: &[SimRecord]) -> SchedPoint {
+    // Queue wait = submit → admission; a request that never reached a
+    // lane (shed/cancelled while queued) waited until its terminal event.
+    let wait_ms = |r: &SimRecord| {
+        (r.admitted_at.unwrap_or(r.finished_at) - r.submitted_at).as_secs_f64() * 1e3
+    };
+    let mut waits: Vec<f64> = Vec::new();
+    let mut per: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let (mut finished, mut shed, mut with_deadline) = (0usize, 0usize, 0usize);
+    for r in records {
+        match r.outcome {
+            SimOutcome::Finished => finished += 1,
+            SimOutcome::DeadlineShed => shed += 1,
+            SimOutcome::Cancelled => {}
+        }
+        if r.deadline.is_some() {
+            with_deadline += 1;
+        }
+        let w = wait_ms(r);
+        waits.push(w);
+        per.entry(r.adapter.clone().unwrap_or_else(|| "base".into())).or_default().push(w);
+    }
+    let s = crate::util::stats::summarize(&waits);
+    let per_adapter = per
+        .into_iter()
+        .map(|(adapter, ws)| {
+            let a = crate::util::stats::summarize(&ws);
+            AdapterWait {
+                adapter,
+                requests: ws.len(),
+                wait_p50_ms: a.p50,
+                wait_p99_ms: a.p99,
+                wait_max_ms: a.max,
+            }
+        })
+        .collect();
+    SchedPoint {
+        policy: policy.to_string(),
+        requests,
+        finished,
+        shed,
+        deadline_miss_rate: if with_deadline > 0 {
+            shed as f64 / with_deadline as f64
+        } else {
+            0.0
+        },
+        queue_wait_p50_ms: s.p50,
+        queue_wait_p99_ms: s.p99,
+        starvation_ms: s.max,
+        per_adapter,
+    }
+}
+
+/// The admission-scheduling study on the deterministic harness
+/// (`--sim-clock`): all four policies over the same Zipf-skewed,
+/// deadline/priority-decorated workload, arrivals every 10 ms of
+/// *virtual* time, decode steps costing a fixed 5 ms of virtual time.
+/// No artifacts, no sleeps, no wall-clock reads — two runs produce
+/// byte-identical output.
+pub fn sched_study_sim(
+    n_requests: usize,
+    distinct: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Vec<SchedPoint> {
+    let arrival_gap = Duration::from_millis(10);
+    let step_cost = Duration::from_millis(5);
+    let mut out = Vec::new();
+    for kind in PolicyKind::ALL {
+        let mut sim = SchedSim::new(kind, 8, 4096, step_cost);
+        let reqs = sched_workload(n_requests, distinct, 1.2, new_tokens, seed);
+        let start = sim.clock.now();
+        let mut pending: VecDeque<(usize, Request)> = reqs.into_iter().enumerate().collect();
+        loop {
+            let due = |pending: &VecDeque<(usize, Request)>| {
+                pending.front().map(|(i, _)| start + arrival_gap * (*i as u32))
+            };
+            while due(&pending).is_some_and(|d| d <= sim.clock.now()) {
+                let (_, req) = pending.pop_front().expect("due arrival checked");
+                sim.submit(req).expect("study queue capacity exceeds the workload");
+            }
+            if pending.is_empty() && !sim.has_work() {
+                break;
+            }
+            if !sim.has_work() {
+                // Idle until the next arrival (a virtual jump).
+                if let Some(d) = due(&pending) {
+                    sim.clock.sleep_until(d);
+                    continue;
+                }
+            }
+            sim.step();
+        }
+        out.push(aggregate_sched(kind.name(), n_requests, sim.records()));
+    }
+    out
+}
+
+/// The same study over the real engine (artifacts required): one engine
+/// per policy with `EngineConfig::policy` set, the identical decorated
+/// workload, arrivals open-loop on the engine's clock.  Queue waits are
+/// observed from the `Admitted`/terminal events the step loop emits.
+pub fn sched_study_engine(
+    rt: &Rc<Runtime>,
+    n_requests: usize,
+    distinct: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Result<Vec<SchedPoint>> {
+    struct OpenLoop {
+        adapter: Option<String>,
+        priority: u8,
+        deadline: Option<Duration>,
+        submitted_at: Instant,
+        admitted_at: Option<Instant>,
+        admitted_seq: Option<usize>,
+    }
+    let arrival_gap = Duration::from_millis(10);
+    let mut out = Vec::new();
+    for kind in PolicyKind::ALL {
+        let econf = EngineConfig {
+            model: "serve".into(),
+            mode: "road".into(),
+            decode_slots: 8,
+            queue_capacity: 4096,
+            policy: kind,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(rt.clone(), econf)?;
+        register_adapters(&mut engine, distinct, seed)?;
+        let clock = engine.clock().clone();
+        let reqs = sched_workload(n_requests, distinct, 1.2, new_tokens, seed);
+        let start = clock.now();
+        let mut pending: VecDeque<(usize, Request)> = reqs.into_iter().enumerate().collect();
+        let mut live: BTreeMap<u64, OpenLoop> = BTreeMap::new();
+        let mut records: Vec<SimRecord> = Vec::new();
+        let mut admissions = 0usize;
+        loop {
+            let due = |pending: &VecDeque<(usize, Request)>| {
+                pending.front().map(|(i, _)| start + arrival_gap * (*i as u32))
+            };
+            while due(&pending).is_some_and(|d| d <= clock.now()) {
+                let (_, req) = pending.pop_front().expect("due arrival checked");
+                let info = OpenLoop {
+                    adapter: req.adapter.clone(),
+                    priority: req.priority,
+                    deadline: req.deadline,
+                    submitted_at: clock.now(),
+                    admitted_at: None,
+                    admitted_seq: None,
+                };
+                let id = engine.submit(req)?;
+                live.insert(id, info);
+            }
+            if pending.is_empty() && !engine.has_work() {
+                break;
+            }
+            if !engine.has_work() {
+                if let Some(d) = due(&pending) {
+                    clock.sleep_until(d);
+                    continue;
+                }
+            }
+            for ev in engine.step()? {
+                let id = ev.id();
+                match &ev {
+                    StreamEvent::Admitted { .. } => {
+                        if let Some(info) = live.get_mut(&id) {
+                            info.admitted_at = Some(clock.now());
+                            info.admitted_seq = Some(admissions);
+                            admissions += 1;
+                        }
+                    }
+                    StreamEvent::Token { .. } => {}
+                    StreamEvent::Finished(o) => {
+                        if let Some(info) = live.remove(&id) {
+                            let cancelled =
+                                o.finish == crate::coordinator::request::FinishReason::Cancelled;
+                            records.push(SimRecord {
+                                id,
+                                adapter: info.adapter,
+                                priority: info.priority,
+                                deadline: info.deadline,
+                                submitted_at: info.submitted_at,
+                                admitted_at: info.admitted_at,
+                                admitted_seq: info.admitted_seq,
+                                finished_at: clock.now(),
+                                outcome: if cancelled {
+                                    SimOutcome::Cancelled
+                                } else {
+                                    SimOutcome::Finished
+                                },
+                            });
+                        }
+                    }
+                    StreamEvent::Error { error, .. } => {
+                        if let Some(info) = live.remove(&id) {
+                            let shed = matches!(
+                                error,
+                                crate::coordinator::queue::EngineError::DeadlineExceeded
+                            );
+                            records.push(SimRecord {
+                                id,
+                                adapter: info.adapter,
+                                priority: info.priority,
+                                deadline: info.deadline,
+                                submitted_at: info.submitted_at,
+                                admitted_at: info.admitted_at,
+                                admitted_seq: info.admitted_seq,
+                                finished_at: clock.now(),
+                                // Only deadline sheds occur on this driver;
+                                // anything else counts as a cancellation so
+                                // the conservation totals still close.
+                                outcome: if shed {
+                                    SimOutcome::DeadlineShed
+                                } else {
+                                    SimOutcome::Cancelled
+                                },
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out.push(aggregate_sched(kind.name(), n_requests, &records));
+    }
+    Ok(out)
+}
+
+/// JSON form of the sched study — what the `--sim-clock` acceptance check
+/// compares byte-for-byte across runs.
+pub fn sched_points_json(points: &[SchedPoint]) -> Json {
+    json::arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("policy", json::s(&p.policy)),
+                    ("requests", json::num(p.requests as f64)),
+                    ("finished", json::num(p.finished as f64)),
+                    ("deadline_shed", json::num(p.shed as f64)),
+                    ("deadline_miss_rate", json::num(p.deadline_miss_rate)),
+                    ("queue_wait_p50_ms", json::num(p.queue_wait_p50_ms)),
+                    ("queue_wait_p99_ms", json::num(p.queue_wait_p99_ms)),
+                    ("starvation_ms", json::num(p.starvation_ms)),
+                    (
+                        "per_adapter",
+                        json::arr(
+                            p.per_adapter
+                                .iter()
+                                .map(|a| {
+                                    json::obj(vec![
+                                        ("adapter", json::s(&a.adapter)),
+                                        ("requests", json::num(a.requests as f64)),
+                                        ("wait_p50_ms", json::num(a.wait_p50_ms)),
+                                        ("wait_p99_ms", json::num(a.wait_p99_ms)),
+                                        ("wait_max_ms", json::num(a.wait_max_ms)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Render the sched study: one row per policy, plus the hottest/coldest
+/// adapter waits so the fairness story is visible without the JSON.
+pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
+    let mut t = Table::new(&[
+        "policy",
+        "reqs",
+        "finished",
+        "shed",
+        "miss-rate",
+        "wait p50(ms)",
+        "wait p99(ms)",
+        "starvation(ms)",
+        "hot p99(ms)",
+        "cold p99(ms)",
+    ]);
+    for p in points {
+        // "Hot" = adapter with the most requests; "cold" = the fewest.
+        let hot = p.per_adapter.iter().max_by_key(|a| a.requests);
+        let cold = p.per_adapter.iter().min_by_key(|a| a.requests);
+        t.row(vec![
+            p.policy.clone(),
+            p.requests.to_string(),
+            p.finished.to_string(),
+            p.shed.to_string(),
+            fmt_f(p.deadline_miss_rate, 3),
+            fmt_f(p.queue_wait_p50_ms, 1),
+            fmt_f(p.queue_wait_p99_ms, 1),
+            fmt_f(p.starvation_ms, 1),
+            fmt_f(hot.map_or(0.0, |a| a.wait_p99_ms), 1),
+            fmt_f(cold.map_or(0.0, |a| a.wait_p99_ms), 1),
+        ]);
+    }
+    format!(
+        "## {title}\n{}\nedf should minimize miss-rate, priority should favor high tiers, \
+         fair should pull cold-adapter waits toward hot-adapter waits, and fcfs is the \
+         pre-policy baseline.  Full per-adapter percentiles ride in the JSON block below.\n",
         t.render()
     )
 }
@@ -681,6 +1072,42 @@ mod tests {
         for needle in ["cancelled", "errored", "tok-streamed", "obs-ttft p50(ms)", "12.5", "512"] {
             assert!(s.contains(needle), "missing {needle:?} in\n{s}");
         }
+    }
+
+    #[test]
+    fn sched_study_sim_conserves_and_renders() {
+        let pts = sched_study_sim(24, 4, 6, 3);
+        assert_eq!(pts.len(), PolicyKind::ALL.len());
+        for p in &pts {
+            // No cancels in the study: every request finishes or is shed.
+            assert_eq!(p.finished + p.shed, p.requests, "{}: leaked requests", p.policy);
+            assert!(!p.per_adapter.is_empty());
+        }
+        let md = render_sched_points("Sched", &pts);
+        for needle in ["fcfs", "edf", "priority", "fair", "miss-rate", "starvation(ms)"] {
+            assert!(md.contains(needle), "missing {needle:?} in\n{md}");
+        }
+        let j = sched_points_json(&pts).to_string_compact();
+        assert!(!j.contains('\n'), "compact JSON is one line");
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 4);
+        assert_eq!(back.as_arr().unwrap()[0].get("policy").unwrap().as_str().unwrap(), "fcfs");
+    }
+
+    #[test]
+    fn sched_workload_decoration_is_deterministic() {
+        let (a, b) = (sched_workload(30, 5, 1.2, 8, 11), sched_workload(30, 5, 1.2, 8, 11));
+        assert_eq!(a.len(), 30);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.adapter, y.adapter);
+            assert_eq!(x.deadline, y.deadline);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        // The decoration actually lands: some deadlines, some tiers.
+        assert!(a.iter().any(|r| r.deadline.is_some()));
+        assert!(a.iter().any(|r| r.priority > 0));
+        assert!(a.iter().any(|r| r.deadline.is_none() && r.priority == 0));
     }
 
     #[test]

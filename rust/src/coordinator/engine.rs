@@ -27,10 +27,16 @@
 //! slot is pinned, the request simply stays queued.  Bank uploads move
 //! only dirty slot rows (`EngineConfig::paged_bank_uploads` flips the
 //! whole-bank re-upload baseline back on for comparison).
+//!
+//! Admission order is policy-driven ([`super::sched`]): every scheduler
+//! iteration ranks the queue through `EngineConfig::policy` (FCFS / EDF /
+//! priority tiers / fair-share) before popping, and every timestamp the
+//! engine takes goes through `EngineConfig::clock`, so the whole temporal
+//! surface — deadline sheds, TTFT, queue waits — runs deterministically
+//! on a manual clock (docs/DESIGN.md §Scheduling).
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -39,12 +45,14 @@ use crate::manifest::{EntryInfo, ModelConfigInfo};
 use crate::model::ParamStore;
 use crate::runtime::{buffer_to_host, Arg, Executable, Runtime};
 use crate::tensor::{DType, HostTensor};
+use crate::util::clock::Clock;
 
 use super::kv::{KvState, SlotAllocator};
 use super::metrics::Metrics;
 use super::queue::{AdmissionQueue, EngineError};
 use super::request::{ActiveRequest, FinishReason, Request, RequestOutput, StreamEvent};
 use super::sampler;
+use super::sched::{self, PolicyKind, SchedContext, SchedPolicy};
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -71,6 +79,16 @@ pub struct EngineConfig {
     /// `false`: any change re-uploads the whole bank — the measurable
     /// baseline for `road bench-serving --study bank`.
     pub paged_bank_uploads: bool,
+    /// Admission scheduling policy — which queued request gets the next
+    /// free decode slot and the chance to page its adapter in: FCFS
+    /// (default, the pre-policy FIFO), deadline-aware EDF, priority
+    /// tiers, or fair-share across adapters.  `road serve --policy`.
+    pub policy: PolicyKind,
+    /// Time source for every engine timestamp: submit stamps, TTFT and
+    /// queue-wait metrics, deadline enforcement, step timing.
+    /// [`Clock::wall`] in production; [`Clock::manual`] makes the whole
+    /// temporal surface deterministic for tests and the sched study.
+    pub clock: Clock,
 }
 
 impl Default for EngineConfig {
@@ -83,6 +101,8 @@ impl Default for EngineConfig {
             kv_host_roundtrip: false,
             bank_slots: None,
             paged_bank_uploads: true,
+            policy: PolicyKind::Fcfs,
+            clock: Clock::Wall,
         }
     }
 }
@@ -108,6 +128,15 @@ pub struct Engine {
     kv: KvState,
     pub queue: AdmissionQueue,
     pub metrics: Metrics,
+    /// Admission scheduler ([`EngineConfig::policy`]): ranks the queue
+    /// each iteration before `pop_scheduled`.
+    policy: Box<dyn SchedPolicy>,
+    /// Time source for every timestamp this engine takes
+    /// ([`EngineConfig::clock`]).
+    clock: Clock,
+    /// Lifetime admissions per adapter name ("" = base model) — the
+    /// fair-share policy's service ledger.
+    admitted_per_adapter: BTreeMap<String, usize>,
     next_id: u64,
     /// Events produced inside the current scheduler iteration, drained by
     /// [`Engine::step`].
@@ -189,11 +218,21 @@ impl Engine {
             slots,
             kv,
             queue: AdmissionQueue::new(econf.queue_capacity),
-            metrics: Metrics::default(),
+            metrics: Metrics::with_clock(econf.clock.clone()),
+            policy: sched::make_policy(econf.policy),
+            clock: econf.clock.clone(),
+            admitted_per_adapter: BTreeMap::new(),
             next_id: 1,
             events: Vec::new(),
             econf,
         })
+    }
+
+    /// The engine's time source (a clone of [`EngineConfig::clock`]):
+    /// tests holding the same manual clock advance it to drive deadline
+    /// sheds and latency stamps deterministically.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Register (or replace) a named adapter in the host store.  Never
@@ -266,7 +305,7 @@ impl Engine {
         self.next_id += 1;
         let id = req.id;
         if req.submitted_at.is_none() {
-            req.submitted_at = Some(Instant::now());
+            req.submitted_at = Some(self.clock.now());
         }
         self.queue.push(req)?;
         Ok(id)
@@ -284,7 +323,7 @@ impl Engine {
     /// the id is unknown or already finished — cancellation races resolve
     /// as no-ops.
     pub fn cancel(&mut self, id: u64) -> Option<RequestOutput> {
-        let now = Instant::now();
+        let now = self.clock.now();
         if let Some(req) = self.queue.cancel(id) {
             self.metrics.requests_cancelled += 1;
             let e2e = req.submitted_at.map(|s| (now - s).as_secs_f64()).unwrap_or_default();
@@ -383,11 +422,18 @@ impl Engine {
 
     /// Admit queued requests into free slots via bucketed prefill.
     ///
-    /// Admission is gated on adapter residency: a request is only popped
-    /// when its adapter is (or can be paged) device-resident; the paged-in
-    /// slot is pinned immediately so nothing admitted later in the same
-    /// batch can evict it.  Requests whose adapter cannot be paged (every
-    /// pageable slot pinned) keep their queue position.
+    /// Which waiting requests are *considered* first is the scheduling
+    /// policy's call ([`EngineConfig::policy`]): the queue is ranked by
+    /// [`SchedPolicy::order`] and popped in that order, so EDF admits the
+    /// tightest deadline first, priority admits the highest tier first,
+    /// and fair-share admits the least-served adapter first.  FCFS ranks
+    /// by queue position, reproducing the pre-policy FIFO byte for byte.
+    ///
+    /// Admission stays gated on adapter residency: a request is only
+    /// popped when its adapter is (or can be paged) device-resident; the
+    /// paged-in slot is pinned immediately so nothing admitted later in
+    /// the same batch can evict it.  Requests whose adapter cannot be
+    /// paged (every pageable slot pinned) keep their queue position.
     fn maybe_prefill(&mut self) -> Result<()> {
         loop {
             let n_free = self.alloc.n_free();
@@ -420,10 +466,22 @@ impl Engine {
             let Some(bi) = best else { return Ok(()) };
             let bucket_b = self.prefill_buckets[bi].batch;
             let bucket_l = self.prefill_buckets[bi].prompt_len;
+            // Rank the queue: the policy sees current lane occupancy and
+            // the lifetime admission ledger (the fair-share inputs).
+            let mut in_flight: BTreeMap<String, usize> = BTreeMap::new();
+            for lane in self.slots.iter().flatten() {
+                *in_flight.entry(lane.req.adapter.clone().unwrap_or_default()).or_insert(0) += 1;
+            }
+            let ctx = SchedContext {
+                now: self.clock.now(),
+                in_flight: &in_flight,
+                admitted: &self.admitted_per_adapter,
+            };
+            let order = self.policy.order(&self.queue, &ctx);
             let mut paged_ids: BTreeSet<u64> = BTreeSet::new();
             let registry = &mut self.registry;
             let metrics = &mut self.metrics;
-            let take = self.queue.pop_admissible(n_free.min(bucket_b), bucket_l, |req| {
+            let take = self.queue.pop_scheduled(&order, n_free.min(bucket_b), bucket_l, |req| {
                 let Some(name) = req.adapter.as_deref() else { return true };
                 match registry.ensure_resident(name) {
                     Ok(PageOutcome::Hit(slot)) => {
@@ -471,8 +529,12 @@ impl Engine {
         let mut lengths = vec![1i32; b];
         let mut ids = vec![0i32; b];
         let mut actives: Vec<ActiveRequest> = Vec::with_capacity(reqs.len());
-        let now = Instant::now();
+        let now = self.clock.now();
         for (lane, req) in reqs.into_iter().enumerate() {
+            *self
+                .admitted_per_adapter
+                .entry(req.adapter.clone().unwrap_or_default())
+                .or_insert(0) += 1;
             let slot_adapter = match &req.adapter {
                 Some(name) => self
                     .registry
@@ -506,10 +568,10 @@ impl Engine {
         data.insert("lengths", &lengths_t);
         let exe = self.prefill_buckets[bucket_idx].exe.clone();
         let args = self.build_args(&exe.info, &data, &BTreeMap::new())?;
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let outs = exe.run(&args)?;
         drop(args);
-        self.metrics.prefill_time += t0.elapsed();
+        self.metrics.prefill_time += self.clock.now().saturating_duration_since(t0);
         self.metrics.prefill_batches += 1;
 
         let logits = &outs[0]; // [b, vocab]
@@ -531,7 +593,7 @@ impl Engine {
                 &mut ar.rng_state,
             );
             ar.generated.push(tok);
-            ar.first_token_at = Some(Instant::now());
+            ar.first_token_at = Some(self.clock.now());
             self.metrics.tokens_generated += 1;
             self.metrics.prompt_tokens += ar.req.prompt.len();
             // Stream the first token with its TTFT; a stop token is
@@ -598,9 +660,9 @@ impl Engine {
                 data.insert("k_cache", self.kv.host_k()?);
                 data.insert("v_cache", self.kv.host_v()?);
                 let args = self.build_args(&exe.info, &data, &BTreeMap::new())?;
-                let t0 = Instant::now();
+                let t0 = self.clock.now();
                 let outs = exe.run(&args)?;
-                (outs, t0.elapsed())
+                (outs, self.clock.now().saturating_duration_since(t0))
             };
             self.metrics.decode_time += elapsed;
             // This step moved the full cache up (Arg::Host inputs) and back
@@ -625,7 +687,7 @@ impl Engine {
             if self.kv.ensure_device(&self.rt.client)? {
                 self.metrics.kv_uploads += 1;
             }
-            let t0 = Instant::now();
+            let t0 = self.clock.now();
             let outs = {
                 let (kb, vb) = self.kv.device_pair()?;
                 let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
@@ -648,7 +710,7 @@ impl Engine {
             let v_buf = outs.next().unwrap();
             let logits_dtype = exe.info.outputs.first().map_or(DType::F32, |s| s.dtype);
             let logits = buffer_to_host(&l_buf, logits_dtype)?;
-            self.metrics.decode_time += t0.elapsed();
+            self.metrics.decode_time += self.clock.now().saturating_duration_since(t0);
             self.kv.install_device(k_buf, v_buf)?;
             logits
         };
@@ -690,7 +752,7 @@ impl Engine {
         // The lane no longer references its adapter slot; release the pin
         // so the pager may evict it (identity slot 0 is a no-op).
         self.registry.unpin(ar.slot_adapter);
-        let now = Instant::now();
+        let now = self.clock.now();
         let ttft = ar
             .first_token_at
             .map(|t| (t - ar.submitted).as_secs_f64())
@@ -718,7 +780,7 @@ impl Engine {
     /// before spending another decode step on them.  Each reaped request
     /// ends its stream with [`EngineError::DeadlineExceeded`].
     fn enforce_deadlines(&mut self) -> Result<()> {
-        let now = Instant::now();
+        let now = self.clock.now();
         for req in self.queue.shed_expired(now) {
             self.metrics.deadline_shed += 1;
             self.events
@@ -784,7 +846,7 @@ impl Engine {
                 // keeps its original clock across re-submits, so its
                 // reported latency includes the time it spent parked here.
                 if r.submitted_at.is_none() {
-                    r.submitted_at = Some(Instant::now());
+                    r.submitted_at = Some(self.clock.now());
                 }
                 match self.submit(r.clone()) {
                     Ok(_) => {}

@@ -16,12 +16,17 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::clock::Clock;
 use crate::util::json::{self, Json};
 use crate::util::stats::{LatencyRecorder, Summary};
 use crate::util::table::kv_table;
 
 #[derive(Default)]
 pub struct Metrics {
+    /// Time source for the `started`/`finished` stamps and live `wall()`
+    /// reads.  The engine installs its own clock here, so a manual-clock
+    /// run reports exact virtual wall time (deterministic snapshots).
+    pub clock: Clock,
     pub requests_completed: usize,
     /// Requests cancelled after submission (explicit `cancel`, dropped
     /// stream handles) — their decode slot and bank pin were reclaimed.
@@ -73,20 +78,26 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Metrics whose time stamps come from `clock` — the engine passes its
+    /// own clock so a simulated run reports virtual time.
+    pub fn with_clock(clock: Clock) -> Metrics {
+        Metrics { clock, ..Metrics::default() }
+    }
+
     pub fn start(&mut self) {
         if self.started.is_none() {
-            self.started = Some(Instant::now());
+            self.started = Some(self.clock.now());
         }
     }
 
     pub fn stop(&mut self) {
-        self.finished = Some(Instant::now());
+        self.finished = Some(self.clock.now());
     }
 
     pub fn wall(&self) -> f64 {
         match (self.started, self.finished) {
             (Some(s), Some(f)) => (f - s).as_secs_f64(),
-            (Some(s), None) => s.elapsed().as_secs_f64(),
+            (Some(s), None) => self.clock.now().saturating_duration_since(s).as_secs_f64(),
             _ => 0.0,
         }
     }
@@ -365,6 +376,18 @@ mod tests {
         let table = s.report_table();
         assert!(table.contains("requests cancelled"), "{table}");
         assert!(table.contains("deadline shed"), "{table}");
+    }
+
+    #[test]
+    fn wall_time_follows_the_installed_clock() {
+        let clock = crate::util::clock::Clock::manual();
+        let mut m = Metrics::with_clock(clock.clone());
+        m.start();
+        clock.advance(Duration::from_millis(500));
+        assert!((m.wall() - 0.5).abs() < 1e-12, "live wall read is virtual: {}", m.wall());
+        m.stop();
+        clock.advance(Duration::from_secs(9));
+        assert!((m.wall() - 0.5).abs() < 1e-12, "stopped wall is frozen: {}", m.wall());
     }
 
     #[test]

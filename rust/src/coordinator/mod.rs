@@ -1,9 +1,10 @@
 //! Layer-3 coordinator: the paper's serving contribution as a running
-//! system — request admission, a virtualized adapter registry (host store
-//! + LRU-paged device bank), continuous batching over decode slots,
-//! KV-slot management, sampling, metrics, a streaming client API with
-//! first-class cancellation and deadlines, and an NDJSON-over-TCP front
-//! end for external clients.
+//! system — request admission under a pluggable scheduling policy
+//! (FCFS / EDF / priority / fair-share on a substitutable clock), a
+//! virtualized adapter registry (host store + LRU-paged device bank),
+//! continuous batching over decode slots, KV-slot management, sampling,
+//! metrics, a streaming client API with first-class cancellation and
+//! deadlines, and an NDJSON-over-TCP front end for external clients.
 
 pub mod engine;
 pub mod kv;
@@ -12,10 +13,12 @@ pub mod net;
 pub mod queue;
 pub mod request;
 pub mod sampler;
+pub mod sched;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::MetricsSnapshot;
 pub use queue::EngineError;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams, StreamEvent};
+pub use sched::{PolicyKind, SchedPolicy, SchedSim};
 pub use server::{EngineClient, EngineServer, Generation};

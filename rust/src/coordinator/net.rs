@@ -179,6 +179,15 @@ fn parse_generate(v: &Json) -> Result<Request> {
     if let Some(a) = v.opt("adapter") {
         req = req.with_adapter(a.as_str()?);
     }
+    if let Some(p) = v.opt("priority") {
+        let p = p.as_f64()?;
+        // The priority policy's tiers are a u8; anything else is a typed
+        // `invalid` error event, not a silent clamp.
+        if !(0.0..=255.0).contains(&p) || p.fract() != 0.0 {
+            bail!("priority must be an integer in [0, 255], got {p}");
+        }
+        req = req.with_priority(p as u8);
+    }
     if let Some(ms) = v.opt("deadline_ms") {
         let ms = ms.as_f64()?;
         // Validate before Duration::from_secs_f64, which panics on
@@ -283,7 +292,7 @@ mod tests {
     fn parses_generate_with_all_fields() {
         let line = r#"{"op":"generate","prompt":[1,2,3],"max_new_tokens":5,"adapter":"a",
                        "temperature":0.5,"top_k":4,"seed":9,"stop_token":46,
-                       "deadline_ms":250,"tag":"x"}"#
+                       "deadline_ms":250,"priority":2,"tag":"x"}"#
             .replace('\n', " ");
         let WireCmd::Generate(req, tag) = parse_line(&line).unwrap() else {
             panic!("expected generate")
@@ -295,7 +304,24 @@ mod tests {
         assert_eq!(req.sampling.seed, 9);
         assert_eq!(req.sampling.stop_token, Some(46));
         assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(req.priority, 2);
         assert_eq!(tag, Some(json::s("x")));
+    }
+
+    #[test]
+    fn priority_is_validated_not_clamped() {
+        let WireCmd::Generate(req, _) = parse_line(r#"{"text":"x"}"#).unwrap() else {
+            panic!("expected generate")
+        };
+        assert_eq!(req.priority, 0, "default tier");
+        assert!(parse_line(r#"{"text":"x","priority":999}"#).is_err());
+        assert!(parse_line(r#"{"text":"x","priority":-1}"#).is_err());
+        assert!(parse_line(r#"{"text":"x","priority":1.5}"#).is_err());
+        let WireCmd::Generate(req, _) = parse_line(r#"{"text":"x","priority":255}"#).unwrap()
+        else {
+            panic!("expected generate")
+        };
+        assert_eq!(req.priority, 255);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Bounded admission queue with backpressure (the front door of the
 //! coordinator).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::fmt;
 use std::time::Instant;
 
@@ -115,19 +115,65 @@ impl AdmissionQueue {
         &mut self,
         n: usize,
         max_len: usize,
+        admit: impl FnMut(&Request) -> bool,
+    ) -> Vec<Request> {
+        let order: Vec<usize> = (0..self.q.len()).collect();
+        self.pop_scheduled(&order, n, max_len, admit)
+    }
+
+    /// The scheduler-policy hook: like [`AdmissionQueue::pop_admissible`],
+    /// but candidates are considered in the order given by `order` (queue
+    /// indices, best first — a [`super::sched::SchedPolicy`] ranking)
+    /// instead of FIFO.  `admit` is called once per in-bounds candidate
+    /// that fits the length/count limits, in ranking order; requests not
+    /// taken keep their original FIFO positions.  Out-of-range or
+    /// duplicate indices are skipped, so a stale ranking degrades to
+    /// admitting less, never to corruption.  The identity ranking makes
+    /// this exactly `pop_admissible` — FCFS is the degenerate policy.
+    pub fn pop_scheduled(
+        &mut self,
+        order: &[usize],
+        n: usize,
+        max_len: usize,
         mut admit: impl FnMut(&Request) -> bool,
     ) -> Vec<Request> {
-        let mut taken = Vec::new();
-        let mut keep = VecDeque::new();
-        while let Some(r) = self.q.pop_front() {
-            if taken.len() < n && r.prompt.len() <= max_len && admit(&r) {
-                taken.push(r);
+        let mut taken_idx: Vec<usize> = Vec::new();
+        for &i in order {
+            if taken_idx.len() >= n {
+                break;
+            }
+            let Some(r) = self.q.get(i) else { continue };
+            if taken_idx.contains(&i) {
+                continue;
+            }
+            if r.prompt.len() <= max_len && admit(r) {
+                taken_idx.push(i);
+            }
+        }
+        if taken_idx.is_empty() {
+            return Vec::new();
+        }
+        let marked: BTreeSet<usize> = taken_idx.iter().copied().collect();
+        let mut by_idx: BTreeMap<usize, Request> = BTreeMap::new();
+        let mut keep = VecDeque::with_capacity(self.q.len() - marked.len());
+        for (i, r) in self.q.drain(..).enumerate() {
+            if marked.contains(&i) {
+                by_idx.insert(i, r);
             } else {
                 keep.push_back(r);
             }
         }
         self.q = keep;
-        taken
+        taken_idx
+            .into_iter()
+            .map(|i| by_idx.remove(&i).expect("selected index was drained"))
+            .collect()
+    }
+
+    /// Iterate the waiting requests in FIFO order (index 0 = queue front).
+    /// Scheduler policies rank the queue through this view.
+    pub fn iter(&self) -> std::collections::vec_deque::Iter<'_, Request> {
+        self.q.iter()
     }
 
     /// Remove a waiting request by id (cancellation before admission).
@@ -307,6 +353,55 @@ mod tests {
         assert_eq!(EngineError::Cancelled.kind(), "cancelled");
         assert_eq!(EngineError::EngineStopped.kind(), "engine_stopped");
         assert_eq!(EngineError::Invalid { reason: "r".into() }.kind(), "invalid");
+    }
+
+    #[test]
+    fn pop_scheduled_takes_in_ranking_order_and_keeps_fifo_among_rest() {
+        let mut q = AdmissionQueue::new(10);
+        for i in 1..=5 {
+            q.push(req(i, 4)).unwrap();
+        }
+        // Ranking prefers the back of the queue (indices 4, 2, 0 first).
+        let taken = q.pop_scheduled(&[4, 2, 0, 1, 3], 2, 16, |_| true);
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5, 3]);
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![1, 2, 4], "untaken requests keep FIFO order");
+    }
+
+    #[test]
+    fn pop_scheduled_identity_ranking_equals_pop_admissible() {
+        let mk = || {
+            let mut q = AdmissionQueue::new(20);
+            for i in 1..=8 {
+                q.push(req(i, (i as usize % 3) * 8 + 2)).unwrap();
+            }
+            q
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let order: Vec<usize> = (0..b.len()).collect();
+        let pred = |r: &Request| r.id % 3 != 0;
+        let via_admissible: Vec<u64> =
+            a.pop_admissible(3, 16, pred).iter().map(|r| r.id).collect();
+        let via_scheduled: Vec<u64> =
+            b.pop_scheduled(&order, 3, 16, pred).iter().map(|r| r.id).collect();
+        assert_eq!(via_admissible, via_scheduled);
+        let rest_a: Vec<u64> = std::iter::from_fn(|| a.pop()).map(|r| r.id).collect();
+        let rest_b: Vec<u64> = std::iter::from_fn(|| b.pop()).map(|r| r.id).collect();
+        assert_eq!(rest_a, rest_b, "residual queues identical too");
+    }
+
+    #[test]
+    fn pop_scheduled_tolerates_stale_or_duplicate_indices() {
+        let mut q = AdmissionQueue::new(10);
+        for i in 1..=3 {
+            q.push(req(i, 2)).unwrap();
+        }
+        // Out-of-range and duplicate entries are skipped, not a panic.
+        let taken = q.pop_scheduled(&[7, 1, 1, 99, 0], 5, 16, |_| true);
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().id, 3);
     }
 
     #[test]

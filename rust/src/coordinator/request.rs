@@ -42,6 +42,9 @@ pub struct Request {
     /// decode slot between steps, producing
     /// [`EngineError::DeadlineExceeded`] on the event stream.
     pub deadline: Option<Duration>,
+    /// Scheduling tier for the `priority` admission policy: higher values
+    /// admit first, FIFO within a tier.  The other policies ignore it.
+    pub priority: u8,
 }
 
 impl Request {
@@ -54,6 +57,7 @@ impl Request {
             sampling: Default::default(),
             submitted_at: None,
             deadline: None,
+            priority: 0,
         }
     }
 
@@ -74,12 +78,29 @@ impl Request {
         self
     }
 
+    /// Scheduling tier (see [`Request::priority`]): higher admits first
+    /// under the `priority` policy.
+    pub fn with_priority(mut self, p: u8) -> Request {
+        self.priority = p;
+        self
+    }
+
     /// Whether the deadline has passed as of `now`.  Never true for
     /// requests without a deadline or not yet submitted.
     pub fn expired(&self, now: Instant) -> bool {
         match (self.submitted_at, self.deadline) {
             (Some(s), Some(d)) => now.checked_duration_since(s).is_some_and(|e| e > d),
             _ => false,
+        }
+    }
+
+    /// Absolute deadline (`submitted_at + deadline`) — the EDF policy's
+    /// sort key.  `None` until submitted, or when the request has no
+    /// deadline.
+    pub fn deadline_at(&self) -> Option<Instant> {
+        match (self.submitted_at, self.deadline) {
+            (Some(s), Some(d)) => Some(s + d),
+            _ => None,
         }
     }
 }
@@ -239,6 +260,21 @@ mod tests {
         let err = StreamEvent::Error { id: 4, error: EngineError::DeadlineExceeded };
         assert!(err.is_terminal());
         assert_eq!(err.id(), 4);
+    }
+
+    #[test]
+    fn priority_and_absolute_deadline_builders() {
+        let r = Request::new(vec![1], 4);
+        assert_eq!(r.priority, 0, "default tier");
+        assert_eq!(r.deadline_at(), None, "no deadline, no absolute deadline");
+        let mut r = Request::new(vec![1], 4)
+            .with_priority(7)
+            .with_deadline(Duration::from_millis(40));
+        assert_eq!(r.priority, 7);
+        assert_eq!(r.deadline_at(), None, "unsubmitted requests have no absolute deadline");
+        let t = Instant::now();
+        r.submitted_at = Some(t);
+        assert_eq!(r.deadline_at(), Some(t + Duration::from_millis(40)));
     }
 
     #[test]

@@ -355,3 +355,137 @@ fn engine_thread(
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::util::clock::Clock;
+    use std::sync::mpsc::Receiver;
+    use std::time::Duration;
+
+    /// A `Generation` wired to bare channels — the client half of the
+    /// protocol without an engine thread behind it, so the handle's
+    /// lifecycle (drop-cancel, terminal latching, hangup behavior) is
+    /// testable in isolation.
+    fn bare_generation(id: u64) -> (Generation, Receiver<Cmd>, Sender<StreamEvent>) {
+        let (cmd_tx, cmd_rx) = channel();
+        let (ev_tx, ev_rx) = channel();
+        (Generation { id, rx: ev_rx, tx: cmd_tx, done: false }, cmd_rx, ev_tx)
+    }
+
+    fn finished(id: u64) -> StreamEvent {
+        StreamEvent::Finished(RequestOutput {
+            id,
+            adapter: None,
+            tokens: vec![1, 2],
+            finish: FinishReason::MaxTokens,
+            ttft: 0.0,
+            e2e: 0.0,
+        })
+    }
+
+    #[test]
+    fn dropped_generation_sends_cancel_for_its_id() {
+        let (generation, cmd_rx, _ev_tx) = bare_generation(9);
+        assert_eq!(generation.id(), 9);
+        drop(generation);
+        match cmd_rx.try_recv() {
+            Ok(Cmd::Cancel(id)) => assert_eq!(id, 9),
+            _ => panic!("dropping a live Generation must send Cancel(id)"),
+        }
+        assert!(cmd_rx.try_recv().is_err(), "exactly one cancel");
+    }
+
+    #[test]
+    fn terminated_generation_does_not_cancel_on_drop() {
+        let (mut generation, cmd_rx, ev_tx) = bare_generation(3);
+        ev_tx.send(StreamEvent::Token { id: 3, token: 7, pos: 0, ttft_hint: Some(0.01) }).unwrap();
+        ev_tx.send(finished(3)).unwrap();
+        assert!(matches!(generation.recv(), Some(StreamEvent::Token { .. })));
+        assert!(generation.recv().is_some_and(|ev| ev.is_terminal()));
+        assert!(generation.recv().is_none(), "stream is closed after the terminal event");
+        drop(generation);
+        assert!(
+            cmd_rx.try_recv().is_err(),
+            "a finished stream must not cancel on drop (the id may be reused)"
+        );
+    }
+
+    #[test]
+    fn engine_hangup_mid_stream_yields_typed_engine_stopped() {
+        let (mut generation, _cmd_rx, ev_tx) = bare_generation(5);
+        drop(ev_tx); // engine thread died before the terminal event
+        match generation.recv() {
+            Some(StreamEvent::Error { id: 5, error: EngineError::EngineStopped }) => {}
+            other => panic!("expected EngineStopped, got {other:?}"),
+        }
+        assert!(generation.recv().is_none(), "the synthesized error is terminal");
+    }
+
+    #[test]
+    fn wait_maps_cancelled_finish_to_typed_error() {
+        let (generation, _cmd_rx, ev_tx) = bare_generation(4);
+        ev_tx
+            .send(StreamEvent::Finished(RequestOutput {
+                id: 4,
+                adapter: None,
+                tokens: vec![1],
+                finish: FinishReason::Cancelled,
+                ttft: 0.0,
+                e2e: 0.0,
+            }))
+            .unwrap();
+        assert!(matches!(generation.wait(), Err(EngineError::Cancelled)));
+        let (generation, _cmd_rx, ev_tx) = bare_generation(6);
+        ev_tx.send(finished(6)).unwrap();
+        let out = generation.wait().expect("normal finish passes through wait");
+        assert_eq!(out.tokens, vec![1, 2]);
+    }
+
+    #[test]
+    fn engine_error_round_trips_the_channel_with_stable_kind() {
+        // The exact payload shape the engine thread sends for a rejected
+        // submit: Result<u64, EngineError> through an mpsc channel.  Each
+        // variant must come back equal, with its wire name intact.
+        let variants = [
+            EngineError::QueueFull { waiting: 3 },
+            EngineError::AdapterNotFound { name: "alice".into() },
+            EngineError::DeadlineExceeded,
+            EngineError::Cancelled,
+            EngineError::EngineStopped,
+            EngineError::Invalid { reason: "bad prompt".into() },
+        ];
+        let (tx, rx) = channel::<Result<u64, EngineError>>();
+        for e in variants {
+            let kind = e.kind();
+            tx.send(Err(e.clone())).unwrap();
+            let back = rx.recv().unwrap().unwrap_err();
+            assert_eq!(back, e, "variant must survive the channel unchanged");
+            assert_eq!(back.kind(), kind, "wire name stable across the boundary");
+        }
+    }
+
+    #[test]
+    fn stats_snapshot_under_manual_clock_is_exact_and_reproducible() {
+        let run = || {
+            let clock = Clock::manual();
+            let mut m = Metrics::with_clock(clock.clone());
+            m.start();
+            clock.advance(Duration::from_millis(250));
+            m.requests_completed = 2;
+            m.tokens_generated = 16;
+            m.ttft.record(Duration::from_millis(3));
+            m.stop();
+            m.snapshot()
+        };
+        let (a, b) = (run(), run());
+        assert!((a.wall_secs - 0.25).abs() < 1e-12, "virtual wall is exact: {}", a.wall_secs);
+        assert!((a.throughput - 64.0).abs() < 1e-9, "throughput from virtual wall");
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact(),
+            "identical virtual runs serialize byte-identically"
+        );
+    }
+}

@@ -6,16 +6,17 @@
 //! road serve       [--mode road|lora|base] [--slots 8] [--requests 32]
 //!                  [--distinct 8] [--tokens 64] [--host-roundtrip-kv=true]
 //!                  [--bank-slots N] [--whole-bank-uploads=true] [--stats=true]
-//!                  [--queue-capacity 4096] [--listen 127.0.0.1:7433]
+//!                  [--queue-capacity 4096] [--policy fcfs|edf|priority|fair]
+//!                  [--listen 127.0.0.1:7433]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
 //!                  [--steps 200] [--seed 0]
 //! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream
+//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched
 //!                  [--tokens 64] [--adapters 64] [--bank-slots 4]
-//!                  [--cancel-after 16]
+//!                  [--cancel-after 16] [--sim-clock]
 //! road bench-train-efficiency [--iters 50]
 //! road verify      (golden-record numerics check)
 //! ```
@@ -80,8 +81,8 @@ fn save_result(name: &str, content: &str) -> Result<()> {
 
 // ---------------------------------------------------------------------------
 
-fn serve_config(args: &Args, mode: &str, slots: usize) -> EngineConfig {
-    EngineConfig {
+fn serve_config(args: &Args, mode: &str, slots: usize) -> Result<EngineConfig> {
+    Ok(EngineConfig {
         model: args.get_or("model", "serve"),
         mode: mode.to_string(),
         decode_slots: slots,
@@ -97,14 +98,18 @@ fn serve_config(args: &Args, mode: &str, slots: usize) -> EngineConfig {
         // --whole-bank-uploads=true restores the re-upload-everything
         // baseline that paged per-slot uploads replace.
         paged_bank_uploads: !args.bool("whole-bank-uploads"),
-    }
+        // --policy picks the admission scheduler: fcfs (default), edf,
+        // priority, or fair (fair-share across adapters).
+        policy: road::coordinator::sched::PolicyKind::from_name(&args.get_or("policy", "fcfs"))?,
+        ..Default::default()
+    })
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let mode = args.get_or("mode", "road");
     let slots = args.usize_or("slots", 8);
     let distinct = args.usize_or("distinct", if mode == "base" { 0 } else { 8 });
-    let econf = serve_config(args, &mode, slots);
+    let econf = serve_config(args, &mode, slots)?;
 
     // --listen switches from the self-driving bench workload to the real
     // front door: an NDJSON-over-TCP server over the streaming client API.
@@ -406,32 +411,40 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
     let study = args.get_or("study", "hetero");
     let tokens = args.usize_or("tokens", 64);
     let seed = args.usize_or("seed", 7) as u64;
-    let rt = runtime()?;
+    // The runtime (and its artifacts) is loaded per study: the sched
+    // study's --sim-clock path runs on the deterministic harness and
+    // needs no artifacts at all.
     let md = match study.as_str() {
         "merge" => {
-            let pts = bench::fig4_left(&rt, tokens, seed)?;
+            let pts = bench::fig4_left(&runtime()?, tokens, seed)?;
             bench::render_points("Figure 4 (Left) analogue: merged vs unmerged", &pts)
         }
         "tokens" => {
             let counts: Vec<usize> = vec![16, 32, 64, 128];
-            let pts = bench::fig4_middle(&rt, &counts, seed)?;
+            let pts = bench::fig4_middle(&runtime()?, &counts, seed)?;
             bench::render_points("Figure 4 (Middle) analogue: throughput vs #generated tokens", &pts)
         }
         "hetero" => {
             let counts: Vec<usize> = vec![1, 2, 4, 8];
-            let pts = bench::fig4_right(&rt, &counts, tokens, seed)?;
+            let pts = bench::fig4_right(&runtime()?, &counts, tokens, seed)?;
             bench::render_points("Figure 4 (Right) analogue: throughput vs #distinct adapters", &pts)
         }
         "kv" => {
-            let pts = bench::kv_residency_comparison(&rt, tokens, seed)?;
+            let pts = bench::kv_residency_comparison(&runtime()?, tokens, seed)?;
             bench::render_points("KV residency: device-resident vs host-roundtrip decode", &pts)
         }
         "bank" => {
             let n_adapters = args.usize_or("adapters", 64);
             let bank_slots = args.usize_or("bank-slots", 4);
             let n_requests = args.usize_or("requests", n_adapters * 2);
-            let pts =
-                bench::bank_churn_study(&rt, n_adapters, bank_slots, n_requests, tokens, seed)?;
+            let pts = bench::bank_churn_study(
+                &runtime()?,
+                n_adapters,
+                bank_slots,
+                n_requests,
+                tokens,
+                seed,
+            )?;
             bench::render_bank_points(
                 "Adapter-bank churn: paged per-slot uploads vs whole-bank baseline",
                 &pts,
@@ -440,7 +453,14 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
         "stream" => {
             let n_requests = args.usize_or("requests", 16);
             let cancel_after = args.usize_or("cancel-after", tokens / 4);
-            drop(rt); // the study drives the threaded server, which owns its own runtime
+            // --sim-clock drives the open-loop arrivals on a shared manual
+            // clock: no sleeps, the whole arrival schedule is a virtual jump.
+            let clock = if args.bool("sim-clock") {
+                road::util::clock::Clock::manual()
+            } else {
+                road::util::clock::Clock::wall()
+            };
+            // The study drives the threaded server, which owns its own runtime.
             let pts = bench::streaming_study(
                 road::Manifest::default_dir(),
                 "serve",
@@ -448,13 +468,36 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
                 tokens,
                 cancel_after.max(1),
                 seed,
+                clock,
             )?;
             bench::render_streaming_points(
                 "Open-loop streaming: observed TTFT and cancellation reclaim",
                 &pts,
             )
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream)"),
+        "sched" => {
+            let n_requests = args.usize_or("requests", 160);
+            let distinct = args.usize_or("adapters", 12);
+            // Scheduling contrast wants saturation, not long generations;
+            // default shorter than the throughput studies.
+            let new_tokens = if args.get("tokens").is_some() { tokens } else { 32 };
+            let pts = if args.bool("sim-clock") {
+                // Deterministic harness on the virtual clock: no
+                // artifacts, no sleeps, byte-identical output across runs.
+                bench::sched_study_sim(n_requests, distinct, new_tokens, seed)
+            } else {
+                bench::sched_study_engine(&runtime()?, n_requests, distinct, new_tokens, seed)?
+            };
+            let mut md = bench::render_sched_points(
+                "Admission scheduling: fcfs vs edf vs priority vs fair-share",
+                &pts,
+            );
+            md.push_str("\n```json\n");
+            md.push_str(&bench::sched_points_json(&pts).to_string_pretty());
+            md.push_str("\n```\n");
+            md
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

@@ -2,6 +2,7 @@
 //! crates beyond the xla closure; see DESIGN.md §Substitutions).
 
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,262 @@
+//! Per-policy scheduler invariant suite on the deterministic harness
+//! ([`road::coordinator::sched::SchedSim`]): EDF ordering, priority
+//! preemption of the queue, fair-share no-starvation, FCFS equivalence
+//! with the pre-policy FIFO pop, determinism, and exact-virtual-time
+//! deadline shedding.
+//!
+//! Everything here runs on the manual clock with zero sleeps and needs
+//! no AOT artifacts — this suite is CI's "no hidden sleeps" canary (it
+//! runs under a hard 30-second budget).
+
+use std::time::Duration;
+
+use road::coordinator::queue::AdmissionQueue;
+use road::coordinator::request::Request;
+use road::coordinator::sched::{PolicyKind, SchedSim, SimOutcome};
+use road::util::rng::Rng;
+
+fn sim(kind: PolicyKind, slots: usize) -> SchedSim {
+    SchedSim::new(kind, slots, 256, Duration::from_millis(5))
+}
+
+fn req(plen: usize, new_tokens: usize) -> Request {
+    Request::new(vec![1; plen], new_tokens)
+}
+
+/// Ids in the order they reached a decode lane.  Uses the harness's
+/// global admission ordinal, which is unambiguous even when several
+/// lanes share one virtual `admitted_at` instant.
+fn admission_order(sim: &SchedSim) -> Vec<u64> {
+    let mut admitted: Vec<_> = sim
+        .records()
+        .iter()
+        .filter_map(|r| r.admitted_seq.map(|s| (s, r.id)))
+        .collect();
+    admitted.sort_by_key(|&(s, _)| s);
+    admitted.into_iter().map(|(_, id)| id).collect()
+}
+
+#[test]
+fn edf_admits_tightest_deadline_first() {
+    let mut sim = sim(PolicyKind::Edf, 1);
+    // Occupy the single lane so the contenders genuinely queue.
+    let busy = sim.submit(req(4, 3)).unwrap();
+    sim.step();
+    // FIFO arrival order: loose, none, tight — EDF must invert it.
+    let loose = sim.submit(req(4, 1).with_deadline(Duration::from_secs(5))).unwrap();
+    let none = sim.submit(req(4, 1)).unwrap();
+    let tight = sim.submit(req(4, 1).with_deadline(Duration::from_millis(500))).unwrap();
+    sim.run_until_idle(64);
+    assert_eq!(admission_order(&sim), vec![busy, tight, loose, none]);
+    assert!(sim.records().iter().all(|r| r.outcome == SimOutcome::Finished));
+}
+
+#[test]
+fn priority_tiers_preempt_queue_order() {
+    let mut sim = sim(PolicyKind::Priority, 1);
+    let busy = sim.submit(req(4, 2)).unwrap();
+    sim.step();
+    let low_first = sim.submit(req(4, 1)).unwrap();
+    let high_later = sim.submit(req(4, 1).with_priority(7)).unwrap();
+    let mid = sim.submit(req(4, 1).with_priority(3)).unwrap();
+    let high_last = sim.submit(req(4, 1).with_priority(7)).unwrap();
+    sim.run_until_idle(64);
+    assert_eq!(
+        admission_order(&sim),
+        vec![busy, high_later, high_last, mid, low_first],
+        "tiers descend; FIFO within the tied tier; tier 0 goes last"
+    );
+}
+
+#[test]
+fn fair_share_keeps_a_cold_adapter_from_starving() {
+    // 16 hot-adapter requests queued ahead of 2 cold ones, 2 lanes.
+    let run = |kind: PolicyKind| {
+        let mut s = sim(kind, 2);
+        let mut hot_ids = Vec::new();
+        for _ in 0..16 {
+            hot_ids.push(s.submit(req(4, 4).with_adapter("hot")).unwrap());
+        }
+        let cold: Vec<u64> =
+            (0..2).map(|_| s.submit(req(4, 4).with_adapter("cold")).unwrap()).collect();
+        s.run_until_idle(512);
+        (s, cold)
+    };
+
+    let (fair, cold_ids) = run(PolicyKind::FairShare);
+    let (fcfs, _) = run(PolicyKind::Fcfs);
+    let cold_wait = |s: &SchedSim| {
+        s.records()
+            .iter()
+            .filter(|r| r.adapter.as_deref() == Some("cold"))
+            .map(|r| r.queue_wait().expect("cold requests are admitted"))
+            .max()
+            .expect("cold requests recorded")
+    };
+    let (fair_wait, fcfs_wait) = (cold_wait(&fair), cold_wait(&fcfs));
+    assert!(
+        fair_wait < fcfs_wait,
+        "fair-share must bound the cold adapter's wait: fair {fair_wait:?} vs fcfs {fcfs_wait:?}"
+    );
+    // Stronger: under fair-share the cold requests are among the first
+    // four admissions after the opening pair — the hot flood cannot push
+    // them to the back.
+    let order = admission_order(&fair);
+    for id in &cold_ids {
+        let pos = order.iter().position(|x| x == id).unwrap();
+        assert!(pos < 4, "cold request {id} admitted at position {pos} under fair-share");
+    }
+}
+
+/// The FCFS policy must reproduce the pre-policy FIFO admission byte for
+/// byte: `pop_scheduled` with the identity ranking selects exactly what
+/// the old FIFO-scan `pop_admissible` algorithm selected, and leaves the
+/// queue in the same residual order.
+#[test]
+fn fcfs_selection_matches_pre_policy_fifo_pop() {
+    // The pre-policy algorithm, reimplemented literally as the reference.
+    fn reference_pop(
+        q: &mut Vec<Request>,
+        n: usize,
+        max_len: usize,
+        admit: &mut impl FnMut(&Request) -> bool,
+    ) -> Vec<Request> {
+        let mut taken = Vec::new();
+        let mut keep = Vec::new();
+        for r in q.drain(..) {
+            if taken.len() < n && r.prompt.len() <= max_len && admit(&r) {
+                taken.push(r);
+            } else {
+                keep.push(r);
+            }
+        }
+        *q = keep;
+        taken
+    }
+
+    let mut rng = Rng::seed_from(42);
+    for _case in 0..100 {
+        let n_items = rng.below(24);
+        let mut queue = AdmissionQueue::new(256);
+        let mut reference: Vec<Request> = Vec::new();
+        for i in 0..n_items {
+            let mut r = req(1 + rng.below(20), 4);
+            r.id = i as u64 + 1;
+            reference.push(r.clone());
+            queue.push(r).unwrap();
+        }
+        let n = rng.below(8);
+        let max_len = 1 + rng.below(20);
+        let modulus = 2 + rng.below(4) as u64;
+        let admit = |r: &Request| r.id % modulus != 0;
+
+        let order: Vec<usize> = (0..queue.len()).collect(); // the FCFS ranking
+        let got: Vec<u64> =
+            queue.pop_scheduled(&order, n, max_len, admit).iter().map(|r| r.id).collect();
+        let mut admit_again = admit; // captures are Copy
+        let want: Vec<u64> = reference_pop(&mut reference, n, max_len, &mut admit_again)
+            .iter()
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(got, want, "selection diverged (n={n}, max_len={max_len})");
+        let rest_got: Vec<u64> = std::iter::from_fn(|| queue.pop()).map(|r| r.id).collect();
+        let rest_want: Vec<u64> = reference.iter().map(|r| r.id).collect();
+        assert_eq!(rest_got, rest_want, "residual queue diverged");
+    }
+}
+
+/// Deadline sheds happen exactly when the virtual clock says so — never
+/// early, never at exactly the budget (the spec is strictly past it),
+/// and always once the budget is exceeded and a step runs.
+#[test]
+fn deadline_shed_is_exact_on_the_virtual_clock() {
+    for kind in PolicyKind::ALL {
+        let mut sim = sim(kind, 1);
+        // Occupy the single lane first (4 tokens = 4 steps), THEN submit
+        // the doomed request, so no policy — EDF included — can admit it
+        // before its 10 ms budget runs out waiting.
+        let busy = sim.submit(req(4, 4)).unwrap();
+        sim.step(); // t=0: busy admitted, token 1. clock -> 5ms
+        let doomed = sim.submit(req(4, 1).with_deadline(Duration::from_millis(10))).unwrap();
+        sim.step(); // t=5ms: doomed elapsed 0.  busy token 2. clock -> 10ms
+        sim.step(); // t=10ms: elapsed 5 <= 10.  busy token 3. clock -> 15ms
+        assert!(
+            sim.records().iter().all(|r| r.id != doomed),
+            "[{kind:?}] shed before the budget elapsed"
+        );
+        sim.step(); // t=15ms: elapsed 10 > 10 is false — still not expired
+        assert!(
+            sim.records().iter().all(|r| r.id != doomed),
+            "[{kind:?}] shed at exactly the budget (spec: strictly past it)"
+        );
+        sim.step(); // t=20ms: elapsed 15 > 10 — shed now
+        let rec = sim
+            .records()
+            .iter()
+            .find(|r| r.id == doomed)
+            .unwrap_or_else(|| panic!("[{kind:?}] expired request not shed"));
+        assert_eq!(rec.outcome, SimOutcome::DeadlineShed);
+        assert_eq!(rec.e2e(), Duration::from_millis(15), "shed timestamp is exact");
+        assert!(rec.admitted_at.is_none(), "shed from the queue, never admitted");
+        sim.run_until_idle(64);
+        assert!(sim.records().iter().any(|r| r.id == busy && r.outcome == SimOutcome::Finished));
+    }
+}
+
+/// Two identical runs produce identical terminal records — the harness
+/// (and therefore every policy on it) is deterministic.
+#[test]
+fn identical_runs_produce_identical_records() {
+    let run = |kind: PolicyKind| {
+        let mut s = sim(kind, 3);
+        let mut rng = Rng::seed_from(1234);
+        for i in 0..40 {
+            let mut r = req(1 + rng.below(8), 1 + rng.below(6));
+            if i % 3 == 0 {
+                r = r.with_deadline(Duration::from_millis(20 + rng.below(60) as u64));
+            }
+            if i % 4 == 0 {
+                r = r.with_priority(rng.below(4) as u8);
+            }
+            if i % 2 == 0 {
+                r = r.with_adapter(&format!("a{}", rng.below(3)));
+            }
+            s.submit(r).unwrap();
+            if i % 5 == 0 {
+                s.step();
+            }
+        }
+        s.run_until_idle(2048);
+        // Project onto clock-base-independent values (Instants differ
+        // between runs; Durations do not).
+        s.records()
+            .iter()
+            .map(|r| (r.id, r.adapter.clone(), r.priority, r.outcome, r.queue_wait(), r.e2e()))
+            .collect::<Vec<_>>()
+    };
+    for kind in PolicyKind::ALL {
+        assert_eq!(run(kind), run(kind), "[{kind:?}] nondeterministic records");
+    }
+}
+
+/// The sched study itself is byte-reproducible: the acceptance criterion
+/// `road bench-serving --study sched --sim-clock` relies on this.
+#[test]
+fn sched_study_sim_is_byte_identical_across_runs() {
+    let render = || {
+        let pts = road::bench::sched_study_sim(48, 6, 8, 9);
+        assert_eq!(pts.len(), PolicyKind::ALL.len());
+        road::bench::sched_points_json(&pts).to_string_pretty()
+    };
+    let (a, b) = (render(), render());
+    assert_eq!(a, b, "sched study JSON must be byte-identical across runs");
+    // And it is real JSON naming every policy.
+    let parsed = road::util::json::Json::parse(&a).unwrap();
+    let arr = parsed.as_arr().unwrap();
+    let names: Vec<&str> =
+        arr.iter().map(|p| p.get("policy").unwrap().as_str().unwrap()).collect();
+    assert_eq!(names, vec!["fcfs", "edf", "priority", "fair"]);
+    for p in arr {
+        assert!(p.get("per_adapter").unwrap().as_arr().unwrap().len() > 1);
+    }
+}

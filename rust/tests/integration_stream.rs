@@ -1,7 +1,8 @@
 //! Streaming-lifecycle integration tests on the tiny config: event
 //! grammar, stream↔one-shot token identity, cancellation reclaim (slot +
-//! bank pin), deadline shedding (queued and in-flight), dropped-handle
-//! auto-cancel, and the NDJSON-over-TCP front door.
+//! bank pin), deadline shedding (queued and in-flight, driven by a manual
+//! clock — no sleeps), dropped-handle auto-cancel, and the
+//! NDJSON-over-TCP front door.
 //!
 //! Without artifacts (`make artifacts`) every test skips cleanly.
 
@@ -15,6 +16,7 @@ use road::coordinator::request::{FinishReason, Request, SamplingParams, StreamEv
 use road::coordinator::server::EngineServer;
 use road::require_artifacts;
 use road::runtime::Runtime;
+use road::util::clock::Clock;
 use road::util::rng::Rng;
 
 fn rt() -> Rc<Runtime> {
@@ -29,6 +31,12 @@ fn tiny_econf(mode: &str) -> EngineConfig {
         queue_capacity: 64,
         ..Default::default()
     }
+}
+
+/// Engine config on a shared manual clock: the test advances `clock` to
+/// drive deadline enforcement deterministically instead of sleeping.
+fn tiny_econf_clocked(mode: &str, clock: Clock) -> EngineConfig {
+    EngineConfig { clock, ..tiny_econf(mode) }
 }
 
 fn greedy(prompt: &[i32], max_new: usize) -> Request {
@@ -189,12 +197,15 @@ fn cancel_queued_request_before_admission() {
 }
 
 /// Deadline enforcement at admission: expired queued work is shed with a
-/// typed `DeadlineExceeded` before it ever occupies a decode slot.
+/// typed `DeadlineExceeded` before it ever occupies a decode slot.  The
+/// engine runs on a manual clock, so "waiting past the budget" is an
+/// exact virtual jump, not a sleep.
 #[test]
 fn expired_queued_requests_are_shed() {
     require_artifacts!();
     let rt = rt();
-    let mut eng = Engine::new(rt.clone(), tiny_econf("base")).unwrap();
+    let clock = Clock::manual();
+    let mut eng = Engine::new(rt.clone(), tiny_econf_clocked("base", clock.clone())).unwrap();
     // Two long-running requests occupy both slots…
     eng.submit(greedy(&[1, 2], 12)).unwrap();
     eng.submit(greedy(&[3, 4], 12)).unwrap();
@@ -204,7 +215,7 @@ fn expired_queued_requests_are_shed() {
     let doomed = eng
         .submit(greedy(&[5, 6], 4).with_deadline(Duration::from_millis(1)))
         .unwrap();
-    std::thread::sleep(Duration::from_millis(5));
+    clock.advance(Duration::from_millis(5));
     let events = eng.step().unwrap();
     assert!(
         events.iter().any(|e| matches!(
@@ -233,20 +244,22 @@ fn expired_queued_requests_are_shed() {
 fn expired_inflight_request_is_reaped() {
     require_artifacts!();
     let rt = rt();
-    let mut eng = Engine::new(rt.clone(), tiny_econf("base")).unwrap();
+    let clock = Clock::manual();
+    let mut eng = Engine::new(rt.clone(), tiny_econf_clocked("base", clock.clone())).unwrap();
     let id = eng
         .submit(greedy(&[1, 2, 3], 64).with_deadline(Duration::from_millis(25)))
         .unwrap();
-    // The first step starts well inside the budget, so the request is
-    // admitted; deadlines are only enforced between steps, so sleeping past
-    // the budget before the next step deterministically forces the reap.
+    // Virtual time stands still through the first step, so admission is
+    // trivially inside the budget; deadlines are only enforced between
+    // steps, so jumping the clock past the budget forces the reap on the
+    // next step — exactly, with no sleep and no timing slack.
     let events = eng.step().unwrap();
     assert!(
         events.iter().any(|e| matches!(e, StreamEvent::Admitted { .. })),
         "request admitted before its deadline: {events:?}"
     );
     assert_eq!(eng.n_active(), 1);
-    std::thread::sleep(Duration::from_millis(100));
+    clock.advance(Duration::from_millis(100));
     let events = eng.step().unwrap();
     assert!(
         events.iter().any(|e| matches!(
@@ -258,6 +271,40 @@ fn expired_inflight_request_is_reaped() {
     assert_eq!(eng.n_active(), 0, "reaped lane is freed");
     assert_eq!(eng.metrics.deadline_shed, 1);
     assert!(!eng.has_work());
+}
+
+/// Engine admission is policy-driven: with `policy = edf`, the tightest
+/// queued deadline admits first regardless of FIFO order.  Virtual time
+/// never advances here, so the deadlines order admission without any
+/// risk of actually expiring.
+#[test]
+fn engine_respects_edf_admission_order() {
+    require_artifacts!();
+    let rt = rt();
+    let clock = Clock::manual();
+    let mut econf = tiny_econf_clocked("base", clock.clone());
+    econf.policy = road::coordinator::sched::PolicyKind::Edf;
+    let mut eng = Engine::new(rt.clone(), econf).unwrap();
+    // Fill both lanes so the contenders genuinely queue.
+    eng.submit(greedy(&[1, 2], 2)).unwrap();
+    eng.submit(greedy(&[3, 4], 2)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.n_active(), 2);
+    // FIFO arrival order: loose deadline, no deadline, tight deadline.
+    let loose = eng.submit(greedy(&[1, 1], 1).with_deadline(Duration::from_secs(50))).unwrap();
+    let none = eng.submit(greedy(&[2, 2], 1)).unwrap();
+    let tight = eng.submit(greedy(&[3, 3], 1).with_deadline(Duration::from_secs(5))).unwrap();
+    let mut admitted = Vec::new();
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            if let StreamEvent::Admitted { id } = ev {
+                if id == loose || id == none || id == tight {
+                    admitted.push(id);
+                }
+            }
+        }
+    }
+    assert_eq!(admitted, vec![tight, loose, none], "EDF admission order, FIFO broken");
 }
 
 /// A dropped `Generation` handle is a hung-up client: the engine cancels
@@ -283,7 +330,8 @@ fn dropped_generation_cancels_and_does_not_leak() {
     }
     drop(generation);
 
-    // The cancel lands asynchronously; poll stats until it shows up.
+    // The cancel lands asynchronously; poll stats (yielding, not
+    // sleeping) until it shows up.
     let deadline = std::time::Instant::now() + Duration::from_secs(5);
     loop {
         let stats = client.stats().unwrap();
@@ -295,7 +343,7 @@ fn dropped_generation_cancels_and_does_not_leak() {
             "engine never recorded the drop-cancel: {}",
             stats.report()
         );
-        std::thread::sleep(Duration::from_millis(5));
+        std::thread::yield_now();
     }
     // Engine is healthy and the lane is reusable.
     let out = client.generate(greedy(&[1, 2], 4)).unwrap();

@@ -1,12 +1,19 @@
 //! Hand-rolled property tests (the offline image carries no proptest
 //! crate): randomized invariants over the coordinator's state machines and
 //! the RoAd math, each run across many seeded cases.
+//!
+//! The scheduler properties (`prop_sched_*`) honor `ROAD_PROPTEST_SEED`
+//! so CI pins them to a fixed seed; a failure there reproduces
+//! byte-for-byte with the same value.
+
+use std::time::Duration;
 
 use road::adapters::{Adapter, AdapterBank, AdapterRegistry, PageOutcome, RoadAdapter, RoadVectors};
 use road::coordinator::kv::SlotAllocator;
-use road::coordinator::queue::AdmissionQueue;
+use road::coordinator::queue::{AdmissionQueue, EngineError};
 use road::coordinator::request::Request;
 use road::coordinator::sampler;
+use road::coordinator::sched::{PolicyKind, SchedSim, SimOutcome};
 use road::manifest::ModelConfigInfo;
 use road::model::{road_merge_weight, road_rotate_vec};
 use road::tasks::{lm_batch, Example};
@@ -15,6 +22,15 @@ use road::trainer::linear_lr;
 use road::util::rng::Rng;
 
 const CASES: usize = 200;
+
+/// Seed for the scheduler property tests: `ROAD_PROPTEST_SEED` when set
+/// (CI pins it), a fixed default otherwise — never wall-clock-derived.
+fn prop_seed() -> u64 {
+    std::env::var("ROAD_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x0A0D_5EED)
+}
 
 fn tiny_cfg() -> ModelConfigInfo {
     ModelConfigInfo {
@@ -305,6 +321,144 @@ fn prop_registry_paging_invariants() {
                 let s = reg.slot_of(n).expect("pinned adapter lost residency");
                 assert!(reg.is_pinned(s));
             }
+        }
+    }
+}
+
+#[test]
+fn prop_sched_conservation_under_random_ops() {
+    // Random submit / cancel / clock-advance / step interleavings on the
+    // deterministic harness, for every policy.  Invariants:
+    //  * conservation: every submitted request is, at all times, exactly
+    //    one of {terminal record, queued, in a lane} — and at the end,
+    //    exactly one of finished / cancelled / shed,
+    //  * capacity: the queue never exceeds its bound and active lanes
+    //    never exceed the slot count,
+    //  * sheds only happen to deadline-bearing requests, strictly after
+    //    their budget elapsed on the virtual clock.
+    let mut rng = Rng::seed_from(prop_seed() ^ 0x5c4ed);
+    for kind in PolicyKind::ALL {
+        for _case in 0..25 {
+            let slots = 1 + rng.below(4);
+            let cap = 4 + rng.below(12);
+            let step_cost = Duration::from_millis(1 + rng.below(9) as u64);
+            let mut sim = SchedSim::new(kind, slots, cap, step_cost);
+            let mut submitted = 0usize;
+            let mut cancelled = 0usize;
+            let mut ids: Vec<u64> = Vec::new();
+            for _op in 0..120 {
+                match rng.below(10) {
+                    0..=5 => {
+                        let mut r = Request::new(vec![1; 1 + rng.below(8)], 1 + rng.below(6));
+                        if rng.chance(0.4) {
+                            r = r.with_deadline(Duration::from_millis(rng.below(40) as u64));
+                        }
+                        if rng.chance(0.3) {
+                            r = r.with_priority(rng.below(4) as u8);
+                        }
+                        if rng.chance(0.5) {
+                            r = r.with_adapter(&format!("a{}", rng.below(3)));
+                        }
+                        match sim.submit(r) {
+                            Ok(id) => {
+                                submitted += 1;
+                                ids.push(id);
+                            }
+                            Err(EngineError::QueueFull { .. }) => {} // typed backpressure
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                    }
+                    6 => {
+                        // Cancel a random known id; no-op (false) when it
+                        // already reached a terminal record.
+                        if !ids.is_empty() {
+                            let id = ids[rng.below(ids.len())];
+                            if sim.cancel(id) {
+                                cancelled += 1;
+                            }
+                        }
+                    }
+                    7 => sim.clock.advance(Duration::from_millis(rng.below(20) as u64)),
+                    _ => sim.step(),
+                }
+                assert!(sim.queue.len() <= cap, "queue exceeded its capacity bound");
+                assert!(sim.n_active() <= slots, "more active lanes than decode slots");
+                assert_eq!(
+                    submitted,
+                    sim.records().len() + sim.queue.len() + sim.n_active(),
+                    "a request leaked or duplicated mid-run"
+                );
+            }
+            sim.run_until_idle(4096);
+            assert!(!sim.has_work(), "drain did not converge");
+            assert_eq!(sim.records().len(), submitted, "terminal records != submissions");
+            let mut seen = std::collections::BTreeSet::new();
+            for r in sim.records() {
+                assert!(seen.insert(r.id), "duplicate terminal record for id {}", r.id);
+                if r.outcome == SimOutcome::DeadlineShed {
+                    let dl = r.deadline.expect("only deadline-bearing requests can be shed");
+                    assert!(
+                        r.finished_at.duration_since(r.submitted_at) > dl,
+                        "shed at {:?} within a {:?} budget (virtual clock)",
+                        r.e2e(),
+                        dl
+                    );
+                }
+            }
+            assert_eq!(
+                sim.records().iter().filter(|r| r.outcome == SimOutcome::Cancelled).count(),
+                cancelled,
+                "cancellation count drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sched_rankings_are_permutations() {
+    // Every policy's ranking is a permutation of the queue indices —
+    // no request can be dropped or double-admitted by ordering alone.
+    use road::coordinator::sched::{make_policy, SchedContext};
+    use std::collections::BTreeMap;
+    let mut rng = Rng::seed_from(prop_seed() ^ 0x9e4a);
+    for kind in PolicyKind::ALL {
+        for _case in 0..50 {
+            let n = rng.below(20);
+            let mut q = AdmissionQueue::new(64);
+            for i in 0..n {
+                let mut r = Request::new(vec![1; 1 + rng.below(6)], 2);
+                r.id = i as u64 + 1;
+                r.submitted_at = Some(std::time::Instant::now());
+                if rng.chance(0.5) {
+                    r.deadline = Some(Duration::from_millis(rng.below(100) as u64));
+                }
+                r.priority = rng.below(5) as u8;
+                if rng.chance(0.5) {
+                    r = r.with_adapter(&format!("a{}", rng.below(4)));
+                }
+                q.push(r).unwrap();
+            }
+            let mut in_flight: BTreeMap<String, usize> = BTreeMap::new();
+            let mut admitted: BTreeMap<String, usize> = BTreeMap::new();
+            for k in 0..4 {
+                if rng.chance(0.5) {
+                    in_flight.insert(format!("a{k}"), rng.below(3));
+                    admitted.insert(format!("a{k}"), rng.below(50));
+                }
+            }
+            let ctx = SchedContext {
+                now: std::time::Instant::now(),
+                in_flight: &in_flight,
+                admitted: &admitted,
+            };
+            let order = make_policy(kind).order(&q, &ctx);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(
+                sorted,
+                (0..n).collect::<Vec<_>>(),
+                "[{kind:?}] ranking is not a permutation: {order:?}"
+            );
         }
     }
 }
