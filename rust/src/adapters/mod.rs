@@ -1138,6 +1138,149 @@ mod tests {
         assert!(!bank.is_dirty());
     }
 
+    /// Eq. 2 with alpha = 1 is a pure rotation: every 2-element block of
+    /// the rotated vector keeps its Euclidean norm exactly (the property
+    /// the paper's "angle-only adaptation" pilot rests on).  Variants 2/4
+    /// reduce to variant 1 when their cells share (theta, alpha), so the
+    /// preservation carries over.
+    #[test]
+    fn from_theta_alpha_preserves_block_norms_when_alpha_is_one() {
+        let mut rng = Rng::seed_from(13);
+        let d = 16usize;
+        let theta: Vec<f32> = (0..d / 2).map(|_| rng.normal() * 2.0).collect();
+        let v = RoadVectors::from_theta_alpha(1, &theta, &vec![1.0; d / 2]).unwrap();
+        let h: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let z = crate::model::road_rotate_vec(&h, &v.r1, &v.r2);
+        for k in 0..d / 2 {
+            let (e, o) = (2 * k, 2 * k + 1);
+            let nh = (h[e] * h[e] + h[o] * h[o]).sqrt();
+            let nz = (z[e] * z[e] + z[o] * z[o]).sqrt();
+            assert!((nh - nz).abs() < 1e-5, "block {k}: |h|={nh} vs |Rh|={nz}");
+        }
+        // alpha != 1 scales the block norm by alpha (variant 1 shares one
+        // alpha per block): the magnitude/angle decomposition of Eq. 3.
+        let va = RoadVectors::from_theta_alpha(1, &theta, &vec![2.0; d / 2]).unwrap();
+        let za = crate::model::road_rotate_vec(&h, &va.r1, &va.r2);
+        for k in 0..d / 2 {
+            let (e, o) = (2 * k, 2 * k + 1);
+            let nh = (h[e] * h[e] + h[o] * h[o]).sqrt();
+            let nz = (za[e] * za[e] + za[o] * za[o]).sqrt();
+            assert!((2.0 * nh - nz).abs() < 1e-4, "block {k}: 2|h|={} vs {nz}", 2.0 * nh);
+        }
+    }
+
+    #[test]
+    fn variant4_matches_variant1_when_cells_shared() {
+        let theta = [0.4f32, -0.7];
+        let alpha = [1.2f32, 0.8];
+        let v1 = RoadVectors::from_theta_alpha(1, &theta, &alpha).unwrap();
+        let mut t4 = Vec::new();
+        let mut a4 = Vec::new();
+        for k in 0..2 {
+            t4.extend_from_slice(&[theta[k]; 4]);
+            a4.extend_from_slice(&[alpha[k]; 4]);
+        }
+        let v4 = RoadVectors::from_theta_alpha(4, &t4, &a4).unwrap();
+        for i in 0..4 {
+            assert!((v1.r1[i] - v4.r1[i]).abs() < 1e-6);
+            assert!((v1.r2[i] - v4.r2[i]).abs() < 1e-6);
+        }
+        // Length/variant mismatches are rejected, not mis-read.
+        assert!(RoadVectors::from_theta_alpha(4, &t4[..7], &a4[..7]).is_err());
+        assert!(RoadVectors::from_theta_alpha(3, &theta, &alpha).is_err());
+        assert!(RoadVectors::from_theta_alpha(2, &theta, &alpha[..1]).is_err());
+    }
+
+    /// Block-count edge cases of the composition boundary: a single-block
+    /// projection (d = 2) has only "all of a" or "all of b"; tiny
+    /// fractions round to the nearest block rather than truncating.
+    #[test]
+    fn subspace_split_single_block_and_rounding_edges() {
+        // d = 2: one block. Ties round down, so 0.5 lands on 0 (all b);
+        // anything past half a block rounds up to the whole block.
+        assert_eq!(subspace_split(2, 0.0), 0);
+        assert_eq!(subspace_split(2, 0.5), 0);
+        assert_eq!(subspace_split(2, 0.51), 2);
+        assert_eq!(subspace_split(2, 1.0), 2);
+        // d = 4: two blocks; 0.25 is the tie at half a block.
+        assert_eq!(subspace_split(4, 0.25), 0);
+        assert_eq!(subspace_split(4, 0.26), 2);
+        assert_eq!(subspace_split(4, 0.75), 2);
+        assert_eq!(subspace_split(4, 0.76), 4);
+        // Degenerate d = 0 never panics.
+        assert_eq!(subspace_split(0, 0.5), 0);
+        // Non-finite fractions are rejected by compose, and the split
+        // helper clamps infinities instead of overflowing.
+        assert_eq!(subspace_split(8, f32::INFINITY), 8);
+        assert_eq!(subspace_split(8, f32::NEG_INFINITY), 0);
+    }
+
+    #[test]
+    fn compose_rejects_mismatched_adapters_and_nan() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from(17);
+        let a = RoadAdapter::random(&cfg, &mut rng, 0.3);
+        let b = RoadAdapter::random(&cfg, &mut rng, 0.3);
+        assert!(RoadAdapter::compose(&a, &b, f32::NAN).is_err());
+        // A second adapter missing a projection is rejected.
+        let mut partial = b.clone();
+        partial.per_proj.remove("blocks.0.wq");
+        assert!(RoadAdapter::compose(&a, &partial, 0.5).is_err());
+        // Dimension mismatches are rejected.
+        let mut wrong = b.clone();
+        wrong.per_proj.insert("blocks.0.wq".into(), RoadVectors::identity(4));
+        assert!(RoadAdapter::compose(&a, &wrong, 0.5).is_err());
+    }
+
+    /// The identity adapter is a numeric no-op through the *reference
+    /// forward pass*: installing `RoadAdapter::identity` into a bank slot
+    /// and decoding with it yields the base entry's logits (full
+    /// embedding → attention → MLP stack, not just the epilogue math).
+    #[test]
+    fn identity_adapter_is_noop_through_reference_forward() {
+        let rt = crate::runtime::Runtime::reference();
+        let cfg = rt.manifest.config("tiny").unwrap().clone();
+        let store = crate::model::ParamStore::load_pretrained(&rt.manifest, "tiny").unwrap();
+        // Bank with the identity adapter installed in slot 1 (slot 0 is
+        // the reserved identity page — exercising set_slot is the point).
+        let mut bank = AdapterBank::new(&cfg, "road", cfg.n_adapters).unwrap();
+        bank.set_slot(1, &Adapter::Road(RoadAdapter::identity(&cfg))).unwrap();
+
+        let cache = vec![cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        let n: usize = cache.iter().product();
+        let mut rng = Rng::seed_from(23);
+        let data: BTreeMap<&str, HostTensor> = BTreeMap::from([
+            ("ids", HostTensor::i32(vec![2], vec![1, 1])),
+            ("token", HostTensor::i32(vec![2], vec![9, 77])),
+            ("pos", HostTensor::i32(vec![2], vec![3, 5])),
+            ("k_cache", HostTensor::f32(cache.clone(), rng.normal_vec(n, 0.02))),
+            ("v_cache", HostTensor::f32(cache, rng.normal_vec(n, 0.02))),
+        ]);
+        let gather = |entry: &str, bank: Option<&AdapterBank>| -> Vec<HostTensor> {
+            rt.manifest
+                .entry(entry)
+                .unwrap()
+                .inputs
+                .iter()
+                .map(|s| match s.group.as_str() {
+                    "params" => store.get(&s.name).unwrap().clone(),
+                    "adapters" => bank.unwrap().tensors[&s.name].clone(),
+                    _ => data[s.name.as_str()].clone(),
+                })
+                .collect()
+        };
+        let road_ins = gather("decode_road_tiny_b2", Some(&bank));
+        let base_ins = gather("decode_base_tiny_b2", None);
+        let road_refs: Vec<&HostTensor> = road_ins.iter().collect();
+        let base_refs: Vec<&HostTensor> = base_ins.iter().collect();
+        let road_out =
+            rt.load("decode_road_tiny_b2").unwrap().run_host(&road_refs).unwrap();
+        let base_out =
+            rt.load("decode_base_tiny_b2").unwrap().run_host(&base_refs).unwrap();
+        crate::runtime::allclose(&road_out[0], &base_out[0], 0.0, 1e-6)
+            .expect("identity adapter changed the forward pass");
+    }
+
     #[test]
     fn mode_mismatch_rejected() {
         let cfg = tiny_cfg();

@@ -316,6 +316,7 @@ pub struct StreamingPoint {
 /// so their scheduling cannot reorder submissions.  Client-observed
 /// latencies still carry thread-timing noise; the byte-reproducible
 /// study is `sched_study_sim`.
+#[allow(clippy::too_many_arguments)]
 pub fn streaming_study(
     artifacts_dir: std::path::PathBuf,
     model: &str,
@@ -324,6 +325,7 @@ pub fn streaming_study(
     cancel_after: usize,
     seed: u64,
     clock: Clock,
+    backend: crate::runtime::BackendKind,
 ) -> Result<Vec<StreamingPoint>> {
     use crate::coordinator::server::EngineServer;
 
@@ -339,6 +341,7 @@ pub fn streaming_study(
             decode_slots: 8,
             queue_capacity: 4096,
             clock: clock.clone(),
+            backend,
             ..Default::default()
         };
         let (server, client) = EngineServer::start(econf, artifacts_dir.clone(), move |eng| {

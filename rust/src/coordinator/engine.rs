@@ -43,7 +43,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::adapters::{Adapter, AdapterBank, AdapterRegistry, PageOutcome};
 use crate::manifest::{EntryInfo, ModelConfigInfo};
 use crate::model::ParamStore;
-use crate::runtime::{buffer_to_host, Arg, Executable, Runtime};
+use crate::runtime::{buffer_to_host, Arg, BackendKind, Executable, Runtime};
 use crate::tensor::{DType, HostTensor};
 use crate::util::clock::Clock;
 
@@ -89,6 +89,12 @@ pub struct EngineConfig {
     /// [`Clock::wall`] in production; [`Clock::manual`] makes the whole
     /// temporal surface deterministic for tests and the sched study.
     pub clock: Clock,
+    /// Which runtime backend serves this engine (`road serve --backend`):
+    /// compiled PJRT artifacts, or the artifact-free pure-Rust reference
+    /// model ([`crate::runtime::reference`]).  Consulted by whoever
+    /// constructs the [`Runtime`] ([`super::server::EngineServer`],
+    /// `main.rs`); the engine itself is backend-agnostic.
+    pub backend: BackendKind,
 }
 
 impl Default for EngineConfig {
@@ -103,6 +109,7 @@ impl Default for EngineConfig {
             paged_bank_uploads: true,
             policy: PolicyKind::Fcfs,
             clock: Clock::Wall,
+            backend: BackendKind::Pjrt,
         }
     }
 }

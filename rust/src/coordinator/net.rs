@@ -371,6 +371,93 @@ mod tests {
         assert!(parse_line(r#"{"op":"cancel"}"#).is_err(), "cancel needs an id");
     }
 
+    /// Wire-level robustness over a real loopback connection (reference
+    /// backend, no artifacts): malformed JSON, an unknown op, a missing
+    /// prompt, an out-of-range priority, and an oversized prompt each
+    /// yield a typed `invalid` error event — no panic, no disconnect —
+    /// and the same connection then serves a valid request to completion.
+    #[test]
+    fn bad_lines_yield_typed_invalid_and_connection_survives() {
+        use crate::coordinator::engine::EngineConfig;
+        use crate::coordinator::server::EngineServer;
+        use std::net::TcpListener;
+
+        let econf = EngineConfig {
+            model: "tiny".into(),
+            mode: "base".into(),
+            decode_slots: 2,
+            queue_capacity: 16,
+            backend: crate::runtime::BackendKind::Reference,
+            ..Default::default()
+        };
+        let (server, client) =
+            EngineServer::start(econf, crate::manifest::Manifest::default_dir(), |_| Ok(()))
+                .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = serve(listener, client);
+        });
+
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut round_trip = |line: &str| -> Json {
+            conn.write_all(line.as_bytes()).unwrap();
+            conn.write_all(b"\n").unwrap();
+            let mut out = String::new();
+            assert!(reader.read_line(&mut out).unwrap() > 0, "connection closed after {line:?}");
+            Json::parse(out.trim()).unwrap()
+        };
+
+        // The tiny model's largest prefill bucket is 16 tokens; 99 zeros
+        // overflow it — rejected by the engine, not the parser.
+        let oversized = format!(
+            "{{\"op\":\"generate\",\"prompt\":[{}]}}",
+            vec!["1"; 99].join(",")
+        );
+        let bad_lines = [
+            "this is not json",
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"generate"}"#,
+            r#"{"op":"generate","text":"x","priority":999}"#,
+            oversized.as_str(),
+        ];
+        for line in bad_lines {
+            let ev = round_trip(line);
+            assert_eq!(
+                ev.get("event").unwrap().as_str().unwrap(),
+                "error",
+                "expected error event for {line:?}"
+            );
+            assert_eq!(
+                ev.get("error").unwrap().as_str().unwrap(),
+                EngineError::Invalid { reason: String::new() }.kind(),
+                "stable `invalid` kind for {line:?}"
+            );
+        }
+
+        // The connection is still usable: a valid request streams to a
+        // finished event.
+        conn.write_all(b"{\"op\":\"generate\",\"prompt\":[3,4,5],\"max_new_tokens\":2}\n")
+            .unwrap();
+        let mut kinds = Vec::new();
+        loop {
+            let mut out = String::new();
+            assert!(reader.read_line(&mut out).unwrap() > 0, "closed mid-stream");
+            let ev = Json::parse(out.trim()).unwrap();
+            let kind = ev.get("event").unwrap().as_str().unwrap().to_string();
+            assert_ne!(kind, "error", "valid request errored: {out}");
+            kinds.push(kind.clone());
+            if kind == "finished" {
+                assert_eq!(ev.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+                break;
+            }
+        }
+        assert_eq!(kinds.first().map(String::as_str), Some("admitted"));
+        assert_eq!(kinds.iter().filter(|k| *k == "token").count(), 2);
+        server.shutdown().unwrap();
+    }
+
     #[test]
     fn event_lines_are_single_line_json_with_tag_echo() {
         let tag = json::num(42.0);

@@ -242,8 +242,13 @@ fn engine_thread(
     setup: impl FnOnce(&mut Engine) -> Result<()>,
 ) -> Result<()> {
     let init = (|| -> Result<Engine> {
-        let manifest = crate::manifest::Manifest::load(&artifacts_dir)?;
-        let rt = std::rc::Rc::new(crate::runtime::Runtime::new(manifest)?);
+        // Backend selection (EngineConfig::backend): the reference backend
+        // is artifact-free and ignores `artifacts_dir`; PJRT loads the
+        // manifest from it.
+        let rt = std::rc::Rc::new(crate::runtime::Runtime::for_backend(
+            econf.backend,
+            &artifacts_dir,
+        )?);
         let mut engine = Engine::new(rt, econf)?;
         setup(&mut engine)?;
         Ok(engine)

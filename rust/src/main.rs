@@ -7,7 +7,7 @@
 //!                  [--distinct 8] [--tokens 64] [--host-roundtrip-kv=true]
 //!                  [--bank-slots N] [--whole-bank-uploads=true] [--stats=true]
 //!                  [--queue-capacity 4096] [--policy fcfs|edf|priority|fair]
-//!                  [--listen 127.0.0.1:7433]
+//!                  [--backend pjrt|ref] [--listen 127.0.0.1:7433]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
 //!                  [--steps 200] [--seed 0]
 //! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
@@ -71,6 +71,20 @@ fn runtime() -> Result<Rc<Runtime>> {
     )?))
 }
 
+/// Runtime for a serving command: `--backend ref` gets the artifact-free
+/// pure-Rust reference model, `pjrt` (the default) the compiled artifacts.
+fn runtime_for(backend: road::runtime::BackendKind) -> Result<Rc<Runtime>> {
+    Ok(Rc::new(
+        Runtime::for_backend(backend, road::Manifest::default_dir()).context(
+            "loading artifacts (run `make artifacts` first, set ROAD_ARTIFACTS, or use --backend ref)",
+        )?,
+    ))
+}
+
+fn backend_flag(args: &Args) -> Result<road::runtime::BackendKind> {
+    road::runtime::BackendKind::from_name(&args.get_or("backend", "pjrt"))
+}
+
 fn save_result(name: &str, content: &str) -> Result<()> {
     std::fs::create_dir_all("results")?;
     let path = format!("results/{name}.md");
@@ -101,6 +115,9 @@ fn serve_config(args: &Args, mode: &str, slots: usize) -> Result<EngineConfig> {
         // --policy picks the admission scheduler: fcfs (default), edf,
         // priority, or fair (fair-share across adapters).
         policy: road::coordinator::sched::PolicyKind::from_name(&args.get_or("policy", "fcfs"))?,
+        // --backend ref serves the pure-Rust reference model (no
+        // artifacts); pjrt (default) serves the compiled HLO artifacts.
+        backend: backend_flag(args)?,
         ..Default::default()
     })
 }
@@ -119,7 +136,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let n_requests = args.usize_or("requests", 32);
     let tokens = args.usize_or("tokens", 64);
-    let rt = runtime()?;
+    let rt = runtime_for(econf.backend)?;
     let mut engine = Engine::new(rt, econf)?;
     if distinct > 0 {
         bench::register_adapters(&mut engine, distinct, 7)?;
@@ -413,24 +430,26 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 7) as u64;
     // The runtime (and its artifacts) is loaded per study: the sched
     // study's --sim-clock path runs on the deterministic harness and
-    // needs no artifacts at all.
+    // needs no artifacts at all.  `--backend ref` runs any study on the
+    // artifact-free reference model (slow but always available).
+    let backend = backend_flag(args)?;
     let md = match study.as_str() {
         "merge" => {
-            let pts = bench::fig4_left(&runtime()?, tokens, seed)?;
+            let pts = bench::fig4_left(&runtime_for(backend)?, tokens, seed)?;
             bench::render_points("Figure 4 (Left) analogue: merged vs unmerged", &pts)
         }
         "tokens" => {
             let counts: Vec<usize> = vec![16, 32, 64, 128];
-            let pts = bench::fig4_middle(&runtime()?, &counts, seed)?;
+            let pts = bench::fig4_middle(&runtime_for(backend)?, &counts, seed)?;
             bench::render_points("Figure 4 (Middle) analogue: throughput vs #generated tokens", &pts)
         }
         "hetero" => {
             let counts: Vec<usize> = vec![1, 2, 4, 8];
-            let pts = bench::fig4_right(&runtime()?, &counts, tokens, seed)?;
+            let pts = bench::fig4_right(&runtime_for(backend)?, &counts, tokens, seed)?;
             bench::render_points("Figure 4 (Right) analogue: throughput vs #distinct adapters", &pts)
         }
         "kv" => {
-            let pts = bench::kv_residency_comparison(&runtime()?, tokens, seed)?;
+            let pts = bench::kv_residency_comparison(&runtime_for(backend)?, tokens, seed)?;
             bench::render_points("KV residency: device-resident vs host-roundtrip decode", &pts)
         }
         "bank" => {
@@ -438,7 +457,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             let bank_slots = args.usize_or("bank-slots", 4);
             let n_requests = args.usize_or("requests", n_adapters * 2);
             let pts = bench::bank_churn_study(
-                &runtime()?,
+                &runtime_for(backend)?,
                 n_adapters,
                 bank_slots,
                 n_requests,
@@ -469,6 +488,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
                 cancel_after.max(1),
                 seed,
                 clock,
+                backend,
             )?;
             bench::render_streaming_points(
                 "Open-loop streaming: observed TTFT and cancellation reclaim",
@@ -486,7 +506,13 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
                 // artifacts, no sleeps, byte-identical output across runs.
                 bench::sched_study_sim(n_requests, distinct, new_tokens, seed)
             } else {
-                bench::sched_study_engine(&runtime()?, n_requests, distinct, new_tokens, seed)?
+                bench::sched_study_engine(
+                    &runtime_for(backend)?,
+                    n_requests,
+                    distinct,
+                    new_tokens,
+                    seed,
+                )?
             };
             let mut md = bench::render_sched_points(
                 "Admission scheduling: fcfs vs edf vs priority vs fair-share",

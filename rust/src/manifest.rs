@@ -97,6 +97,11 @@ pub struct Manifest {
     pub golden: BTreeMap<String, GoldenInfo>,
     pub serve_decode_batches: Vec<usize>,
     pub serve_prefill_buckets: Vec<(usize, usize)>,
+    /// True for the in-memory manifest the reference backend synthesizes
+    /// ([`crate::runtime::reference::synthetic_manifest`]): no files back
+    /// it, and parameters are generated deterministically instead of
+    /// loaded from `params_<cfg>.bin`.
+    pub synthetic: bool,
 }
 
 fn parse_iospec(j: &Json, default_group: &str) -> Result<IoSpec> {
@@ -221,6 +226,7 @@ impl Manifest {
             golden,
             serve_decode_batches,
             serve_prefill_buckets,
+            synthetic: false,
         })
     }
 

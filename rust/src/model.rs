@@ -38,10 +38,16 @@ impl ParamStore {
     /// Load the 'pretrained' parameters for `config` from params_<cfg>.bin.
     ///
     /// The (name, shape) specs are recovered from any manifest entry of this
-    /// config that declares a `params` (or `frozen`) input group.
+    /// config that declares a `params` (or `frozen`) input group.  On a
+    /// synthetic manifest (the artifact-free reference backend) the
+    /// parameters are generated deterministically instead of read from disk.
     pub fn load(manifest: &Manifest, config: &str) -> Result<ParamStore> {
         let cfg = manifest.config(config)?.clone();
         let specs = param_specs(manifest, config)?;
+        if manifest.synthetic {
+            let generated = crate::runtime::reference::synthetic_params(&cfg, &specs);
+            return Ok(ParamStore::from_tensors(cfg, generated));
+        }
         let file = manifest
             .params_files
             .get(config)
@@ -53,18 +59,21 @@ impl ParamStore {
 
     /// Load the backbone that finetuning starts from: the full-finetuned
     /// pretraining checkpoint `pretrained_<cfg>.bin` when present (written
-    /// by `road pretrain`), else the random-init `params_<cfg>.bin`.
+    /// by `road pretrain`), else the random-init `params_<cfg>.bin` (or the
+    /// deterministic synthetic init on a synthetic manifest).
     ///
     /// The paper's PEFT methods adapt a *pretrained* LLM; the pretraining
     /// stage is part of this reproduction's system (DESIGN.md §4).
     pub fn load_pretrained(manifest: &Manifest, config: &str) -> Result<ParamStore> {
-        let cand = manifest.artifact_path(&format!("pretrained_{config}.bin"));
-        if cand.exists() {
-            let cfg = manifest.config(config)?.clone();
-            let specs = param_specs(manifest, config)?;
-            let bytes = std::fs::read(&cand)?;
-            let loaded = load_flat_f32(&bytes, &specs)?;
-            return Ok(ParamStore::from_tensors(cfg, loaded));
+        if !manifest.synthetic {
+            let cand = manifest.artifact_path(&format!("pretrained_{config}.bin"));
+            if cand.exists() {
+                let cfg = manifest.config(config)?.clone();
+                let specs = param_specs(manifest, config)?;
+                let bytes = std::fs::read(&cand)?;
+                let loaded = load_flat_f32(&bytes, &specs)?;
+                return Ok(ParamStore::from_tensors(cfg, loaded));
+            }
         }
         ParamStore::load(manifest, config)
     }

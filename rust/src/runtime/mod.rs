@@ -35,6 +35,25 @@
 //! Ownership rule of thumb: whoever will pass the tensor to the *next* call
 //! keeps the buffer; anything only read by the host is downloaded
 //! immediately and the buffer dropped.
+//!
+//! # Backends
+//!
+//! [`Runtime`] is a backend abstraction ([`BackendKind`]):
+//!
+//! * [`BackendKind::Pjrt`] — the artifact path above: HLO text compiled
+//!   and executed through PJRT.  Requires `make artifacts` (and, to
+//!   actually execute, the native xla runtime instead of the vendored
+//!   host-memory stub).
+//! * [`BackendKind::Reference`] — [`reference`]: a pure-Rust,
+//!   deterministic forward pass that synthesizes the same serving entries
+//!   (names, signatures, `Arg` conventions) with **no artifacts at all**.
+//!   Executables read their inputs back off the (host-memory) buffers,
+//!   compute on host, and re-"upload" outputs, so the engine's
+//!   buffer-lifecycle logic runs unchanged.
+//!
+//! The engine, server, benches, and tests are backend-agnostic; selection
+//! happens at [`Runtime`] construction (`road serve --backend ref`,
+//! `EngineConfig::backend`).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -46,6 +65,52 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::manifest::{EntryInfo, Manifest};
 use crate::tensor::{DType, HostTensor};
 
+pub mod reference;
+
+/// Which execution backend a [`Runtime`] (and its [`Executable`]s) uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Compiled HLO artifacts through PJRT (the production path).
+    #[default]
+    Pjrt,
+    /// Pure-Rust reference model ([`reference`]): artifact-free, exact,
+    /// slow — the golden oracle and CI backend.
+    Reference,
+}
+
+impl BackendKind {
+    /// Parse a CLI/wire name ("pjrt" | "ref"/"reference").
+    pub fn from_name(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "ref" | "reference" => Ok(BackendKind::Reference),
+            other => bail!("unknown backend {other:?} (pjrt|ref)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "ref",
+        }
+    }
+
+    /// Environment-aware selection for test suites and tooling:
+    /// `ROAD_TEST_BACKEND` (ref|pjrt) wins; otherwise PJRT when artifacts
+    /// are built (the pre-backend behavior of the integration suites),
+    /// reference when they are not (so suites execute instead of
+    /// skipping).  The single source of truth for every suite's backend
+    /// choice — tests must not reimplement this.
+    pub fn auto() -> BackendKind {
+        match std::env::var("ROAD_TEST_BACKEND").as_deref() {
+            Ok("pjrt") => BackendKind::Pjrt,
+            Ok("ref") | Ok("reference") => BackendKind::Reference,
+            _ if Manifest::available() => BackendKind::Pjrt,
+            _ => BackendKind::Reference,
+        }
+    }
+}
+
 /// Input argument: either host data (uploaded per call) or a persistent
 /// device buffer (params/banks/loop-carried state — the decode hot path).
 pub enum Arg<'a> {
@@ -53,9 +118,15 @@ pub enum Arg<'a> {
     Buffer(&'a xla::PjRtBuffer),
 }
 
+/// Backend-specific execution state behind an [`Executable`].
+enum ExecImpl {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Reference(reference::RefEntry),
+}
+
 pub struct Executable {
     pub info: EntryInfo,
-    exe: xla::PjRtLoadedExecutable,
+    imp: ExecImpl,
     client: xla::PjRtClient,
     /// Cumulative execution statistics (perf accounting).
     pub calls: RefCell<usize>,
@@ -96,18 +167,91 @@ impl Executable {
         Ok(owned)
     }
 
+    /// Materialize every argument as a host tensor for the reference
+    /// backend: `Arg::Host` is validated against the signature, and
+    /// `Arg::Buffer` is read back off the (host-memory) buffer — the same
+    /// direction a real device download would move.
+    fn gather_host_args(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.info.inputs.len() {
+            bail!(
+                "entry {}: {} args provided, {} expected",
+                self.info.name,
+                args.len(),
+                self.info.inputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let spec = &self.info.inputs[i];
+            match a {
+                Arg::Host(t) => {
+                    if t.shape != spec.shape || t.dtype != spec.dtype {
+                        bail!(
+                            "entry {}: arg {} ({}/{}) shape/dtype mismatch: got {:?} want {:?}",
+                            self.info.name,
+                            i,
+                            spec.group,
+                            spec.name,
+                            (&t.shape, t.dtype),
+                            (&spec.shape, spec.dtype)
+                        );
+                    }
+                    out.push((*t).clone());
+                }
+                Arg::Buffer(b) => {
+                    let want: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    if b.dims() != want {
+                        bail!(
+                            "entry {}: arg {} ({}/{}) buffer dims {:?}, want {:?}",
+                            self.info.name,
+                            i,
+                            spec.group,
+                            spec.name,
+                            b.dims(),
+                            want
+                        );
+                    }
+                    out.push(buffer_to_host(b, spec.dtype)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_reference(&self, entry: &reference::RefEntry, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let ins = self.gather_host_args(args)?;
+        let t0 = Instant::now();
+        let outs = entry
+            .execute(&ins)
+            .with_context(|| format!("executing {} (reference backend)", self.info.name))?;
+        *self.calls.borrow_mut() += 1;
+        *self.total_exec.borrow_mut() += t0.elapsed();
+        if outs.len() != self.info.outputs.len() {
+            bail!(
+                "entry {}: {} outputs, manifest says {}",
+                self.info.name,
+                outs.len(),
+                self.info.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
     /// Execute with mixed host/device inputs; **all outputs come back to
     /// host**.  Use for prefill/training/eval entries whose outputs are
     /// consumed host-side.  The lowered computations have a tuple root
     /// (`return_tuple=True`), so PJRT returns a single tuple buffer which
     /// we decompose into one `HostTensor` per declared output.
     pub fn run(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let exe = match &self.imp {
+            ExecImpl::Pjrt(exe) => exe,
+            ExecImpl::Reference(entry) => return self.run_reference(entry, args),
+        };
         let owned = self.upload_host_args(args)?;
         let refs = positional(args, &owned);
 
         let t0 = Instant::now();
-        let result = self
-            .exe
+        let result = exe
             .execute_b(&refs)
             .with_context(|| format!("executing {}", self.info.name))?;
         let lit = result[0][0].to_literal_sync()?;
@@ -138,13 +282,22 @@ impl Executable {
     /// buffers back in as the next step's `Arg::Buffer` inputs and
     /// downloads only what the host actually reads (the logits, via
     /// [`buffer_to_host`]).
+    ///
+    /// On the reference backend, outputs are computed on host and uploaded
+    /// into fresh buffers — same ownership contract, host-memory payloads.
     pub fn run_device(&self, args: &[Arg]) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = match &self.imp {
+            ExecImpl::Pjrt(exe) => exe,
+            ExecImpl::Reference(entry) => {
+                let outs = self.run_reference(entry, args)?;
+                return outs.iter().map(|t| upload(&self.client, t)).collect();
+            }
+        };
         let owned = self.upload_host_args(args)?;
         let refs = positional(args, &owned);
 
         let t0 = Instant::now();
-        let outs = self
-            .exe
+        let outs = exe
             .execute_untupled(&refs)
             .with_context(|| format!("executing {} (device outputs)", self.info.name))?;
         *self.calls.borrow_mut() += 1;
@@ -221,6 +374,8 @@ fn literal_to_host(lit: &xla::Literal, dtype: DType) -> Result<HostTensor> {
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
+    /// Which backend [`Runtime::load`] materializes entries on.
+    pub backend: BackendKind,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
     /// Cumulative compile time (reported by `road stats`).
     pub total_compile: RefCell<std::time::Duration>,
@@ -228,10 +383,19 @@ pub struct Runtime {
 
 impl Runtime {
     pub fn new(manifest: Manifest) -> Result<Runtime> {
+        Runtime::with_backend(manifest, BackendKind::Pjrt)
+    }
+
+    /// Build a runtime over an explicit backend.  The PJRT backend needs
+    /// a manifest that points at real artifact files; the reference
+    /// backend accepts either a real manifest (serving the artifact's
+    /// weights — the cross-backend oracle) or the synthetic one.
+    pub fn with_backend(manifest: Manifest, backend: BackendKind) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(Runtime {
             client,
             manifest,
+            backend,
             cache: RefCell::new(HashMap::new()),
             total_compile: RefCell::new(Default::default()),
         })
@@ -241,27 +405,66 @@ impl Runtime {
         Runtime::new(Manifest::load(Manifest::default_dir())?)
     }
 
-    /// Load + compile an entry (cached).
+    /// The artifact-free reference runtime: synthetic manifest
+    /// ([`reference::synthetic_manifest`]), deterministic synthetic
+    /// parameters, pure-Rust execution.  Never touches the filesystem.
+    pub fn reference() -> Runtime {
+        Runtime::with_backend(reference::synthetic_manifest(), BackendKind::Reference)
+            .expect("reference runtime construction is infallible")
+    }
+
+    /// Reference execution over a *real* artifact manifest: entry
+    /// signatures and parameters come from the artifact set, the math runs
+    /// in Rust — the golden oracle for cross-backend identity tests.
+    pub fn reference_with(manifest: Manifest) -> Result<Runtime> {
+        Runtime::with_backend(manifest, BackendKind::Reference)
+    }
+
+    /// Construct the runtime for `kind`: the reference backend needs
+    /// nothing (and ignores `artifacts_dir`); PJRT loads the manifest
+    /// from it.  The one construction path shared by the engine server,
+    /// the CLI, and the test suites.
+    pub fn for_backend(
+        kind: BackendKind,
+        artifacts_dir: impl AsRef<std::path::Path>,
+    ) -> Result<Runtime> {
+        match kind {
+            BackendKind::Reference => Ok(Runtime::reference()),
+            BackendKind::Pjrt => Runtime::new(Manifest::load(artifacts_dir)?),
+        }
+    }
+
+    /// Load + compile an entry (cached).  On the reference backend this
+    /// parses the entry signature instead of compiling HLO.
     pub fn load(&self, entry: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.cache.borrow().get(entry) {
             return Ok(e.clone());
         }
         let info = self.manifest.entry(entry)?.clone();
-        let path = self.manifest.artifact_path(&info.file);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", entry))?;
+        let imp = match self.backend {
+            BackendKind::Pjrt => {
+                let path = self.manifest.artifact_path(&info.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                ExecImpl::Pjrt(
+                    self.client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {}: {e:?}", entry))?,
+                )
+            }
+            BackendKind::Reference => {
+                let cfg = self.manifest.config(&info.config)?.clone();
+                ExecImpl::Reference(reference::RefEntry::from_info(&info, &cfg)?)
+            }
+        };
         *self.total_compile.borrow_mut() += t0.elapsed();
         let e = Rc::new(Executable {
             info,
-            exe,
+            imp,
             client: self.client.clone(),
             calls: RefCell::new(0),
             total_exec: RefCell::new(Default::default()),

@@ -1,0 +1,981 @@
+//! Pure-Rust reference backend: a deterministic tiny-transformer forward
+//! pass that satisfies the same entrypoint contract as the PJRT artifacts.
+//!
+//! The PJRT path executes HLO lowered from python/compile/model.py; this
+//! module reimplements that graph's *serving* entries (`prefill_*` /
+//! `decode_*`) directly in Rust — embedding, RoPE attention over the
+//! per-slot KV cache, SwiGLU MLP, and the banked per-request adapter
+//! epilogues (RoAd Eq. 4 element-wise rotation, the LoRA bmm baseline,
+//! (IA)³ scaling) — so the whole engine/streaming/scheduling stack runs
+//! end to end with **no artifacts and no native XLA runtime**.
+//!
+//! Contract (docs/DESIGN.md §Backends):
+//!
+//! * Entry names, input/output signatures, group conventions
+//!   (`params`/`adapters`/`data`), and shapes are identical to what
+//!   python/compile/aot.py records in the manifest.  The engine cannot
+//!   tell the backends apart.
+//! * The math mirrors model.py line for line (same masks, same cache
+//!   scatter semantics, same RoPE tables), so when artifacts *are* built
+//!   the two backends agree to greedy-token identity on the same weights
+//!   (the cross-backend test in rust/tests/integration_engine.rs).
+//! * Every lane is computed independently, so a request's output is
+//!   bitwise identical whether it runs solo or inside a heterogeneous
+//!   batch — the batch-invariance the paper's batching claim rests on,
+//!   and the property the un-gated integration suite asserts.
+//!
+//! Without artifacts, [`synthetic_manifest`] supplies the entry/config
+//! metadata and [`synthetic_params`] deterministically generates the
+//! "pretrained" weights (seeded per config name), so two processes always
+//! serve the same model.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::{EntryInfo, IoSpec, Manifest, ModelConfigInfo};
+use crate::model::{proj_dims, PROJS};
+use crate::tensor::{DType, HostTensor};
+use crate::util::rng::Rng;
+
+/// RoPE base used by every preset (python/compile/configs.py
+/// `ModelConfig.rope_theta` default; the manifest does not carry it).
+pub const ROPE_THETA: f32 = 10000.0;
+
+/// Adapter modes the reference backend implements (model.py also lowers
+/// "oft", which exists only as a baseline for the training-efficiency
+/// table and stays PJRT-only).
+pub const MODES: [&str; 4] = ["base", "road", "lora", "ia3"];
+
+// ---------------------------------------------------------------------------
+// Synthetic manifest (configs + serving entries, no files behind them)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn cfg(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    max_seq: usize,
+    n_adapters: usize,
+    lora_rank: usize,
+) -> ModelConfigInfo {
+    ModelConfigInfo {
+        name: name.into(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        max_seq,
+        head_dim: d_model / n_heads,
+        n_adapters,
+        lora_rank,
+    }
+}
+
+/// The four presets, mirroring python/compile/configs.py exactly.
+pub fn synthetic_configs() -> BTreeMap<String, ModelConfigInfo> {
+    let mut m = BTreeMap::new();
+    for c in [
+        cfg("tiny", 256, 64, 2, 4, 192, 128, 4, 4),
+        cfg("serve", 256, 256, 4, 8, 768, 288, 16, 8),
+        cfg("train", 256, 128, 3, 4, 384, 96, 4, 8),
+        cfg("train2", 256, 96, 4, 6, 288, 96, 4, 8),
+    ] {
+        m.insert(c.name.clone(), c);
+    }
+    m
+}
+
+/// Parameter (name, shape) specs in flattening order (sorted keys) —
+/// python/compile/model.py `param_specs`.
+pub fn param_spec_list(cfg: &ModelConfigInfo) -> Vec<(String, Vec<usize>)> {
+    let mut m: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    m.insert("tok_emb".into(), vec![cfg.vocab, cfg.d_model]);
+    m.insert("final_norm".into(), vec![cfg.d_model]);
+    m.insert("lm_head".into(), vec![cfg.d_model, cfg.vocab]);
+    for i in 0..cfg.n_layers {
+        let pre = format!("blocks.{i}");
+        m.insert(format!("{pre}.attn_norm"), vec![cfg.d_model]);
+        m.insert(format!("{pre}.ffn_norm"), vec![cfg.d_model]);
+        for proj in PROJS {
+            let (d_in, d_out) = proj_dims(cfg, proj);
+            m.insert(format!("{pre}.{proj}"), vec![d_in, d_out]);
+            m.insert(format!("{pre}.{proj}.bias"), vec![d_out]);
+        }
+    }
+    m.into_iter().collect()
+}
+
+/// Adapter-bank (name, shape) specs in sorted order — python
+/// `adapter_specs` for the serving modes.
+pub fn adapter_spec_list(cfg: &ModelConfigInfo, mode: &str) -> Vec<(String, Vec<usize>)> {
+    let n = cfg.n_adapters;
+    let mut m: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for i in 0..cfg.n_layers {
+        for proj in PROJS {
+            let (d_in, d_out) = proj_dims(cfg, proj);
+            let key = format!("blocks.{i}.{proj}");
+            match mode {
+                "road" => {
+                    m.insert(format!("{key}.r1"), vec![n, d_out]);
+                    m.insert(format!("{key}.r2"), vec![n, d_out]);
+                }
+                "lora" => {
+                    m.insert(format!("{key}.lb"), vec![n, d_in, cfg.lora_rank]);
+                    m.insert(format!("{key}.la"), vec![n, cfg.lora_rank, d_out]);
+                }
+                "ia3" => {
+                    m.insert(format!("{key}.s"), vec![n, d_out]);
+                }
+                _ => {}
+            }
+        }
+    }
+    m.into_iter().collect()
+}
+
+fn iospec(group: &str, name: &str, shape: Vec<usize>, dtype: DType) -> IoSpec {
+    IoSpec { group: group.into(), name: name.into(), shape, dtype }
+}
+
+/// Build the EntryInfo for one serving entry, positional order identical
+/// to aot.py's `serving_entry` (params, adapters, data).
+fn serving_entry(cfg: &ModelConfigInfo, mode: &str, kind: &str, b: usize, l: usize) -> EntryInfo {
+    let mut inputs: Vec<IoSpec> = param_spec_list(cfg)
+        .into_iter()
+        .map(|(n, s)| iospec("params", &n, s, DType::F32))
+        .collect();
+    inputs.extend(
+        adapter_spec_list(cfg, mode)
+            .into_iter()
+            .map(|(n, s)| iospec("adapters", &n, s, DType::F32)),
+    );
+    let (nl, h, t, hd) = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim);
+    let cache_shape = vec![nl, b, h, t, hd];
+    let (name, prompt_len) = if kind == "prefill" {
+        inputs.push(iospec("data", "ids", vec![b], DType::I32));
+        inputs.push(iospec("data", "tokens", vec![b, l], DType::I32));
+        inputs.push(iospec("data", "lengths", vec![b], DType::I32));
+        (format!("prefill_{mode}_{}_b{b}_l{l}", cfg.name), Some(l))
+    } else {
+        inputs.push(iospec("data", "ids", vec![b], DType::I32));
+        inputs.push(iospec("data", "token", vec![b], DType::I32));
+        inputs.push(iospec("data", "pos", vec![b], DType::I32));
+        inputs.push(iospec("data", "k_cache", cache_shape.clone(), DType::F32));
+        inputs.push(iospec("data", "v_cache", cache_shape.clone(), DType::F32));
+        (format!("decode_{mode}_{}_b{b}", cfg.name), None)
+    };
+    let outputs = vec![
+        iospec("out", "out0", vec![b, cfg.vocab], DType::F32),
+        iospec("out", "out1", cache_shape.clone(), DType::F32),
+        iospec("out", "out2", cache_shape, DType::F32),
+    ];
+    EntryInfo {
+        name,
+        file: String::new(),
+        kind: kind.into(),
+        config: cfg.name.clone(),
+        mode: Some(mode.into()),
+        method: None,
+        batch: Some(b),
+        prompt_len,
+        seq_len: None,
+        inputs,
+        outputs,
+    }
+}
+
+/// Decode-slot counts every config gets entries for (superset of aot.py's
+/// `SERVE_DECODE_BATCHES` — synthesizing an entry costs nothing, so the
+/// reference backend is more generous than the compiled artifact set).
+pub const DECODE_BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Prefill (batch, prompt_len) buckets per config.
+pub const PREFILL_BUCKETS: [(usize, usize); 4] = [(1, 16), (2, 16), (4, 16), (8, 16)];
+
+/// Prefill buckets a config's entries are synthesized for: the shared
+/// list plus the long-prompt serve bucket, filtered to `max_seq`.  Also
+/// the source of truth for the manifest's advertised `serve_prefill`
+/// buckets, so the bucket metadata can never contradict the entry set.
+pub fn prefill_buckets_for(cfg: &ModelConfigInfo) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<(usize, usize)> = PREFILL_BUCKETS.to_vec();
+    if cfg.name == "serve" {
+        buckets.push((8, 64));
+    }
+    buckets.retain(|&(_, l)| l <= cfg.max_seq);
+    buckets
+}
+
+/// In-memory manifest for the reference backend: same configs, entry
+/// names, and signatures as `make artifacts` would produce, but no files
+/// behind them and `synthetic = true` (parameters come from
+/// [`synthetic_params`]).
+pub fn synthetic_manifest() -> Manifest {
+    let configs = synthetic_configs();
+    let mut entries = BTreeMap::new();
+    for c in configs.values() {
+        for mode in MODES {
+            for b in DECODE_BATCHES {
+                let e = serving_entry(c, mode, "decode", b, 0);
+                entries.insert(e.name.clone(), e);
+            }
+            for (b, l) in prefill_buckets_for(c) {
+                let e = serving_entry(c, mode, "prefill", b, l);
+                entries.insert(e.name.clone(), e);
+            }
+        }
+    }
+    let serve_prefill_buckets = prefill_buckets_for(&configs["serve"]);
+    Manifest {
+        dir: PathBuf::from("<reference>"),
+        configs,
+        entries,
+        params_files: BTreeMap::new(),
+        trainable_files: BTreeMap::new(),
+        golden: BTreeMap::new(),
+        serve_decode_batches: DECODE_BATCHES.to_vec(),
+        serve_prefill_buckets,
+        synthetic: true,
+    }
+}
+
+/// The identity row content for one adapter-bank input spec: ones for
+/// multiplicative tensors (road `.r1`, ia3 `.s`), zeros for additive ones
+/// (road `.r2`, lora `.lb`/`.la`) — matching [`crate::adapters::AdapterBank`]'s
+/// fresh-bank initialization.  Shared by the reference/runtime tests that
+/// assemble positional inputs by hand.
+pub fn identity_bank_tensor(spec: &IoSpec) -> HostTensor {
+    let n: usize = spec.shape.iter().product::<usize>().max(1);
+    if spec.name.ends_with(".r1") || spec.name.ends_with(".s") {
+        HostTensor::f32(spec.shape.clone(), vec![1.0; n])
+    } else {
+        HostTensor::zeros(spec.shape.clone(), DType::F32)
+    }
+}
+
+/// Deterministic "pretrained" parameters for a synthetic config: same
+/// structure and init scales as python `init_params` (normal·d⁻½ weights,
+/// unit norms, zero biases), seeded from the config name so every process
+/// serves the same model.
+pub fn synthetic_params(
+    cfg: &ModelConfigInfo,
+    specs: &[(String, Vec<usize>)],
+) -> Vec<(String, HostTensor)> {
+    let seed = cfg
+        .name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    let mut rng = Rng::seed_from(seed);
+    let emb_scale = (cfg.d_model as f32).powf(-0.5);
+    specs
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let vals = if name.ends_with(".bias") {
+                vec![0.0; n]
+            } else if name.ends_with("_norm") {
+                vec![1.0; n]
+            } else if name == "tok_emb" || name == "lm_head" {
+                rng.normal_vec(n, emb_scale)
+            } else {
+                // Projection weights: scale by the input dimension.
+                let d_in = shape[0] as f32;
+                rng.normal_vec(n, d_in.powf(-0.5))
+            };
+            (name.clone(), HostTensor::f32(shape.clone(), vals))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Reference executable: one parsed serving entry
+// ---------------------------------------------------------------------------
+
+/// What one reference entry computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RefKind {
+    Prefill,
+    Decode,
+}
+
+/// A reference-backend "executable": the parsed serving entry plus its
+/// model config.  Stateless — all tensors arrive as call arguments, the
+/// same way a compiled PJRT executable receives them.
+pub struct RefEntry {
+    info: EntryInfo,
+    cfg: ModelConfigInfo,
+    kind: RefKind,
+    mode: String,
+}
+
+impl RefEntry {
+    /// Parse a manifest entry into a runnable reference entry.  Only the
+    /// serving kinds exist here; training/eval/pilot entries stay
+    /// PJRT-only and fail loudly.
+    pub fn from_info(info: &EntryInfo, cfg: &ModelConfigInfo) -> Result<RefEntry> {
+        let kind = match info.kind.as_str() {
+            "prefill" => RefKind::Prefill,
+            "decode" => RefKind::Decode,
+            k => bail!(
+                "reference backend implements serving entries only (prefill/decode); \
+                 {} is kind {k:?} — use the pjrt backend with built artifacts",
+                info.name
+            ),
+        };
+        let mode = info.mode.clone().unwrap_or_default();
+        if !MODES.contains(&mode.as_str()) {
+            bail!("reference backend does not implement adapter mode {mode:?} ({})", info.name);
+        }
+        Ok(RefEntry { info: info.clone(), cfg: cfg.clone(), kind, mode })
+    }
+
+    /// Execute the entry on host tensors in positional signature order.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "entry {}: {} args provided, {} expected",
+                self.info.name,
+                inputs.len(),
+                self.info.inputs.len()
+            );
+        }
+        let mut params: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+        let mut adapters: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+        let mut data: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+        for (spec, t) in self.info.inputs.iter().zip(inputs) {
+            match spec.group.as_str() {
+                "params" => params.insert(spec.name.as_str(), t),
+                "adapters" => adapters.insert(spec.name.as_str(), t),
+                "data" => data.insert(spec.name.as_str(), t),
+                g => bail!("entry {}: unexpected input group {g}", self.info.name),
+            };
+        }
+        let fwd = Fwd { cfg: &self.cfg, mode: &self.mode, params: &params, adapters: &adapters };
+        let datum = |name: &str| {
+            data.get(name)
+                .copied()
+                .ok_or_else(|| anyhow!("entry {}: missing data input {name}", self.info.name))
+        };
+        match self.kind {
+            RefKind::Prefill => {
+                let b = self.info.batch.unwrap_or(1);
+                let l = self.info.prompt_len.unwrap_or(0);
+                fwd.prefill(
+                    b,
+                    l,
+                    &datum("ids")?.as_i32(),
+                    &datum("tokens")?.as_i32(),
+                    &datum("lengths")?.as_i32(),
+                )
+            }
+            RefKind::Decode => {
+                let b = self.info.batch.unwrap_or(1);
+                fwd.decode(
+                    b,
+                    &datum("ids")?.as_i32(),
+                    &datum("token")?.as_i32(),
+                    &datum("pos")?.as_i32(),
+                    datum("k_cache")?,
+                    datum("v_cache")?,
+                )
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward math (mirrors python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+/// Borrow a tensor's payload as f32 without copying when aligned.
+fn f32s(t: &HostTensor) -> Cow<'_, [f32]> {
+    match t.f32_slice() {
+        Some(s) => Cow::Borrowed(s),
+        None => Cow::Owned(t.as_f32()),
+    }
+}
+
+fn rmsnorm_rows(x: &[f32], rows: usize, d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut ss = 0f32;
+        for v in xr {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + 1e-5).sqrt();
+        let or = &mut out[r * d..(r + 1) * d];
+        for i in 0..d {
+            or[i] = xr[i] * inv * g[i];
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+struct Fwd<'a> {
+    cfg: &'a ModelConfigInfo,
+    mode: &'a str,
+    params: &'a BTreeMap<&'a str, &'a HostTensor>,
+    adapters: &'a BTreeMap<&'a str, &'a HostTensor>,
+}
+
+impl Fwd<'_> {
+    fn p(&self, name: &str) -> Result<Cow<'_, [f32]>> {
+        self.params.get(name).copied().map(f32s).ok_or_else(|| anyhow!("missing param {name}"))
+    }
+
+    fn a(&self, name: &str) -> Result<Cow<'_, [f32]>> {
+        self.adapters
+            .get(name)
+            .copied()
+            .map(f32s)
+            .ok_or_else(|| anyhow!("missing adapter bank {name}"))
+    }
+
+    /// Adapted linear layer over `rows` row-vectors: z = x W + b, then the
+    /// per-row adapter epilogue selected by `mode` with bank slot
+    /// `slots[row]` (model.py `_linear`).
+    fn linear(
+        &self,
+        key: &str,
+        x: &[f32],
+        rows: usize,
+        slots: &[usize],
+        d_in: usize,
+        d_out: usize,
+    ) -> Result<Vec<f32>> {
+        let w = self.p(key)?;
+        let bias = self.p(&format!("{key}.bias"))?;
+        let mut z = vec![0f32; rows * d_out];
+        for r in 0..rows {
+            let xr = &x[r * d_in..(r + 1) * d_in];
+            let zr = &mut z[r * d_out..(r + 1) * d_out];
+            zr.copy_from_slice(&bias);
+            for (i, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * d_out..(i + 1) * d_out];
+                for j in 0..d_out {
+                    zr[j] += xv * wrow[j];
+                }
+            }
+        }
+        match self.mode {
+            "base" => Ok(z),
+            "road" => {
+                // Eq. 4: z' = r1 ⊙ z + r2 ⊙ pairswap(z), adapter chosen by
+                // the row's bank slot (a gather of two vectors).
+                let r1 = self.a(&format!("{key}.r1"))?;
+                let r2 = self.a(&format!("{key}.r2"))?;
+                for r in 0..rows {
+                    let s = slots[r];
+                    let (r1s, r2s) = (&r1[s * d_out..], &r2[s * d_out..]);
+                    let zr = &mut z[r * d_out..(r + 1) * d_out];
+                    for k in 0..d_out / 2 {
+                        let (e, o) = (2 * k, 2 * k + 1);
+                        let (he, ho) = (zr[e], zr[o]);
+                        zr[e] = r1s[e] * he - r2s[e] * ho;
+                        zr[o] = r2s[o] * he + r1s[o] * ho;
+                    }
+                }
+                Ok(z)
+            }
+            "lora" => {
+                // z' = z + (x B) A — the bmm-chain baseline of Figure 4.
+                let lb = self.a(&format!("{key}.lb"))?;
+                let la = self.a(&format!("{key}.la"))?;
+                let rank = self.cfg.lora_rank;
+                for r in 0..rows {
+                    let s = slots[r];
+                    let lbs = &lb[s * d_in * rank..(s + 1) * d_in * rank];
+                    let las = &la[s * rank * d_out..(s + 1) * rank * d_out];
+                    let xr = &x[r * d_in..(r + 1) * d_in];
+                    let mut mid = vec![0f32; rank];
+                    for (i, &xv) in xr.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (t, m) in mid.iter_mut().enumerate() {
+                            *m += xv * lbs[i * rank + t];
+                        }
+                    }
+                    let zr = &mut z[r * d_out..(r + 1) * d_out];
+                    for (t, &mv) in mid.iter().enumerate() {
+                        if mv == 0.0 {
+                            continue;
+                        }
+                        let larow = &las[t * d_out..(t + 1) * d_out];
+                        for j in 0..d_out {
+                            zr[j] += mv * larow[j];
+                        }
+                    }
+                }
+                Ok(z)
+            }
+            "ia3" => {
+                let sb = self.a(&format!("{key}.s"))?;
+                for r in 0..rows {
+                    let ss = &sb[slots[r] * d_out..];
+                    let zr = &mut z[r * d_out..(r + 1) * d_out];
+                    for j in 0..d_out {
+                        zr[j] *= ss[j];
+                    }
+                }
+                Ok(z)
+            }
+            m => bail!("reference backend: unsupported mode {m}"),
+        }
+    }
+
+    /// Apply RoPE in place to `q` rows laid out [rows, n_heads*head_dim],
+    /// one position per row (model.py `apply_rope`).  The inverse-frequency
+    /// table depends only on `k` and the angle only on `(row, k)`, so both
+    /// are hoisted out of the head loop (python's `rope_tables` shape).
+    fn rope(&self, x: &mut [f32], rows: usize, pos: &[usize]) {
+        let (h, hd) = (self.cfg.n_heads, self.cfg.head_dim);
+        let half = hd / 2;
+        let inv: Vec<f32> =
+            (0..half).map(|k| ROPE_THETA.powf(-((2 * k) as f32) / hd as f32)).collect();
+        for r in 0..rows {
+            let p = pos[r] as f32;
+            for (k, &ik) in inv.iter().enumerate() {
+                let ang = p * ik;
+                let (c, s) = (ang.cos(), ang.sin());
+                for hh in 0..h {
+                    let off = r * h * hd + hh * hd;
+                    let (e, o) = (off + 2 * k, off + 2 * k + 1);
+                    let (x1, x2) = (x[e], x[o]);
+                    x[e] = x1 * c - x2 * s;
+                    x[o] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+
+    /// One transformer block over `rows = b*l` row-vectors, updating this
+    /// layer's caches in place (model.py `_block`).
+    ///
+    /// `kc`/`vc` are this layer's [b, h, T, hd] cache slices; `write_pos`
+    /// gives the cache position each row's K/V lands in, and `visible`
+    /// says which cache positions a row's query may attend.
+    #[allow(clippy::too_many_arguments)]
+    fn block(
+        &self,
+        layer: usize,
+        x: &mut Vec<f32>,
+        b: usize,
+        l: usize,
+        slots: &[usize],
+        rope_pos: &[usize],
+        kc: &mut [f32],
+        vc: &mut [f32],
+        write_pos: &[usize],
+        visible: &dyn Fn(usize, usize) -> bool,
+    ) -> Result<()> {
+        let (d, h, hd) = (self.cfg.d_model, self.cfg.n_heads, self.cfg.head_dim);
+        let t_max = self.cfg.max_seq;
+        let rows = b * l;
+        let pre = format!("blocks.{layer}");
+        let lin = |nm: &str, inp: &[f32], d_in: usize, d_out: usize| {
+            self.linear(&format!("{pre}.{nm}"), inp, rows, slots, d_in, d_out)
+        };
+
+        let hn = rmsnorm_rows(x, rows, d, &self.p(&format!("{pre}.attn_norm"))?);
+        let mut q = lin("wq", &hn, d, d)?;
+        let mut k = lin("wk", &hn, d, d)?;
+        let v = lin("wv", &hn, d, d)?;
+        self.rope(&mut q, rows, rope_pos);
+        self.rope(&mut k, rows, rope_pos);
+
+        // Scatter this call's K/V into the cache at each row's write
+        // position (the one-hot blend of model.py, done as direct writes —
+        // write positions are distinct per lane by construction).
+        for r in 0..rows {
+            let (lane, p) = (r / l, write_pos[r]);
+            for hh in 0..h {
+                let src = r * h * hd + hh * hd;
+                let dst = ((lane * h + hh) * t_max + p) * hd;
+                kc[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                vc[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+            }
+        }
+
+        // Attention over the (just-updated) cache.
+        let scale = (hd as f32).powf(-0.5);
+        let mut ctx = vec![0f32; rows * d];
+        let mut scores = vec![0f32; t_max];
+        for r in 0..rows {
+            let lane = r / l;
+            for hh in 0..h {
+                let qoff = r * h * hd + hh * hd;
+                let qrow = &q[qoff..qoff + hd];
+                let base = (lane * h + hh) * t_max * hd;
+                let mut max = f32::NEG_INFINITY;
+                for (t, sc) in scores.iter_mut().enumerate() {
+                    if !visible(r, t) {
+                        *sc = f32::NEG_INFINITY;
+                        continue;
+                    }
+                    let krow = &kc[base + t * hd..base + (t + 1) * hd];
+                    let mut dot = 0f32;
+                    for i in 0..hd {
+                        dot += qrow[i] * krow[i];
+                    }
+                    *sc = dot * scale;
+                    if *sc > max {
+                        max = *sc;
+                    }
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = if sc.is_finite() { (*sc - max).exp() } else { 0.0 };
+                    denom += *sc;
+                }
+                let co = r * d + hh * hd;
+                let crow = &mut ctx[co..co + hd];
+                for (t, &w) in scores.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let wv = w / denom;
+                    let vrow = &vc[base + t * hd..base + (t + 1) * hd];
+                    for i in 0..hd {
+                        crow[i] += wv * vrow[i];
+                    }
+                }
+            }
+        }
+        let attn_out = lin("wo", &ctx, d, d)?;
+        for (xi, ai) in x.iter_mut().zip(&attn_out) {
+            *xi += ai;
+        }
+
+        // SwiGLU MLP.
+        let h2 = rmsnorm_rows(x, rows, d, &self.p(&format!("{pre}.ffn_norm"))?);
+        let gate = lin("wgate", &h2, d, self.cfg.d_ff)?;
+        let up = lin("wup", &h2, d, self.cfg.d_ff)?;
+        let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+        let down = lin("wdown", &act, self.cfg.d_ff, d)?;
+        for (xi, di) in x.iter_mut().zip(&down) {
+            *xi += di;
+        }
+        Ok(())
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let emb = self.p("tok_emb")?;
+        let (v, d) = (self.cfg.vocab, self.cfg.d_model);
+        let mut x = vec![0f32; tokens.len() * d];
+        for (r, &tok) in tokens.iter().enumerate() {
+            let idx = (tok.max(0) as usize).min(v - 1);
+            x[r * d..(r + 1) * d].copy_from_slice(&emb[idx * d..(idx + 1) * d]);
+        }
+        Ok(x)
+    }
+
+    /// Final-norm + lm_head logits for one row of `x`.
+    fn head_row(&self, x: &[f32], row: usize) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let hn = rmsnorm_rows(&x[row * d..(row + 1) * d], 1, d, &self.p("final_norm")?);
+        let lm = self.p("lm_head")?;
+        let v = self.cfg.vocab;
+        let mut logits = vec![0f32; v];
+        for (i, &hv) in hn.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &lm[i * v..(i + 1) * v];
+            for j in 0..v {
+                logits[j] += hv * wrow[j];
+            }
+        }
+        Ok(logits)
+    }
+
+    fn cache_shape(&self, b: usize) -> Vec<usize> {
+        vec![self.cfg.n_layers, b, self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim]
+    }
+
+    /// model.py `prefill`: process padded prompts, fill the caches, return
+    /// last-valid-token logits.
+    fn prefill(
+        &self,
+        b: usize,
+        l: usize,
+        ids: &[i32],
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<Vec<HostTensor>> {
+        let cfg = self.cfg;
+        let rows = b * l;
+        let slots: Vec<usize> = (0..rows).map(|r| ids[r / l].max(0) as usize).collect();
+        let rope_pos: Vec<usize> = (0..rows).map(|r| r % l).collect();
+        let write_pos = rope_pos.clone();
+        let mut x = self.embed(tokens)?;
+
+        let lane_cache = b * cfg.n_heads * cfg.max_seq * cfg.head_dim;
+        let mut kcs = vec![0f32; cfg.n_layers * lane_cache];
+        let mut vcs = vec![0f32; cfg.n_layers * lane_cache];
+        // Query j attends cache positions t <= j that prefill wrote (t < l).
+        let visible = move |r: usize, t: usize| t <= (r % l) && t < l;
+        for layer in 0..cfg.n_layers {
+            let (kc, vc) = (
+                &mut kcs[layer * lane_cache..(layer + 1) * lane_cache],
+                &mut vcs[layer * lane_cache..(layer + 1) * lane_cache],
+            );
+            self.block(layer, &mut x, b, l, &slots, &rope_pos, kc, vc, &write_pos, &visible)?;
+        }
+        let mut logits = vec![0f32; b * cfg.vocab];
+        for lane in 0..b {
+            let last = (lengths[lane] - 1).clamp(0, l as i32 - 1) as usize;
+            let row = self.head_row(&x, lane * l + last)?;
+            logits[lane * cfg.vocab..(lane + 1) * cfg.vocab].copy_from_slice(&row);
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, cfg.vocab], logits),
+            HostTensor::f32(self.cache_shape(b), kcs),
+            HostTensor::f32(self.cache_shape(b), vcs),
+        ])
+    }
+
+    /// model.py `decode`: one step for `b` slots at per-slot positions.
+    fn decode(
+        &self,
+        b: usize,
+        ids: &[i32],
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &HostTensor,
+        v_cache: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        let cfg = self.cfg;
+        let slots: Vec<usize> = ids.iter().map(|&s| s.max(0) as usize).collect();
+        let posu: Vec<usize> =
+            pos.iter().map(|&p| (p.max(0) as usize).min(cfg.max_seq - 1)).collect();
+        let mut x = self.embed(token)?;
+        let mut kcs = k_cache.as_f32();
+        let mut vcs = v_cache.as_f32();
+
+        let lane_cache = b * cfg.n_heads * cfg.max_seq * cfg.head_dim;
+        let posv = posu.clone();
+        let visible = move |r: usize, t: usize| t <= posv[r];
+        for layer in 0..cfg.n_layers {
+            let (kc, vc) = (
+                &mut kcs[layer * lane_cache..(layer + 1) * lane_cache],
+                &mut vcs[layer * lane_cache..(layer + 1) * lane_cache],
+            );
+            self.block(layer, &mut x, b, 1, &slots, &posu, kc, vc, &posu, &visible)?;
+        }
+        let mut logits = vec![0f32; b * cfg.vocab];
+        for lane in 0..b {
+            let row = self.head_row(&x, lane)?;
+            logits[lane * cfg.vocab..(lane + 1) * cfg.vocab].copy_from_slice(&row);
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, cfg.vocab], logits),
+            HostTensor::f32(self.cache_shape(b), kcs),
+            HostTensor::f32(self.cache_shape(b), vcs),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfigInfo {
+        synthetic_configs()["tiny"].clone()
+    }
+
+    /// Build the full positional input list for an entry: synthetic
+    /// params, an identity adapter bank, and the given data tensors.
+    fn entry_inputs(info: &EntryInfo, data: BTreeMap<&str, HostTensor>) -> Vec<HostTensor> {
+        let cfg = synthetic_configs()[&info.config].clone();
+        let params: BTreeMap<String, HostTensor> =
+            synthetic_params(&cfg, &param_spec_list(&cfg)).into_iter().collect();
+        info.inputs
+            .iter()
+            .map(|s| match s.group.as_str() {
+                "params" => params[&s.name].clone(),
+                "adapters" => identity_bank_tensor(s),
+                _ => data[s.name.as_str()].clone(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn synthetic_manifest_has_serving_entries_for_every_config() {
+        let m = synthetic_manifest();
+        assert!(m.synthetic);
+        for c in ["tiny", "serve", "train", "train2"] {
+            assert!(m.configs.contains_key(c));
+            for mode in MODES {
+                assert!(m.entries.contains_key(&format!("decode_{mode}_{c}_b2")));
+                assert!(m.entries.contains_key(&format!("prefill_{mode}_{c}_b2_l16")));
+            }
+        }
+        // Signatures match the aot.py positional convention.
+        let e = &m.entries["decode_road_tiny_b2"];
+        assert_eq!(e.inputs.last().unwrap().name, "v_cache");
+        assert_eq!(e.outputs[0].shape, vec![2, 256]);
+        let (start, end) = e.group_range("params");
+        assert!(end > start, "params group present");
+        // The advertised bucket metadata never contradicts the entry set.
+        for &b in &m.serve_decode_batches {
+            assert!(m.entries.contains_key(&format!("decode_road_serve_b{b}")));
+        }
+        for &(b, l) in &m.serve_prefill_buckets {
+            assert!(
+                m.entries.contains_key(&format!("prefill_road_serve_b{b}_l{l}")),
+                "advertised bucket ({b}, {l}) has no entry"
+            );
+        }
+    }
+
+    #[test]
+    fn synthetic_params_are_deterministic_and_structured() {
+        let cfg = tiny();
+        let specs = param_spec_list(&cfg);
+        let a = synthetic_params(&cfg, &specs);
+        let b = synthetic_params(&cfg, &specs);
+        for ((n1, t1), (_, t2)) in a.iter().zip(&b) {
+            assert_eq!(t1.bytes(), t2.bytes(), "nondeterministic param {n1}");
+        }
+        let by_name: BTreeMap<&str, &HostTensor> =
+            a.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        assert_eq!(by_name["final_norm"].as_f32(), vec![1.0; cfg.d_model]);
+        assert_eq!(
+            by_name["blocks.0.wq.bias"].as_f32(),
+            vec![0.0; cfg.d_model],
+            "biases start at zero"
+        );
+        assert!(by_name["tok_emb"].as_f32().iter().any(|&v| v != 0.0));
+    }
+
+    /// Prefill of (prompt ++ next) must equal prefill(prompt) followed by
+    /// one decode of `next` — the KV-cache semantics the engine's
+    /// continuous batching depends on.
+    #[test]
+    fn decode_continues_prefill_exactly() {
+        let m = synthetic_manifest();
+        let cfg = tiny();
+        let pre_info = &m.entries["prefill_road_tiny_b1_l16"];
+        let dec_info = &m.entries["decode_road_tiny_b1"];
+        let pre = RefEntry::from_info(pre_info, &cfg).unwrap();
+        let dec = RefEntry::from_info(dec_info, &cfg).unwrap();
+
+        let prompt = [17i32, 4, 99, 250];
+        let next = 33i32;
+        let mut padded = vec![0i32; 16];
+        padded[..4].copy_from_slice(&prompt);
+        let mut extended = padded.clone();
+        extended[4] = next;
+
+        let run_prefill = |tokens: Vec<i32>, len: i32| {
+            let data = BTreeMap::from([
+                ("ids", HostTensor::i32(vec![1], vec![0])),
+                ("tokens", HostTensor::i32(vec![1, 16], tokens)),
+                ("lengths", HostTensor::i32(vec![1], vec![len])),
+            ]);
+            pre.execute(&entry_inputs(pre_info, data)).unwrap()
+        };
+        let long = run_prefill(extended, 5);
+        let short = run_prefill(padded, 4);
+
+        let data = BTreeMap::from([
+            ("ids", HostTensor::i32(vec![1], vec![0])),
+            ("token", HostTensor::i32(vec![1], vec![next])),
+            ("pos", HostTensor::i32(vec![1], vec![4])),
+            ("k_cache", short[1].clone()),
+            ("v_cache", short[2].clone()),
+        ]);
+        let stepped = dec.execute(&entry_inputs(dec_info, data)).unwrap();
+
+        let (a, b) = (long[0].as_f32(), stepped[0].as_f32());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-4, "logit {i}: prefill {x} vs decode {y}");
+        }
+    }
+
+    /// Reference runs are bitwise deterministic, and each lane is
+    /// independent of its batch neighbours (the batch-invariance behind
+    /// the hetero-batching claim).
+    #[test]
+    fn lanes_are_batch_invariant() {
+        let m = synthetic_manifest();
+        let cfg = tiny();
+        let d2 = &m.entries["decode_road_tiny_b2"];
+        let d1 = &m.entries["decode_road_tiny_b1"];
+        let dec2 = RefEntry::from_info(d2, &cfg).unwrap();
+        let dec1 = RefEntry::from_info(d1, &cfg).unwrap();
+        let n: usize =
+            cfg.n_layers * cfg.n_heads * cfg.max_seq * cfg.head_dim;
+        let mut rng = Rng::seed_from(5);
+        let kc1: Vec<f32> = rng.normal_vec(n, 0.02);
+        let vc1: Vec<f32> = rng.normal_vec(n, 0.02);
+        let kc2: Vec<f32> = rng.normal_vec(n, 0.02);
+        let vc2: Vec<f32> = rng.normal_vec(n, 0.02);
+        let shape1 = vec![cfg.n_layers, 1, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        let shape2 = vec![cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        // Interleave the two lanes' caches into the b=2 layout.
+        let lane = cfg.n_heads * cfg.max_seq * cfg.head_dim;
+        let mut kcb = vec![0f32; 2 * n];
+        let mut vcb = vec![0f32; 2 * n];
+        for layer in 0..cfg.n_layers {
+            let (s, d) = (layer * lane, layer * 2 * lane);
+            kcb[d..d + lane].copy_from_slice(&kc1[s..s + lane]);
+            kcb[d + lane..d + 2 * lane].copy_from_slice(&kc2[s..s + lane]);
+            vcb[d..d + lane].copy_from_slice(&vc1[s..s + lane]);
+            vcb[d + lane..d + 2 * lane].copy_from_slice(&vc2[s..s + lane]);
+        }
+        let batch_data = BTreeMap::from([
+            ("ids", HostTensor::i32(vec![2], vec![1, 2])),
+            ("token", HostTensor::i32(vec![2], vec![7, 201])),
+            ("pos", HostTensor::i32(vec![2], vec![3, 9])),
+            ("k_cache", HostTensor::f32(shape2.clone(), kcb)),
+            ("v_cache", HostTensor::f32(shape2, vcb)),
+        ]);
+        let batched = dec2.execute(&entry_inputs(d2, batch_data.clone())).unwrap();
+        let again = dec2.execute(&entry_inputs(d2, batch_data)).unwrap();
+        assert_eq!(batched[0].bytes(), again[0].bytes(), "bitwise deterministic");
+
+        let solo_data = BTreeMap::from([
+            ("ids", HostTensor::i32(vec![1], vec![1])),
+            ("token", HostTensor::i32(vec![1], vec![7])),
+            ("pos", HostTensor::i32(vec![1], vec![3])),
+            ("k_cache", HostTensor::f32(shape1.clone(), kc1)),
+            ("v_cache", HostTensor::f32(shape1, vc1)),
+        ]);
+        let solo = dec1.execute(&entry_inputs(d1, solo_data)).unwrap();
+        let (sb, bb) = (solo[0].as_f32(), batched[0].as_f32());
+        assert_eq!(
+            &bb[..cfg.vocab],
+            &sb[..],
+            "lane 0 logits must be bitwise identical solo vs batched"
+        );
+    }
+
+    #[test]
+    fn non_serving_entries_are_rejected() {
+        let cfg = tiny();
+        let mut info = synthetic_manifest().entries["decode_road_tiny_b2"].clone();
+        info.kind = "train_step".into();
+        let err = RefEntry::from_info(&info, &cfg).unwrap_err();
+        assert!(err.to_string().contains("serving entries only"), "{err}");
+        let mut info2 = synthetic_manifest().entries["decode_road_tiny_b2"].clone();
+        info2.mode = Some("oft".into());
+        assert!(RefEntry::from_info(&info2, &cfg).is_err());
+    }
+}

@@ -2,9 +2,13 @@
 //! loaded and executed through the rust PJRT runtime, compared against the
 //! golden records computed by jax at artifact-build time.
 //!
-//! Without artifacts (`make artifacts`) every test skips cleanly.
+//! The golden-record tests are artifact-gated (PJRT numerics are their
+//! point; without `make artifacts` they skip cleanly).  The reference
+//! backend's runtime-level contract — same entry names, same `Arg`
+//! conventions, run/run_device agreement, bitwise determinism — runs
+//! unconditionally below them.
 
-use road::runtime::{allclose, buffer_to_host, Arg, Runtime};
+use road::runtime::{allclose, buffer_to_host, Arg, BackendKind, Runtime};
 use road::require_artifacts;
 
 fn runtime() -> Runtime {
@@ -129,6 +133,146 @@ fn executable_rejects_wrong_arity_and_shape() {
     // corrupt a shape
     let bad = road::HostTensor::f32(vec![1], vec![0.0]);
     ins[0] = bad;
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    assert!(exe.run_host(&refs).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend: runtime-level contract, no artifacts required
+// ---------------------------------------------------------------------------
+
+/// Build the full positional input list for a reference serving entry:
+/// real params from the (synthetic) store, identity adapter banks, plus
+/// the caller's data tensors.
+fn reference_inputs(
+    rt: &Runtime,
+    entry: &str,
+    data: &std::collections::BTreeMap<&str, road::HostTensor>,
+) -> Vec<road::HostTensor> {
+    let info = rt.manifest.entry(entry).unwrap();
+    let store = road::model::ParamStore::load_pretrained(&rt.manifest, &info.config).unwrap();
+    info.inputs
+        .iter()
+        .map(|s| match s.group.as_str() {
+            "params" => store.get(&s.name).unwrap().clone(),
+            "adapters" => road::runtime::reference::identity_bank_tensor(s),
+            _ => data[s.name.as_str()].clone(),
+        })
+        .collect()
+}
+
+fn tiny_decode_data(
+    rt: &Runtime,
+) -> std::collections::BTreeMap<&'static str, road::HostTensor> {
+    let cfg = rt.manifest.config("tiny").unwrap();
+    let cache = vec![cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+    let n: usize = cache.iter().product();
+    let mut rng = road::util::rng::Rng::seed_from(41);
+    std::collections::BTreeMap::from([
+        ("ids", road::HostTensor::i32(vec![2], vec![0, 1])),
+        ("token", road::HostTensor::i32(vec![2], vec![11, 222])),
+        ("pos", road::HostTensor::i32(vec![2], vec![4, 7])),
+        ("k_cache", road::HostTensor::f32(cache.clone(), rng.normal_vec(n, 0.02))),
+        ("v_cache", road::HostTensor::f32(cache, rng.normal_vec(n, 0.02))),
+    ])
+}
+
+#[test]
+fn reference_runtime_loads_serving_entries_without_artifacts() {
+    let rt = Runtime::reference();
+    assert_eq!(rt.backend, BackendKind::Reference);
+    assert!(rt.manifest.synthetic);
+    for cfg in ["tiny", "serve", "train", "train2"] {
+        assert!(rt.manifest.configs.contains_key(cfg));
+    }
+    // Same naming scheme as the artifact manifest.
+    for b in &rt.manifest.serve_decode_batches {
+        for mode in ["base", "road", "lora"] {
+            let name = format!("decode_{mode}_serve_b{b}");
+            assert!(rt.manifest.entries.contains_key(&name), "{name}");
+            rt.load(&name).unwrap();
+        }
+    }
+    // Non-serving kinds fail loudly instead of silently mis-executing.
+    assert!(rt.manifest.entries.values().all(|e| e.kind == "prefill" || e.kind == "decode"));
+}
+
+/// `run` and `run_device` agree on the reference backend, with the same
+/// mixed host/buffer calling convention the engine's decode loop uses —
+/// and two identical calls are bitwise identical.
+#[test]
+fn reference_run_device_matches_run_and_is_deterministic() {
+    let rt = Runtime::reference();
+    let exe = rt.load("decode_road_tiny_b2").unwrap();
+    let data = tiny_decode_data(&rt);
+    let ins = reference_inputs(&rt, "decode_road_tiny_b2", &data);
+
+    let refs: Vec<&road::HostTensor> = ins.iter().collect();
+    let host_outs = exe.run_host(&refs).unwrap();
+    assert_eq!(host_outs.len(), 3);
+
+    // Mixed-residency call: caches as persistent buffers, rest as host
+    // args (the engine's device-resident decode convention).
+    let is_cache = |name: &str| name == "k_cache" || name == "v_cache";
+    let mut bufs = Vec::new();
+    for (t, spec) in ins.iter().zip(&exe.info.inputs) {
+        if is_cache(&spec.name) {
+            bufs.push(rt.upload(t).unwrap());
+        }
+    }
+    let mut args: Vec<Arg> = Vec::new();
+    let mut bi = 0;
+    for (t, spec) in ins.iter().zip(&exe.info.inputs) {
+        if is_cache(&spec.name) {
+            args.push(Arg::Buffer(&bufs[bi]));
+            bi += 1;
+        } else {
+            args.push(Arg::Host(t));
+        }
+    }
+    let dev_outs = exe.run_device(&args).unwrap();
+    assert_eq!(dev_outs.len(), host_outs.len());
+    for ((buf, spec), host) in dev_outs.iter().zip(&exe.info.outputs).zip(&host_outs) {
+        let back = buffer_to_host(buf, spec.dtype).unwrap();
+        assert_eq!(back.shape, host.shape);
+        assert_eq!(back.bytes(), host.bytes(), "run_device diverged from run");
+    }
+    let again = exe.run_host(&refs).unwrap();
+    for (a, b) in again.iter().zip(&host_outs) {
+        assert_eq!(a.bytes(), b.bytes(), "reference execution must be bitwise deterministic");
+    }
+}
+
+/// Identity adapter banks are numeric no-ops at the runtime level: road
+/// and ia3 decode logits equal the base entry's bit for bit (lora's zero
+/// bank adds an exact zero delta).
+#[test]
+fn reference_identity_banks_match_base_entry() {
+    let rt = Runtime::reference();
+    let data = tiny_decode_data(&rt);
+    let base_ins = reference_inputs(&rt, "decode_base_tiny_b2", &data);
+    let base_refs: Vec<&road::HostTensor> = base_ins.iter().collect();
+    let base = rt.load("decode_base_tiny_b2").unwrap().run_host(&base_refs).unwrap();
+    for mode in ["road", "ia3", "lora"] {
+        let name = format!("decode_{mode}_tiny_b2");
+        let ins = reference_inputs(&rt, &name, &data);
+        let refs: Vec<&road::HostTensor> = ins.iter().collect();
+        let outs = rt.load(&name).unwrap().run_host(&refs).unwrap();
+        allclose(&outs[0], &base[0], 0.0, 1e-6)
+            .unwrap_or_else(|e| panic!("identity {mode} logits diverged from base: {e}"));
+    }
+}
+
+/// Shape/arity validation applies on the reference backend exactly like
+/// the PJRT path.
+#[test]
+fn reference_executable_rejects_wrong_arity_and_shape() {
+    let rt = Runtime::reference();
+    let exe = rt.load("decode_base_tiny_b2").unwrap();
+    assert!(exe.run_host(&[]).is_err());
+    let data = tiny_decode_data(&rt);
+    let mut ins = reference_inputs(&rt, "decode_base_tiny_b2", &data);
+    ins[0] = road::HostTensor::f32(vec![1], vec![0.0]);
     let refs: Vec<&road::HostTensor> = ins.iter().collect();
     assert!(exe.run_host(&refs).is_err());
 }

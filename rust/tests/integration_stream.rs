@@ -4,7 +4,12 @@
 //! clock — no sleeps), dropped-handle auto-cancel, and the
 //! NDJSON-over-TCP front door.
 //!
-//! Without artifacts (`make artifacts`) every test skips cleanly.
+//! Every test runs unconditionally: on the pure-Rust reference backend
+//! when no artifacts are built (no native XLA needed — the real engine +
+//! threaded server + TCP front door execute end to end on every
+//! `cargo test`), and on the PJRT backend when artifacts exist,
+//! preserving the pre-backend coverage.  `ROAD_TEST_BACKEND=ref|pjrt`
+//! overrides the choice.
 
 use std::rc::Rc;
 use std::time::Duration;
@@ -14,13 +19,22 @@ use road::coordinator::engine::{Engine, EngineConfig};
 use road::coordinator::queue::EngineError;
 use road::coordinator::request::{FinishReason, Request, SamplingParams, StreamEvent};
 use road::coordinator::server::EngineServer;
-use road::require_artifacts;
 use road::runtime::Runtime;
 use road::util::clock::Clock;
 use road::util::rng::Rng;
 
+/// Suite backend ([`road::runtime::BackendKind::auto`]):
+/// `ROAD_TEST_BACKEND` (ref|pjrt) wins; otherwise PJRT when artifacts are
+/// built (the pre-backend behavior), reference when they are not (so the
+/// suite executes instead of skipping).
+fn test_backend() -> road::runtime::BackendKind {
+    road::runtime::BackendKind::auto()
+}
+
 fn rt() -> Rc<Runtime> {
-    Rc::new(Runtime::from_default_artifacts().expect("run `make artifacts` first"))
+    let rt = Runtime::for_backend(test_backend(), road::Manifest::default_dir())
+        .expect("run `make artifacts` first");
+    Rc::new(rt)
 }
 
 fn tiny_econf(mode: &str) -> EngineConfig {
@@ -29,6 +43,7 @@ fn tiny_econf(mode: &str) -> EngineConfig {
         mode: mode.into(),
         decode_slots: 2,
         queue_capacity: 64,
+        backend: test_backend(),
         ..Default::default()
     }
 }
@@ -61,7 +76,6 @@ fn tiny_adapter(rt: &Rc<Runtime>, seed: u64) -> Adapter {
 /// result token for token.
 #[test]
 fn streamed_tokens_concatenate_to_one_shot_output() {
-    require_artifacts!();
     let rt = rt();
     let adapter = tiny_adapter(&rt, 17);
     let mk_reqs = || {
@@ -132,7 +146,6 @@ fn streamed_tokens_concatenate_to_one_shot_output() {
 /// cancellation, and the freed lane serves new work.
 #[test]
 fn cancel_mid_decode_frees_slot_and_unpins_bank() {
-    require_artifacts!();
     let rt = rt();
     let adapter = tiny_adapter(&rt, 4);
     let mut eng = Engine::new(rt.clone(), tiny_econf("road")).unwrap();
@@ -171,7 +184,6 @@ fn cancel_mid_decode_frees_slot_and_unpins_bank() {
 /// empty Cancelled output.
 #[test]
 fn cancel_queued_request_before_admission() {
-    require_artifacts!();
     let rt = rt();
     let mut eng = Engine::new(rt.clone(), tiny_econf("base")).unwrap();
     // Fill both slots, then queue a third.
@@ -202,7 +214,6 @@ fn cancel_queued_request_before_admission() {
 /// exact virtual jump, not a sleep.
 #[test]
 fn expired_queued_requests_are_shed() {
-    require_artifacts!();
     let rt = rt();
     let clock = Clock::manual();
     let mut eng = Engine::new(rt.clone(), tiny_econf_clocked("base", clock.clone())).unwrap();
@@ -242,7 +253,6 @@ fn expired_queued_requests_are_shed() {
 /// runs out mid-generation is reaped — slot freed, typed error emitted.
 #[test]
 fn expired_inflight_request_is_reaped() {
-    require_artifacts!();
     let rt = rt();
     let clock = Clock::manual();
     let mut eng = Engine::new(rt.clone(), tiny_econf_clocked("base", clock.clone())).unwrap();
@@ -279,7 +289,6 @@ fn expired_inflight_request_is_reaped() {
 /// risk of actually expiring.
 #[test]
 fn engine_respects_edf_admission_order() {
-    require_artifacts!();
     let rt = rt();
     let clock = Clock::manual();
     let mut econf = tiny_econf_clocked("base", clock.clone());
@@ -313,7 +322,6 @@ fn engine_respects_edf_admission_order() {
 /// serving.
 #[test]
 fn dropped_generation_cancels_and_does_not_leak() {
-    require_artifacts!();
     let dir = road::Manifest::default_dir();
     let (server, client) = EngineServer::start(tiny_econf("base"), dir, |_| Ok(())).unwrap();
 
@@ -355,7 +363,6 @@ fn dropped_generation_cancels_and_does_not_leak() {
 /// `Finished(Cancelled)` carrying the tokens observed so far.
 #[test]
 fn explicit_cancel_yields_cancelled_finish() {
-    require_artifacts!();
     let dir = road::Manifest::default_dir();
     let (server, client) = EngineServer::start(tiny_econf("base"), dir, |_| Ok(())).unwrap();
     let mut generation = client.submit(greedy(&[3, 1, 4], 120)).unwrap();
@@ -396,7 +403,6 @@ fn explicit_cancel_yields_cancelled_finish() {
 /// stats op answered — the CI smoke test's in-process twin.
 #[test]
 fn ndjson_loopback_round_trip() {
-    require_artifacts!();
     use road::util::json::Json;
     use std::io::{BufRead, BufReader, Write};
 

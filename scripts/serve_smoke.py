@@ -1,13 +1,19 @@
 #!/usr/bin/env python3
 """Smoke test for the NDJSON serving front door.
 
-Starts `road serve --listen 127.0.0.1:0` (the engine picks a free port and
-prints it), round-trips one NDJSON generate request over loopback, and
-asserts the streamed event grammar ends in a `finished` event.
+Runs up to two scenarios:
 
-Mirrors the artifact-gated integration tests: when the AOT artifacts are
-absent (no `make artifacts` yet), it skips cleanly with exit 0 — CI runs it
-unconditionally.
+  * reference backend (`--backend ref`) — always: the pure-Rust reference
+    model needs no artifacts, so the loopback round-trip runs
+    unconditionally in CI.
+  * pjrt backend (the default) — only when the AOT artifacts are present
+    (`make artifacts`); otherwise that variant is skipped, mirroring the
+    artifact-gated integration tests.
+
+Each scenario starts `road serve --listen 127.0.0.1:0` (the engine picks a
+free port and prints it), round-trips one NDJSON generate request over
+loopback, and asserts the streamed event grammar ends in a `finished`
+event.
 
 Environment:
   ROAD_BIN          path to the road binary (default target/release/road)
@@ -43,18 +49,14 @@ def artifacts_dir():
         d = d.parent
 
 
-def main():
-    if artifacts_dir() is None:
-        print("serve smoke: AOT artifacts not found (run `make artifacts` first); skipping")
-        return 0
-
+def run_scenario(backend):
     binary = os.environ.get("ROAD_BIN", str(ROOT / "target" / "release" / "road"))
     model = os.environ.get("ROAD_SMOKE_MODEL", "tiny")
     cmd = [
-        binary, "serve", "--listen", "127.0.0.1:0",
+        binary, "serve", "--listen", "127.0.0.1:0", "--backend", backend,
         "--model", model, "--mode", "base", "--slots", "2", "--distinct", "0",
     ]
-    print("serve smoke:", " ".join(cmd))
+    print(f"serve smoke [{backend}]:", " ".join(cmd))
     proc = subprocess.Popen(
         cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
     )
@@ -68,7 +70,7 @@ def main():
                 addr = line.split()[-1]
                 break
         if addr is None:
-            print("serve smoke: FAIL — server exited before listening")
+            print(f"serve smoke [{backend}]: FAIL — server exited before listening")
             return 1
 
         host, port = addr.rsplit(":", 1)
@@ -81,17 +83,17 @@ def main():
             deadline = time.time() + 120
             while True:
                 if time.time() > deadline:
-                    print("serve smoke: FAIL — timed out waiting for finished")
+                    print(f"serve smoke [{backend}]: FAIL — timed out waiting for finished")
                     return 1
                 line = reader.readline()
                 if not line:
-                    print("serve smoke: FAIL — connection closed early")
+                    print(f"serve smoke [{backend}]: FAIL — connection closed early")
                     return 1
                 ev = json.loads(line)
                 print("[event]", json.dumps(ev))
                 events.append(ev["event"])
                 if ev["event"] == "error":
-                    print("serve smoke: FAIL — error event:", ev)
+                    print(f"serve smoke [{backend}]: FAIL — error event:", ev)
                     return 1
                 if ev["event"] == "finished":
                     assert ev["finish"] == "max_tokens", ev
@@ -101,7 +103,7 @@ def main():
 
         assert events[0] == "admitted", events
         assert events.count("token") == 4, events
-        print("serve smoke: OK —", " → ".join(events))
+        print(f"serve smoke [{backend}]: OK —", " → ".join(events))
         return 0
     finally:
         proc.terminate()
@@ -109,6 +111,18 @@ def main():
             proc.wait(timeout=10)
         except subprocess.TimeoutExpired:
             proc.kill()
+
+
+def main():
+    # The reference backend is artifact-free: this leg always runs.
+    rc = run_scenario("ref")
+    if rc != 0:
+        return rc
+
+    if artifacts_dir() is None:
+        print("serve smoke [pjrt]: AOT artifacts not found (run `make artifacts` first); skipping")
+        return 0
+    return run_scenario("pjrt")
 
 
 if __name__ == "__main__":
