@@ -1,0 +1,118 @@
+//! `roadlint` — repo-invariant static analysis for the road serving
+//! stack.
+//!
+//! The serving stack's headline guarantees (deterministic replay on the
+//! virtual clock, panic-free peer-facing paths, the artifact-gate budget,
+//! the typed wire-error taxonomy) were enforced by convention plus one
+//! shell `grep` in CI.  This crate turns each of them into a named,
+//! individually testable rule over a token-level scan of `rust/src` and
+//! `rust/tests` — see docs/DESIGN.md §Static analysis for the rule table
+//! and the escape-hatch policy.
+//!
+//! Run it as `cargo run -p roadlint -- check [--json] [--root DIR]`.
+
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use rules::{Finding, RepoContext};
+use scanner::SourceFile;
+
+/// Load and scan every `.rs` file under `<root>/rust/src` and
+/// `<root>/rust/tests`, plus the docs the drift rules cross-check.
+pub fn load_repo(root: &Path) -> Result<RepoContext, String> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/tests"] {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        collect_rs(&dir, &mut paths)?;
+        for p in paths {
+            let src = std::fs::read_to_string(&p)
+                .map_err(|e| format!("read {}: {e}", p.display()))?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            files.push(SourceFile::scan(&rel, &src));
+        }
+    }
+    if files.is_empty() {
+        return Err(format!(
+            "no Rust sources under {}/rust/{{src,tests}} — wrong --root?",
+            root.display()
+        ));
+    }
+    // Deterministic finding order regardless of directory iteration order.
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    let design_md = std::fs::read_to_string(root.join("docs/DESIGN.md")).unwrap_or_default();
+    Ok(RepoContext { files, design_md })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every registered rule and apply the escape-hatch filter.  The
+/// returned findings are what `check` prints and exits nonzero on.
+pub fn check(root: &Path) -> Result<Vec<Finding>, String> {
+    let ctx = load_repo(root)?;
+    Ok(rules::run_all(&ctx))
+}
+
+/// Render findings as a stable JSON array (hand-rolled: this crate is
+/// dependency-free by design).
+pub fn findings_to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"rule\":{},\"path\":{},\"line\":{},\"message\":{}}}",
+            json_str(f.rule),
+            json_str(&f.path),
+            f.line,
+            json_str(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}

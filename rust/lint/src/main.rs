@@ -1,0 +1,75 @@
+//! `roadlint` CLI.
+//!
+//! ```text
+//! cargo run -p roadlint -- check [--json] [--root DIR]
+//! cargo run -p roadlint -- rules
+//! ```
+//!
+//! `check` exits 0 when the repo is clean, 1 on any unallowed finding,
+//! 2 on usage/IO errors.  `--json` emits the findings as a JSON array
+//! (stable field order) for CI and tooling; the default is
+//! `path:line: [rule] message`, one finding per line.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut json = false;
+    let mut root = PathBuf::from(".");
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "check" | "rules" if cmd.is_none() => cmd = Some(a.clone()),
+            "--json" => json = true,
+            "--root" => match it.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => return usage("--root needs a directory"),
+            },
+            other => return usage(&format!("unknown argument {other:?}")),
+        }
+    }
+    match cmd.as_deref() {
+        Some("rules") => {
+            for rule in roadlint::rules::registry() {
+                println!("{:24} {}", rule.name, rule.description);
+            }
+            ExitCode::SUCCESS
+        }
+        Some("check") => check(&root, json),
+        _ => usage("expected a command: check | rules"),
+    }
+}
+
+fn check(root: &std::path::Path, json: bool) -> ExitCode {
+    let findings = match roadlint::check(root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("roadlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", roadlint::findings_to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+        }
+        if findings.is_empty() {
+            println!("roadlint: clean ({} rules)", roadlint::rules::registry().len());
+        } else {
+            println!("roadlint: {} finding(s)", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    eprintln!("roadlint: {err}\nusage: roadlint check [--json] [--root DIR] | roadlint rules");
+    ExitCode::from(2)
+}

@@ -1,0 +1,58 @@
+//! **artifact-gate-budget** — end-to-end coverage must not drain back
+//! behind the artifact gate.
+//!
+//! PR 5's reference backend un-gated the integration suites; the tests
+//! still carrying `require_artifacts!()` are exactly the ones where PJRT
+//! numerics are the point (golden records, the trainer, the
+//! cross-backend oracle).  The gate is counted *statically* — libtest
+//! captures the skip notices of passing tests, so grepping test output
+//! would always see zero — and held to a hard budget: a new gated test
+//! fails the lint until the budget here is consciously raised.
+//!
+//! This rule replaces the shell `grep | wc -l` step that used to live in
+//! `.github/workflows/ci.yml` ("check the discipline, not the author" —
+//! and not the shell quoting either).
+
+use super::{code_matches, Finding, RepoContext};
+
+pub const NAME: &str = "artifact-gate-budget";
+
+/// The allowed number of `require_artifacts!()` call sites under
+/// `rust/tests`.  Raising this number is a reviewed decision: it means a
+/// test that could run on the reference backend was parked behind the
+/// artifact gate instead.
+pub const BUDGET: usize = 17;
+
+pub fn check(ctx: &RepoContext) -> Vec<Finding> {
+    let mut sites: Vec<(String, usize)> = Vec::new();
+    for file in &ctx.files {
+        if !file.rel.starts_with("rust/tests/") {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            for _ in code_matches(&line.code, "require_artifacts!") {
+                sites.push((file.rel.clone(), i + 1));
+            }
+        }
+    }
+    if sites.len() <= BUDGET {
+        return Vec::new();
+    }
+    // One finding per over-budget site (the budget covers the first
+    // BUDGET in file order; the overflow is what gets pointed at).
+    sites
+        .iter()
+        .skip(BUDGET)
+        .map(|(path, line)| Finding {
+            rule: NAME,
+            path: path.clone(),
+            line: *line,
+            message: format!(
+                "{} require_artifacts!() call sites exceed the budget of {BUDGET} — \
+                 port the test to the reference backend, or raise BUDGET in \
+                 rust/lint/src/rules/artifact_budget.rs with a rationale",
+                sites.len()
+            ),
+        })
+        .collect()
+}

@@ -1,0 +1,47 @@
+//! **bounded-channels** — unbounded fan-out on the connection plane is
+//! an invariant violation, not a default.
+//!
+//! A slow reader on an unbounded channel buffers tokens without limit;
+//! at 10k+ concurrent streams that is the memory ceiling (ROADMAP item
+//! 4).  Constructing `mpsc::channel()` in `coordinator/net.rs` or
+//! `coordinator/server.rs` therefore requires either a bounded
+//! `sync_channel` (rendezvous handshakes carry exactly one message —
+//! capacity 1 is free) or a justified
+//! `// roadlint: allow(bounded-channels)` escape naming the teardown
+//! path that bounds the buffer in practice.
+
+use super::{code_matches, Finding, RepoContext};
+
+pub const NAME: &str = "bounded-channels";
+
+const FILES: [&str; 2] = ["rust/src/coordinator/net.rs", "rust/src/coordinator/server.rs"];
+
+pub fn check(ctx: &RepoContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        if !FILES.contains(&file.rel.as_str()) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            // `code_matches` is identifier-boundary-aware, so
+            // `sync_channel()` never matches the `channel()` needle.
+            if !code_matches(&line.code, "channel()").is_empty()
+                || !code_matches(&line.code, "channel::<").is_empty()
+            {
+                out.push(Finding {
+                    rule: NAME,
+                    path: file.rel.clone(),
+                    line: i + 1,
+                    message: "unbounded mpsc::channel() on the connection plane — use \
+                              sync_channel (capacity 1 for rendezvous) or justify the \
+                              escape with the path that bounds the buffer"
+                        .into(),
+                });
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,51 @@
+//! **clock-discipline** — wall time must be injectable.
+//!
+//! Deterministic replay (docs/DESIGN.md §Scheduling, §Determinism) hangs
+//! on one discipline: every timestamp the stack takes goes through
+//! `util/clock.rs::Clock`, so a manual clock can substitute virtual time
+//! everywhere at once.  A single direct `Instant::now()` in a replayed
+//! path silently re-couples the run to the host scheduler — the exact
+//! decay this rule exists to stop.
+//!
+//! Scope: non-test code under `rust/src/`.  Exempt: `util/clock.rs` (the
+//! one place allowed to touch the real clock), `#[cfg(test)]` modules,
+//! and anything outside `rust/src` (integration tests and the
+//! plain-binary benches under `rust/benches/` measure real wall time by
+//! design).  Wall-time *profiling* of real hardware execution is
+//! legitimate but must carry a justified
+//! `// roadlint: allow(clock-discipline)` escape so each site is an
+//! audited decision, not an accident.
+
+use super::{code_matches, Finding, RepoContext};
+
+pub const NAME: &str = "clock-discipline";
+
+const PATTERNS: [&str; 2] = ["Instant::now()", "SystemTime::now()"];
+
+pub fn check(ctx: &RepoContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        if !file.rel.starts_with("rust/src/") || file.rel == "rust/src/util/clock.rs" {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for pat in PATTERNS {
+                if !code_matches(&line.code, pat).is_empty() {
+                    out.push(Finding {
+                        rule: NAME,
+                        path: file.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "direct {pat} — take time from util/clock.rs::Clock so this \
+                             path stays replayable on a manual clock"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}

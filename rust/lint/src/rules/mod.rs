@@ -1,0 +1,222 @@
+//! Rule registry, the [`Finding`] type, and the escape-hatch filter.
+//!
+//! Every rule is a function from a scanned repo to findings.  A finding
+//! survives unless the flagged line (or the line above it) carries a
+//! justified escape:
+//!
+//! ```text
+//! // roadlint: allow(clock-discipline) -- wall-time profiling of real
+//! // hardware execution; no virtual-time replay path runs through here.
+//! ```
+//!
+//! The justification (any text after `allow(<rule>)`, conventionally
+//! introduced with `--`) is mandatory: a bare `allow` is itself a
+//! finding, so silencing a rule always costs a written rationale that
+//! reviewers and future sessions can audit.
+
+pub mod artifact_budget;
+pub mod channels;
+pub mod clock;
+pub mod panic_free;
+pub mod sleep;
+pub mod typed_errors;
+
+use crate::scanner::SourceFile;
+
+/// Everything the rules see: the scanned sources plus the docs that
+/// drift rules cross-check against.
+pub struct RepoContext {
+    pub files: Vec<SourceFile>,
+    /// docs/DESIGN.md content ("" when absent — the typed-error rule then
+    /// reports every wire string as undocumented).
+    pub design_md: String,
+}
+
+/// One rule violation, pointing at `path:line`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative `/`-separated path.
+    pub path: String,
+    /// 1-indexed; 0 for repo-level findings with no single site.
+    pub line: usize,
+    pub message: String,
+}
+
+/// A registered rule: stable name (the `allow(...)` key) + checker.
+pub struct RuleDef {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub check: fn(&RepoContext) -> Vec<Finding>,
+}
+
+/// The registry, in reporting order.  Adding a rule = adding a row here
+/// (and a fixture pair under `tests/fixtures/`).
+pub fn registry() -> Vec<RuleDef> {
+    vec![
+        RuleDef {
+            name: clock::NAME,
+            description: "no Instant::now()/SystemTime::now() outside util/clock.rs \
+                          (wall time must be injectable for deterministic replay)",
+            check: clock::check,
+        },
+        RuleDef {
+            name: sleep::NAME,
+            description: "no thread::sleep in rust/src/bench or rust/tests \
+                          (benches and tests pace on the virtual clock)",
+            check: sleep::check,
+        },
+        RuleDef {
+            name: artifact_budget::NAME,
+            description: "require_artifacts!() call sites are budgeted so coverage \
+                          cannot drain back behind the artifact gate",
+            check: artifact_budget::check,
+        },
+        RuleDef {
+            name: panic_free::NAME,
+            description: "no unwrap/expect/panic! in non-test coordinator code \
+                          (a malformed peer or lost invariant must not kill a serving thread)",
+            check: panic_free::check,
+        },
+        RuleDef {
+            name: typed_errors::NAME,
+            description: "no Result<_, String> in coordinator code; every EngineError::kind() \
+                          wire string must appear in docs/DESIGN.md",
+            check: typed_errors::check,
+        },
+        RuleDef {
+            name: channels::NAME,
+            description: "no unbounded mpsc::channel() in net.rs/server.rs without a \
+                          justified escape (flow control is a stated invariant)",
+            check: channels::check,
+        },
+    ]
+}
+
+/// Run every rule and apply the escape-hatch filter.
+pub fn run_all(ctx: &RepoContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for rule in registry() {
+        let raw = (rule.check)(ctx);
+        out.extend(apply_allows(ctx, rule.name, raw));
+    }
+    out
+}
+
+/// Filter findings through `// roadlint: allow(<rule>)` directives, and
+/// convert unjustified directives into findings of their own.
+fn apply_allows(ctx: &RepoContext, rule: &'static str, raw: Vec<Finding>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in raw {
+        match allow_at(ctx, rule, &f.path, f.line) {
+            Allow::Justified => {}
+            Allow::Unjustified(dir_line) => out.push(Finding {
+                rule,
+                path: f.path.clone(),
+                line: dir_line,
+                message: format!(
+                    "roadlint: allow({rule}) needs a justification — \
+                     write `// roadlint: allow({rule}) -- <why this site is exempt>`"
+                ),
+            }),
+            Allow::None => out.push(f),
+        }
+    }
+    out
+}
+
+enum Allow {
+    None,
+    Justified,
+    /// Directive present but bare; carries the directive's line.
+    Unjustified(usize),
+}
+
+/// Look for an `allow(<rule>)` directive covering `line` (1-indexed): on
+/// the line itself, or on an immediately preceding run of comment-only
+/// lines (so a directive + multi-line justification block above the
+/// flagged statement works).
+fn allow_at(ctx: &RepoContext, rule: &str, path: &str, line: usize) -> Allow {
+    let Some(file) = ctx.files.iter().find(|f| f.rel == path) else {
+        return Allow::None;
+    };
+    if line == 0 || line > file.lines.len() {
+        return Allow::None;
+    }
+    let mut candidates = vec![line - 1];
+    // Walk up through comment-only lines above the flagged one.
+    let mut i = line - 1;
+    while i > 0 {
+        i -= 1;
+        let l = &file.lines[i];
+        if l.code.trim().is_empty() && !l.comment.is_empty() {
+            candidates.push(i);
+        } else {
+            break;
+        }
+    }
+    for &idx in &candidates {
+        let comment = &file.lines[idx].comment;
+        let needle = format!("roadlint: allow({rule})");
+        if let Some(pos) = comment.find(&needle) {
+            let mut rest = comment[pos + needle.len()..].trim().to_string();
+            // The justification may continue on following comment lines.
+            let mut j = idx + 1;
+            while j < line - 1 {
+                rest.push(' ');
+                rest.push_str(file.lines[j].comment.trim());
+                j += 1;
+            }
+            let just: String =
+                rest.chars().filter(|c| c.is_alphanumeric() || c.is_whitespace()).collect();
+            if just.split_whitespace().count() >= 3 {
+                return Allow::Justified;
+            }
+            return Allow::Unjustified(idx + 1);
+        }
+    }
+    Allow::None
+}
+
+/// Shared matcher: every occurrence of `needle` in a line's code view.
+/// When the needle starts with an identifier character, the preceding
+/// character must not be part of an identifier (so `sync_channel()`
+/// never matches a `channel()` needle); needles that start with
+/// punctuation (`.unwrap()`) are naturally glued to their receiver and
+/// skip that check.
+pub fn code_matches(code: &str, needle: &str) -> Vec<usize> {
+    let needs_boundary =
+        needle.chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(needle) {
+        let at = from + pos;
+        let boundary = !needs_boundary
+            || at == 0
+            || !code[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if boundary {
+            hits.push(at);
+        }
+        from = at + needle.len();
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::code_matches;
+
+    #[test]
+    fn ident_needles_respect_identifier_boundaries() {
+        assert_eq!(code_matches("let (a, b) = channel();", "channel()"), vec![13]);
+        assert!(code_matches("let (a, b) = sync_channel(1);", "channel()").is_empty());
+        assert!(code_matches("let (a, b) = sync_channel::<u32>(1);", "channel::<").is_empty());
+    }
+
+    #[test]
+    fn punctuation_needles_match_after_their_receiver() {
+        assert_eq!(code_matches("v.unwrap()", ".unwrap()"), vec![1]);
+        assert_eq!(code_matches("x.expect(\"\")", ".expect("), vec![1]);
+        assert_eq!(code_matches("a.unwrap().b.unwrap()", ".unwrap()").len(), 2);
+    }
+}

@@ -1,0 +1,67 @@
+//! **no-panic-hot-path** — a serving thread must not be killable.
+//!
+//! Everything under `rust/src/coordinator/` sits on a path a peer talks
+//! to: the NDJSON front door, the engine thread, the admission queue.
+//! A panic there takes down a thread holding decode slots, bank pins,
+//! and client channels — the failure a typed error taxonomy exists to
+//! prevent.  So non-test coordinator code may not `unwrap`/`expect`/
+//! `panic!` (nor `unreachable!`/`todo!`/`unimplemented!`).
+//!
+//! Allowlisted idiom: `.lock().unwrap()` / `.lock().expect(…)` (and the
+//! RwLock `read`/`write` forms).  Lock poisoning means a *different*
+//! thread already panicked while holding the lock; propagating is the
+//! std-sanctioned idiom and strictly better than silently touching state
+//! a dead thread left half-updated.
+//!
+//! Genuine can't-happen invariants (e.g. "prefill always pushes one
+//! token before a slot activates") may carry a justified
+//! `// roadlint: allow(no-panic-hot-path)` escape — the justification is
+//! the reviewer-facing proof obligation.
+
+use super::{code_matches, Finding, RepoContext};
+
+pub const NAME: &str = "no-panic-hot-path";
+
+const PATTERNS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Poisoning-propagation receivers allowed directly before `.unwrap()` /
+/// `.expect(`.
+const LOCK_RECEIVERS: [&str; 3] = [".lock()", ".read()", ".write()"];
+
+pub fn check(ctx: &RepoContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        if !file.rel.starts_with("rust/src/coordinator/") {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for pat in PATTERNS {
+                for at in code_matches(&line.code, pat) {
+                    if is_lock_poisoning(&line.code, at) {
+                        continue;
+                    }
+                    out.push(Finding {
+                        rule: NAME,
+                        path: file.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "{} in non-test coordinator code — return a typed \
+                             EngineError / restructure with let-else, or justify a \
+                             roadlint allow for a proven invariant",
+                            pat.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn is_lock_poisoning(code: &str, at: usize) -> bool {
+    LOCK_RECEIVERS.iter().any(|r| code[..at].ends_with(r))
+}

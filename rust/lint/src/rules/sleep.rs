@@ -1,0 +1,40 @@
+//! **no-sleep** — benches and tests pace on the clock, not the thread.
+//!
+//! `Clock::sleep_until` is how arrival processes wait: a real sleep on
+//! the wall clock, an instantaneous jump on a manual one.  A raw
+//! `thread::sleep` in `rust/src/bench` or `rust/tests` re-introduces
+//! real-time coupling (slow suites, flaky timing assertions) and breaks
+//! the `--sim-clock` promise that studies run sleep-free.
+//!
+//! Scope: all code (test modules included — that is the point) under
+//! `rust/src/bench` and `rust/tests`.  `util/clock.rs` itself is out of
+//! scope: it is where the one real sleep lives.
+
+use super::{code_matches, Finding, RepoContext};
+
+pub const NAME: &str = "no-sleep";
+
+pub fn check(ctx: &RepoContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        if !(file.rel.starts_with("rust/src/bench") || file.rel.starts_with("rust/tests/")) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if !code_matches(&line.code, "thread::sleep").is_empty()
+                || !code_matches(&line.code, "sleep_ms").is_empty()
+            {
+                out.push(Finding {
+                    rule: NAME,
+                    path: file.rel.clone(),
+                    line: i + 1,
+                    message: "thread::sleep in a bench/test path — pace on \
+                              Clock::sleep_until (virtual on --sim-clock) or advance a \
+                              manual clock instead"
+                        .into(),
+                });
+            }
+        }
+    }
+    out
+}

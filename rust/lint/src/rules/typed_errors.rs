@@ -1,0 +1,157 @@
+//! **typed-error-discipline** — errors cross boundaries as types, and
+//! the wire taxonomy may not drift from its documentation.
+//!
+//! Two checks:
+//!
+//! 1. No `Result<_, String>` in non-test coordinator code.  PR 3 removed
+//!    the last stringly-typed channel payloads; this keeps them out.
+//!    (Token-level caveat: the scan is per-line, so a signature split
+//!    across lines right at the error type could evade it — rustfmt's
+//!    layout of this codebase does not do that.)
+//!
+//! 2. Every `EngineError::kind()` wire string (the stable `"error"`
+//!    field clients switch on) must appear verbatim in docs/DESIGN.md.
+//!    Adding a variant without documenting its wire name is protocol
+//!    drift — exactly the class of decay a reviewer misses and a tool
+//!    does not.  The rule also fails loudly if `fn kind(` moves out of
+//!    `coordinator/queue.rs`, so the check can never silently go dead.
+
+use super::{Finding, RepoContext};
+use crate::scanner::SourceFile;
+
+pub const NAME: &str = "typed-error-discipline";
+
+/// Where the wire taxonomy lives today.
+const KIND_FILE: &str = "rust/src/coordinator/queue.rs";
+
+pub fn check(ctx: &RepoContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    for file in &ctx.files {
+        if !file.rel.starts_with("rust/src/coordinator/") {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            if has_string_error_result(&line.code) {
+                out.push(Finding {
+                    rule: NAME,
+                    path: file.rel.clone(),
+                    line: i + 1,
+                    message: "Result<_, String> in coordinator code — use the typed \
+                              EngineError taxonomy (docs/DESIGN.md §Error taxonomy)"
+                        .into(),
+                });
+            }
+        }
+    }
+
+    out.extend(check_wire_drift(ctx));
+    out
+}
+
+/// Does this line's code contain a `Result<…, String>` type?  Walks the
+/// angle brackets so `Result<Vec<T>, String>` matches but
+/// `Result<String, EngineError>` does not.
+fn has_string_error_result(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("Result<") {
+        let start = from + pos + "Result<".len();
+        let mut depth = 1u32;
+        let mut err_start = None;
+        for (off, c) in code[start..].char_indices() {
+            match c {
+                '<' | '(' | '[' => depth += 1,
+                '>' | ')' | ']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        if let Some(e) = err_start {
+                            let err_ty = code[start + e..start + off].trim();
+                            if err_ty == "String" {
+                                return true;
+                            }
+                        }
+                        break;
+                    }
+                }
+                ',' if depth == 1 => err_start = Some(off + 1),
+                _ => {}
+            }
+        }
+        from = start;
+    }
+    false
+}
+
+fn check_wire_drift(ctx: &RepoContext) -> Vec<Finding> {
+    let Some(file) = ctx.files.iter().find(|f| f.rel == KIND_FILE) else {
+        return vec![Finding {
+            rule: NAME,
+            path: KIND_FILE.into(),
+            line: 0,
+            message: format!(
+                "{KIND_FILE} not found — if EngineError moved, update KIND_FILE in \
+                 rust/lint/src/rules/typed_errors.rs so wire-drift checking stays live"
+            ),
+        }];
+    };
+    let Some((body_start, body_end)) = kind_fn_span(file) else {
+        return vec![Finding {
+            rule: NAME,
+            path: KIND_FILE.into(),
+            line: 0,
+            message: "no `fn kind(` found in queue.rs — the wire-drift check lost its \
+                      anchor; update rust/lint/src/rules/typed_errors.rs"
+                .into(),
+        }];
+    };
+    let mut out = Vec::new();
+    for i in body_start..=body_end {
+        for s in &file.lines[i].strings {
+            if s.is_empty() {
+                continue;
+            }
+            if !ctx.design_md.contains(s.as_str()) {
+                out.push(Finding {
+                    rule: NAME,
+                    path: KIND_FILE.into(),
+                    line: i + 1,
+                    message: format!(
+                        "wire error kind {s:?} is not documented in docs/DESIGN.md — \
+                         clients switch on this string; document it where the taxonomy \
+                         lives (§Streaming protocol / §Error taxonomy)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// 0-indexed (start, end) line span of the `fn kind(` body, located by
+/// brace matching from the signature line.
+fn kind_fn_span(file: &SourceFile) -> Option<(usize, usize)> {
+    let start = file.lines.iter().position(|l| l.code.contains("fn kind("))?;
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (i, line) in file.lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some((start, i));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}

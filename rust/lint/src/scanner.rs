@@ -1,0 +1,358 @@
+//! Token-level Rust scanner: the shared substrate every rule matches
+//! against.
+//!
+//! This is deliberately *not* a Rust parser.  Each source file is lexed
+//! once into per-line views where rules can match patterns without being
+//! fooled by the three classic grep failure modes:
+//!
+//! - **comments** — `// calls Instant::now()` in a doc comment is not a
+//!   violation; comment text is split out of the code view (and kept,
+//!   because the `// roadlint: allow(...)` escape hatch lives there),
+//! - **string literals** — `"unwrap()"` inside a test-assertion message
+//!   is not a panic site; literal *contents* are blanked from the code
+//!   view but collected per line (the typed-error rule reads the
+//!   `EngineError::kind()` wire strings out of them),
+//! - **test code** — `#[cfg(test)]` items get their line spans marked so
+//!   rules that only govern production paths can skip them.
+//!
+//! The lexer understands line/nested-block comments, plain and raw
+//! string literals (`r"…"`, `r#"…"#`), byte strings, char literals vs
+//! lifetimes, and escapes.  That is enough to make the rules exact on
+//! this codebase while keeping the scanner a few hundred lines of std.
+
+/// One source line, split into the views rules match against.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code text: comments removed, string/char literal contents blanked
+    /// (delimiters kept, so `"x"` scans as `""`).
+    pub code: String,
+    /// Comment text on this line (line + block comments, concatenated).
+    pub comment: String,
+    /// String-literal contents that appear on this line, in order.
+    pub strings: Vec<String>,
+    /// True when the line sits inside a `#[cfg(test)]` item's braces
+    /// (or is the attribute itself).
+    pub in_test: bool,
+}
+
+/// A scanned source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the checked root, `/`-separated.
+    pub rel: String,
+    /// 0-indexed lines; rules report `index + 1`.
+    pub lines: Vec<Line>,
+}
+
+impl SourceFile {
+    pub fn scan(rel: &str, src: &str) -> SourceFile {
+        let mut lines = lex(src);
+        mark_test_spans(&mut lines);
+        SourceFile { rel: rel.to_string(), lines }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nested depth.
+    BlockComment(u32),
+    Str,
+    /// Number of `#` delimiters.
+    RawStr(u32),
+    Char,
+}
+
+fn lex(src: &str) -> Vec<Line> {
+    let mut out: Vec<Line> = vec![Line::default()];
+    let mut mode = Mode::Code;
+    let mut cur_str = String::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            match mode {
+                Mode::LineComment => mode = Mode::Code,
+                Mode::Str | Mode::RawStr(_) => cur_str.push('\n'),
+                _ => {}
+            }
+            out.push(Line::default());
+            i += 1;
+            continue;
+        }
+        let line = out.last_mut().expect("lex starts with one line");
+        match mode {
+            Mode::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&line.code) {
+                    // Raw/byte string starts: r", r#", br", b".
+                    let (skip, hashes) = raw_string_start(&b[i..]);
+                    if skip > 0 {
+                        line.code.push('"');
+                        mode = if hashes == u32::MAX { Mode::Str } else { Mode::RawStr(hashes) };
+                        i += skip;
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: '\x' / 'x' followed by a
+                    // closing quote is a literal; anything else ('a in
+                    // generics, 'static) stays in the code view.
+                    if next == Some('\\') {
+                        line.code.push_str("''");
+                        mode = Mode::Char;
+                        i += 2; // consume the backslash with the quote
+                        if i < b.len() {
+                            i += 1; // and the escaped char
+                        }
+                    } else if b.get(i + 2).copied() == Some('\'') && next != Some('\'') {
+                        line.code.push_str("''");
+                        i += 3;
+                    } else {
+                        line.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    line.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                line.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(d) => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if d == 1 { Mode::Code } else { Mode::BlockComment(d - 1) };
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    cur_str.push(c);
+                    if let Some(&n) = b.get(i + 1) {
+                        cur_str.push(n);
+                        // A line-continuation escape (`\` at end of line)
+                        // still ends a physical line — line numbers must
+                        // track the file, not the string's logical value.
+                        if n == '\n' {
+                            out.push(Line::default());
+                        }
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    line.strings.push(std::mem::take(&mut cur_str));
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    cur_str.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&b[i + 1..], hashes) {
+                    line.code.push('"');
+                    line.strings.push(std::mem::take(&mut cur_str));
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    cur_str.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                // Inside an escaped char literal, looking for the close.
+                if c == '\'' {
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Does `&chars[..]` start a raw/byte string (`r"`, `r#"`, `br"`, `b"`)?
+/// Returns (chars consumed through the opening quote, hash count) — hash
+/// count `u32::MAX` means "plain (escaped) string body", 0 means `r"`.
+fn raw_string_start(chars: &[char]) -> (usize, u32) {
+    let mut j = 0;
+    if chars.first() == Some(&'b') {
+        j += 1;
+    }
+    let raw = chars.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return (0, 0);
+    }
+    if !raw {
+        if hashes > 0 {
+            return (0, 0); // b#" is not a thing
+        }
+        return (j + 1, u32::MAX); // b"…": escaped body
+    }
+    (j + 1, hashes)
+}
+
+fn closes_raw(rest: &[char], hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| rest.get(k) == Some(&'#'))
+}
+
+/// Mark the line span of every `#[cfg(test)]` item (in this codebase,
+/// `#[cfg(test)] mod tests { … }`): from the attribute through the
+/// matching close brace of the next block.
+fn mark_test_spans(lines: &mut [Line]) {
+    let n = lines.len();
+    let mut i = 0;
+    while i < n {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Walk forward to the item's opening brace, then brace-match.
+        let mut depth: i32 = 0;
+        let mut opened = false;
+        let mut j = i;
+        'span: while j < n {
+            lines[j].in_test = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'span;
+                        }
+                    }
+                    // An un-braced item terminator before any brace
+                    // (e.g. `#[cfg(test)] use foo;`) ends the span.
+                    ';' if !opened && depth == 0 => break 'span,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> SourceFile {
+        SourceFile::scan("x.rs", src)
+    }
+
+    #[test]
+    fn comments_leave_the_code_view() {
+        let f = scan("let x = 1; // Instant::now() here is prose\n/* unwrap() */ let y = 2;\n");
+        assert!(!f.lines[0].code.contains("Instant::now"));
+        assert!(f.lines[0].comment.contains("Instant::now"));
+        assert!(!f.lines[1].code.contains("unwrap"));
+        assert!(f.lines[1].code.contains("let y"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = scan("/* a /* b */ still comment */ code();\n");
+        assert_eq!(f.lines[0].code.trim(), "code();");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_collected() {
+        let f = scan(r#"let s = "call unwrap() now"; f(s);"#);
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code.contains(r#""""#));
+        assert_eq!(f.lines[0].strings, vec!["call unwrap() now"]);
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let f = scan("let a = r#\"has \"quotes\" and unwrap()\"#; let b = \"esc\\\"aped\";\n");
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert_eq!(f.lines[0].strings.len(), 2);
+        assert!(f.lines[0].strings[0].contains("unwrap()"));
+        assert!(f.lines[0].strings[1].contains("esc"));
+    }
+
+    #[test]
+    fn multiline_strings_span_lines() {
+        let f = scan("let a = \"line one\nthread::sleep inside\"; done();\n");
+        assert!(!f.lines[1].code.contains("thread::sleep"));
+        assert!(f.lines[1].code.contains("done()"));
+        assert_eq!(f.lines[1].strings[0], "line one\nthread::sleep inside");
+    }
+
+    #[test]
+    fn lifetimes_stay_char_literals_go() {
+        let f = scan("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }\n");
+        assert!(f.lines[0].code.contains("<'a>"));
+        assert!(f.lines[0].code.contains("&'a str"));
+        assert!(!f.lines[0].code.contains("'x'"));
+    }
+
+    #[test]
+    fn line_continuation_strings_keep_physical_line_numbers() {
+        // `\` at end of line inside a string continues the literal but
+        // still ends a physical line; losing it would shift every line
+        // number (and allow-directive lookup) after it.
+        let src = "let a = \"one \\\n    two\";\nlet b = 1;\n";
+        let f = scan(src);
+        assert_eq!(f.lines.len(), src.lines().count() + 1, "trailing newline adds a line");
+        assert!(f.lines[2].code.contains("let b"));
+    }
+
+    #[test]
+    fn cfg_test_span_is_marked() {
+        let src = "fn prod() { now(); }\n#[cfg(test)]\nmod tests {\n    fn t() { now(); }\n}\nfn after() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test && f.lines[2].in_test && f.lines[3].in_test);
+        assert!(f.lines[4].in_test, "closing brace line");
+        assert!(!f.lines[5].in_test, "code after the test mod");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_span() {
+        let f = scan("#[cfg(not(test))]\nfn prod() { x(); }\n");
+        // The attribute line itself contains `#[cfg(not(test))]`, not
+        // `#[cfg(test)]` — no span starts.
+        assert!(!f.lines[1].in_test);
+    }
+}

@@ -1,0 +1,73 @@
+// 18 call sites: one over the budget of 17.
+fn gated_01() {
+    require_artifacts!();
+}
+
+fn gated_02() {
+    require_artifacts!();
+}
+
+fn gated_03() {
+    require_artifacts!();
+}
+
+fn gated_04() {
+    require_artifacts!();
+}
+
+fn gated_05() {
+    require_artifacts!();
+}
+
+fn gated_06() {
+    require_artifacts!();
+}
+
+fn gated_07() {
+    require_artifacts!();
+}
+
+fn gated_08() {
+    require_artifacts!();
+}
+
+fn gated_09() {
+    require_artifacts!();
+}
+
+fn gated_10() {
+    require_artifacts!();
+}
+
+fn gated_11() {
+    require_artifacts!();
+}
+
+fn gated_12() {
+    require_artifacts!();
+}
+
+fn gated_13() {
+    require_artifacts!();
+}
+
+fn gated_14() {
+    require_artifacts!();
+}
+
+fn gated_15() {
+    require_artifacts!();
+}
+
+fn gated_16() {
+    require_artifacts!();
+}
+
+fn gated_17() {
+    require_artifacts!();
+}
+
+fn gated_18() {
+    require_artifacts!();
+}
+

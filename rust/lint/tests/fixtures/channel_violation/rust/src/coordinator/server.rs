@@ -1,0 +1,9 @@
+use std::sync::mpsc;
+
+pub fn open() -> (mpsc::Sender<u32>, mpsc::Receiver<u32>) {
+    mpsc::channel()
+}
+
+pub fn typed() {
+    let (_tx, _rx) = mpsc::channel::<u32>();
+}

@@ -1,0 +1,13 @@
+pub enum EngineError {
+    QueueFull,
+    Invalid,
+}
+
+impl EngineError {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::QueueFull => "queue_full",
+            EngineError::Invalid => "invalid",
+        }
+    }
+}

@@ -1,0 +1,30 @@
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+pub fn rendezvous() -> (mpsc::SyncSender<u32>, mpsc::Receiver<u32>) {
+    mpsc::sync_channel(1)
+}
+
+pub fn guarded(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+pub fn profiled() -> Instant {
+    Instant::now() // roadlint: allow(clock-discipline) -- fixture: profiling real hardware wall time
+}
+
+pub fn documented() -> Instant {
+    // roadlint: allow(clock-discipline) -- fixture: the directive plus its
+    // justification may sit on comment lines directly above the site.
+    Instant::now()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let t = std::time::Instant::now();
+        assert!(t.elapsed().as_secs() < 1, "unwrap() in a string is not a panic site");
+        Some(1u32).unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+fn gated_a() {
+    require_artifacts!();
+}
+
+fn gated_b() {
+    require_artifacts!();
+}

@@ -1,0 +1,15 @@
+pub fn parse(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn arity(v: Option<u32>) -> u32 {
+    v.expect("three outputs")
+}
+
+pub fn boom() {
+    panic!("connection thread dies here");
+}
+
+pub fn guarded(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

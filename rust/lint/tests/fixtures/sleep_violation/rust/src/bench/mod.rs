@@ -1,0 +1,3 @@
+pub fn pace() {
+    std::thread::sleep(std::time::Duration::from_millis(2));
+}

@@ -1,0 +1,4 @@
+#[test]
+fn waits_in_real_time() {
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}

@@ -1,0 +1,13 @@
+pub enum EngineError {
+    QueueFull,
+    Mystery,
+}
+
+impl EngineError {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::QueueFull => "queue_full",
+            EngineError::Mystery => "mystery_kind",
+        }
+    }
+}

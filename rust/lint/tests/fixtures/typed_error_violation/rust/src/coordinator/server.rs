@@ -1,0 +1,7 @@
+pub fn handshake() -> Result<u64, String> {
+    Err("stringly typed".to_string())
+}
+
+pub fn fine() -> Result<String, std::io::Error> {
+    Ok(String::new())
+}

@@ -1,0 +1,148 @@
+//! Fixture-based positive/negative coverage for every rule, plus the
+//! self-check that the repo itself is lint-clean.
+//!
+//! Each seeded-violation fixture under `tests/fixtures/` must fail with
+//! the seeded rule (and only at the seeded sites); the `clean` fixture
+//! must pass every rule.  The fixtures are data, not compiled code.
+
+use std::path::PathBuf;
+
+use roadlint::rules::Finding;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..").canonicalize().unwrap()
+}
+
+fn check(name: &str) -> Vec<Finding> {
+    roadlint::check(&fixture(name)).unwrap()
+}
+
+fn of_rule<'a>(findings: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+#[test]
+fn clean_fixture_passes_every_rule() {
+    let findings = check("clean");
+    assert!(findings.is_empty(), "clean fixture must be clean, got: {findings:?}");
+}
+
+#[test]
+fn clock_violation_fixture_fails() {
+    let findings = check("clock_violation");
+    let hits = of_rule(&findings, "clock-discipline");
+    assert_eq!(hits.len(), 2, "Instant::now + SystemTime::now, not the test module: {hits:?}");
+    assert_eq!((hits[0].path.as_str(), hits[0].line), ("rust/src/foo.rs", 2));
+    assert_eq!(hits[1].line, 6);
+}
+
+#[test]
+fn sleep_violation_fixture_fails_in_bench_and_tests() {
+    let findings = check("sleep_violation");
+    let hits = of_rule(&findings, "no-sleep");
+    assert_eq!(hits.len(), 2, "{hits:?}");
+    assert!(hits.iter().any(|f| f.path == "rust/src/bench/mod.rs"));
+    assert!(hits.iter().any(|f| f.path == "rust/tests/slow.rs"));
+}
+
+#[test]
+fn budget_violation_fixture_fails_only_past_the_budget() {
+    let findings = check("budget_violation");
+    let hits = of_rule(&findings, "artifact-gate-budget");
+    assert_eq!(hits.len(), 1, "18 sites, budget 17 -> exactly one over: {hits:?}");
+    assert!(hits[0].message.contains("18"));
+    assert!(hits[0].message.contains("budget of 17"));
+}
+
+#[test]
+fn panic_violation_fixture_fails_but_lock_poisoning_is_allowed() {
+    let findings = check("panic_violation");
+    let hits = of_rule(&findings, "no-panic-hot-path");
+    assert_eq!(hits.len(), 3, "unwrap + expect + panic!, not .lock().unwrap(): {hits:?}");
+    let lines: Vec<usize> = hits.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![2, 6, 10]);
+}
+
+#[test]
+fn typed_error_fixture_fails_on_string_results_and_wire_drift() {
+    let findings = check("typed_error_violation");
+    let hits = of_rule(&findings, "typed-error-discipline");
+    assert_eq!(hits.len(), 2, "{hits:?}");
+    assert!(hits.iter().any(|f| f.path.ends_with("server.rs") && f.message.contains("Result")));
+    assert!(hits.iter().any(|f| f.path.ends_with("queue.rs")
+        && f.message.contains("mystery_kind")));
+    assert!(
+        !hits.iter().any(|f| f.message.contains("queue_full")),
+        "documented kinds must not be flagged: {hits:?}"
+    );
+}
+
+#[test]
+fn channel_violation_fixture_fails_for_both_construction_forms() {
+    let findings = check("channel_violation");
+    let hits = of_rule(&findings, "bounded-channels");
+    assert_eq!(hits.len(), 2, "channel() and channel::<T>(): {hits:?}");
+}
+
+#[test]
+fn bare_allow_directive_is_itself_a_finding() {
+    let findings = check("allow_missing_justification");
+    let hits = of_rule(&findings, "clock-discipline");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].message.contains("justification"), "{}", hits[0].message);
+}
+
+/// The backstop the whole crate exists for: the repo itself is clean.
+/// Any new violation anywhere in rust/src or rust/tests fails this test
+/// (and the CI roadlint job) with the exact site.
+#[test]
+fn repo_self_check_is_clean() {
+    let findings = roadlint::check(&repo_root()).unwrap();
+    assert!(
+        findings.is_empty(),
+        "the repo must be roadlint-clean; findings:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.path, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The CLI contract CI relies on: nonzero + findings on a seeded
+/// violation, zero + clean report on the repo, and `--json` output that
+/// round-trips through a parser.
+#[test]
+fn cli_exit_codes_and_json_shape() {
+    let bin = env!("CARGO_BIN_EXE_roadlint");
+
+    let bad = std::process::Command::new(bin)
+        .args(["check", "--json", "--root"])
+        .arg(fixture("clock_violation"))
+        .output()
+        .unwrap();
+    assert_eq!(bad.status.code(), Some(1), "violation fixture must exit 1");
+    let json = String::from_utf8(bad.stdout).unwrap();
+    assert!(json.trim_start().starts_with('['), "{json}");
+    assert!(json.contains("\"rule\":\"clock-discipline\""), "{json}");
+    assert!(json.contains("\"line\":2"), "{json}");
+
+    let good = std::process::Command::new(bin)
+        .args(["check", "--root"])
+        .arg(repo_root())
+        .output()
+        .unwrap();
+    assert_eq!(
+        good.status.code(),
+        Some(0),
+        "repo must be clean; output:\n{}",
+        String::from_utf8_lossy(&good.stdout)
+    );
+
+    let usage = std::process::Command::new(bin).arg("--frobnicate").output().unwrap();
+    assert_eq!(usage.status.code(), Some(2), "usage errors exit 2");
+}

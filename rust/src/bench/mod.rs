@@ -198,6 +198,9 @@ fn run_workload(
     reqs: Vec<Request>,
 ) -> Result<ServingPoint> {
     let n_requests = reqs.len();
+    // roadlint: allow(clock-discipline) -- closed-loop throughput point:
+    // wall_secs divides into tokens/sec, so it must be real hardware time
+    // even when the engine itself runs on a manual clock.
     let t0 = std::time::Instant::now();
     let outs = engine.run_all(reqs)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -350,7 +353,6 @@ pub fn streaming_study(
         let mut rng = Rng::seed_from(seed ^ 0x57e4);
         let reqs = hetero_workload(&mut rng, n_requests, distinct, 8, new_tokens);
 
-        let t0 = std::time::Instant::now();
         let start = clock.now();
         let mut handles = Vec::new();
         for (i, req) in reqs.into_iter().enumerate() {
@@ -360,7 +362,7 @@ pub fn streaming_study(
             // not earlier requests have finished, and submissions happen
             // in arrival order on both clock kinds.
             clock.sleep_until(start + Duration::from_millis(2 * i as u64));
-            let submitted = std::time::Instant::now();
+            let submitted = clock.now();
             let generation = match client.submit(req) {
                 Ok(g) => g,
                 Err(_) => {
@@ -373,6 +375,7 @@ pub fn streaming_study(
             // Per-request terminal outcome: Some(true) = cancelled,
             // Some(false) = completed, None = the stream ended in an
             // Error event.
+            let tclock = clock.clone();
             handles.push(std::thread::spawn(move || -> (Option<f64>, usize, Option<bool>) {
                 let mut generation = generation;
                 let mut ttft = None;
@@ -382,7 +385,9 @@ pub fn streaming_study(
                 while let Some(ev) = generation.recv() {
                     match ev {
                         StreamEvent::Token { .. } => {
-                            ttft.get_or_insert_with(|| submitted.elapsed().as_secs_f64());
+                            ttft.get_or_insert_with(|| {
+                                tclock.now().saturating_duration_since(submitted).as_secs_f64()
+                            });
                             seen += 1;
                             if !cancel_sent && cancel_at.is_some_and(|k| seen >= k) {
                                 generation.cancel();
@@ -416,7 +421,7 @@ pub fn streaming_study(
                 None => errored += 1,
             }
         }
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = clock.now().saturating_duration_since(start).as_secs_f64();
         server.shutdown()?;
         let s = crate::util::stats::summarize(&ttfts_ms);
         out.push(StreamingPoint {
@@ -976,6 +981,8 @@ pub fn measure_train_efficiency(
     let warm = mk(&mut rng);
     tr.step(&warm, recipe.lr_at(0))?;
 
+    // roadlint: allow(clock-discipline) -- wall-profiles real optimizer
+    // throughput (secs/step); virtual time has no meaning here.
     let t0 = std::time::Instant::now();
     for i in 0..iters {
         let batch = mk(&mut rng);

@@ -347,9 +347,12 @@ impl Engine {
             .slots
             .iter()
             .position(|slot| slot.as_ref().is_some_and(|ar| ar.req.id == id))?;
-        let ar = self.slots[s].take().expect("position() found an occupied slot");
-        // The allocator cannot refuse: `s` was found occupied above.
-        self.alloc.release(s).expect("cancelled slot was allocated");
+        let ar = self.slots[s].take()?;
+        // The allocator cannot refuse: `s` was found occupied above.  A
+        // disagreeing allocator is a lost invariant, not a reason to kill
+        // the engine thread mid-cancel — loud in debug, tolerated live.
+        let released = self.alloc.release(s);
+        debug_assert!(released.is_ok(), "cancelled slot was allocated");
         self.registry.unpin(ar.slot_adapter);
         self.metrics.requests_cancelled += 1;
         let ttft = ar.first_token_at.map(|t| (t - ar.submitted).as_secs_f64()).unwrap_or_default();
@@ -600,14 +603,15 @@ impl Engine {
                 &mut ar.rng_state,
             );
             ar.generated.push(tok);
-            ar.first_token_at = Some(self.clock.now());
+            let first_token_at = self.clock.now();
+            ar.first_token_at = Some(first_token_at);
             self.metrics.tokens_generated += 1;
             self.metrics.prompt_tokens += ar.req.prompt.len();
             // Stream the first token with its TTFT; a stop token is
             // terminal and never emitted (it is also stripped from the
             // finished output, keeping the stream concatenation exact).
             if !matches!(ar.done(), Some(FinishReason::StopToken)) {
-                let ttft = (ar.first_token_at.unwrap() - ar.submitted).as_secs_f64();
+                let ttft = (first_token_at - ar.submitted).as_secs_f64();
                 self.events.push(StreamEvent::Token {
                     id: ar.req.id,
                     token: tok,
@@ -638,7 +642,11 @@ impl Engine {
         for (s, slot) in self.slots.iter().enumerate() {
             if let Some(ar) = slot {
                 any = true;
-                token[s] = *ar.generated.last().expect("active slot has >= 1 token");
+                // Prefill pushes the first token before a slot activates,
+                // so `generated` is never empty here; a zero fallback on a
+                // lost invariant decodes one garbage token instead of
+                // killing the serving thread.
+                token[s] = ar.generated.last().copied().unwrap_or_default();
                 pos[s] = ar.pos as i32;
                 ids[s] = ar.slot_adapter as i32;
             }
@@ -677,13 +685,9 @@ impl Engine {
             // actual transfer behavior.
             self.metrics.kv_uploads += 1;
             self.metrics.kv_host_syncs += 1;
-            if outs.len() != 3 {
-                bail!("decode entry {} returned {} outputs, expected 3", exe.info.name, outs.len());
-            }
-            let mut outs = outs.into_iter();
-            let logits = outs.next().unwrap();
-            let k_new = outs.next().unwrap();
-            let v_new = outs.next().unwrap();
+            let [logits, k_new, v_new]: [HostTensor; 3] = outs.try_into().map_err(|v: Vec<_>| {
+                anyhow!("decode entry {} returned {} outputs, expected 3", exe.info.name, v.len())
+            })?;
             self.kv.replace(k_new, v_new)?;
             logits
         } else {
@@ -708,13 +712,14 @@ impl Engine {
                 exe.run_device(&args)?
             };
             // Same positional contract as the host path: [logits, k, v].
-            if outs.len() != 3 {
-                bail!("decode entry {} returned {} outputs, expected 3", exe.info.name, outs.len());
-            }
-            let mut outs = outs.into_iter();
-            let l_buf = outs.next().unwrap();
-            let k_buf = outs.next().unwrap();
-            let v_buf = outs.next().unwrap();
+            let [l_buf, k_buf, v_buf]: [xla::PjRtBuffer; 3] =
+                outs.try_into().map_err(|v: Vec<_>| {
+                    anyhow!(
+                        "decode entry {} returned {} outputs, expected 3",
+                        exe.info.name,
+                        v.len()
+                    )
+                })?;
             let logits_dtype = exe.info.outputs.first().map_or(DType::F32, |s| s.dtype);
             let logits = buffer_to_host(&l_buf, logits_dtype)?;
             self.metrics.decode_time += self.clock.now().saturating_duration_since(t0);
@@ -745,7 +750,7 @@ impl Engine {
                 self.events.push(StreamEvent::Token { id, token: tok, pos, ttft_hint: None });
             }
             if let Some(reason) = reason {
-                let ar = self.slots[s].take().unwrap();
+                let Some(ar) = self.slots[s].take() else { continue };
                 self.alloc.release(s)?;
                 self.finish(ar, reason);
             }
@@ -795,7 +800,7 @@ impl Engine {
         }
         for s in 0..self.slots.len() {
             if self.slots[s].as_ref().is_some_and(|ar| ar.req.expired(now)) {
-                let ar = self.slots[s].take().unwrap();
+                let Some(ar) = self.slots[s].take() else { continue };
                 self.alloc.release(s)?;
                 self.registry.unpin(ar.slot_adapter);
                 self.metrics.deadline_shed += 1;
@@ -816,17 +821,16 @@ impl Engine {
         self.maybe_prefill()?;
         // A request can finish at prefill time (max_new_tokens == 1, or a
         // stop token sampled from the prefill logits).
-        let finished_at_prefill: Vec<usize> = self
+        let finished_at_prefill: Vec<(usize, FinishReason)> = self
             .slots
             .iter()
             .enumerate()
             .filter_map(|(s, slot)| {
-                slot.as_ref().and_then(|ar| ar.done().map(|_| s))
+                slot.as_ref().and_then(|ar| ar.done().map(|reason| (s, reason)))
             })
             .collect();
-        for s in finished_at_prefill {
-            let ar = self.slots[s].take().unwrap();
-            let reason = ar.done().unwrap();
+        for (s, reason) in finished_at_prefill {
+            let Some(ar) = self.slots[s].take() else { continue };
             self.alloc.release(s)?;
             self.finish(ar, reason);
         }

@@ -21,6 +21,12 @@
 //! clients can correlate before they learn the engine-issued id.  A
 //! dropped connection cancels its in-flight requests via the
 //! [`Generation`] drop path — a hung-up client frees its decode slots.
+//!
+//! Peer input is treated as hostile: request lines are capped at
+//! [`MAX_LINE_BYTES`] (overflow is discarded, not buffered) and the JSON
+//! parser bounds its recursion depth, so no line a peer can send panics
+//! or exhausts the connection thread — every malformed input comes back
+//! as a typed `invalid` event on the same connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -73,11 +79,80 @@ enum WireCmd {
     Stats,
 }
 
+/// Upper bound on one request line.  `BufRead::lines` buffers however
+/// many bytes the peer sends before the next `\n`, so an endless
+/// newline-free stream would grow the connection thread's memory without
+/// limit.  Past this cap the rest of the line is *discarded* (never
+/// buffered), the peer gets a typed `invalid` event, and the connection
+/// resyncs at the next newline.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One bounded read from the wire (see [`MAX_LINE_BYTES`]).
+enum LineRead {
+    /// A complete line (without its `\n`), within the cap.
+    Line(String),
+    /// The line ran past the cap; payload is the total length seen.  The
+    /// overflow was discarded chunk-by-chunk, and the reader is
+    /// positioned just after the terminating newline (or at EOF).
+    TooLong(usize),
+    Eof,
+}
+
+/// Read up to the next `\n` without ever holding more than
+/// [`MAX_LINE_BYTES`] + one `BufReader` chunk in memory.
+fn read_line_bounded(r: &mut impl BufRead) -> std::io::Result<LineRead> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut dropped = 0usize;
+    loop {
+        let (consumed, saw_newline) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(if dropped > 0 {
+                    LineRead::TooLong(line.len() + dropped)
+                } else if line.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line(String::from_utf8_lossy(&line).into_owned())
+                });
+            }
+            let upto = chunk.iter().position(|&b| b == b'\n');
+            let n = upto.unwrap_or(chunk.len());
+            if dropped == 0 && line.len() + n <= MAX_LINE_BYTES {
+                line.extend_from_slice(&chunk[..n]);
+            } else {
+                dropped += n;
+            }
+            // +1 swallows the newline itself.
+            (n + usize::from(upto.is_some()), upto.is_some())
+        };
+        r.consume(consumed);
+        if saw_newline {
+            return Ok(if dropped > 0 {
+                LineRead::TooLong(line.len() + dropped)
+            } else {
+                LineRead::Line(String::from_utf8_lossy(&line).into_owned())
+            });
+        }
+    }
+}
+
 fn handle_conn(stream: TcpStream, client: EngineClient) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let writer = Arc::new(Mutex::new(stream));
-    for line in reader.lines() {
-        let line = line?;
+    loop {
+        let line = match read_line_bounded(&mut reader)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong(n) => {
+                let err = EngineError::Invalid {
+                    reason: format!(
+                        "request line of {n} bytes exceeds the {MAX_LINE_BYTES}-byte limit"
+                    ),
+                };
+                write_line(&writer, &error_event(None, None, &err))?;
+                continue;
+            }
+            LineRead::Line(l) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -109,7 +184,6 @@ fn handle_conn(stream: TcpStream, client: EngineClient) -> Result<()> {
             }
         }
     }
-    Ok(())
 }
 
 /// Drive one generation, relaying every stream event as an NDJSON line.
@@ -373,9 +447,11 @@ mod tests {
 
     /// Wire-level robustness over a real loopback connection (reference
     /// backend, no artifacts): malformed JSON, an unknown op, a missing
-    /// prompt, an out-of-range priority, and an oversized prompt each
-    /// yield a typed `invalid` error event — no panic, no disconnect —
-    /// and the same connection then serves a valid request to completion.
+    /// prompt, an out-of-range priority, an oversized prompt, a
+    /// stack-hostile deeply nested document, and a line past the
+    /// [`MAX_LINE_BYTES`] wire cap each yield a typed `invalid` error
+    /// event — no panic, no disconnect — and the same connection then
+    /// serves a valid request to completion.
     #[test]
     fn bad_lines_yield_typed_invalid_and_connection_survives() {
         use crate::coordinator::engine::EngineConfig;
@@ -415,12 +491,16 @@ mod tests {
             "{{\"op\":\"generate\",\"prompt\":[{}]}}",
             vec!["1"; 99].join(",")
         );
+        // Deep enough to overflow the connection thread's stack if the
+        // JSON parser recursed without a depth cap.
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
         let bad_lines = [
             "this is not json",
             r#"{"op":"frobnicate"}"#,
             r#"{"op":"generate"}"#,
             r#"{"op":"generate","text":"x","priority":999}"#,
             oversized.as_str(),
+            deep.as_str(),
         ];
         for line in bad_lines {
             let ev = round_trip(line);
@@ -435,6 +515,18 @@ mod tests {
                 "stable `invalid` kind for {line:?}"
             );
         }
+
+        // A line past the wire cap is discarded without being buffered
+        // and answered with the same typed event; the connection resyncs
+        // at the next newline.
+        let huge = format!("{{\"text\":\"{}\"}}", "x".repeat(MAX_LINE_BYTES));
+        let ev = round_trip(&huge);
+        assert_eq!(ev.get("event").unwrap().as_str().unwrap(), "error");
+        assert_eq!(ev.get("error").unwrap().as_str().unwrap(), "invalid");
+        assert!(
+            ev.get("message").unwrap().as_str().unwrap().contains("exceeds"),
+            "oversized line should name the cap: {ev:?}"
+        );
 
         // The connection is still usable: a valid request streams to a
         // finished event.

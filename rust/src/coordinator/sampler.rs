@@ -10,7 +10,10 @@ pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> 
     // Collect candidate (index, logit) pairs, optionally top-k-truncated.
     let mut idx: Vec<usize> = (0..logits.len()).collect();
     if top_k > 0 && top_k < logits.len() {
-        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        // total_cmp: a NaN logit (bad adapter numerics) must not panic
+        // the engine thread mid-sample — it takes a deterministic place
+        // in the total order instead.
+        idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         idx.truncate(top_k);
     }
     let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);

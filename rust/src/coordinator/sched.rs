@@ -315,7 +315,7 @@ impl SchedSim {
         else {
             return false;
         };
-        let lane = self.slots[s].take().expect("position() found an occupied lane");
+        let Some(lane) = self.slots[s].take() else { return false };
         self.push_record(
             &lane.req,
             Some((lane.admitted_at, lane.admitted_seq)),
@@ -374,7 +374,7 @@ impl SchedSim {
         }
         for s in 0..self.slots.len() {
             if self.slots[s].as_ref().is_some_and(|l| l.req.expired(now)) {
-                let lane = self.slots[s].take().expect("checked occupied");
+                let Some(lane) = self.slots[s].take() else { continue };
                 self.push_record(
                     &lane.req,
                     Some((lane.admitted_at, lane.admitted_seq)),
@@ -394,18 +394,18 @@ impl SchedSim {
             let ctx = SchedContext { now, in_flight: &in_flight, admitted: &self.admitted };
             let order = self.policy.order(&self.queue, &ctx);
             let take = self.queue.pop_scheduled(&order, n_free, self.max_prompt_len, |_| true);
-            for req in take {
+            // `pop_scheduled` hands back at most `n_free` requests, so
+            // zipping against the free lanes can never drop one.
+            let free: Vec<usize> =
+                (0..self.slots.len()).filter(|&s| self.slots[s].is_none()).collect();
+            debug_assert!(take.len() <= free.len(), "admitted more than the free lanes");
+            for (req, &s) in take.into_iter().zip(free.iter()) {
                 *self
                     .admitted
                     .entry(req.adapter.clone().unwrap_or_default())
                     .or_insert(0) += 1;
                 let admitted_seq = self.admissions;
                 self.admissions += 1;
-                let s = self
-                    .slots
-                    .iter()
-                    .position(|l| l.is_none())
-                    .expect("free lanes counted above");
                 self.slots[s] = Some(SimLane { req, admitted_at: now, admitted_seq, generated: 0 });
             }
         }
@@ -421,7 +421,7 @@ impl SchedSim {
                 None => false,
             };
             if done {
-                let lane = self.slots[s].take().expect("checked occupied");
+                let Some(lane) = self.slots[s].take() else { continue };
                 self.push_record(
                     &lane.req,
                     Some((lane.admitted_at, lane.admitted_seq)),

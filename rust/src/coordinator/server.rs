@@ -15,7 +15,7 @@
 //! Every channel payload is typed: errors are [`EngineError`] variants
 //! (never strings) and stats cross as a [`MetricsSnapshot`] value.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -30,12 +30,13 @@ use super::request::{FinishReason, Request, RequestOutput, StreamEvent};
 enum Cmd {
     /// Submit a request: the second sender is the rendezvous for the
     /// engine-issued id (or the typed rejection), the first receives the
-    /// event stream.
-    Submit(Request, Sender<StreamEvent>, Sender<Result<u64, EngineError>>),
+    /// event stream.  Every rendezvous sender carries exactly one message,
+    /// so `sync_channel(1)` bounds it for free.
+    Submit(Request, Sender<StreamEvent>, SyncSender<Result<u64, EngineError>>),
     Cancel(u64),
-    Register(String, Box<Adapter>, Sender<Result<(), EngineError>>),
-    Unregister(String, Sender<Result<(), EngineError>>),
-    Stats(Sender<MetricsSnapshot>),
+    Register(String, Box<Adapter>, SyncSender<Result<(), EngineError>>),
+    Unregister(String, SyncSender<Result<(), EngineError>>),
+    Stats(SyncSender<MetricsSnapshot>),
     Shutdown,
 }
 
@@ -138,8 +139,13 @@ impl EngineClient {
     /// `AdapterNotFound`, `Invalid`, `EngineStopped`) surface here rather
     /// than on the stream.
     pub fn submit(&self, req: Request) -> Result<Generation, EngineError> {
+        // roadlint: allow(bounded-channels) -- the per-request event stream
+        // must never block the engine thread on a slow consumer; the buffer
+        // is bounded in practice by max_new_tokens events per request, and
+        // a hung-up receiver tears it down via the Generation-drop cancel
+        // path.  Per-connection write backpressure is ROADMAP item 4.
         let (ev_tx, ev_rx) = channel();
-        let (id_tx, id_rx) = channel();
+        let (id_tx, id_rx) = sync_channel(1);
         self.tx
             .send(Cmd::Submit(req, ev_tx, id_tx))
             .map_err(|_| EngineError::EngineStopped)?;
@@ -162,7 +168,7 @@ impl EngineClient {
     /// Register a named adapter into the engine's host store (device
     /// residency is paged in on demand at admission).
     pub fn register_adapter(&self, name: &str, adapter: Adapter) -> Result<(), EngineError> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         self.tx
             .send(Cmd::Register(name.to_string(), Box::new(adapter), tx))
             .map_err(|_| EngineError::EngineStopped)?;
@@ -172,7 +178,7 @@ impl EngineClient {
     /// Remove a named adapter (rejected while it has queued or in-flight
     /// requests).
     pub fn unregister_adapter(&self, name: &str) -> Result<(), EngineError> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         self.tx
             .send(Cmd::Unregister(name.to_string(), tx))
             .map_err(|_| EngineError::EngineStopped)?;
@@ -183,7 +189,7 @@ impl EngineClient {
     /// [`MetricsSnapshot::report`]/[`MetricsSnapshot::report_table`], or
     /// ship as JSON via [`MetricsSnapshot::to_json`]).
     pub fn stats(&self) -> Result<MetricsSnapshot, EngineError> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         self.tx.send(Cmd::Stats(tx)).map_err(|_| EngineError::EngineStopped)?;
         rx.recv().map_err(|_| EngineError::EngineStopped)
     }
@@ -203,8 +209,13 @@ impl EngineServer {
         artifacts_dir: std::path::PathBuf,
         setup: impl FnOnce(&mut Engine) -> Result<()> + Send + 'static,
     ) -> Result<(EngineServer, EngineClient)> {
+        // roadlint: allow(bounded-channels) -- the command plane: senders
+        // are rendezvous-style clients whose payloads are already bounded
+        // by queue-capacity backpressure inside the engine; blocking a
+        // client on a full command channel would deadlock the cancel path
+        // that unblocks it.
         let (tx, rx) = channel::<Cmd>();
-        let (ready_tx, ready_rx) = channel::<Result<(), EngineError>>();
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), EngineError>>(1);
         let handle = std::thread::Builder::new()
             .name("road-engine".into())
             .spawn(move || engine_thread(econf, artifacts_dir, rx, ready_tx, setup))?;
@@ -238,7 +249,7 @@ fn engine_thread(
     econf: EngineConfig,
     artifacts_dir: std::path::PathBuf,
     rx: Receiver<Cmd>,
-    ready: Sender<Result<(), EngineError>>,
+    ready: SyncSender<Result<(), EngineError>>,
     setup: impl FnOnce(&mut Engine) -> Result<()>,
 ) -> Result<()> {
     let init = (|| -> Result<Engine> {

@@ -220,6 +220,8 @@ impl Executable {
 
     fn run_reference(&self, entry: &reference::RefEntry, args: &[Arg]) -> Result<Vec<HostTensor>> {
         let ins = self.gather_host_args(args)?;
+        // roadlint: allow(clock-discipline) -- profiles real kernel
+        // execution time for the runtime's perf counters.
         let t0 = Instant::now();
         let outs = entry
             .execute(&ins)
@@ -250,6 +252,8 @@ impl Executable {
         let owned = self.upload_host_args(args)?;
         let refs = positional(args, &owned);
 
+        // roadlint: allow(clock-discipline) -- profiles real kernel
+        // execution time for the runtime's perf counters.
         let t0 = Instant::now();
         let result = exe
             .execute_b(&refs)
@@ -296,6 +300,8 @@ impl Executable {
         let owned = self.upload_host_args(args)?;
         let refs = positional(args, &owned);
 
+        // roadlint: allow(clock-discipline) -- profiles real kernel
+        // execution time for the runtime's perf counters.
         let t0 = Instant::now();
         let outs = exe
             .execute_untupled(&refs)
@@ -441,6 +447,8 @@ impl Runtime {
             return Ok(e.clone());
         }
         let info = self.manifest.entry(entry)?.clone();
+        // roadlint: allow(clock-discipline) -- profiles real compile/load
+        // latency; only ever reported, never fed into scheduling.
         let t0 = Instant::now();
         let imp = match self.backend {
             BackendKind::Pjrt => {

@@ -59,6 +59,8 @@ pub fn train(
 ) -> Result<TrainReport> {
     let mut rng = Rng::seed_from(recipe.seed);
     let mut eval_rng = Rng::seed_from(recipe.seed ^ 0x5eed_e7a1);
+    // roadlint: allow(clock-discipline) -- wall-profiles the real training
+    // run for the report; training has no virtual-time mode.
     let t0 = std::time::Instant::now();
     let mut eval_curve = Vec::new();
     let step_t0 = trainer.step_time;

@@ -263,6 +263,8 @@ impl Trainer {
             }
         }
 
+        // roadlint: allow(clock-discipline) -- accumulates real step time
+        // for the training-efficiency report.
         let t0 = Instant::now();
         let outs = self.train_exe.run(&args)?;
         self.step_time += t0.elapsed();

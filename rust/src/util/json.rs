@@ -21,7 +21,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -217,12 +217,28 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser will follow.  Parsing recurses
+/// once per `[`/`{` level, and this parser also reads network input (the
+/// NDJSON front door), so a hostile `[[[[…` line must come back as `Err`
+/// instead of overflowing the stack and killing the process.
+const MAX_DEPTH: u32 = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: u32,
 }
 
 impl<'a> Parser<'a> {
+    /// Track entry into a nested container; errors past [`MAX_DEPTH`].
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels");
+        }
+        Ok(())
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -264,10 +280,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek()? == b'}' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -283,6 +301,7 @@ impl<'a> Parser<'a> {
                 b',' => self.i += 1,
                 b'}' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 c => bail!("expected ',' or '}}', got {:?}", c as char),
@@ -292,10 +311,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut a = Vec::new();
         self.ws();
         if self.peek()? == b']' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -306,6 +327,7 @@ impl<'a> Parser<'a> {
                 b',' => self.i += 1,
                 b']' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 c => bail!("expected ',' or ']', got {:?}", c as char),
@@ -413,6 +435,18 @@ mod tests {
     #[test]
     fn rejects_trailing() {
         assert!(Json::parse("{} x").is_err());
+    }
+
+    #[test]
+    fn depth_limit_rejects_hostile_nesting() {
+        // Deep enough to overflow the stack if recursion were unbounded.
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        assert!(Json::parse(&deep).is_err(), "hostile nesting must be a typed error");
+        let mixed = "[{\"k\":".repeat(50_000) + "0" + &"}]".repeat(50_000);
+        assert!(Json::parse(&mixed).is_err());
+        // Deep-but-legal documents still parse.
+        let ok = "[".repeat(64) + "1" + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]
