@@ -1,0 +1,31 @@
+pub fn alloc_private(free: &mut Vec<usize>) -> usize {
+    free.pop().unwrap()
+}
+
+pub fn ref_cached(block: Option<usize>) -> usize {
+    block.expect("key published")
+}
+
+pub fn release_private(held: &[bool], block: usize) {
+    if !held[block] {
+        panic!("double release of block {block}");
+    }
+}
+
+pub fn conservation(n: usize, free: usize) {
+    if free > n {
+        unreachable!("free list larger than the pool");
+    }
+}
+
+pub fn guarded_refcount(m: &std::sync::Mutex<usize>) -> usize {
+    *m.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        Some(1usize).unwrap();
+    }
+}

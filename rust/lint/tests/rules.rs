@@ -67,6 +67,23 @@ fn panic_violation_fixture_fails_but_lock_poisoning_is_allowed() {
     assert_eq!(lines, vec![2, 6, 10]);
 }
 
+/// The block-pool allocator is coordinator hot-path code: its alloc /
+/// ref / release / invariant paths must stay panic-free (a panic there
+/// strands every lane's KV blocks).  Seeded violations in a pool-shaped
+/// fixture pin the rule to that module; the lock idiom and test code
+/// stay allowed.
+#[test]
+fn pool_panic_violation_fixture_fails_on_hot_paths() {
+    let findings = check("pool_panic_violation");
+    let hits = of_rule(&findings, "no-panic-hot-path");
+    assert_eq!(hits.len(), 4, "unwrap + expect + panic! + unreachable!: {hits:?}");
+    assert!(hits.iter().all(|f| f.path == "rust/src/coordinator/pool.rs"), "{hits:?}");
+    let lines: Vec<usize> = hits.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![2, 6, 11, 17]);
+    // Neither the poisoning-propagation idiom nor the test module fires.
+    assert!(findings.iter().all(|f| f.line < 21), "{findings:?}");
+}
+
 #[test]
 fn typed_error_fixture_fails_on_string_results_and_wire_drift() {
     let findings = check("typed_error_violation");

@@ -29,6 +29,7 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::pool::LruPager;
 use crate::manifest::ModelConfigInfo;
 use crate::model::{proj_dims, PROJS};
 use crate::tensor::HostTensor;
@@ -618,17 +619,6 @@ pub enum PageOutcome {
     Stalled,
 }
 
-/// Per-slot paging state (slot 0 is the reserved identity page).
-#[derive(Clone, Debug, Default)]
-struct SlotState {
-    name: Option<String>,
-    /// In-flight decode lanes referencing this slot.  Pinned slots are
-    /// never eviction victims, so paging cannot corrupt active requests.
-    pins: usize,
-    /// LRU stamp (registry clock at last touch).
-    last_used: u64,
-}
-
 /// The serving-side registry: an unbounded [`AdapterStore`] fronted by the
 /// device [`AdapterBank`] acting as an LRU page cache of bank slots.
 ///
@@ -636,13 +626,14 @@ struct SlotState {
 /// never paged or evicted.  `usable` may be smaller than the bank's tensor
 /// slot count to model a tighter device budget than the compiled artifact
 /// allows (the adapter-churn bench pins it to a few slots).
+///
+/// The residency/pin/LRU mechanics are the shared
+/// [`LruPager`] — the same implementation that pages KV blocks in
+/// [`crate::coordinator::pool::BlockPool`].
 pub struct AdapterRegistry {
     pub bank: AdapterBank,
     pub store: AdapterStore,
-    slots: Vec<SlotState>,
-    resident: BTreeMap<String, usize>,
-    clock: u64,
-    usable: usize,
+    pager: LruPager<String>,
 }
 
 impl AdapterRegistry {
@@ -656,14 +647,7 @@ impl AdapterRegistry {
     pub fn with_usable_slots(bank: AdapterBank, usable: usize) -> AdapterRegistry {
         let usable = usable.min(bank.n_slots);
         let store = AdapterStore::new(&bank.mode);
-        AdapterRegistry {
-            slots: vec![SlotState::default(); bank.n_slots],
-            resident: BTreeMap::new(),
-            clock: 0,
-            usable,
-            bank,
-            store,
-        }
+        AdapterRegistry { pager: LruPager::new(bank.n_slots, 1, usable), bank, store }
     }
 
     /// Register (or replace) a named adapter in the host store.  Always
@@ -681,8 +665,8 @@ impl AdapterRegistry {
                 self.bank.mode
             );
         }
-        if let Some(&slot) = self.resident.get(name) {
-            if self.slots[slot].pins > 0 {
+        if let Some(slot) = self.pager.get(name) {
+            if self.pager.is_pinned(slot) {
                 bail!(
                     "adapter {name:?} is serving in-flight requests (bank slot {slot} is \
                      pinned); re-register after they finish"
@@ -699,15 +683,14 @@ impl AdapterRegistry {
         if !self.store.contains(name) {
             bail!("unknown adapter {name:?}");
         }
-        if let Some(&slot) = self.resident.get(name) {
-            if self.slots[slot].pins > 0 {
+        if let Some(slot) = self.pager.get(name) {
+            if self.pager.is_pinned(slot) {
                 bail!(
                     "adapter {name:?} is serving in-flight requests (bank slot {slot} is \
                      pinned); unregister after they finish"
                 );
             }
-            self.resident.remove(name);
-            self.slots[slot] = SlotState::default();
+            self.pager.unbind(slot);
             self.bank.clear_slot_dirty(slot);
         }
         self.store.remove(name);
@@ -721,14 +704,13 @@ impl AdapterRegistry {
         if !self.store.contains(name) {
             bail!("unknown adapter {name:?}");
         }
-        let Some(&slot) = self.resident.get(name) else {
+        let Some(slot) = self.pager.get(name) else {
             return Ok(false);
         };
-        if self.slots[slot].pins > 0 {
+        if self.pager.is_pinned(slot) {
             bail!("adapter {name:?} is pinned by an in-flight request; cannot evict");
         }
-        self.resident.remove(name);
-        self.slots[slot] = SlotState::default();
+        self.pager.unbind(slot);
         self.bank.clear_slot_dirty(slot);
         Ok(true)
     }
@@ -741,79 +723,45 @@ impl AdapterRegistry {
         if !self.store.contains(name) {
             bail!("unknown adapter {name:?}");
         }
-        self.clock += 1;
-        if let Some(&slot) = self.resident.get(name) {
-            self.slots[slot].last_used = self.clock;
+        if let Some(slot) = self.pager.touch(name) {
             return Ok(PageOutcome::Hit(slot));
         }
         // Victim selection over pageable slots 1..usable: any free slot
         // first, else the least-recently-used unpinned slot.
-        let mut victim: Option<usize> = None;
-        for s in 1..self.usable {
-            match &self.slots[s].name {
-                None => {
-                    victim = Some(s);
-                    break;
-                }
-                // A candidate victim here is always occupied (a free slot
-                // breaks out above), so LRU stamp order decides.
-                Some(_) if self.slots[s].pins == 0 => {
-                    let better = match victim {
-                        None => true,
-                        Some(v) => self.slots[s].last_used < self.slots[v].last_used,
-                    };
-                    if better {
-                        victim = Some(s);
-                    }
-                }
-                Some(_) => {}
-            }
-        }
-        let Some(slot) = victim else {
+        let Some(slot) = self.pager.free_slot().or_else(|| self.pager.evict_lru()) else {
             return Ok(PageOutcome::Stalled);
         };
-        let evicted = self.slots[slot].name.take();
-        if let Some(old) = &evicted {
-            self.resident.remove(old);
-        }
-        let adapter = self.store.get(name).expect("checked above");
-        self.bank.set_slot(slot, adapter)?;
-        self.slots[slot] = SlotState {
-            name: Some(name.to_string()),
-            pins: 0,
-            last_used: self.clock,
+        let evicted = self.pager.unbind(slot);
+        let Some(adapter) = self.store.get(name) else {
+            bail!("unknown adapter {name:?}");
         };
-        self.resident.insert(name.to_string(), slot);
+        self.bank.set_slot(slot, adapter)?;
+        self.pager.bind(slot, name.to_string())?;
         Ok(PageOutcome::Paged { slot, evicted })
     }
 
     /// Pin `slot` for an in-flight request (no-op for the identity slot).
     pub fn pin(&mut self, slot: usize) {
-        if slot > 0 && slot < self.slots.len() {
-            self.slots[slot].pins += 1;
-        }
+        self.pager.pin(slot);
     }
 
     /// Release one pin on `slot` (no-op for the identity slot).
     pub fn unpin(&mut self, slot: usize) {
-        if slot > 0 && slot < self.slots.len() {
-            debug_assert!(self.slots[slot].pins > 0, "unpin of unpinned slot {slot}");
-            self.slots[slot].pins = self.slots[slot].pins.saturating_sub(1);
-        }
+        self.pager.unpin(slot);
     }
 
     pub fn is_pinned(&self, slot: usize) -> bool {
-        self.slots.get(slot).map(|s| s.pins > 0).unwrap_or(false)
+        self.pager.is_pinned(slot)
     }
 
     /// Device slot of `name`, when resident.
     pub fn slot_of(&self, name: &str) -> Option<usize> {
-        self.resident.get(name).copied()
+        self.pager.get(name)
     }
 
     /// Names currently holding a device slot.
     pub fn resident_names(&self) -> Vec<&str> {
-        self.resident.keys().map(|s| s.as_str()).collect()
+        self.pager.resident_keys().into_iter().map(|s| s.as_str()).collect()
     }
 
     /// All registered names (resident or not).
@@ -832,11 +780,11 @@ impl AdapterRegistry {
 
     /// Pageable device slots (slot 0 is reserved for identity).
     pub fn capacity(&self) -> usize {
-        self.usable.saturating_sub(1)
+        self.pager.pageable_len()
     }
 
     pub fn resident_len(&self) -> usize {
-        self.resident.len()
+        self.pager.resident_len()
     }
 }
 

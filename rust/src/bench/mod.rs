@@ -834,6 +834,295 @@ pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
     )
 }
 
+// ---------------------------------------------------------------------------
+// Paged-KV study (`road bench-serving --study kvpage`)
+// ---------------------------------------------------------------------------
+
+/// One (pool budget, accounting mode) row of the paged-KV study.
+#[derive(Clone, Debug)]
+pub struct KvPagePoint {
+    pub label: String,
+    pub paged: bool,
+    /// The memory budget: total blocks in the shared pool.
+    pub pool_blocks: usize,
+    pub block_size: usize,
+    pub requests: usize,
+    pub finished: usize,
+    /// Scheduler iterations to drain the workload (one iteration = one
+    /// virtual millisecond — the study's latency unit).
+    pub steps: usize,
+    /// Most lanes ever concurrently admitted — the batching capacity the
+    /// block accounting achieves at this memory budget.
+    pub peak_lanes: usize,
+    /// Requests admitted over a non-empty cached prefix.
+    pub prefix_hits: usize,
+    pub block_hits: usize,
+    pub block_misses: usize,
+    pub block_evictions: usize,
+    pub blocks_published: usize,
+    pub admission_stalls: usize,
+    /// Prompt tokens that went through a prefill executable.
+    pub prefill_lane_tokens: usize,
+    /// Prompt tokens served from cached prefix blocks instead.
+    pub prefill_tokens_saved: usize,
+    /// Free-block low-water mark (memory headroom at peak pressure).
+    pub blocks_free_min: usize,
+    pub shared_refs_peak: usize,
+    pub ttft_p50_ms: f64,
+    pub ttft_p90_ms: f64,
+}
+
+impl KvPagePoint {
+    /// Fraction of reserved blocks served from the shared-prefix cache.
+    pub fn block_hit_rate(&self) -> f64 {
+        let total = self.block_hits + self.block_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.block_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Build a shared-prefix workload: each request draws one of `n_groups`
+/// fixed prefixes (Zipf(s) over group rank — a few hot prompt templates
+/// dominate, the regime a prefix cache exploits) and appends a random
+/// per-request suffix.  Requests of a group always use the same adapter
+/// (prefix keys are adapter-salted, so sharing requires both to match).
+#[allow(clippy::too_many_arguments)]
+pub fn prefix_workload(
+    rng: &mut Rng,
+    n_requests: usize,
+    n_groups: usize,
+    distinct_adapters: usize,
+    zipf_s: f64,
+    prefix_len: usize,
+    suffix_len: usize,
+    new_tokens: usize,
+) -> Vec<Request> {
+    let weights = zipf_weights(n_groups.max(1), zipf_s);
+    // Each group's prefix is a pure function of its rank, independent of
+    // the request mix drawn from `rng`.
+    let prefixes: Vec<Vec<i32>> = (0..n_groups.max(1))
+        .map(|g| {
+            let mut pr = Rng::seed_from(0x9e37 ^ (g as u64).wrapping_mul(0x1000_0000_01b3));
+            (0..prefix_len).map(|_| 1 + pr.below(255) as i32).collect()
+        })
+        .collect();
+    (0..n_requests)
+        .map(|i| {
+            let g = rng.weighted(&weights);
+            let mut prompt = prefixes[g].clone();
+            prompt.extend((0..suffix_len).map(|_| 1 + rng.below(255) as i32));
+            let mut r = Request::new(prompt, new_tokens).with_sampling(SamplingParams {
+                temperature: 0.0,
+                top_k: 0,
+                seed: i as u64,
+                stop_token: None,
+            });
+            if distinct_adapters > 0 {
+                r = r.with_adapter(&format!("adapter-{}", g % distinct_adapters));
+            }
+            r
+        })
+        .collect()
+}
+
+/// The paged-KV study: the same Zipf shared-prefix workload replayed at
+/// several pool budgets, each in paged and flat accounting.  Flat mode
+/// charges every lane a full `max_seq` footprint (the pre-paging layout),
+/// so at a squeezed budget it admits fewer concurrent lanes than paged
+/// mode does at the *same* budget — that gap, plus the prefix hit rate and
+/// the free-block headroom, is what the rows show.
+///
+/// Everything runs on a manual clock advanced one virtual millisecond per
+/// scheduler iteration, and no request carries a stop token, so every
+/// recorded number is a pure function of the seed: two runs emit
+/// byte-identical output on any backend (CI holds the `--sim-clock`
+/// invocation to that).
+pub fn kvpage_study(
+    rt: &Rc<Runtime>,
+    n_requests: usize,
+    new_tokens: usize,
+    pool_budgets: &[usize],
+    seed: u64,
+) -> Result<Vec<KvPagePoint>> {
+    let mut out = Vec::new();
+    for &pool_blocks in pool_budgets {
+        for paged in [true, false] {
+            out.push(kvpage_point(rt, paged, pool_blocks, n_requests, new_tokens, seed)?);
+        }
+    }
+    Ok(out)
+}
+
+/// One row of [`kvpage_study`]: a fresh tiny-model engine at the given
+/// budget/mode, the seed-determined workload submitted up front, drained
+/// on the virtual clock.
+fn kvpage_point(
+    rt: &Rc<Runtime>,
+    paged: bool,
+    pool_blocks: usize,
+    n_requests: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Result<KvPagePoint> {
+    // Block size 4 against the tiny model's 16-token prefill bucket: a
+    // 12-token shared prefix spans 3 cacheable blocks and the hit cap
+    // (floor((16-1)/4) = 3) still leaves the last prompt block to feed.
+    let (block_size, n_groups, distinct, prefix_len, suffix_len) =
+        (4usize, 8usize, 2usize, 12usize, 4usize);
+    let clock = Clock::manual();
+    let econf = EngineConfig {
+        model: "tiny".into(),
+        mode: "road".into(),
+        decode_slots: 8,
+        queue_capacity: 4096,
+        clock: clock.clone(),
+        backend: rt.backend,
+        paged_kv: paged,
+        kv_block_size: block_size,
+        kv_pool_blocks: Some(pool_blocks),
+        ..Default::default()
+    };
+    let mut engine = Engine::new(rt.clone(), econf)?;
+    register_adapters(&mut engine, distinct, seed)?;
+    let mut rng = Rng::seed_from(seed ^ 0x4b9a);
+    let reqs = prefix_workload(
+        &mut rng, n_requests, n_groups, distinct, 1.1, prefix_len, suffix_len, new_tokens,
+    );
+    for r in reqs {
+        engine.submit(r)?;
+    }
+    let mut ttfts_ms: Vec<f64> = Vec::new();
+    let (mut finished, mut peak_lanes, mut steps) = (0usize, 0usize, 0usize);
+    while engine.has_work() {
+        for ev in engine.step()? {
+            if let StreamEvent::Finished(o) = ev {
+                finished += 1;
+                ttfts_ms.push(o.ttft * 1e3);
+            }
+        }
+        peak_lanes = peak_lanes.max(engine.n_active());
+        steps += 1;
+        clock.advance(Duration::from_millis(1));
+    }
+    // Drained: every lane returned its blocks; only unreferenced cached
+    // prefixes may still occupy pool blocks.
+    let pool = engine.paged_kv().pool();
+    anyhow::ensure!(
+        pool.n_private() == 0 && pool.total_refs() == 0,
+        "drained engine leaked KV blocks ({} private, {} refs)",
+        pool.n_private(),
+        pool.total_refs()
+    );
+    let s = crate::util::stats::summarize(&ttfts_ms);
+    let m = &engine.metrics;
+    Ok(KvPagePoint {
+        label: format!("{}/pool{pool_blocks}", if paged { "paged" } else { "flat" }),
+        paged,
+        pool_blocks,
+        block_size,
+        requests: n_requests,
+        finished,
+        steps,
+        peak_lanes,
+        prefix_hits: m.kv_prefix_hits,
+        block_hits: m.kv_block_hits,
+        block_misses: m.kv_block_misses,
+        block_evictions: m.kv_block_evictions,
+        blocks_published: m.kv_blocks_published,
+        admission_stalls: m.kv_admission_stalls,
+        prefill_lane_tokens: m.prefill_lane_tokens,
+        prefill_tokens_saved: m.kv_prefill_tokens_saved,
+        blocks_free_min: m.kv_blocks_free_min,
+        shared_refs_peak: m.kv_shared_refs_peak,
+        ttft_p50_ms: s.p50,
+        ttft_p90_ms: s.p90,
+    })
+}
+
+/// JSON form of the kvpage study — the `--sim-clock` byte-identity
+/// artifact (`results/BENCH_kvpage.json`, committed as `BENCH_kvpage.json`).
+pub fn kvpage_points_json(points: &[KvPagePoint]) -> Json {
+    json::arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("config", json::s(&p.label)),
+                    ("paged", Json::Bool(p.paged)),
+                    ("pool_blocks", json::num(p.pool_blocks as f64)),
+                    ("block_size", json::num(p.block_size as f64)),
+                    ("requests", json::num(p.requests as f64)),
+                    ("finished", json::num(p.finished as f64)),
+                    ("steps", json::num(p.steps as f64)),
+                    ("peak_lanes", json::num(p.peak_lanes as f64)),
+                    ("prefix_hits", json::num(p.prefix_hits as f64)),
+                    ("block_hits", json::num(p.block_hits as f64)),
+                    ("block_misses", json::num(p.block_misses as f64)),
+                    ("block_hit_rate", json::num(p.block_hit_rate())),
+                    ("block_evictions", json::num(p.block_evictions as f64)),
+                    ("blocks_published", json::num(p.blocks_published as f64)),
+                    ("admission_stalls", json::num(p.admission_stalls as f64)),
+                    ("prefill_lane_tokens", json::num(p.prefill_lane_tokens as f64)),
+                    ("prefill_tokens_saved", json::num(p.prefill_tokens_saved as f64)),
+                    ("blocks_free_min", json::num(p.blocks_free_min as f64)),
+                    ("shared_refs_peak", json::num(p.shared_refs_peak as f64)),
+                    ("ttft_p50_ms", json::num(p.ttft_p50_ms)),
+                    ("ttft_p90_ms", json::num(p.ttft_p90_ms)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Render the kvpage study: paged and flat rows interleaved per budget.
+/// `peak-lanes` is the admission-capacity comparison; `hit%`/`saved` show
+/// the prefix cache working; `free-min` is the memory headroom.
+pub fn render_kvpage_points(title: &str, points: &[KvPagePoint]) -> String {
+    let mut t = Table::new(&[
+        "config",
+        "pool",
+        "reqs",
+        "fin",
+        "peak-lanes",
+        "prefix-hits",
+        "hit%",
+        "evict",
+        "stalls",
+        "prefill-toks",
+        "saved",
+        "free-min",
+        "ttft p50(ms)",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.label.clone(),
+            p.pool_blocks.to_string(),
+            p.requests.to_string(),
+            p.finished.to_string(),
+            p.peak_lanes.to_string(),
+            p.prefix_hits.to_string(),
+            fmt_f(p.block_hit_rate() * 100.0, 1),
+            p.block_evictions.to_string(),
+            p.admission_stalls.to_string(),
+            p.prefill_lane_tokens.to_string(),
+            p.prefill_tokens_saved.to_string(),
+            p.blocks_free_min.to_string(),
+            fmt_f(p.ttft_p50_ms, 1),
+        ]);
+    }
+    format!(
+        "## {title}\n{}\nAt each pool budget the paged row should admit at least as many \
+         concurrent lanes as the flat row (strictly more once the budget is below \
+         decode_slots x ceil(max_seq/block) — flat charges every lane a full max_seq \
+         footprint), with a non-zero prefix hit rate saving prefill tokens.  One \
+         scheduler step = one virtual millisecond.\n",
+        t.render()
+    )
+}
+
 /// Figure 4 (Left): merged vs unmerged LoRA.  The merged path is the base
 /// model (adapter folded into W, paper §4.2); the unmerged path pays the
 /// per-layer bmm epilogue.  Rank is compile-time-fixed in the artifacts,
@@ -1149,5 +1438,80 @@ mod tests {
             assert!(x < 7);
             assert_eq!(x, zipf_sample(&mut b, 7, 1.0));
         }
+    }
+
+    #[test]
+    fn prefix_workload_shares_prefixes_within_groups() {
+        let mut rng = Rng::seed_from(11);
+        let reqs = prefix_workload(&mut rng, 64, 8, 2, 1.1, 12, 4, 16);
+        assert_eq!(reqs.len(), 64);
+        // Group a request by its first 12 tokens: same prefix => same adapter,
+        // and the hot groups recur (that's what the cache feeds on).
+        let mut by_prefix: std::collections::HashMap<Vec<i32>, Vec<&Request>> =
+            std::collections::HashMap::new();
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 16);
+            assert_eq!(r.max_new_tokens, 16);
+            by_prefix.entry(r.prompt[..12].to_vec()).or_default().push(r);
+        }
+        assert!(by_prefix.len() <= 8, "at most n_groups distinct prefixes");
+        for group in by_prefix.values() {
+            let adapter = &group[0].adapter;
+            assert!(group.iter().all(|r| &r.adapter == adapter));
+        }
+        assert!(
+            by_prefix.values().any(|g| g.len() >= 8),
+            "zipf head group should recur often"
+        );
+        // Same seed replays the same workload.
+        let mut rng2 = Rng::seed_from(11);
+        let again = prefix_workload(&mut rng2, 64, 8, 2, 1.1, 12, 4, 16);
+        for (x, y) in reqs.iter().zip(&again) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.adapter, y.adapter);
+        }
+    }
+
+    #[test]
+    fn kvpage_study_paged_beats_flat_at_tight_budgets() {
+        let rt = Rc::new(Runtime::reference());
+        let pts = kvpage_study(&rt, 24, 16, &[32, 64], 7).unwrap();
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert_eq!(p.finished, p.requests, "{}: leaked requests", p.label);
+        }
+        for pair in pts.chunks(2) {
+            let (paged, flat) = (&pair[0], &pair[1]);
+            assert!(paged.paged && !flat.paged);
+            assert_eq!(paged.pool_blocks, flat.pool_blocks);
+            // Flat charges ceil(128/4) = 32 blocks per lane, so at these
+            // budgets it serializes; paged fits many lanes and shares blocks.
+            assert!(
+                paged.peak_lanes > flat.peak_lanes,
+                "pool {}: paged peak {} vs flat {}",
+                paged.pool_blocks,
+                paged.peak_lanes,
+                flat.peak_lanes
+            );
+            assert!(paged.prefix_hits > 0, "warm zipf workload should hit");
+            assert!(paged.block_hit_rate() > 0.0);
+            assert!(paged.prefill_tokens_saved > 0);
+            // Flat mode has no prefix cache at all.
+            assert_eq!(flat.prefix_hits, 0);
+            assert_eq!(flat.block_hits, 0);
+            assert_eq!(flat.blocks_published, 0);
+        }
+        // The study is a pure function of its seed.
+        let again = kvpage_study(&rt, 24, 16, &[32, 64], 7).unwrap();
+        assert_eq!(
+            kvpage_points_json(&pts).to_string_compact(),
+            kvpage_points_json(&again).to_string_compact()
+        );
+        let md = render_kvpage_points("KV", &pts);
+        for needle in ["paged/pool32", "flat/pool64", "peak-lanes", "hit%", "free-min"] {
+            assert!(md.contains(needle), "missing {needle:?} in\n{md}");
+        }
+        let back = Json::parse(&kvpage_points_json(&pts).to_string_compact()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 4);
     }
 }

@@ -28,6 +28,17 @@
 //! only dirty slot rows (`EngineConfig::paged_bank_uploads` flips the
 //! whole-bank re-upload baseline back on for comparison).
 //!
+//! KV memory is block-granular ([`super::kv::PagedKv`],
+//! `EngineConfig::paged_kv`): admission reserves only a request's
+//! generation footprint from a shared block pool, prompts that share a
+//! cached prefix skip that much prefill work (their lanes start in
+//! prompt-feeding state and stream the uncached tail through decode
+//! steps), and cold prefills publish their prompt blocks for later
+//! requests.  Shared blocks are refcounted and copy-on-write by
+//! construction; unreferenced cached blocks are evicted LRU-first under
+//! pressure.  `--paged-kv=false` restores the flat baseline where every
+//! lane charges a full `max_seq` footprint.
+//!
 //! Admission order is policy-driven ([`super::sched`]): every scheduler
 //! iteration ranks the queue through `EngineConfig::policy` (FCFS / EDF /
 //! priority tiers / fair-share) before popping, and every timestamp the
@@ -47,7 +58,7 @@ use crate::runtime::{buffer_to_host, Arg, BackendKind, Executable, Runtime};
 use crate::tensor::{DType, HostTensor};
 use crate::util::clock::Clock;
 
-use super::kv::{KvState, SlotAllocator};
+use super::kv::{KvReservation, KvState, PagedKv, SlotAllocator};
 use super::metrics::Metrics;
 use super::queue::{AdmissionQueue, EngineError};
 use super::request::{ActiveRequest, FinishReason, Request, RequestOutput, StreamEvent};
@@ -95,6 +106,22 @@ pub struct EngineConfig {
     /// constructs the [`Runtime`] ([`super::server::EngineServer`],
     /// `main.rs`); the engine itself is backend-agnostic.
     pub backend: BackendKind,
+    /// `true` (default): block-granular KV accounting with shared-prefix
+    /// reuse ([`super::kv::PagedKv`]) — admission reserves only the
+    /// request's generation footprint, and prompts whose leading blocks are
+    /// cached skip that much prefill.  `false`: the measurable flat
+    /// baseline — every lane charges a full `max_seq` worth of blocks and
+    /// nothing is shared (`road serve --paged-kv=false`).
+    pub paged_kv: bool,
+    /// Tokens per KV block (prefix sharing granularity and the admission
+    /// accounting unit).  `road serve --kv-block`.
+    pub kv_block_size: usize,
+    /// Total blocks in the shared pool — the serving memory budget.
+    /// `None` = `decode_slots * ceil(max_seq / kv_block_size)`: enough for
+    /// every lane to reach `max_seq`, so the block gate never binds unless
+    /// explicitly squeezed (`road serve --kv-pool-blocks`, the kvpage
+    /// bench's pressure knob).
+    pub kv_pool_blocks: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -110,6 +137,9 @@ impl Default for EngineConfig {
             policy: PolicyKind::Fcfs,
             clock: Clock::Wall,
             backend: BackendKind::Pjrt,
+            paged_kv: true,
+            kv_block_size: 16,
+            kv_pool_blocks: None,
         }
     }
 }
@@ -133,6 +163,9 @@ pub struct Engine {
     slots: Vec<Option<ActiveRequest>>,
     alloc: SlotAllocator,
     kv: KvState,
+    /// Block-granular KV accounting + shared-prefix content cache layered
+    /// over `kv` ([`EngineConfig::paged_kv`]; flat baseline when false).
+    paged: PagedKv,
     pub queue: AdmissionQueue,
     pub metrics: Metrics,
     /// Admission scheduler ([`EngineConfig::policy`]): ranks the queue
@@ -211,8 +244,16 @@ impl Engine {
         let registry = AdapterRegistry::with_usable_slots(bank, usable);
 
         let kv = KvState::new(&cfg, econf.decode_slots);
+        let block_size = econf.kv_block_size.max(1);
+        // Default budget: every lane can reach max_seq, so the block gate
+        // only binds when explicitly squeezed below it.
+        let lane_blocks = (cfg.max_seq + block_size - 1) / block_size;
+        let pool_blocks =
+            econf.kv_pool_blocks.unwrap_or(econf.decode_slots.saturating_mul(lane_blocks));
+        let paged =
+            PagedKv::new(econf.decode_slots, cfg.max_seq, block_size, pool_blocks, econf.paged_kv);
         let slots = (0..econf.decode_slots).map(|_| None).collect();
-        Ok(Engine {
+        let mut engine = Engine {
             rt,
             cfg,
             registry,
@@ -224,6 +265,7 @@ impl Engine {
             alloc: SlotAllocator::new(econf.decode_slots),
             slots,
             kv,
+            paged,
             queue: AdmissionQueue::new(econf.queue_capacity),
             metrics: Metrics::with_clock(econf.clock.clone()),
             policy: sched::make_policy(econf.policy),
@@ -232,7 +274,16 @@ impl Engine {
             next_id: 1,
             events: Vec::new(),
             econf,
-        })
+        };
+        // The free-block low-water mark starts at the full pool.
+        engine.metrics.kv_blocks_free_min = engine.paged.pool().n_free();
+        Ok(engine)
+    }
+
+    /// The paged-KV layer (pool stats, block tables) — read-only; the
+    /// engine owns all mutations.
+    pub fn paged_kv(&self) -> &PagedKv {
+        &self.paged
     }
 
     /// The engine's time source (a clone of [`EngineConfig::clock`]):
@@ -353,6 +404,10 @@ impl Engine {
         // the engine thread mid-cancel — loud in debug, tolerated live.
         let released = self.alloc.release(s);
         debug_assert!(released.is_ok(), "cancelled slot was allocated");
+        // A cancelled hit lane drops its shared-prefix refs; the cached
+        // originals survive for the other lanes holding them.
+        let kv_released = self.paged.release_lane(s);
+        debug_assert!(kv_released.is_ok(), "cancelled lane held KV blocks");
         self.registry.unpin(ar.slot_adapter);
         self.metrics.requests_cancelled += 1;
         let ttft = ar.first_token_at.map(|t| (t - ar.submitted).as_secs_f64()).unwrap_or_default();
@@ -489,39 +544,145 @@ impl Engine {
             };
             let order = self.policy.order(&self.queue, &ctx);
             let mut paged_ids: BTreeSet<u64> = BTreeSet::new();
+            let mut reservations: BTreeMap<u64, KvReservation> = BTreeMap::new();
             let registry = &mut self.registry;
             let metrics = &mut self.metrics;
+            let paged = &mut self.paged;
             let take = self.queue.pop_scheduled(&order, n_free.min(bucket_b), bucket_l, |req| {
-                let Some(name) = req.adapter.as_deref() else { return true };
-                match registry.ensure_resident(name) {
-                    Ok(PageOutcome::Hit(slot)) => {
-                        metrics.bank_hits += 1;
-                        registry.pin(slot);
-                        true
-                    }
-                    Ok(PageOutcome::Paged { slot, evicted }) => {
-                        metrics.bank_misses += 1;
-                        if evicted.is_some() {
-                            metrics.bank_evictions += 1;
+                // Gate 1: KV blocks.  All-or-nothing reservation of the
+                // request's footprint (shared-prefix refs + private blocks);
+                // a pool that can't cover it leaves the request queued and
+                // holding nothing.
+                let Some(res) =
+                    paged.try_reserve(req.adapter.as_deref(), &req.prompt, req.max_new_tokens)
+                else {
+                    metrics.kv_admission_stalls += 1;
+                    return false;
+                };
+                // Gate 2: adapter residency (pinned immediately so nothing
+                // admitted later in this batch can evict it).
+                let adapter_ok = match req.adapter.as_deref() {
+                    None => true,
+                    Some(name) => match registry.ensure_resident(name) {
+                        Ok(PageOutcome::Hit(slot)) => {
+                            metrics.bank_hits += 1;
+                            registry.pin(slot);
+                            true
                         }
-                        paged_ids.insert(req.id);
-                        registry.pin(slot);
-                        true
-                    }
-                    // All pageable slots pinned by in-flight lanes: leave
-                    // the request queued; a finishing lane unblocks it.
-                    Ok(PageOutcome::Stalled) => false,
-                    // Unregistered mid-queue (unregister raced a waiting
-                    // request): leave it queued rather than corrupting the
-                    // batch; submit() validates, so this is exceptional.
-                    Err(_) => false,
+                        Ok(PageOutcome::Paged { slot, evicted }) => {
+                            metrics.bank_misses += 1;
+                            if evicted.is_some() {
+                                metrics.bank_evictions += 1;
+                            }
+                            paged_ids.insert(req.id);
+                            registry.pin(slot);
+                            true
+                        }
+                        // All pageable slots pinned by in-flight lanes: leave
+                        // the request queued; a finishing lane unblocks it.
+                        Ok(PageOutcome::Stalled) => false,
+                        // Unregistered mid-queue (unregister raced a waiting
+                        // request): leave it queued rather than corrupting the
+                        // batch; submit() validates, so this is exceptional.
+                        Err(_) => false,
+                    },
+                };
+                if !adapter_ok {
+                    // Roll the block reservation back; the request keeps its
+                    // queue position with no blocks held.
+                    let rolled_back = paged.cancel_reservation(res);
+                    debug_assert!(rolled_back.is_ok(), "reservation rollback must succeed");
+                    return false;
                 }
+                metrics.kv_block_hits += res.hit_blocks;
+                metrics.kv_block_misses += res.n_blocks() - res.hit_blocks;
+                metrics.kv_block_evictions += res.evictions;
+                if res.hit_blocks > 0 {
+                    metrics.kv_prefix_hits += 1;
+                }
+                reservations.insert(req.id, res);
+                true
             });
             if take.is_empty() {
                 return Ok(());
             }
-            self.prefill_batch(bi, take, &paged_ids)?;
+            // Memory-pressure gauges right after the reservation wave — the
+            // low-water mark of free blocks happens here, not at release.
+            self.metrics.kv_blocks_free_min =
+                self.metrics.kv_blocks_free_min.min(self.paged.pool().n_free());
+            self.metrics.kv_shared_refs_peak =
+                self.metrics.kv_shared_refs_peak.max(self.paged.pool().total_refs());
+            // Prefix-hit lanes skip the prefill executable entirely; cold
+            // lanes go through the bucket.
+            let mut cold = Vec::new();
+            for req in take {
+                let hit = reservations.get(&req.id).map(|r| r.hit_blocks > 0).unwrap_or(false);
+                if hit {
+                    let Some(res) = reservations.remove(&req.id) else { continue };
+                    self.admit_hit_lane(req, res, &paged_ids)?;
+                } else {
+                    cold.push(req);
+                }
+            }
+            if !cold.is_empty() {
+                self.prefill_batch(bi, cold, &paged_ids, &mut reservations)?;
+            }
+            debug_assert!(
+                reservations.is_empty(),
+                "every admitted request consumed its KV reservation"
+            );
         }
+    }
+
+    /// Admit a prefix-hit request straight into a decode lane: bind its
+    /// block reservation, copy the cached prefix payloads into the lane's
+    /// contiguous cache region, and start the lane in prompt-feeding state —
+    /// the uncached tail of the prompt streams through decode steps, and
+    /// the first new token is sampled when the last prompt position's
+    /// logits appear.  No prefill executable runs for this request.
+    fn admit_hit_lane(
+        &mut self,
+        req: Request,
+        res: KvReservation,
+        paged_ids: &BTreeSet<u64>,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        *self
+            .admitted_per_adapter
+            .entry(req.adapter.clone().unwrap_or_default())
+            .or_insert(0) += 1;
+        let slot_adapter = match &req.adapter {
+            Some(name) => {
+                self.registry.slot_of(name).ok_or_else(|| anyhow!("adapter {name:?} vanished"))?
+            }
+            None => 0,
+        };
+        if let Some(s) = req.submitted_at {
+            self.metrics.queue_wait.record(now.duration_since(s));
+            if paged_ids.contains(&req.id) {
+                self.metrics.paged_wait.record(now.duration_since(s));
+            }
+        }
+        self.events.push(StreamEvent::Admitted { id: req.id });
+        let slot = self
+            .alloc
+            .alloc()
+            .ok_or_else(|| anyhow!("scheduler invariant violated: no free slot"))?;
+        self.paged.bind_lane(slot, res)?;
+        // Adoption is a host-side scatter, same as prefill-lane adoption.
+        if self.kv.materialize_host()? {
+            self.metrics.kv_host_syncs += 1;
+        }
+        let hit_tokens = self.paged.adopt_shared_prefix(&mut self.kv, slot)?;
+        self.metrics.prompt_tokens += req.prompt.len();
+        self.metrics.kv_prefill_tokens_saved += hit_tokens;
+        let mut ar = ActiveRequest::new(req, slot_adapter, now);
+        // Resume where the cached prefix ends: decode feeds prompt[pos]
+        // until the whole prompt is in cache, then samples the first token.
+        ar.pos = hit_tokens;
+        debug_assert!(self.slots[slot].is_none());
+        self.slots[slot] = Some(ar);
+        Ok(())
     }
 
     fn prefill_batch(
@@ -529,6 +690,7 @@ impl Engine {
         bucket_idx: usize,
         reqs: Vec<Request>,
         paged_ids: &BTreeSet<u64>,
+        reservations: &mut BTreeMap<u64, KvReservation>,
     ) -> Result<()> {
         self.upload_bank_if_dirty()?;
         let (b, l) = (
@@ -607,6 +769,7 @@ impl Engine {
             ar.first_token_at = Some(first_token_at);
             self.metrics.tokens_generated += 1;
             self.metrics.prompt_tokens += ar.req.prompt.len();
+            self.metrics.prefill_lane_tokens += ar.req.prompt.len();
             // Stream the first token with its TTFT; a stop token is
             // terminal and never emitted (it is also stripped from the
             // finished output, keeping the stream concatenation exact).
@@ -624,7 +787,15 @@ impl Engine {
                 .alloc
                 .alloc()
                 .ok_or_else(|| anyhow!("scheduler invariant violated: no free slot"))?;
+            let Some(res) = reservations.remove(&ar.req.id) else {
+                bail!("admitted request {} has no KV reservation", ar.req.id);
+            };
+            self.paged.bind_lane(slot, res)?;
             self.kv.adopt_prefill_lane(pk, pv, lane, slot, ar.req.prompt.len())?;
+            // Promote this prompt's full blocks into the shared-prefix
+            // cache so later identical prompts can skip their prefill.
+            let published = self.paged.publish_prefix(&mut self.kv, slot, ar.req.prompt.len())?;
+            self.metrics.kv_blocks_published += published;
             debug_assert!(self.slots[slot].is_none());
             self.slots[slot] = Some(ar);
         }
@@ -642,11 +813,17 @@ impl Engine {
         for (s, slot) in self.slots.iter().enumerate() {
             if let Some(ar) = slot {
                 any = true;
-                // Prefill pushes the first token before a slot activates,
-                // so `generated` is never empty here; a zero fallback on a
-                // lost invariant decodes one garbage token instead of
-                // killing the serving thread.
-                token[s] = ar.generated.last().copied().unwrap_or_default();
+                token[s] = if ar.pos < ar.req.prompt.len() {
+                    // Prompt-feeding lane (shared-prefix hit): the uncached
+                    // tail of its own prompt streams through decode.
+                    ar.req.prompt.get(ar.pos).copied().unwrap_or_default()
+                } else {
+                    // Prefill (or the feeding phase) pushes the first token
+                    // before normal decode, so `generated` is never empty
+                    // here; a zero fallback on a lost invariant decodes one
+                    // garbage token instead of killing the serving thread.
+                    ar.generated.last().copied().unwrap_or_default()
+                };
                 pos[s] = ar.pos as i32;
                 ids[s] = ar.slot_adapter as i32;
             }
@@ -730,9 +907,20 @@ impl Engine {
 
         let vocab = self.cfg.vocab;
         for s in 0..b {
-            let (id, tok, pos, reason) = {
+            // Advance the lane.  A prompt-feeding step (shared-prefix hit
+            // still streaming its prompt in) produced logits for a token we
+            // already know — nothing is sampled or streamed for it.
+            let (feeding, first) = {
                 let Some(ar) = self.slots[s].as_mut() else { continue };
                 ar.pos += 1;
+                (ar.pos < ar.req.prompt.len(), ar.first_token_at.is_none())
+            };
+            if feeding {
+                continue;
+            }
+            let now = self.clock.now();
+            let (id, tok, pos, reason, ttft_hint) = {
+                let Some(ar) = self.slots[s].as_mut() else { continue };
                 let row = logits.read_f32_range(s * vocab, vocab);
                 let tok = sampler::sample(
                     &row,
@@ -741,20 +929,40 @@ impl Engine {
                     &mut ar.rng_state,
                 );
                 ar.generated.push(tok);
-                (ar.req.id, tok, ar.generated.len() - 1, ar.done())
+                // A prefix-hit lane's first token lands here (cold lanes
+                // stamp theirs in the prefill batch).
+                let hint = if first {
+                    ar.first_token_at = Some(now);
+                    Some((now - ar.submitted).as_secs_f64())
+                } else {
+                    None
+                };
+                (ar.req.id, tok, ar.generated.len() - 1, ar.done(), hint)
             };
+            if let Some(ttft) = ttft_hint {
+                self.metrics.prefix_hit_ttft.record_us(ttft * 1e6);
+            }
             self.metrics.tokens_generated += 1;
             // Stop tokens are terminal and stripped from the output, so
             // they are never streamed either.
             if !matches!(reason, Some(FinishReason::StopToken)) {
-                self.events.push(StreamEvent::Token { id, token: tok, pos, ttft_hint: None });
+                self.events.push(StreamEvent::Token { id, token: tok, pos, ttft_hint });
             }
             if let Some(reason) = reason {
                 let Some(ar) = self.slots[s].take() else { continue };
                 self.alloc.release(s)?;
+                self.release_kv_lane(s)?;
                 self.finish(ar, reason);
             }
         }
+        Ok(())
+    }
+
+    /// Return a reaped lane's KV blocks exactly once: private blocks to
+    /// the free list, shared-prefix refs dropped (never the cached
+    /// originals — other lanes may hold them).
+    fn release_kv_lane(&mut self, slot: usize) -> Result<()> {
+        self.paged.release_lane(slot).with_context(|| format!("releasing KV lane {slot}"))?;
         Ok(())
     }
 
@@ -802,6 +1010,7 @@ impl Engine {
             if self.slots[s].as_ref().is_some_and(|ar| ar.req.expired(now)) {
                 let Some(ar) = self.slots[s].take() else { continue };
                 self.alloc.release(s)?;
+                self.release_kv_lane(s)?;
                 self.registry.unpin(ar.slot_adapter);
                 self.metrics.deadline_shed += 1;
                 self.events
@@ -832,6 +1041,7 @@ impl Engine {
         for (s, reason) in finished_at_prefill {
             let Some(ar) = self.slots[s].take() else { continue };
             self.alloc.release(s)?;
+            self.release_kv_lane(s)?;
             self.finish(ar, reason);
         }
         self.decode_once()?;

@@ -20,10 +20,20 @@
 //!   golden-record comparison.  Prefill admission therefore costs one full
 //!   cache round-trip *per admitted batch*; the per-step decode transfers
 //!   stay O(B·vocab) (logits only).
+//!
+//! # Paging
+//!
+//! [`PagedKv`] layers block-granular accounting and a shared-prefix content
+//! cache (copy-on-write, refcounted, LRU-evicted) over the contiguous
+//! layout; see its docs for the admission/publish/release protocol.  The
+//! flat contiguous behaviour survives as the measurable `paged_kv = false`
+//! baseline, where every lane charges a full `max_seq` worth of blocks.
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::pool::BlockPool;
 use crate::manifest::ModelConfigInfo;
+use crate::runtime::reference::{gather_cache_block, scatter_cache_block};
 use crate::runtime::{buffer_to_host, upload};
 use crate::tensor::{DType, HostTensor};
 
@@ -268,6 +278,381 @@ impl KvState {
         }
         Ok(())
     }
+
+    /// Read `n_tokens` contiguous cache positions of `slot` starting at
+    /// `start`, as flat `[n_layers, n_heads, n_tokens, head_dim]` K and V
+    /// buffers (the payload format of a shared-prefix block).
+    /// Materializes the cache to host if needed.
+    pub fn read_block(
+        &mut self,
+        slot: usize,
+        start: usize,
+        n_tokens: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.materialize_host()?;
+        let k = gather_cache_block(&self.hk, slot, start, n_tokens)?;
+        let v = gather_cache_block(&self.hv, slot, start, n_tokens)?;
+        Ok((k, v))
+    }
+
+    /// Scatter block payloads produced by [`KvState::read_block`] into
+    /// `slot` at position `start` (the shared-prefix adoption path).
+    /// Materializes the cache to host if needed.
+    pub fn write_block(
+        &mut self,
+        slot: usize,
+        start: usize,
+        n_tokens: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        self.materialize_host()?;
+        scatter_cache_block(&mut self.hk, slot, start, n_tokens, k)?;
+        scatter_cache_block(&mut self.hv, slot, start, n_tokens, v)?;
+        Ok(())
+    }
+}
+
+/// Chained FNV-1a-64 keys for each *full* `block_size`-token block of a
+/// prompt, salted by the adapter name (K/V contents depend on the adapter's
+/// rotation epilogue, so the same tokens under different adapters must never
+/// share cache blocks).  `keys[j]` commits to the adapter and to
+/// `prompt[..(j + 1) * block_size]`, so equal keys mean equal prefixes.
+pub fn prefix_block_keys(adapter: Option<&str>, prompt: &[i32], block_size: usize) -> Vec<u64> {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let bs = block_size.max(1);
+    let mut h = FNV_OFFSET;
+    for b in adapter.unwrap_or("").bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    // Separator so adapter "a" + token bytes can't collide with adapter "".
+    h = (h ^ 0xff).wrapping_mul(FNV_PRIME);
+    let mut keys = Vec::with_capacity(prompt.len() / bs);
+    for (i, &tok) in prompt.iter().enumerate() {
+        for byte in (tok as u32).to_le_bytes() {
+            h = (h ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+        }
+        if (i + 1) % bs == 0 {
+            keys.push(h);
+        }
+    }
+    keys
+}
+
+/// The blocks backing one decode slot: `shared` holds refcounted
+/// cached-prefix blocks (read-only by construction — their content was
+/// *copied* into the lane's contiguous region at admission), `private`
+/// holds this lane's exclusively-owned blocks.
+#[derive(Clone, Debug, Default)]
+pub struct LaneBlocks {
+    shared: Vec<usize>,
+    private: Vec<usize>,
+    /// Cache positions covered by the shared prefix (`hit_blocks * block_size`).
+    hit_tokens: usize,
+    /// Chained prefix keys for this lane's prompt, one per full block.
+    keys: Vec<u64>,
+}
+
+/// A successful admission-time block reservation, to be either bound to a
+/// slot ([`PagedKv::bind_lane`]) or rolled back
+/// ([`PagedKv::cancel_reservation`]) if a later admission gate stalls.
+#[derive(Debug)]
+pub struct KvReservation {
+    shared: Vec<usize>,
+    private: Vec<usize>,
+    keys: Vec<u64>,
+    /// Leading full prompt blocks served from the shared-prefix cache.
+    pub hit_blocks: usize,
+    /// Cached blocks evicted (LRU) to satisfy the private allocations.
+    pub evictions: usize,
+}
+
+impl KvReservation {
+    pub fn n_blocks(&self) -> usize {
+        self.shared.len() + self.private.len()
+    }
+}
+
+/// Bookkeeping results of releasing a lane (metrics fodder).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvRelease {
+    pub private_freed: usize,
+    pub shared_unrefs: usize,
+}
+
+/// Block-granular KV accounting and shared-prefix content cache layered
+/// over the contiguous [`KvState`] layout.
+///
+/// XLA executables are shape-specialized, so the *staging* layout stays the
+/// contiguous `[n_layers, B, n_heads, max_seq, head_dim]` cache; what pages
+/// is the *accounting* (admission is gated on block availability instead of
+/// whole `max_seq` lanes) and the *content* of shared prompt prefixes:
+///
+/// * On admission, [`PagedKv::try_reserve`] keys the prompt's full blocks
+///   ([`prefix_block_keys`]), takes refcounts on the longest cached prefix
+///   run, and allocates private blocks for the rest of the footprint
+///   (`ceil(min(prompt + max_new, max_seq) / block_size)` in paged mode,
+///   the full `ceil(max_seq / block_size)` in flat mode) — all-or-nothing,
+///   with rollback.
+/// * A hit lane *copies* the cached payloads into its contiguous region
+///   ([`PagedKv::adopt_shared_prefix`]) — copy-on-write by construction:
+///   there is no write path to a cached block, so writers can never alias a
+///   shared block.
+/// * After a cold prefill, [`PagedKv::publish_prefix`] promotes the lane's
+///   leading private blocks to cached entries (refs = 1 while the lane
+///   lives) and snapshots their payloads.
+/// * [`PagedKv::release_lane`] returns every block exactly once: private
+///   blocks to the free list, shared blocks via unref.  Unreferenced cached
+///   blocks stay resident and are reclaimed LRU-first under pressure by the
+///   next reservation ([`crate::coordinator::pool::BlockPool`] semantics).
+pub struct PagedKv {
+    pool: BlockPool,
+    lanes: Vec<Option<LaneBlocks>>,
+    /// Snapshotted payloads of published blocks, `[n_layers, n_heads,
+    /// block_size, head_dim]` flat (indexed by block id).
+    data_k: Vec<Vec<f32>>,
+    data_v: Vec<Vec<f32>>,
+    paged: bool,
+    max_seq: usize,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    let b = b.max(1);
+    (a + b - 1) / b
+}
+
+impl PagedKv {
+    pub fn new(
+        n_slots: usize,
+        max_seq: usize,
+        block_size: usize,
+        pool_blocks: usize,
+        paged: bool,
+    ) -> PagedKv {
+        PagedKv {
+            pool: BlockPool::new(pool_blocks, block_size),
+            lanes: (0..n_slots).map(|_| None).collect(),
+            data_k: vec![Vec::new(); pool_blocks],
+            data_v: vec![Vec::new(); pool_blocks],
+            paged,
+            max_seq,
+        }
+    }
+
+    pub fn paged(&self) -> bool {
+        self.paged
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    /// Pool-level stats (free/private/cached/refcounts) for metrics gauges.
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn is_bound(&self, slot: usize) -> bool {
+        self.lanes.get(slot).map(|l| l.is_some()).unwrap_or(false)
+    }
+
+    /// Blocks one admission would occupy: the full generation footprint in
+    /// paged mode, a whole `max_seq` lane in flat mode.
+    pub fn footprint_blocks(&self, prompt_len: usize, max_new: usize) -> usize {
+        let bs = self.pool.block_size();
+        if self.paged {
+            ceil_div((prompt_len + max_new).min(self.max_seq), bs).max(1)
+        } else {
+            ceil_div(self.max_seq, bs).max(1)
+        }
+    }
+
+    /// Try to reserve the blocks for one request: refcount the longest
+    /// cached prefix run (paged mode only), then allocate private blocks
+    /// for the remainder of the footprint.  Returns `None` — with full
+    /// rollback — when the pool cannot cover it; the request stays queued.
+    ///
+    /// The hit run is capped at `floor((prompt_len - 1) / block_size)` so at
+    /// least one prompt token always remains to be fed through the model
+    /// (first-token logits are computed, never cached).
+    pub fn try_reserve(
+        &mut self,
+        adapter: Option<&str>,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Option<KvReservation> {
+        let bs = self.pool.block_size();
+        let footprint = self.footprint_blocks(prompt.len(), max_new);
+        let (keys, hit_blocks) = if self.paged {
+            let keys = prefix_block_keys(adapter, prompt, bs);
+            let max_hit = prompt.len().saturating_sub(1) / bs;
+            let mut hit = 0;
+            for &k in keys.iter().take(max_hit) {
+                if self.pool.lookup(k).is_some() {
+                    hit += 1;
+                } else {
+                    break;
+                }
+            }
+            (keys, hit)
+        } else {
+            (Vec::new(), 0)
+        };
+        let mut shared = Vec::with_capacity(hit_blocks);
+        for &k in keys.iter().take(hit_blocks) {
+            match self.pool.ref_cached(k) {
+                Some(b) => shared.push(b),
+                // Unreachable while &mut self is held, but stay total.
+                None => break,
+            }
+        }
+        let hit_blocks = shared.len();
+        let need = footprint.saturating_sub(hit_blocks);
+        let mut private = Vec::with_capacity(need);
+        let mut evictions = 0usize;
+        for _ in 0..need {
+            match self.pool.alloc_private() {
+                Some(pa) => {
+                    if pa.evicted.is_some() {
+                        evictions += 1;
+                    }
+                    private.push(pa.block);
+                }
+                None => {
+                    for &b in &private {
+                        let _ = self.pool.release_private(b);
+                    }
+                    for &b in &shared {
+                        let _ = self.pool.unref_cached(b);
+                    }
+                    return None;
+                }
+            }
+        }
+        Some(KvReservation { shared, private, keys, hit_blocks, evictions })
+    }
+
+    /// Roll back a reservation whose admission later stalled (e.g. the
+    /// adapter bank had no evictable slot).
+    pub fn cancel_reservation(&mut self, res: KvReservation) -> Result<()> {
+        for &b in &res.private {
+            self.pool.release_private(b)?;
+        }
+        for &b in &res.shared {
+            self.pool.unref_cached(b)?;
+        }
+        Ok(())
+    }
+
+    /// Commit a reservation to a decode slot's block table.
+    pub fn bind_lane(&mut self, slot: usize, res: KvReservation) -> Result<()> {
+        let bs = self.pool.block_size();
+        let n = self.lanes.len();
+        let Some(entry) = self.lanes.get_mut(slot) else {
+            bail!("KV lane {slot} out of range ({n})");
+        };
+        if entry.is_some() {
+            bail!("KV lane {slot} is already bound");
+        }
+        *entry = Some(LaneBlocks {
+            hit_tokens: res.hit_blocks * bs,
+            shared: res.shared,
+            private: res.private,
+            keys: res.keys,
+        });
+        Ok(())
+    }
+
+    /// Copy the lane's shared-prefix payloads into its contiguous cache
+    /// region (positions `0..hit_tokens`).  Returns `hit_tokens` — the
+    /// position decode resumes prompt-feeding from.
+    pub fn adopt_shared_prefix(&self, kv: &mut KvState, slot: usize) -> Result<usize> {
+        let Some(lane) = self.lanes.get(slot).and_then(|l| l.as_ref()) else {
+            bail!("KV lane {slot} is not bound");
+        };
+        let bs = self.pool.block_size();
+        for (j, &b) in lane.shared.iter().take(lane.hit_tokens / bs.max(1)).enumerate() {
+            let (Some(kd), Some(vd)) = (self.data_k.get(b), self.data_v.get(b)) else {
+                bail!("cached block {b} has no stored payload");
+            };
+            kv.write_block(slot, j * bs, bs, kd, vd)?;
+        }
+        Ok(lane.hit_tokens)
+    }
+
+    /// After a cold prefill lands in `slot`, promote the lane's leading
+    /// private blocks (those covering full prompt blocks beyond the hit
+    /// run) into the shared-prefix cache, snapshotting their payloads.
+    /// Returns the number of blocks published.  A key already published by
+    /// a concurrent lane keeps this lane's block private (no dedup copy).
+    pub fn publish_prefix(
+        &mut self,
+        kv: &mut KvState,
+        slot: usize,
+        prompt_len: usize,
+    ) -> Result<usize> {
+        if !self.paged {
+            return Ok(0);
+        }
+        let bs = self.pool.block_size();
+        let n = self.lanes.len();
+        let Some(lane) = self.lanes.get_mut(slot).and_then(|l| l.as_mut()) else {
+            bail!("KV lane {slot}/{n} is not bound");
+        };
+        let full = prompt_len / bs;
+        let hit = lane.hit_tokens / bs;
+        if full <= hit {
+            return Ok(0);
+        }
+        let publishable = (full - hit).min(lane.private.len());
+        let candidates: Vec<usize> = lane.private.drain(..publishable).collect();
+        let mut kept = Vec::new();
+        let mut published = 0usize;
+        for (idx, b) in candidates.into_iter().enumerate() {
+            let j = hit + idx;
+            let Some(&key) = lane.keys.get(j) else {
+                kept.push(b);
+                continue;
+            };
+            if self.pool.publish(b, key)? {
+                let (kd, vd) = kv.read_block(slot, j * bs, bs)?;
+                if let (Some(dk), Some(dv)) = (self.data_k.get_mut(b), self.data_v.get_mut(b)) {
+                    *dk = kd;
+                    *dv = vd;
+                }
+                lane.shared.push(b);
+                published += 1;
+            } else {
+                kept.push(b);
+            }
+        }
+        kept.append(&mut lane.private);
+        lane.private = kept;
+        Ok(published)
+    }
+
+    /// Return every block of a lane exactly once: private blocks to the
+    /// free list, shared blocks via unref (the cached originals survive
+    /// with their refcount decremented — a cancelled hit lane never frees
+    /// the shared prefix out from under other lanes).  Double release of
+    /// the same slot fails, as does releasing an unbound slot.
+    pub fn release_lane(&mut self, slot: usize) -> Result<KvRelease> {
+        let n = self.lanes.len();
+        let Some(entry) = self.lanes.get_mut(slot) else {
+            bail!("KV lane {slot} out of range ({n})");
+        };
+        let Some(lane) = entry.take() else {
+            bail!("release of unbound KV lane {slot}");
+        };
+        for &b in &lane.private {
+            self.pool.release_private(b)?;
+        }
+        for &b in &lane.shared {
+            self.pool.unref_cached(b)?;
+        }
+        Ok(KvRelease { private_freed: lane.private.len(), shared_unrefs: lane.shared.len() })
+    }
 }
 
 #[cfg(test)]
@@ -411,5 +796,145 @@ mod tests {
             1.25;
             2 * c.head_dim
         ]);
+    }
+
+    #[test]
+    fn prefix_keys_are_adapter_salted_and_prefix_stable() {
+        let prompt = [3, 1, 4, 1, 5, 9, 2, 6];
+        let base = prefix_block_keys(None, &prompt, 2);
+        assert_eq!(base.len(), 4, "one key per full block");
+        // Same tokens under a different adapter never share keys.
+        let salted = prefix_block_keys(Some("road:a"), &prompt, 2);
+        assert!(base.iter().zip(&salted).all(|(a, b)| a != b));
+        // A longer prompt extends, not perturbs, the shorter prompt's keys.
+        let longer = prefix_block_keys(None, &[3, 1, 4, 1, 5, 9, 2, 6, 7, 7], 2);
+        assert_eq!(&longer[..4], &base[..]);
+        // Diverging tokens diverge from the first affected block onward.
+        let fork = prefix_block_keys(None, &[3, 1, 4, 1, 8, 9, 2, 6], 2);
+        assert_eq!(fork[0], base[0]);
+        assert_eq!(fork[1], base[1]);
+        assert_ne!(fork[2], base[2]);
+        assert_ne!(fork[3], base[3]);
+        // No panic on degenerate block size; partial blocks yield no key.
+        assert_eq!(prefix_block_keys(None, &[1], 0).len(), 1);
+        assert!(prefix_block_keys(None, &[1, 2, 3], 4).is_empty());
+    }
+
+    /// Cold reserve -> bind -> publish -> release -> warm reserve hits the
+    /// published prefix, and adoption reproduces the published payloads
+    /// bit-for-bit in the new lane.
+    #[test]
+    fn paged_publish_then_hit_roundtrip() {
+        let c = cfg(); // max_seq 8, n_layers 2, n_heads 2, head_dim 4
+        let bs = 2;
+        let mut kv = KvState::new(&c, 2);
+        let mut paged = PagedKv::new(2, c.max_seq, bs, 8, true);
+        let prompt = [11, 12, 13, 14, 15];
+
+        // Cold: footprint ceil((5 + 3) / 2) = 4 blocks, no hits.
+        let res = paged.try_reserve(Some("ad"), &prompt, 3).unwrap();
+        assert_eq!(res.hit_blocks, 0);
+        assert_eq!(res.n_blocks(), 4);
+        paged.bind_lane(0, res).unwrap();
+        assert!(paged.is_bound(0));
+
+        // Pretend prefill wrote distinctive K/V rows for the prompt.
+        let row = |t: usize| vec![t as f32 + 0.5; c.head_dim];
+        for t in 0..prompt.len() {
+            let mut k = Vec::new();
+            for _ in 0..c.n_layers * c.n_heads {
+                k.extend(row(t));
+            }
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            kv.write_block(0, t, 1, &k, &v).unwrap();
+        }
+
+        // Publish: full = 5 / 2 = 2 blocks become cached (refs = 1).
+        assert_eq!(paged.publish_prefix(&mut kv, 0, prompt.len()).unwrap(), 2);
+        assert_eq!(paged.pool().n_cached(), 2);
+        assert_eq!(paged.pool().total_refs(), 2);
+
+        // Release returns all 4 blocks exactly once; cached entries stay.
+        let rel = paged.release_lane(0).unwrap();
+        assert_eq!(rel, KvRelease { private_freed: 2, shared_unrefs: 2 });
+        assert!(paged.release_lane(0).is_err(), "double release must fail");
+        paged.pool().check_conservation().unwrap();
+        assert_eq!(paged.pool().total_refs(), 0);
+        assert_eq!(paged.pool().n_cached(), 2);
+
+        // Warm: same adapter + prompt hits floor((5 - 1) / 2) = 2 blocks.
+        let res = paged.try_reserve(Some("ad"), &prompt, 3).unwrap();
+        assert_eq!(res.hit_blocks, 2);
+        // A different adapter over the same tokens must miss.
+        assert_eq!(paged.try_reserve(Some("other"), &prompt, 3).map(|r| {
+            let h = r.hit_blocks;
+            paged.cancel_reservation(r).unwrap();
+            h
+        }), Some(0));
+        paged.bind_lane(1, res).unwrap();
+        let hit_tokens = paged.adopt_shared_prefix(&mut kv, 1).unwrap();
+        assert_eq!(hit_tokens, 4);
+        let (cold_k, cold_v) = kv.read_block(0, 0, 4).unwrap();
+        let (warm_k, warm_v) = kv.read_block(1, 0, 4).unwrap();
+        assert_eq!(cold_k, warm_k, "adopted prefix must be bit-identical");
+        assert_eq!(cold_v, warm_v);
+        paged.release_lane(1).unwrap();
+        paged.pool().check_conservation().unwrap();
+    }
+
+    /// Referenced cached blocks pin against eviction: a reservation that
+    /// would need them fails outright instead of stealing them, and a
+    /// stalled admission rolls back to the pre-reserve state.
+    #[test]
+    fn reservation_pressure_respects_refcounts_and_rolls_back() {
+        let c = cfg();
+        let mut kv = KvState::new(&c, 2);
+        // 4-block pool, block 2 tokens.
+        let mut paged = PagedKv::new(2, c.max_seq, 2, 4, true);
+        let prompt = [1, 2, 3, 4, 5];
+        let res = paged.try_reserve(None, &prompt, 3).unwrap();
+        assert_eq!(res.n_blocks(), 4, "pool is now fully occupied");
+        paged.bind_lane(0, res).unwrap();
+        paged.publish_prefix(&mut kv, 0, prompt.len()).unwrap();
+
+        // All 4 blocks are held by lane 0 (2 private + 2 cached refs = 1):
+        // nothing is evictable, so any new reservation must fail...
+        assert!(paged.try_reserve(None, &[9, 9, 9], 1).is_none());
+        paged.pool().check_conservation().unwrap();
+        assert_eq!(paged.pool().n_free(), 0);
+
+        // ...and after release the cached blocks (refs = 0) are fair game:
+        // a 3-block reservation drains the 2 freed blocks and then must
+        // evict an LRU cached block for the third.
+        paged.release_lane(0).unwrap();
+        let res = paged.try_reserve(None, &[9, 9, 9], 3).unwrap();
+        assert_eq!(res.n_blocks(), 3);
+        assert!(res.evictions > 0, "pressure must surface as evictions");
+        paged.cancel_reservation(res).unwrap();
+        paged.pool().check_conservation().unwrap();
+    }
+
+    /// Flat mode (`paged_kv = false`) charges every admission a full
+    /// max_seq lane and never shares, making it the equal-budget baseline.
+    #[test]
+    fn flat_mode_charges_full_lanes_and_never_hits() {
+        let c = cfg(); // max_seq 8
+        let bs = 2;
+        // Budget = 2 lanes * ceil(8 / 2) = 8 blocks.
+        let mut paged = PagedKv::new(3, c.max_seq, bs, 8, false);
+        let prompt = [1, 2, 3, 4];
+        let r0 = paged.try_reserve(None, &prompt, 1).unwrap();
+        assert_eq!(r0.n_blocks(), 4, "flat footprint is max_seq / block");
+        assert_eq!(r0.hit_blocks, 0);
+        paged.bind_lane(0, r0).unwrap();
+        let r1 = paged.try_reserve(None, &prompt, 1).unwrap();
+        paged.bind_lane(1, r1).unwrap();
+        // Same prompt again: flat mode has no prefix cache to hit and no
+        // free blocks left -> admission stalls.
+        assert!(paged.try_reserve(None, &prompt, 1).is_none());
+        paged.release_lane(0).unwrap();
+        paged.release_lane(1).unwrap();
+        paged.pool().check_conservation().unwrap();
+        assert_eq!(paged.pool().n_free(), 8);
     }
 }

@@ -73,6 +73,34 @@ pub struct Metrics {
     /// Submit → admission for requests that suffered a bank miss (the
     /// queue-wait cost of paging, recorded separately from `queue_wait`).
     pub paged_wait: LatencyRecorder,
+    /// KV blocks reused from the shared-prefix cache at admission
+    /// (refcounted, not copied in the pool — the prefill work they replace
+    /// is `kv_prefill_tokens_saved`).
+    pub kv_block_hits: usize,
+    /// KV blocks privately allocated at admission (cold footprint).
+    pub kv_block_misses: usize,
+    /// Cached prefix blocks LRU-evicted to satisfy an allocation.
+    pub kv_block_evictions: usize,
+    /// Private blocks promoted into the shared-prefix cache after a cold
+    /// prefill.
+    pub kv_blocks_published: usize,
+    /// Admissions that reused at least one cached prefix block.
+    pub kv_prefix_hits: usize,
+    /// Prompt tokens whose prefill was skipped via cached prefix blocks.
+    pub kv_prefill_tokens_saved: usize,
+    /// Prompt tokens that actually went through a prefill executable
+    /// (cold lanes only; compare against `prompt_tokens`).
+    pub prefill_lane_tokens: usize,
+    /// Admissions deferred because the block pool could not cover the
+    /// request's footprint (every evictable block pinned).
+    pub kv_admission_stalls: usize,
+    /// Low-water mark of free pool blocks (memory headroom under load).
+    pub kv_blocks_free_min: usize,
+    /// High-water mark of outstanding shared-prefix refcounts.
+    pub kv_shared_refs_peak: usize,
+    /// Submit → first token for prefix-hit admissions only (the TTFT the
+    /// shared-prefix cache buys, vs the all-requests `ttft`).
+    pub prefix_hit_ttft: LatencyRecorder,
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
 }
@@ -160,6 +188,17 @@ impl Metrics {
             bank_upload_bytes: self.bank_upload_bytes,
             bank_full_uploads: self.bank_full_uploads,
             bank_staged_rows: self.bank_staged_rows,
+            kv_block_hits: self.kv_block_hits,
+            kv_block_misses: self.kv_block_misses,
+            kv_block_evictions: self.kv_block_evictions,
+            kv_blocks_published: self.kv_blocks_published,
+            kv_prefix_hits: self.kv_prefix_hits,
+            kv_prefill_tokens_saved: self.kv_prefill_tokens_saved,
+            prefill_lane_tokens: self.prefill_lane_tokens,
+            kv_admission_stalls: self.kv_admission_stalls,
+            kv_blocks_free_min: self.kv_blocks_free_min,
+            kv_shared_refs_peak: self.kv_shared_refs_peak,
+            prefix_hit_ttft: self.prefix_hit_ttft.summary(),
         }
     }
 
@@ -202,6 +241,17 @@ pub struct MetricsSnapshot {
     pub bank_upload_bytes: usize,
     pub bank_full_uploads: usize,
     pub bank_staged_rows: usize,
+    pub kv_block_hits: usize,
+    pub kv_block_misses: usize,
+    pub kv_block_evictions: usize,
+    pub kv_blocks_published: usize,
+    pub kv_prefix_hits: usize,
+    pub kv_prefill_tokens_saved: usize,
+    pub prefill_lane_tokens: usize,
+    pub kv_admission_stalls: usize,
+    pub kv_blocks_free_min: usize,
+    pub kv_shared_refs_peak: usize,
+    pub prefix_hit_ttft: Summary,
 }
 
 impl MetricsSnapshot {
@@ -212,7 +262,8 @@ impl MetricsSnapshot {
              ttft(p50/p90)={:.1}/{:.1}ms e2e(p50/p90)={:.1}/{:.1}ms \
              queue_wait(p50/p90)={:.1}/{:.1}ms queue_depth(p50/max)={:.0}/{:.0} \
              prefill={:.2}s decode={:.2}s kv_dl/ul={}/{} \
-             bank(h/m/e)={}/{}/{} bank_upload={}B",
+             bank(h/m/e)={}/{}/{} bank_upload={}B \
+             kvblk(h/m/e)={}/{}/{} prefix_hits={} prefill_saved={}",
             self.requests_completed,
             self.requests_cancelled,
             self.deadline_shed,
@@ -237,6 +288,11 @@ impl MetricsSnapshot {
             self.bank_misses,
             self.bank_evictions,
             self.bank_upload_bytes,
+            self.kv_block_hits,
+            self.kv_block_misses,
+            self.kv_block_evictions,
+            self.kv_prefix_hits,
+            self.kv_prefill_tokens_saved,
         )
     }
 
@@ -246,6 +302,7 @@ impl MetricsSnapshot {
     pub fn report_table(&self) -> String {
         let (t, e, qw, pw, qd) =
             (&self.ttft, &self.e2e, &self.queue_wait, &self.paged_wait, &self.queue_depth);
+        let ph = &self.prefix_hit_ttft;
         kv_table(&[
             ("requests completed", self.requests_completed.to_string()),
             ("requests cancelled", self.requests_cancelled.to_string()),
@@ -269,6 +326,20 @@ impl MetricsSnapshot {
             ("bank upload bytes", self.bank_upload_bytes.to_string()),
             ("bank full uploads", self.bank_full_uploads.to_string()),
             ("bank staged rows", self.bank_staged_rows.to_string()),
+            ("kv block hits", self.kv_block_hits.to_string()),
+            ("kv block misses", self.kv_block_misses.to_string()),
+            ("kv block evictions", self.kv_block_evictions.to_string()),
+            ("kv blocks published", self.kv_blocks_published.to_string()),
+            ("kv prefix hits", self.kv_prefix_hits.to_string()),
+            ("kv prefill tokens saved", self.kv_prefill_tokens_saved.to_string()),
+            ("prefill lane tokens", self.prefill_lane_tokens.to_string()),
+            ("kv admission stalls", self.kv_admission_stalls.to_string()),
+            ("kv blocks free (min)", self.kv_blocks_free_min.to_string()),
+            ("kv shared refs (peak)", self.kv_shared_refs_peak.to_string()),
+            (
+                "prefix-hit ttft p50/p90 (ms)",
+                format!("{:.1} / {:.1}", ph.p50 / 1e3, ph.p90 / 1e3),
+            ),
         ])
     }
 
@@ -307,6 +378,17 @@ impl MetricsSnapshot {
             ("bank_upload_bytes", json::num(self.bank_upload_bytes as f64)),
             ("bank_full_uploads", json::num(self.bank_full_uploads as f64)),
             ("bank_staged_rows", json::num(self.bank_staged_rows as f64)),
+            ("kv_block_hits", json::num(self.kv_block_hits as f64)),
+            ("kv_block_misses", json::num(self.kv_block_misses as f64)),
+            ("kv_block_evictions", json::num(self.kv_block_evictions as f64)),
+            ("kv_blocks_published", json::num(self.kv_blocks_published as f64)),
+            ("kv_prefix_hits", json::num(self.kv_prefix_hits as f64)),
+            ("kv_prefill_tokens_saved", json::num(self.kv_prefill_tokens_saved as f64)),
+            ("prefill_lane_tokens", json::num(self.prefill_lane_tokens as f64)),
+            ("kv_admission_stalls", json::num(self.kv_admission_stalls as f64)),
+            ("kv_blocks_free_min", json::num(self.kv_blocks_free_min as f64)),
+            ("kv_shared_refs_peak", json::num(self.kv_shared_refs_peak as f64)),
+            ("prefix_hit_ttft", summary(&self.prefix_hit_ttft)),
         ])
     }
 }
@@ -422,10 +504,61 @@ mod tests {
             "bank_upload_bytes",
             "bank_full_uploads",
             "bank_staged_rows",
+            "kv_block_hits",
+            "kv_block_misses",
+            "kv_block_evictions",
+            "kv_blocks_published",
+            "kv_prefix_hits",
+            "kv_prefill_tokens_saved",
+            "prefill_lane_tokens",
+            "kv_admission_stalls",
+            "kv_blocks_free_min",
+            "kv_shared_refs_peak",
         ] {
             assert!(back.opt(key).is_some(), "stats JSON missing {key}");
         }
         assert_eq!(back.get("bank_full_uploads").unwrap().as_usize().unwrap(), 2);
         assert_eq!(back.get("bank_staged_rows").unwrap().as_usize().unwrap(), 9);
+        assert!(back.opt("prefix_hit_ttft").is_some(), "prefix-hit TTFT histogram on the wire");
+    }
+
+    #[test]
+    fn report_includes_kv_block_counters() {
+        let mut m = Metrics::default();
+        m.kv_block_hits = 6;
+        m.kv_block_misses = 4;
+        m.kv_block_evictions = 1;
+        m.kv_prefix_hits = 3;
+        m.kv_prefill_tokens_saved = 96;
+        m.kv_blocks_published = 5;
+        m.prefill_lane_tokens = 64;
+        m.kv_admission_stalls = 2;
+        m.kv_blocks_free_min = 7;
+        m.kv_shared_refs_peak = 4;
+        m.prefix_hit_ttft.record(Duration::from_millis(2));
+        let r = m.report();
+        assert!(r.contains("kvblk(h/m/e)=6/4/1"), "{r}");
+        assert!(r.contains("prefix_hits=3"), "{r}");
+        assert!(r.contains("prefill_saved=96"), "{r}");
+        let t = m.report_table();
+        for needle in [
+            "kv block hits",
+            "kv block misses",
+            "kv block evictions",
+            "kv blocks published",
+            "kv prefix hits",
+            "kv prefill tokens saved",
+            "prefill lane tokens",
+            "kv admission stalls",
+            "kv blocks free (min)",
+            "kv shared refs (peak)",
+            "prefix-hit ttft",
+        ] {
+            assert!(t.contains(needle), "missing {needle:?} in\n{t}");
+        }
+        let s = m.snapshot();
+        assert_eq!(s.kv_block_hits, 6);
+        assert_eq!(s.kv_blocks_free_min, 7);
+        assert_eq!(s.prefix_hit_ttft.n, 1);
     }
 }

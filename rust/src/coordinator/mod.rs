@@ -10,6 +10,7 @@ pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod net;
+pub mod pool;
 pub mod queue;
 pub mod request;
 pub mod sampler;

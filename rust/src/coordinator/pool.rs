@@ -1,0 +1,517 @@
+//! Generic LRU slot paging and the paged KV block pool built on it.
+//!
+//! Two serving-side caches page fixed device capacity over unbounded
+//! demand: the adapter bank (PR 2) pages registered adapters over
+//! `n_slots` bank rows, and the paged KV cache pages token blocks over a
+//! fixed block budget.  Both need the same mechanics — keyed residency,
+//! pin counts that veto eviction, and least-recently-used victim
+//! selection — so the mechanics live here once as [`LruPager`] and both
+//! callers ([`crate::adapters::AdapterRegistry`] and [`BlockPool`])
+//! compose it.
+//!
+//! # Block pool states
+//!
+//! Every block is in exactly one of three states at all times (the
+//! conservation invariant the proptests pump):
+//!
+//! * **Free** — on the free list, available to any lane.
+//! * **Private** — held by exactly one in-flight lane (its block table);
+//!   never shared, never evicted, returned to Free exactly once when the
+//!   lane is reaped.
+//! * **Cached** — holds a published shared-prefix block, keyed by token
+//!   hash in the pager; `refs` (= pager pins) counts in-flight lanes
+//!   reading it.  Evictable by LRU only while `refs == 0`, so eviction
+//!   can never touch a block a live lane depends on.
+//!
+//! Copy-on-write is by construction: admission *copies* cached block
+//! contents into the hitting lane's contiguous region and takes a ref for
+//! accounting, so the cached original is immutable for its whole life —
+//! there is no write path to a Cached block, only publish (Private →
+//! Cached) and evict (Cached → Free).
+
+use std::borrow::Borrow;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One pageable slot: an optional resident key, a pin count (pinned slots
+/// are never eviction victims), and an LRU stamp.
+#[derive(Clone, Debug)]
+struct PagerSlot<K> {
+    key: Option<K>,
+    pins: usize,
+    last_used: u64,
+}
+
+impl<K> PagerSlot<K> {
+    fn empty() -> PagerSlot<K> {
+        PagerSlot { key: None, pins: 0, last_used: 0 }
+    }
+}
+
+/// Keyed LRU residency over a fixed slot range, with pinning.
+///
+/// Slots `base..limit` are pageable; slots below `base` (the adapter
+/// bank's reserved identity slot 0) are never offered as victims but can
+/// still be pinned/queried so callers keep one indexing scheme.
+pub struct LruPager<K: Ord + Clone> {
+    slots: Vec<PagerSlot<K>>,
+    resident: BTreeMap<K, usize>,
+    tick: u64,
+    base: usize,
+    limit: usize,
+}
+
+impl<K: Ord + Clone> LruPager<K> {
+    /// Pager over `n` slots of which `base..limit` are pageable (`limit`
+    /// is clamped to `n`).
+    pub fn new(n: usize, base: usize, limit: usize) -> LruPager<K> {
+        let limit = limit.min(n);
+        LruPager {
+            slots: (0..n).map(|_| PagerSlot::empty()).collect(),
+            resident: BTreeMap::new(),
+            tick: 0,
+            base: base.min(limit),
+            limit,
+        }
+    }
+
+    /// Resident slot of `key` without refreshing its LRU stamp.
+    pub fn get<Q>(&self, key: &Q) -> Option<usize>
+    where
+        K: Borrow<Q>,
+        Q: Ord + ?Sized,
+    {
+        self.resident.get(key).copied()
+    }
+
+    /// Resident slot of `key`, refreshing its LRU stamp on hit.
+    pub fn touch<Q>(&mut self, key: &Q) -> Option<usize>
+    where
+        K: Borrow<Q>,
+        Q: Ord + ?Sized,
+    {
+        let slot = self.resident.get(key).copied()?;
+        self.tick += 1;
+        if let Some(s) = self.slots.get_mut(slot) {
+            s.last_used = self.tick;
+        }
+        Some(slot)
+    }
+
+    /// First unoccupied pageable slot, if any.
+    pub fn free_slot(&self) -> Option<usize> {
+        (self.base..self.limit).find(|&s| self.slots[s].key.is_none())
+    }
+
+    /// Least-recently-used *occupied, unpinned* pageable slot — the
+    /// eviction victim when no slot is free.  Never returns an unkeyed
+    /// slot, so callers tracking non-pager state (the block pool's
+    /// Private blocks) cannot lose it to eviction.
+    pub fn evict_lru(&self) -> Option<usize> {
+        let mut victim: Option<usize> = None;
+        for s in self.base..self.limit {
+            let cand = &self.slots[s];
+            if cand.key.is_none() || cand.pins > 0 {
+                continue;
+            }
+            let better = match victim {
+                None => true,
+                Some(v) => cand.last_used < self.slots[v].last_used,
+            };
+            if better {
+                victim = Some(s);
+            }
+        }
+        victim
+    }
+
+    /// Bind `key` to `slot` with a fresh LRU stamp and zero pins.  The
+    /// slot must be unoccupied (unbind the old key first).
+    pub fn bind(&mut self, slot: usize, key: K) -> Result<()> {
+        let n = self.slots.len();
+        let Some(s) = self.slots.get_mut(slot) else {
+            bail!("pager slot {slot} out of range ({n})");
+        };
+        if s.key.is_some() {
+            bail!("pager slot {slot} is already occupied");
+        }
+        self.tick += 1;
+        s.key = Some(key.clone());
+        s.pins = 0;
+        s.last_used = self.tick;
+        self.resident.insert(key, slot);
+        Ok(())
+    }
+
+    /// Clear `slot`, returning the key that occupied it (if any).  Pins
+    /// are reset — callers must only unbind unpinned slots.
+    pub fn unbind(&mut self, slot: usize) -> Option<K> {
+        let s = self.slots.get_mut(slot)?;
+        let key = s.key.take();
+        s.pins = 0;
+        s.last_used = 0;
+        if let Some(k) = &key {
+            self.resident.remove(k);
+        }
+        key
+    }
+
+    /// Pin `slot` against eviction (no-op below `base` or out of range —
+    /// the adapter bank's identity slot never needs protection).
+    pub fn pin(&mut self, slot: usize) {
+        if slot >= self.base {
+            if let Some(s) = self.slots.get_mut(slot) {
+                s.pins += 1;
+            }
+        }
+    }
+
+    /// Release one pin on `slot` (no-op below `base` or out of range).
+    pub fn unpin(&mut self, slot: usize) {
+        if slot >= self.base {
+            if let Some(s) = self.slots.get_mut(slot) {
+                debug_assert!(s.pins > 0, "unpin of unpinned slot {slot}");
+                s.pins = s.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    pub fn is_pinned(&self, slot: usize) -> bool {
+        self.slots.get(slot).map(|s| s.pins > 0).unwrap_or(false)
+    }
+
+    /// Pin count of `slot` (0 for out-of-range slots).
+    pub fn pins(&self, slot: usize) -> usize {
+        self.slots.get(slot).map(|s| s.pins).unwrap_or(0)
+    }
+
+    /// Key resident in `slot`, if any.
+    pub fn key_of(&self, slot: usize) -> Option<&K> {
+        self.slots.get(slot).and_then(|s| s.key.as_ref())
+    }
+
+    /// Number of resident keys.
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Size of the pageable slot range.
+    pub fn pageable_len(&self) -> usize {
+        self.limit - self.base
+    }
+
+    /// All resident keys (BTreeMap order: sorted by key).
+    pub fn resident_keys(&self) -> Vec<&K> {
+        self.resident.keys().collect()
+    }
+
+    /// Total pins across all slots (the live-reference gauge).
+    pub fn total_pins(&self) -> usize {
+        self.slots.iter().map(|s| s.pins).sum()
+    }
+
+    /// Resident keys with zero pins — how many victims `evict_lru` could
+    /// supply before stalling.
+    pub fn evictable_len(&self) -> usize {
+        self.slots[self.base..self.limit]
+            .iter()
+            .filter(|s| s.key.is_some() && s.pins == 0)
+            .count()
+    }
+}
+
+/// What [`BlockPool::alloc_private`] did to satisfy the allocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrivateAlloc {
+    pub block: usize,
+    /// Prefix-cache key evicted to make room, when the free list was dry.
+    pub evicted: Option<u64>,
+}
+
+/// Fixed-capacity pool of KV blocks (`block_size` tokens each) shared by
+/// every decode lane: free list + per-lane Private accounting +
+/// token-hash-keyed prefix cache paged by an [`LruPager`].  See the
+/// module docs for the three-state model and conservation invariant.
+pub struct BlockPool {
+    pager: LruPager<u64>,
+    private: Vec<bool>,
+    free: Vec<usize>,
+    block_size: usize,
+}
+
+impl BlockPool {
+    pub fn new(n_blocks: usize, block_size: usize) -> BlockPool {
+        BlockPool {
+            pager: LruPager::new(n_blocks, 0, n_blocks),
+            private: vec![false; n_blocks],
+            free: (0..n_blocks).rev().collect(),
+            block_size: block_size.max(1),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.private.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_private(&self) -> usize {
+        self.private.iter().filter(|&&p| p).count()
+    }
+
+    /// Cached (published) blocks, referenced or not.
+    pub fn n_cached(&self) -> usize {
+        self.pager.resident_len()
+    }
+
+    /// Total in-flight references onto cached blocks (the refcount gauge).
+    pub fn total_refs(&self) -> usize {
+        self.pager.total_pins()
+    }
+
+    /// Blocks an allocation could still obtain: free now, or cached with
+    /// no live references (evictable on demand).
+    pub fn available(&self) -> usize {
+        self.free.len() + self.pager.evictable_len()
+    }
+
+    /// Is `key` published in the cache? (No LRU refresh — admission uses
+    /// this to probe coverage before committing to a reservation.)
+    pub fn lookup(&self, key: u64) -> Option<usize> {
+        self.pager.get(&key)
+    }
+
+    /// True when `block` is privately held by some lane.
+    pub fn is_private(&self, block: usize) -> bool {
+        self.private.get(block).copied().unwrap_or(false)
+    }
+
+    /// Live reference count of a cached block (0 if not cached).
+    pub fn refs_of(&self, block: usize) -> usize {
+        if self.pager.key_of(block).is_some() { self.pager.pins(block) } else { 0 }
+    }
+
+    /// Cache key stored in `block`, if it is a cached block.
+    pub fn key_of(&self, block: usize) -> Option<u64> {
+        self.pager.key_of(block).copied()
+    }
+
+    /// Allocate one Private block for a lane: free list first, else evict
+    /// the LRU unreferenced cached block.  `None` means every block is
+    /// either Private or referenced by a live lane — the admission gate's
+    /// stall signal.
+    pub fn alloc_private(&mut self) -> Option<PrivateAlloc> {
+        if let Some(b) = self.free.pop() {
+            if let Some(p) = self.private.get_mut(b) {
+                *p = true;
+            }
+            return Some(PrivateAlloc { block: b, evicted: None });
+        }
+        let victim = self.pager.evict_lru()?;
+        let evicted = self.pager.unbind(victim);
+        if let Some(p) = self.private.get_mut(victim) {
+            *p = true;
+        }
+        Some(PrivateAlloc { block: victim, evicted })
+    }
+
+    /// Return a Private block to the free list.  Double releases and
+    /// releases of non-private blocks are typed errors, not corruption.
+    pub fn release_private(&mut self, block: usize) -> Result<()> {
+        let n = self.private.len();
+        let Some(p) = self.private.get_mut(block) else {
+            bail!("block {block} out of range ({n})");
+        };
+        if !*p {
+            bail!("double release of block {block} (not privately held)");
+        }
+        *p = false;
+        self.free.push(block);
+        Ok(())
+    }
+
+    /// Publish a lane's Private block as a cached shared-prefix block
+    /// under `key`, keeping one reference for the publishing lane.
+    /// Returns `false` (and leaves the block Private) when `key` is
+    /// already cached — two cold lanes with the same prefix in one batch
+    /// both compute it, but only the first publishes.
+    pub fn publish(&mut self, block: usize, key: u64) -> Result<bool> {
+        if self.pager.get(&key).is_some() {
+            return Ok(false);
+        }
+        let n = self.private.len();
+        let Some(p) = self.private.get_mut(block) else {
+            bail!("block {block} out of range ({n})");
+        };
+        if !*p {
+            bail!("publish of block {block} which is not privately held");
+        }
+        *p = false;
+        self.pager.bind(block, key)?;
+        self.pager.pin(block);
+        Ok(true)
+    }
+
+    /// Take a reference on the cached block for `key` (LRU-refreshing
+    /// it), for a lane admitted over a shared prefix.
+    pub fn ref_cached(&mut self, key: u64) -> Option<usize> {
+        let b = self.pager.touch(&key)?;
+        self.pager.pin(b);
+        Some(b)
+    }
+
+    /// Drop one reference on cached `block`.  The block stays cached (and
+    /// becomes evictable at zero refs) — this is the release path that
+    /// must never free the shared original.
+    pub fn unref_cached(&mut self, block: usize) -> Result<()> {
+        if self.pager.key_of(block).is_none() {
+            bail!("unref of block {block} which holds no cached key");
+        }
+        if self.pager.pins(block) == 0 {
+            bail!("unref of block {block} with zero references");
+        }
+        self.pager.unpin(block);
+        Ok(())
+    }
+
+    /// Conservation check: every block is exactly one of Free / Private /
+    /// Cached.  Cheap enough to assert after every mutation in tests.
+    pub fn check_conservation(&self) -> Result<()> {
+        let (n, f, p, c) = (self.n_blocks(), self.n_free(), self.n_private(), self.n_cached());
+        if f + p + c != n {
+            bail!("block conservation violated: free {f} + private {p} + cached {c} != {n}");
+        }
+        for (b, &priv_) in self.private.iter().enumerate() {
+            let keyed = self.pager.key_of(b).is_some();
+            let freed = self.free.contains(&b);
+            let states = usize::from(priv_) + usize::from(keyed) + usize::from(freed);
+            if states != 1 {
+                bail!(
+                    "block {b} in {states} states (private={priv_}, cached={keyed}, \
+                     free={freed})"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pager_free_first_then_lru_eviction() {
+        let mut p: LruPager<&'static str> = LruPager::new(3, 1, 3);
+        assert_eq!(p.free_slot(), Some(1));
+        p.bind(1, "a").unwrap();
+        assert_eq!(p.free_slot(), Some(2));
+        p.bind(2, "b").unwrap();
+        assert_eq!(p.free_slot(), None);
+        // "a" was bound first, but touching it makes "b" the LRU victim.
+        assert_eq!(p.touch(&"a"), Some(1));
+        assert_eq!(p.evict_lru(), Some(2));
+        // Pinning "b" leaves only "a" as a victim; pinning both stalls.
+        p.pin(2);
+        assert_eq!(p.evict_lru(), Some(1));
+        p.pin(1);
+        assert_eq!(p.evict_lru(), None);
+        p.unpin(2);
+        assert_eq!(p.evict_lru(), Some(2));
+        assert_eq!(p.unbind(2), Some("b"));
+        assert_eq!(p.get(&"b"), None);
+        assert_eq!(p.resident_len(), 1);
+    }
+
+    #[test]
+    fn pager_base_slots_are_not_victims() {
+        let mut p: LruPager<u32> = LruPager::new(3, 1, 3);
+        // Slot 0 is below base: bindable by hand but never a victim.
+        p.bind(0, 99).unwrap();
+        assert_eq!(p.free_slot(), Some(1));
+        p.bind(1, 1).unwrap();
+        p.bind(2, 2).unwrap();
+        let v = p.evict_lru().unwrap();
+        assert!(v >= 1, "identity-range slot offered as victim");
+        // Double-bind of an occupied slot is a typed error.
+        assert!(p.bind(1, 7).is_err());
+        assert!(p.bind(9, 7).is_err(), "out-of-range bind");
+    }
+
+    #[test]
+    fn block_pool_alloc_release_cycle_conserves() {
+        let mut pool = BlockPool::new(4, 8);
+        assert_eq!(pool.block_size(), 8);
+        pool.check_conservation().unwrap();
+        let a = pool.alloc_private().unwrap();
+        let b = pool.alloc_private().unwrap();
+        assert_ne!(a.block, b.block);
+        assert_eq!(pool.n_free(), 2);
+        assert_eq!(pool.n_private(), 2);
+        pool.check_conservation().unwrap();
+        pool.release_private(a.block).unwrap();
+        assert!(pool.release_private(a.block).is_err(), "double release caught");
+        assert!(pool.release_private(99).is_err(), "out of range caught");
+        pool.check_conservation().unwrap();
+        assert_eq!(pool.n_free(), 3);
+    }
+
+    #[test]
+    fn publish_ref_unref_and_eviction_protocol() {
+        let mut pool = BlockPool::new(3, 4);
+        let a = pool.alloc_private().unwrap();
+        assert!(pool.publish(a.block, 0xfeed).unwrap());
+        assert_eq!(pool.refs_of(a.block), 1, "publisher keeps one ref");
+        assert_eq!(pool.n_cached(), 1);
+        pool.check_conservation().unwrap();
+
+        // A second lane references the same key.
+        let hit = pool.ref_cached(0xfeed).unwrap();
+        assert_eq!(hit, a.block);
+        assert_eq!(pool.refs_of(a.block), 2);
+        assert_eq!(pool.total_refs(), 2);
+
+        // While referenced, the cached block is not an eviction victim:
+        // exhaust the free list, then the next alloc must fail.
+        let b = pool.alloc_private().unwrap();
+        let c = pool.alloc_private().unwrap();
+        assert!(b.evicted.is_none() && c.evicted.is_none());
+        assert_eq!(pool.available(), 0);
+        assert!(pool.alloc_private().is_none(), "referenced cache block must survive");
+
+        // Dropping both refs makes it evictable; the original is still
+        // cached until pressure actually takes it.
+        pool.unref_cached(a.block).unwrap();
+        pool.unref_cached(a.block).unwrap();
+        assert!(pool.unref_cached(a.block).is_err(), "ref underflow caught");
+        assert_eq!(pool.lookup(0xfeed), Some(a.block), "zero refs keeps the cache entry");
+        let d = pool.alloc_private().unwrap();
+        assert_eq!(d.block, a.block);
+        assert_eq!(d.evicted, Some(0xfeed));
+        assert_eq!(pool.lookup(0xfeed), None);
+        pool.check_conservation().unwrap();
+        assert_eq!(pool.n_private(), 3);
+    }
+
+    #[test]
+    fn publish_of_existing_key_is_a_noop_keeping_private() {
+        let mut pool = BlockPool::new(4, 4);
+        let a = pool.alloc_private().unwrap();
+        let b = pool.alloc_private().unwrap();
+        assert!(pool.publish(a.block, 7).unwrap());
+        assert!(!pool.publish(b.block, 7).unwrap(), "duplicate key is not re-published");
+        assert!(pool.is_private(b.block), "loser keeps its private block");
+        assert!(pool.publish(99, 8).is_err());
+        let c = pool.alloc_private().unwrap();
+        assert!(pool.publish(c.block, 9).unwrap());
+        assert_eq!(pool.n_cached(), 2);
+        pool.check_conservation().unwrap();
+    }
+}

@@ -14,7 +14,7 @@
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched
+//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched|kvpage
 //!                  [--tokens 64] [--adapters 64] [--bank-slots 4]
 //!                  [--cancel-after 16] [--sim-clock]
 //! road bench-train-efficiency [--iters 50]
@@ -118,6 +118,14 @@ fn serve_config(args: &Args, mode: &str, slots: usize) -> Result<EngineConfig> {
         // --backend ref serves the pure-Rust reference model (no
         // artifacts); pjrt (default) serves the compiled HLO artifacts.
         backend: backend_flag(args)?,
+        // --paged-kv=false restores the flat contiguous KV baseline (every
+        // lane charges a full max_seq footprint; no prefix sharing).
+        paged_kv: args.get("paged-kv").map_or(true, |v| matches!(v, "true" | "1" | "yes")),
+        // --kv-block sets the tokens-per-block sharing granularity.
+        kv_block_size: args.usize_or("kv-block", 16),
+        // --kv-pool-blocks caps the shared block pool (the serving memory
+        // budget; default sizes it so the gate never binds).
+        kv_pool_blocks: args.get("kv-pool-blocks").and_then(|s| s.parse().ok()),
         ..Default::default()
     })
 }
@@ -525,7 +533,35 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             md.push_str("\n```\n");
             md
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched)"),
+        "kvpage" => {
+            let n_requests = args.usize_or("requests", 48);
+            // Short generations on the tiny model: the study measures block
+            // accounting and admission, not decode throughput.
+            let new_tokens = if args.get("tokens").is_some() { tokens } else { 16 };
+            let budgets: Vec<usize> = vec![32, 64, 128, 256];
+            // --sim-clock runs on the artifact-free reference model; every
+            // recorded number is integer accounting on a virtual clock, so
+            // two runs are byte-identical (CI diffs them).
+            let rt = if args.bool("sim-clock") {
+                Rc::new(Runtime::reference())
+            } else {
+                runtime_for(backend)?
+            };
+            let pts = bench::kvpage_study(&rt, n_requests, new_tokens, &budgets, seed)?;
+            let json = bench::kvpage_points_json(&pts).to_string_pretty();
+            std::fs::create_dir_all("results")?;
+            std::fs::write("results/BENCH_kvpage.json", format!("{json}\n"))?;
+            println!("[saved results/BENCH_kvpage.json]");
+            let mut md = bench::render_kvpage_points(
+                "Paged KV: shared-prefix reuse and admission vs flat accounting",
+                &pts,
+            );
+            md.push_str("\n```json\n");
+            md.push_str(&json);
+            md.push_str("\n```\n");
+            md
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched|kvpage)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

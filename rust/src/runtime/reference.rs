@@ -791,6 +791,80 @@ impl Fwd<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Paged-KV block copies (the cache-layout contract, owned here)
+// ---------------------------------------------------------------------------
+
+/// Validate a serving cache tensor shape `[n_layers, b, n_heads, max_seq,
+/// head_dim]` and return its dimensions.
+fn cache_dims(cache: &HostTensor) -> Result<[usize; 5]> {
+    match cache.shape.as_slice() {
+        &[nl, b, h, t, hd] => Ok([nl, b, h, t, hd]),
+        s => bail!(
+            "cache tensor has shape {s:?}, expected [n_layers, b, n_heads, max_seq, head_dim]"
+        ),
+    }
+}
+
+/// Copy cache positions `[start, start + n_tokens)` of one lane out of a
+/// `[n_layers, b, n_heads, max_seq, head_dim]` cache tensor into a flat
+/// `[n_layers, n_heads, n_tokens, head_dim]` block buffer.
+///
+/// This is the read half of the paged-KV block protocol
+/// (docs/DESIGN.md §Paged KV): a published shared-prefix block is exactly
+/// the bytes this gather produces, and [`scatter_cache_block`] writes
+/// them back bit-identically, which is why shared-prefix admission and a
+/// cold prefill are token-identical on this backend.
+pub fn gather_cache_block(
+    cache: &HostTensor,
+    lane: usize,
+    start: usize,
+    n_tokens: usize,
+) -> Result<Vec<f32>> {
+    let [nl, b, h, t_max, hd] = cache_dims(cache)?;
+    if lane >= b || start + n_tokens > t_max {
+        bail!("block gather out of range: lane {lane}/{b}, tokens {start}+{n_tokens}/{t_max}");
+    }
+    let mut out = Vec::with_capacity(nl * h * n_tokens * hd);
+    for l in 0..nl {
+        for hh in 0..h {
+            let off = (((l * b + lane) * h + hh) * t_max + start) * hd;
+            out.extend_from_slice(&cache.read_f32_range(off, n_tokens * hd));
+        }
+    }
+    Ok(out)
+}
+
+/// Write half of the paged-KV block protocol: copy a flat
+/// `[n_layers, n_heads, n_tokens, head_dim]` block buffer (from
+/// [`gather_cache_block`]) into one lane of a cache tensor at positions
+/// `[start, start + n_tokens)`.
+pub fn scatter_cache_block(
+    cache: &mut HostTensor,
+    lane: usize,
+    start: usize,
+    n_tokens: usize,
+    block: &[f32],
+) -> Result<()> {
+    let [nl, b, h, t_max, hd] = cache_dims(cache)?;
+    if lane >= b || start + n_tokens > t_max {
+        bail!("block scatter out of range: lane {lane}/{b}, tokens {start}+{n_tokens}/{t_max}");
+    }
+    let row = n_tokens * hd;
+    if block.len() != nl * h * row {
+        bail!("block buffer has {} elems, expected {}", block.len(), nl * h * row);
+    }
+    let mut i = 0;
+    for l in 0..nl {
+        for hh in 0..h {
+            let off = (((l * b + lane) * h + hh) * t_max + start) * hd;
+            cache.write_f32_range(off, &block[i..i + row]);
+            i += row;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -965,6 +1039,100 @@ mod tests {
             &sb[..],
             "lane 0 logits must be bitwise identical solo vs batched"
         );
+    }
+
+    /// Gather → scatter round-trips exactly: a block moved between lanes
+    /// (and cache tensors) is a bit-identical copy, and positions outside
+    /// the block are untouched.
+    #[test]
+    fn cache_block_gather_scatter_roundtrip_is_exact() {
+        let cfg = tiny();
+        let shape = vec![cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        let n: usize = shape.iter().product();
+        let mut rng = Rng::seed_from(41);
+        let src = HostTensor::f32(shape.clone(), rng.normal_vec(n, 0.1));
+        let blk = gather_cache_block(&src, 1, 8, 4).unwrap();
+        assert_eq!(blk.len(), cfg.n_layers * cfg.n_heads * 4 * cfg.head_dim);
+
+        let mut dst = HostTensor::zeros(shape, DType::F32);
+        scatter_cache_block(&mut dst, 0, 8, 4, &blk).unwrap();
+        let back = gather_cache_block(&dst, 0, 8, 4).unwrap();
+        assert_eq!(blk, back, "round-trip must be bit-identical");
+        // Positions before/after the block stay untouched.
+        let before = gather_cache_block(&dst, 0, 0, 8).unwrap();
+        assert!(before.iter().all(|&v| v == 0.0));
+        let after = gather_cache_block(&dst, 0, 12, 4).unwrap();
+        assert!(after.iter().all(|&v| v == 0.0));
+        // Out-of-range and wrong-size calls are typed errors.
+        assert!(gather_cache_block(&src, 2, 0, 4).is_err());
+        assert!(gather_cache_block(&src, 0, cfg.max_seq - 1, 2).is_err());
+        assert!(scatter_cache_block(&mut dst, 0, 0, 4, &blk[1..]).is_err());
+    }
+
+    /// The paged-KV hit path at the reference level: prefill only a
+    /// shared prefix, gather its blocks, scatter them into a fresh cache,
+    /// then feed the rest of the prompt through decode steps.  The final
+    /// logits must match a cold full-prompt prefill — the token-identity
+    /// property the engine's shared-prefix admission rests on.
+    #[test]
+    fn decode_over_scattered_prefix_blocks_matches_cold_prefill() {
+        let m = synthetic_manifest();
+        let cfg = tiny();
+        let pre_info = &m.entries["prefill_road_tiny_b1_l16"];
+        let dec_info = &m.entries["decode_road_tiny_b1"];
+        let pre = RefEntry::from_info(pre_info, &cfg).unwrap();
+        let dec = RefEntry::from_info(dec_info, &cfg).unwrap();
+
+        let prompt = [17i32, 4, 99, 250, 33, 8, 120, 7];
+        let block = 4usize; // kv_block_size: positions [0,4) are the shared prefix
+        let run_prefill = |len: usize| {
+            let mut padded = vec![0i32; 16];
+            padded[..len].copy_from_slice(&prompt[..len]);
+            let data = BTreeMap::from([
+                ("ids", HostTensor::i32(vec![1], vec![0])),
+                ("tokens", HostTensor::i32(vec![1, 16], padded)),
+                ("lengths", HostTensor::i32(vec![1], vec![len as i32])),
+            ]);
+            pre.execute(&entry_inputs(pre_info, data)).unwrap()
+        };
+        let cold = run_prefill(prompt.len());
+        let prefix = run_prefill(block);
+
+        // "Publish" the prefix block, then "adopt" it into a fresh lane.
+        let kb = gather_cache_block(&prefix[1], 0, 0, block).unwrap();
+        let vb = gather_cache_block(&prefix[2], 0, 0, block).unwrap();
+        let shape = vec![cfg.n_layers, 1, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        let mut kc = HostTensor::zeros(shape.clone(), DType::F32);
+        let mut vc = HostTensor::zeros(shape, DType::F32);
+        scatter_cache_block(&mut kc, 0, 0, block, &kb).unwrap();
+        scatter_cache_block(&mut vc, 0, 0, block, &vb).unwrap();
+
+        // Feed the remaining prompt tokens one decode step at a time.
+        let mut outs = None;
+        for p in block..prompt.len() {
+            let data = BTreeMap::from([
+                ("ids", HostTensor::i32(vec![1], vec![0])),
+                ("token", HostTensor::i32(vec![1], vec![prompt[p]])),
+                ("pos", HostTensor::i32(vec![1], vec![p as i32])),
+                ("k_cache", kc.clone()),
+                ("v_cache", vc.clone()),
+            ]);
+            let step = dec.execute(&entry_inputs(dec_info, data)).unwrap();
+            kc = step[1].clone();
+            vc = step[2].clone();
+            outs = Some(step);
+        }
+        let warm = outs.unwrap();
+        let (a, b) = (cold[0].as_f32(), warm[0].as_f32());
+        let argmax = |v: &[f32]| {
+            v.iter().enumerate().fold((0usize, f32::NEG_INFINITY), |acc, (i, &x)| {
+                if x > acc.1 { (i, x) } else { acc }
+            })
+        };
+        assert_eq!(argmax(&a).0, argmax(&b).0, "greedy token diverged");
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-4, "logit {i}: cold {x} vs paged {y}");
+        }
     }
 
     #[test]

@@ -11,14 +11,16 @@
 //! which stays artifact-gated.
 
 use std::rc::Rc;
+use std::time::Duration;
 
 use road::adapters::{Adapter, RoadAdapter};
 use road::coordinator::engine::{Engine, EngineConfig};
 use road::coordinator::queue::EngineError;
-use road::coordinator::request::{FinishReason, Request, SamplingParams};
+use road::coordinator::request::{FinishReason, Request, SamplingParams, StreamEvent};
 use road::model::ParamStore;
 use road::require_artifacts;
 use road::runtime::{BackendKind, Runtime};
+use road::util::clock::Clock;
 use road::util::rng::Rng;
 
 /// Suite backend ([`BackendKind::auto`]): `ROAD_TEST_BACKEND` (ref|pjrt)
@@ -437,6 +439,286 @@ fn every_adapter_mode_serves_and_identity_matches_base() {
             assert_eq!(o.tokens, b.tokens, "identity {mode} diverged from base");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV: shared-prefix reuse, eviction safety, exactly-once release
+// ---------------------------------------------------------------------------
+
+/// A 12-token prefix (3 cacheable blocks at block size 4) plus a 4-token
+/// request-specific suffix — the tiny model's 16-token prefill bucket.
+fn prefixed(prefix_tag: i32, suffix_tag: i32) -> Vec<i32> {
+    let mut p: Vec<i32> = (0..12).map(|i| 1 + (prefix_tag * 13 + i) % 200).collect();
+    p.extend((0..4).map(|i| 1 + (suffix_tag * 31 + i) % 200));
+    p
+}
+
+/// An engine on the tiny model with 4-token KV blocks, paged or flat, on
+/// the given clock, optionally with a squeezed pool budget.
+fn paged_engine(rt: &Rc<Runtime>, paged: bool, pool: Option<usize>, clock: Clock) -> Engine {
+    Engine::new(
+        rt.clone(),
+        EngineConfig {
+            model: "tiny".into(),
+            mode: "road".into(),
+            decode_slots: 2,
+            queue_capacity: 64,
+            clock,
+            paged_kv: paged,
+            kv_block_size: 4,
+            kv_pool_blocks: pool,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn two_adapters(eng: &mut Engine, seed: u64) {
+    let mut rng = Rng::seed_from(seed);
+    let a = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.3));
+    let b = Adapter::Road(RoadAdapter::random(&eng.cfg, &mut rng, 0.3));
+    eng.register_adapter("a", &a).unwrap();
+    eng.register_adapter("b", &b).unwrap();
+}
+
+/// The tentpole identity claim: a request admitted over a cached shared
+/// prefix produces exactly the tokens it produces cold, across a
+/// heterogeneous-adapter batch, and the flat (pre-paging) layout agrees.
+#[test]
+fn shared_prefix_reuse_is_token_identical_to_flat() {
+    let rt = rt();
+    // Two waves per engine: the first warms the prefix cache per adapter,
+    // the second re-uses it (same prefixes, fresh suffixes).
+    let wave1 = || {
+        vec![
+            greedy(&prefixed(1, 10), 8).with_adapter("a"),
+            greedy(&prefixed(2, 20), 8).with_adapter("b"),
+        ]
+    };
+    let wave2 = || {
+        vec![
+            greedy(&prefixed(1, 11), 8).with_adapter("a"),
+            greedy(&prefixed(2, 21), 8).with_adapter("b"),
+            greedy(&prefixed(1, 12), 8), // same tokens, no adapter: must NOT share
+        ]
+    };
+    let run = |paged: bool| {
+        let mut eng = paged_engine(&rt, paged, None, Clock::wall());
+        two_adapters(&mut eng, 40);
+        let mut outs = eng.run_all(wave1()).unwrap();
+        outs.extend(eng.run_all(wave2()).unwrap());
+        outs.sort_by_key(|o| o.id);
+        let hits = eng.metrics.kv_prefix_hits;
+        let saved = eng.metrics.kv_prefill_tokens_saved;
+        let prefill = eng.metrics.prefill_lane_tokens;
+        (outs, hits, saved, prefill)
+    };
+    let (paged, hits, saved, paged_prefill) = run(true);
+    let (flat, flat_hits, _, flat_prefill) = run(false);
+    assert_eq!(paged.len(), flat.len());
+    for (p, f) in paged.iter().zip(&flat) {
+        assert_eq!(p.tokens, f.tokens, "shared-prefix reuse changed request {}", p.id);
+        assert_eq!(p.finish, FinishReason::MaxTokens);
+    }
+    // Both warm adapter-tagged requests hit their 3-block prefix; the
+    // adapter-less lookalike must miss (prefix keys are adapter-salted).
+    assert_eq!(hits, 2, "expected exactly the two warm adapter requests to hit");
+    assert_eq!(saved, 2 * 12, "each hit skips its 12 cached prefix tokens");
+    assert_eq!(flat_hits, 0, "flat accounting has no prefix cache");
+    // A hit lane skips prefill entirely: its 12 cached tokens come from
+    // the pool and the 4 suffix tokens are fed through the decode path.
+    assert_eq!(
+        flat_prefill - paged_prefill,
+        2 * 16,
+        "each of the two hit lanes should skip one full 16-token prefill"
+    );
+}
+
+/// Prefix-hit admission on the virtual clock: the warm request goes
+/// through zero prefill tokens and reaches its first token in a handful of
+/// virtual milliseconds, with the hit recorded in the TTFT histogram.
+#[test]
+fn prefix_hit_skips_prefill_with_near_zero_ttft() {
+    let rt = rt();
+    let clock = Clock::manual();
+    let mut eng = paged_engine(&rt, true, None, clock.clone());
+    let drain = |eng: &mut Engine, clock: &Clock| {
+        let mut outs = Vec::new();
+        while eng.has_work() {
+            for ev in eng.step().unwrap() {
+                if let StreamEvent::Finished(o) = ev {
+                    outs.push(o);
+                }
+            }
+            clock.advance(Duration::from_millis(1));
+        }
+        outs
+    };
+    eng.submit(greedy(&prefixed(3, 1), 8)).unwrap();
+    let cold = drain(&mut eng, &clock);
+    assert_eq!(eng.metrics.prefill_lane_tokens, 16);
+    assert_eq!(eng.metrics.kv_prefix_hits, 0);
+
+    eng.submit(greedy(&prefixed(3, 2), 8)).unwrap();
+    let warm = drain(&mut eng, &clock);
+    assert_eq!(eng.metrics.kv_prefix_hits, 1);
+    assert_eq!(eng.metrics.kv_block_hits, 3);
+    assert_eq!(eng.metrics.kv_prefill_tokens_saved, 12);
+    // No new prefill-lane tokens: the warm request never entered a
+    // prefill batch — strictly fewer prefill tokens than a cold run.
+    assert_eq!(eng.metrics.prefill_lane_tokens, 16);
+    // First token after feeding the 4 uncached prompt tokens through the
+    // decode path: single-digit virtual milliseconds.
+    assert_eq!(warm.len(), 1);
+    assert!(warm[0].ttft < 0.010, "hit-lane ttft {}s", warm[0].ttft);
+    assert_eq!(eng.metrics.prefix_hit_ttft.count(), 1);
+
+    // And the reuse is invisible in the tokens: a flat engine serving the
+    // same two requests agrees with both.
+    let mut flat = paged_engine(&rt, false, None, Clock::manual());
+    let mut f = flat
+        .run_all(vec![greedy(&prefixed(3, 1), 8), greedy(&prefixed(3, 2), 8)])
+        .unwrap();
+    f.sort_by_key(|o| o.id);
+    assert_eq!(cold[0].tokens, f[0].tokens);
+    assert_eq!(warm[0].tokens, f[1].tokens);
+}
+
+/// Eviction under pressure: a pool too small to cache every prefix must
+/// evict — and eviction may only ever take unreferenced cached blocks, so
+/// every output is identical to a pressure-free run.
+#[test]
+fn eviction_under_pressure_never_touches_inflight_blocks() {
+    let rt = rt();
+    // 6 distinct prefix groups x 3 cached blocks each overflow the tight
+    // pool once two 8-block lanes are also in flight.
+    let reqs = || {
+        let mut v = Vec::new();
+        for g in 0..6 {
+            v.push(greedy(&prefixed(g, 2 * g), 8));
+            v.push(greedy(&prefixed(g, 2 * g + 1), 8));
+        }
+        v
+    };
+    let run = |pool: Option<usize>| {
+        let mut eng = paged_engine(&rt, true, pool, Clock::wall());
+        let mut outs = eng.run_all(reqs()).unwrap();
+        outs.sort_by_key(|o| o.id);
+        let pressure = (
+            eng.metrics.kv_block_evictions,
+            eng.metrics.kv_admission_stalls,
+            eng.metrics.kv_blocks_free_min,
+        );
+        // Drained: no lane holds anything, no reference outstanding.
+        let pool = eng.paged_kv().pool();
+        assert_eq!(pool.n_private(), 0);
+        assert_eq!(pool.total_refs(), 0);
+        pool.check_conservation().unwrap();
+        (outs, pressure)
+    };
+    let (tight, (evictions, _stalls, free_min)) = run(Some(20));
+    let (roomy, (roomy_evictions, _, _)) = run(Some(256));
+    assert!(evictions > 0, "tight pool should evict cached prefixes");
+    assert_eq!(roomy_evictions, 0, "roomy pool should never evict");
+    assert!(free_min <= 4, "tight pool should run near empty, min {free_min}");
+    assert_eq!(tight.len(), roomy.len());
+    for (t, r) in tight.iter().zip(&roomy) {
+        assert_eq!(t.tokens, r.tokens, "eviction corrupted request {}", t.id);
+    }
+}
+
+/// Regression (exactly-once release): a lane reaped by the deadline
+/// enforcer returns its private blocks and shared references exactly once
+/// — no leak, no double free — and the prefix it published survives for
+/// later requests.
+#[test]
+fn reaped_lane_returns_blocks_exactly_once() {
+    let rt = rt();
+    let clock = Clock::manual();
+    let mut eng = paged_engine(&rt, true, Some(32), clock.clone());
+    let doomed = greedy(&prefixed(5, 1), 64).with_deadline(Duration::from_millis(5));
+    let id = eng.submit(doomed).unwrap();
+    // Admit and decode a little, then blow the deadline.
+    eng.step().unwrap();
+    assert_eq!(eng.n_active(), 1);
+    assert!(eng.paged_kv().pool().n_private() > 0, "in-flight lane holds blocks");
+    clock.advance(Duration::from_millis(10));
+    let events = eng.step().unwrap();
+    assert!(
+        events.iter().any(|e| matches!(
+            e,
+            StreamEvent::Error { id: eid, error: EngineError::DeadlineExceeded } if *eid == id
+        )),
+        "expected a deadline error event"
+    );
+    assert_eq!(eng.metrics.deadline_shed, 1);
+    let pool = eng.paged_kv().pool();
+    assert_eq!(pool.n_private(), 0, "reaped lane leaked private blocks");
+    assert_eq!(pool.total_refs(), 0, "reaped lane leaked shared references");
+    // The cold lane published all 4 full prompt blocks before the reap.
+    assert_eq!(pool.n_cached(), 4, "published prefix should survive the reap");
+    pool.check_conservation().unwrap();
+
+    // The reaped lane's published prefix is still serviceable.
+    eng.submit(greedy(&prefixed(5, 2), 4)).unwrap();
+    while eng.has_work() {
+        eng.step().unwrap();
+        clock.advance(Duration::from_millis(1));
+    }
+    assert_eq!(eng.metrics.kv_prefix_hits, 1, "survivor prefix should hit");
+    let pool = eng.paged_kv().pool();
+    assert_eq!(pool.n_private(), 0);
+    assert_eq!(pool.total_refs(), 0);
+    pool.check_conservation().unwrap();
+}
+
+/// Regression (COW release on cancel): cancelling a lane admitted over a
+/// shared prefix drops its references without freeing the cached
+/// originals, which keep serving later requests token-identically.
+#[test]
+fn cancel_releases_cow_refs_but_keeps_shared_originals() {
+    let rt = rt();
+    let clock = Clock::manual();
+    let mut eng = paged_engine(&rt, true, None, clock.clone());
+    // Warm the cache.
+    eng.submit(greedy(&prefixed(6, 1), 6)).unwrap();
+    while eng.has_work() {
+        eng.step().unwrap();
+        clock.advance(Duration::from_millis(1));
+    }
+    // All 4 full prompt blocks of the warming request are published.
+    let cached = eng.paged_kv().pool().n_cached();
+    assert_eq!(cached, 4);
+
+    // A hit lane in flight holds references onto the cached blocks.
+    let id = eng.submit(greedy(&prefixed(6, 2), 32)).unwrap();
+    eng.step().unwrap();
+    assert_eq!(eng.metrics.kv_prefix_hits, 1);
+    assert_eq!(eng.paged_kv().pool().total_refs(), 3);
+    let out = eng.cancel(id).expect("in-flight lane cancels");
+    assert_eq!(out.finish, FinishReason::Cancelled);
+    let pool = eng.paged_kv().pool();
+    assert_eq!(pool.total_refs(), 0, "cancel must drop the COW references");
+    assert_eq!(pool.n_private(), 0, "cancel must free the private blocks");
+    assert_eq!(pool.n_cached(), cached, "cancel must NOT free shared originals");
+    pool.check_conservation().unwrap();
+
+    // The originals still serve: a fresh same-prefix request hits and
+    // matches a cold run of the same prompt on a fresh engine.
+    eng.submit(greedy(&prefixed(6, 3), 6)).unwrap();
+    let mut warm_tokens = Vec::new();
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            if let StreamEvent::Finished(o) = ev {
+                warm_tokens = o.tokens;
+            }
+        }
+        clock.advance(Duration::from_millis(1));
+    }
+    assert_eq!(eng.metrics.kv_prefix_hits, 2);
+    let mut cold = paged_engine(&rt, true, None, Clock::manual());
+    let cold_out = cold.run_all(vec![greedy(&prefixed(6, 3), 6)]).unwrap();
+    assert_eq!(warm_tokens, cold_out[0].tokens, "post-cancel hit diverged");
 }
 
 /// Cross-backend oracle (artifact-gated): the pure-Rust reference model

@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use road::adapters::{Adapter, AdapterBank, AdapterRegistry, PageOutcome, RoadAdapter, RoadVectors};
 use road::coordinator::kv::SlotAllocator;
+use road::coordinator::pool::BlockPool;
 use road::coordinator::queue::{AdmissionQueue, EngineError};
 use road::coordinator::request::Request;
 use road::coordinator::sampler;
@@ -322,6 +323,156 @@ fn prop_registry_paging_invariants() {
                 assert!(reg.is_pinned(s));
             }
         }
+    }
+}
+
+#[test]
+fn prop_block_pool_conservation_under_random_ops() {
+    // Random alloc / release / publish / ref / unref interleavings over a
+    // small pool, mirrored against a model of what we hold.  Invariants,
+    // checked after every op:
+    //  * conservation: free + private + cached == n, and each block is in
+    //    exactly one state (`check_conservation`),
+    //  * no aliasing: an allocation never returns a block we already hold
+    //    privately, nor one carrying a live reference,
+    //  * eviction safety: only zero-reference cached blocks are ever
+    //    evicted to satisfy an allocation,
+    //  * the pool's gauges track the model exactly.
+    // Honors `ROAD_PROPTEST_SEED` like the scheduler properties.
+    let mut rng = Rng::seed_from(prop_seed() ^ 0xb10c);
+    for _case in 0..60 {
+        let n = 2 + rng.below(12);
+        let mut pool = BlockPool::new(n, 4);
+        let mut held: Vec<usize> = Vec::new(); // blocks we hold privately
+        let mut cached: std::collections::BTreeMap<u64, (usize, usize)> = Default::default();
+        let mut next_key = 1u64;
+        for _op in 0..300 {
+            match rng.below(10) {
+                // Allocate a private block.
+                0..=3 => match pool.alloc_private() {
+                    Some(a) => {
+                        assert!(!held.contains(&a.block), "aliased private block {}", a.block);
+                        for (k, &(b, refs)) in &cached {
+                            if refs > 0 {
+                                assert_ne!(a.block, b, "allocated referenced block of key {k}");
+                            }
+                        }
+                        if let Some(k) = a.evicted {
+                            let (_, refs) = cached.remove(&k).expect("evicted unknown key");
+                            assert_eq!(refs, 0, "evicted key {k} with live references");
+                        }
+                        held.push(a.block);
+                    }
+                    None => {
+                        assert_eq!(pool.available(), 0, "stall with blocks available");
+                    }
+                },
+                // Release a held block back to the free list.
+                4 | 5 => {
+                    if !held.is_empty() {
+                        let b = held.swap_remove(rng.below(held.len()));
+                        pool.release_private(b).unwrap();
+                        // Exactly-once: the double release is a typed error
+                        // that leaves the pool untouched.
+                        let free_before = pool.n_free();
+                        assert!(pool.release_private(b).is_err());
+                        assert_eq!(pool.n_free(), free_before);
+                    }
+                }
+                // Publish a held block under a fresh (or colliding) key.
+                6 | 7 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len());
+                        let collide = !cached.is_empty() && rng.chance(0.3);
+                        if collide {
+                            // Duplicate key: the loser keeps its block private.
+                            let k = *cached.keys().next().unwrap();
+                            assert!(!pool.publish(held[i], k).unwrap());
+                            assert!(pool.is_private(held[i]));
+                        } else {
+                            let k = next_key;
+                            next_key += 1;
+                            let b = held.swap_remove(i);
+                            assert!(pool.publish(b, k).unwrap());
+                            // The publisher keeps one reference.
+                            cached.insert(k, (b, 1));
+                        }
+                    }
+                }
+                // Take a reference on a cached key (a shared-prefix hit).
+                8 => {
+                    if !cached.is_empty() {
+                        let keys: Vec<u64> = cached.keys().copied().collect();
+                        let k = keys[rng.below(keys.len())];
+                        let entry = cached.get_mut(&k).unwrap();
+                        assert_eq!(pool.ref_cached(k), Some(entry.0));
+                        entry.1 += 1;
+                    }
+                }
+                // Drop a reference (lane finish over a shared prefix).
+                _ => {
+                    let with_refs: Vec<u64> =
+                        cached.iter().filter(|(_, v)| v.1 > 0).map(|(k, _)| *k).collect();
+                    if !with_refs.is_empty() {
+                        let k = with_refs[rng.below(with_refs.len())];
+                        let entry = cached.get_mut(&k).unwrap();
+                        pool.unref_cached(entry.0).unwrap();
+                        entry.1 -= 1;
+                        if entry.1 == 0 {
+                            // Zero refs: the block stays cached (evictable),
+                            // and a further unref is a typed error.
+                            assert!(pool.unref_cached(entry.0).is_err());
+                            assert!(pool.key_of(entry.0).is_some());
+                        }
+                    }
+                }
+            }
+            pool.check_conservation().unwrap();
+            assert_eq!(pool.n_private(), held.len());
+            assert_eq!(pool.n_cached(), cached.len());
+            assert_eq!(pool.total_refs(), cached.values().map(|v| v.1).sum::<usize>());
+            for (k, &(b, refs)) in &cached {
+                assert_eq!(pool.lookup(*k), Some(b));
+                assert_eq!(pool.refs_of(b), refs);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_block_pool_release_paths_are_exactly_once() {
+    // Every way a block leaves a lane is exactly-once, across random pool
+    // shapes: double private release errors, releasing a published block
+    // errors (it is no longer private), unref below zero errors, and a
+    // fully-unreferenced published block is recyclable by allocation.
+    let mut rng = Rng::seed_from(prop_seed() ^ 0x1d3a);
+    for _case in 0..CASES {
+        let n = 1 + rng.below(8);
+        let mut pool = BlockPool::new(n, 1 + rng.below(8));
+        let a = pool.alloc_private().unwrap();
+        pool.release_private(a.block).unwrap();
+        assert!(pool.release_private(a.block).is_err());
+
+        let b = pool.alloc_private().unwrap().block;
+        assert!(pool.publish(b, 7).unwrap());
+        // Published: the private-release path must reject it...
+        assert!(pool.release_private(b).is_err());
+        // ...and the publisher's single reference unwinds exactly once.
+        pool.unref_cached(b).unwrap();
+        assert!(pool.unref_cached(b).is_err());
+        pool.check_conservation().unwrap();
+        // Unreferenced cached blocks are reclaimable: draining the pool
+        // succeeds n times (the cached block is evicted on the way) and
+        // the (n+1)-th allocation stalls.
+        let mut got = Vec::new();
+        for _ in 0..n {
+            got.push(pool.alloc_private().expect("evictable block not reclaimed").block);
+        }
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "drain aliased a block");
+        assert!(pool.alloc_private().is_none());
+        pool.check_conservation().unwrap();
     }
 }
 
