@@ -1,0 +1,13 @@
+pub fn advance(state: u8) {
+    if state > 3 {
+        panic!("invalid lifecycle transition");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        Some(1usize).unwrap();
+    }
+}

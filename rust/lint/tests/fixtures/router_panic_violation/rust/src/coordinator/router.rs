@@ -1,0 +1,11 @@
+pub fn route(ready: &[usize]) -> usize {
+    *ready.first().unwrap()
+}
+
+pub fn home(placement: Option<usize>) -> usize {
+    placement.expect("adapter registered")
+}
+
+pub fn guarded(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

@@ -84,6 +84,26 @@ fn pool_panic_violation_fixture_fails_on_hot_paths() {
     assert!(findings.iter().all(|f| f.line < 21), "{findings:?}");
 }
 
+/// The fleet data plane (router placement + replica lifecycle) is
+/// coordinator hot-path code like the pool: a panic in `place` or a
+/// lifecycle transition takes down the front door for every replica.
+/// Seeded violations in both modules pin the rule to the new files; the
+/// same-line lock idiom and test code stay allowed.
+#[test]
+fn router_panic_violation_fixture_fails_on_both_fleet_modules() {
+    let findings = check("router_panic_violation");
+    let hits = of_rule(&findings, "no-panic-hot-path");
+    assert_eq!(hits.len(), 3, "unwrap + expect in router, panic! in replica: {hits:?}");
+    let lines = |file: &str| -> Vec<usize> {
+        hits.iter().filter(|f| f.path.ends_with(file)).map(|f| f.line).collect()
+    };
+    // Exactly the seeded sites: the `.lock().unwrap()` poisoning idiom
+    // (router.rs:10) and the `#[cfg(test)]` module (replica.rs) stay
+    // allowed, so no further lines fire.
+    assert_eq!(lines("coordinator/router.rs"), vec![2, 6], "{hits:?}");
+    assert_eq!(lines("coordinator/replica.rs"), vec![3], "{hits:?}");
+}
+
 #[test]
 fn typed_error_fixture_fails_on_string_results_and_wire_drift() {
     let findings = check("typed_error_violation");

@@ -26,6 +26,7 @@ use anyhow::Result;
 use crate::adapters::{Adapter, LoraAdapter, RoadAdapter};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::{Request, SamplingParams, StreamEvent};
+use crate::coordinator::router::{FleetSim, FleetSimConfig, PlaceKind};
 use crate::coordinator::sched::{PolicyKind, SchedSim, SimOutcome, SimRecord};
 use crate::runtime::Runtime;
 use crate::trainer::{Recipe, TrainBatch, Trainer};
@@ -1123,6 +1124,253 @@ pub fn render_kvpage_points(title: &str, points: &[KvPagePoint]) -> String {
     )
 }
 
+// ---------------------------------------------------------------------------
+// Router study: placement policies over the deterministic fleet sim
+// ---------------------------------------------------------------------------
+
+/// One placement policy's row in the router study: fleet-wide paging and
+/// prefix-cache traffic plus the per-replica balance axes.
+#[derive(Clone, Debug)]
+pub struct RouterPoint {
+    pub place: String,
+    pub replicas: usize,
+    pub requests: usize,
+    pub finished: usize,
+    /// Requests placed per replica, in replica order (the balance axis:
+    /// no replica should starve).
+    pub placed: Vec<usize>,
+    /// Placements that left the adapter's home replica (affinity only).
+    pub spills: usize,
+    /// Home re-assignments on sustained imbalance (affinity only).
+    pub rehomes: usize,
+    /// Adapter-bank paging counters summed across replicas — upload bytes
+    /// is the study's headline axis (host-to-device traffic placement
+    /// avoids by keeping an adapter's pages on its home replica).
+    pub bank_hits: usize,
+    pub bank_misses: usize,
+    pub bank_evictions: usize,
+    pub bank_upload_bytes: usize,
+    /// Prefix-cache counters summed across replicas.
+    pub prefix_hits: usize,
+    pub prefix_misses: usize,
+    /// Per-replica queue-wait p99 in virtual ms, replica order (the
+    /// starvation axis: every entry stays bounded).
+    pub queue_p99_ms: Vec<f64>,
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p99_ms: f64,
+    /// Fleet steps from first arrival to drained.
+    pub steps: usize,
+}
+
+impl RouterPoint {
+    /// Fraction of prefix-cache lookups served from cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
+
+    /// The worst per-replica queue-wait p99 (bounded = nobody starves).
+    pub fn worst_replica_p99_ms(&self) -> f64 {
+        self.queue_p99_ms.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// The placement study on the deterministic fleet sim (`--study router
+/// --sim-clock`): every [`PlaceKind`] over the same Zipf shared-prefix
+/// hetero-adapter workload on an `n_replicas` fleet whose per-replica
+/// bank (5 slots) and prefix cache (6 entries) cannot hold the full
+/// working set (12 adapters / prompt groups).  Affinity keeps each
+/// adapter's bank pages and prefix entries on its home replica; the
+/// spread policies re-page the set on every replica.  Arrivals land
+/// every 10 virtual ms, steps cost 5 virtual ms, and all state is
+/// integer accounting — two runs emit byte-identical output (CI diffs
+/// them).
+pub fn router_study_sim(
+    n_requests: usize,
+    n_replicas: usize,
+    new_tokens: usize,
+    seed: u64,
+) -> Vec<RouterPoint> {
+    let arrival_gap = Duration::from_millis(10);
+    // 12 adapters, one prompt group each, against 5 bank slots per
+    // replica: no single replica can keep everything resident, so
+    // placement decides the paging bill.
+    let (n_groups, distinct) = (12usize, 12usize);
+    let mut out = Vec::new();
+    for place in PlaceKind::ALL {
+        let cfg = FleetSimConfig {
+            place,
+            n_replicas,
+            bank_slots: 5,
+            bank_row_bytes: 4096,
+            prefix_cache: 6,
+            prefix_len: 12,
+            ..FleetSimConfig::default()
+        };
+        let mut fleet = FleetSim::new(&cfg);
+        for a in 0..distinct {
+            fleet.register(&format!("adapter-{a}"));
+        }
+        let mut rng = Rng::seed_from(seed ^ 0x40e7);
+        let reqs = prefix_workload(
+            &mut rng, n_requests, n_groups, distinct, 1.2, cfg.prefix_len, 4, new_tokens,
+        );
+        let mut pending: VecDeque<(usize, Request)> = reqs.into_iter().enumerate().collect();
+        let mut steps = 0usize;
+        loop {
+            let due = |pending: &VecDeque<(usize, Request)>| {
+                pending.front().map(|(i, _)| arrival_gap * (*i as u32))
+            };
+            while due(&pending).is_some_and(|d| d <= fleet.elapsed()) {
+                let (_, req) = pending.pop_front().expect("due arrival checked");
+                fleet.submit(req).expect("study fleet always has a ready replica");
+            }
+            if pending.is_empty() && !fleet.has_work() {
+                break;
+            }
+            // An idle fleet still steps: the lockstep clocks advance
+            // toward the next arrival (there is no cross-replica sleep).
+            fleet.step();
+            steps += 1;
+        }
+        out.push(aggregate_router(place.name(), n_requests, steps, &fleet));
+    }
+    out
+}
+
+/// Fold one policy's drained [`FleetSim`] into a study row.
+fn aggregate_router(place: &str, requests: usize, steps: usize, fleet: &FleetSim) -> RouterPoint {
+    let mut all_waits: Vec<f64> = Vec::new();
+    let mut queue_p99_ms: Vec<f64> = Vec::new();
+    let mut finished = 0usize;
+    let (mut bank_hits, mut bank_misses, mut bank_evictions, mut upload) =
+        (0usize, 0usize, 0usize, 0usize);
+    let (mut prefix_hits, mut prefix_misses) = (0usize, 0usize);
+    for sim in fleet.replicas() {
+        let waits: Vec<f64> = sim
+            .records()
+            .iter()
+            .map(|r| (r.admitted_at.unwrap_or(r.finished_at) - r.submitted_at).as_secs_f64() * 1e3)
+            .collect();
+        finished += sim.records().iter().filter(|r| r.outcome == SimOutcome::Finished).count();
+        queue_p99_ms.push(crate::util::stats::summarize(&waits).p99);
+        all_waits.extend(waits);
+        let b = sim.bank_stats();
+        bank_hits += b.hits;
+        bank_misses += b.misses;
+        bank_evictions += b.evictions;
+        upload += b.upload_bytes;
+        let p = sim.prefix_stats();
+        prefix_hits += p.hits;
+        prefix_misses += p.misses;
+    }
+    let s = crate::util::stats::summarize(&all_waits);
+    RouterPoint {
+        place: place.to_string(),
+        replicas: fleet.replicas().len(),
+        requests,
+        finished,
+        placed: fleet.placed.clone(),
+        spills: fleet.placer().spills,
+        rehomes: fleet.placer().rehomes,
+        bank_hits,
+        bank_misses,
+        bank_evictions,
+        bank_upload_bytes: upload,
+        prefix_hits,
+        prefix_misses,
+        queue_p99_ms,
+        queue_wait_p50_ms: s.p50,
+        queue_wait_p99_ms: s.p99,
+        steps,
+    }
+}
+
+/// JSON form of the router study — the `--sim-clock` byte-identity
+/// artifact (`results/BENCH_router.json`, diffed across CI runs).
+pub fn router_points_json(points: &[RouterPoint]) -> Json {
+    json::arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("place", json::s(&p.place)),
+                    ("replicas", json::num(p.replicas as f64)),
+                    ("requests", json::num(p.requests as f64)),
+                    ("finished", json::num(p.finished as f64)),
+                    (
+                        "placed",
+                        json::arr(p.placed.iter().map(|&n| json::num(n as f64)).collect()),
+                    ),
+                    ("spills", json::num(p.spills as f64)),
+                    ("rehomes", json::num(p.rehomes as f64)),
+                    ("bank_hits", json::num(p.bank_hits as f64)),
+                    ("bank_misses", json::num(p.bank_misses as f64)),
+                    ("bank_evictions", json::num(p.bank_evictions as f64)),
+                    ("bank_upload_bytes", json::num(p.bank_upload_bytes as f64)),
+                    ("prefix_hits", json::num(p.prefix_hits as f64)),
+                    ("prefix_misses", json::num(p.prefix_misses as f64)),
+                    ("prefix_hit_rate", json::num(p.prefix_hit_rate())),
+                    (
+                        "queue_p99_ms",
+                        json::arr(p.queue_p99_ms.iter().map(|&w| json::num(w)).collect()),
+                    ),
+                    ("queue_wait_p50_ms", json::num(p.queue_wait_p50_ms)),
+                    ("queue_wait_p99_ms", json::num(p.queue_wait_p99_ms)),
+                    ("steps", json::num(p.steps as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Render the router study: one row per placement policy.  `upload(KB)`
+/// and `prefix-hit%` are the placement axes; `placed` and the worst
+/// per-replica wait p99 are the balance axes.
+pub fn render_router_points(title: &str, points: &[RouterPoint]) -> String {
+    let mut t = Table::new(&[
+        "place",
+        "reqs",
+        "fin",
+        "placed",
+        "spills",
+        "rehomes",
+        "upload(KB)",
+        "evict",
+        "prefix-hit%",
+        "wait p50(ms)",
+        "wait p99(ms)",
+        "worst-replica p99(ms)",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.place.clone(),
+            p.requests.to_string(),
+            p.finished.to_string(),
+            p.placed.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("/"),
+            p.spills.to_string(),
+            p.rehomes.to_string(),
+            fmt_f(p.bank_upload_bytes as f64 / 1e3, 1),
+            p.bank_evictions.to_string(),
+            fmt_f(p.prefix_hit_rate() * 100.0, 1),
+            fmt_f(p.queue_wait_p50_ms, 1),
+            fmt_f(p.queue_wait_p99_ms, 1),
+            fmt_f(p.worst_replica_p99_ms(), 1),
+        ]);
+    }
+    format!(
+        "## {title}\n{}\nupload(KB) and prefix-hit% are the placement axes: affinity keeps \
+         each adapter's bank pages and prefix entries on its home replica, so at the same \
+         Zipf load it re-pages less and hits more than the spread policies.  placed and \
+         worst-replica p99 are the balance axes — every replica sees work and none starves.\n",
+        t.render()
+    )
+}
+
 /// Figure 4 (Left): merged vs unmerged LoRA.  The merged path is the base
 /// model (adapter folded into W, paper §4.2); the unmerged path pays the
 /// per-layer bmm epilogue.  Rank is compile-time-fixed in the artifacts,
@@ -1513,5 +1761,63 @@ mod tests {
         }
         let back = Json::parse(&kvpage_points_json(&pts).to_string_compact()).unwrap();
         assert_eq!(back.as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn router_study_affinity_beats_spread_on_paging_without_starvation() {
+        let pts = router_study_sim(96, 3, 8, 7);
+        assert_eq!(pts.len(), PlaceKind::ALL.len());
+        for p in &pts {
+            assert_eq!(p.finished, p.requests, "{}: leaked requests", p.place);
+            assert_eq!(p.placed.iter().sum::<usize>(), p.requests, "{}: placement total", p.place);
+            assert!(
+                p.placed.iter().all(|&n| n > 0),
+                "{}: starved replica in {:?}",
+                p.place,
+                p.placed
+            );
+            // Bounded queue waits on every replica: the fleet is
+            // under-subscribed (12 lanes vs one arrival / 10 ms), so a
+            // placement policy that parks work behind one hot replica
+            // would blow far past this.
+            assert!(
+                p.worst_replica_p99_ms() < 1_000.0,
+                "{}: unbounded wait {:?}",
+                p.place,
+                p.queue_p99_ms
+            );
+        }
+        let by = |name: &str| pts.iter().find(|p| p.place == name).unwrap();
+        let (aff, rr) = (by("affinity"), by("round-robin"));
+        // The study's claim: at equal Zipf load, affinity pays less bank
+        // traffic and hits the prefix cache more than spreading does.
+        assert!(
+            aff.bank_upload_bytes < rr.bank_upload_bytes,
+            "affinity upload {} !< round-robin {}",
+            aff.bank_upload_bytes,
+            rr.bank_upload_bytes
+        );
+        assert!(
+            aff.prefix_hit_rate() > rr.prefix_hit_rate(),
+            "affinity hit rate {:.3} !> round-robin {:.3}",
+            aff.prefix_hit_rate(),
+            rr.prefix_hit_rate()
+        );
+        assert!(aff.bank_evictions <= rr.bank_evictions);
+        // A pure function of the seed: byte-identical replay.
+        let again = router_study_sim(96, 3, 8, 7);
+        assert_eq!(
+            router_points_json(&pts).to_string_compact(),
+            router_points_json(&again).to_string_compact()
+        );
+        let md = render_router_points("Router", &pts);
+        for needle in
+            ["affinity", "least-loaded", "round-robin", "upload(KB)", "prefix-hit%", "placed"]
+        {
+            assert!(md.contains(needle), "missing {needle:?} in\n{md}");
+        }
+        let back = Json::parse(&router_points_json(&pts).to_string_compact()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 3);
+        assert_eq!(back.as_arr().unwrap()[0].get("place").unwrap().as_str().unwrap(), "affinity");
     }
 }

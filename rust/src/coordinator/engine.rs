@@ -122,6 +122,16 @@ pub struct EngineConfig {
     /// explicitly squeezed (`road serve --kv-pool-blocks`, the kvpage
     /// bench's pressure knob).
     pub kv_pool_blocks: Option<usize>,
+    /// First engine-issued request id (default 1; 0 is reserved — empty
+    /// decode lanes are masked by id 0).  A multi-replica
+    /// [`crate::coordinator::Fleet`] gives replica `r` the base `r + 1` so
+    /// wire ids stay globally unique and encode their home replica.
+    pub request_id_base: u64,
+    /// Increment between consecutive engine-issued ids (default 1).  A
+    /// fleet of `n` replicas uses stride `n`: replica `r` issues
+    /// `r+1, r+1+n, r+1+2n, ...`, so `(id - 1) % n` recovers the replica
+    /// for O(1) cancel routing with no shared id state.
+    pub request_id_stride: u64,
 }
 
 impl Default for EngineConfig {
@@ -140,6 +150,8 @@ impl Default for EngineConfig {
             paged_kv: true,
             kv_block_size: 16,
             kv_pool_blocks: None,
+            request_id_base: 1,
+            request_id_stride: 1,
         }
     }
 }
@@ -271,7 +283,9 @@ impl Engine {
             policy: sched::make_policy(econf.policy),
             clock: econf.clock.clone(),
             admitted_per_adapter: BTreeMap::new(),
-            next_id: 1,
+            // Id 0 is reserved for masked decode lanes, so the base
+            // saturates up to 1 even if a caller passes 0.
+            next_id: econf.request_id_base.max(1),
             events: Vec::new(),
             econf,
         };
@@ -360,7 +374,7 @@ impl Engine {
         // Ids are engine-issued, unconditionally: a caller-stamped id is
         // overwritten, so correlation goes through the returned id.
         req.id = self.next_id;
-        self.next_id += 1;
+        self.next_id = self.next_id.wrapping_add(self.econf.request_id_stride.max(1));
         let id = req.id;
         if req.submitted_at.is_none() {
             req.submitted_at = Some(self.clock.now());

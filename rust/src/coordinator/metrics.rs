@@ -391,6 +391,68 @@ impl MetricsSnapshot {
             ("prefix_hit_ttft", summary(&self.prefix_hit_ttft)),
         ])
     }
+
+    /// Merge per-replica snapshots into one fleet-level view — what the
+    /// NDJSON `stats` op reports as the aggregate next to the per-replica
+    /// snapshots ([`crate::coordinator::FleetStats`]).
+    ///
+    /// Counters sum.  `wall_secs` is the max (replicas run concurrently,
+    /// so fleet wall time is the longest replica's, not the sum) and
+    /// `throughput` is recomputed from the merged tokens over that wall.
+    /// CPU-time accumulators (`prefill_secs`/`decode_secs`) sum — they are
+    /// work, not wall.  `kv_blocks_free_min` and `kv_shared_refs_peak` sum
+    /// per-replica extrema: each replica owns a separate pool, so the sums
+    /// read as "fleet-wide headroom with every replica at its own worst
+    /// moment".  Latency summaries merge via
+    /// [`crate::util::stats::merge_summaries`] (percentiles approximate;
+    /// studies that need exact percentiles keep raw records).
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let merged_summary = |pick: fn(&MetricsSnapshot) -> &Summary| {
+            crate::util::stats::merge_summaries(parts.iter().map(pick))
+        };
+        let mut out = MetricsSnapshot {
+            ttft: merged_summary(|s| &s.ttft),
+            e2e: merged_summary(|s| &s.e2e),
+            queue_wait: merged_summary(|s| &s.queue_wait),
+            paged_wait: merged_summary(|s| &s.paged_wait),
+            queue_depth: merged_summary(|s| &s.queue_depth),
+            prefix_hit_ttft: merged_summary(|s| &s.prefix_hit_ttft),
+            ..MetricsSnapshot::default()
+        };
+        for s in parts {
+            out.requests_completed += s.requests_completed;
+            out.requests_cancelled += s.requests_cancelled;
+            out.deadline_shed += s.deadline_shed;
+            out.tokens_generated += s.tokens_generated;
+            out.prompt_tokens += s.prompt_tokens;
+            out.prefill_batches += s.prefill_batches;
+            out.decode_steps += s.decode_steps;
+            out.wall_secs = out.wall_secs.max(s.wall_secs);
+            out.prefill_secs += s.prefill_secs;
+            out.decode_secs += s.decode_secs;
+            out.kv_host_syncs += s.kv_host_syncs;
+            out.kv_uploads += s.kv_uploads;
+            out.bank_hits += s.bank_hits;
+            out.bank_misses += s.bank_misses;
+            out.bank_evictions += s.bank_evictions;
+            out.bank_upload_bytes += s.bank_upload_bytes;
+            out.bank_full_uploads += s.bank_full_uploads;
+            out.bank_staged_rows += s.bank_staged_rows;
+            out.kv_block_hits += s.kv_block_hits;
+            out.kv_block_misses += s.kv_block_misses;
+            out.kv_block_evictions += s.kv_block_evictions;
+            out.kv_blocks_published += s.kv_blocks_published;
+            out.kv_prefix_hits += s.kv_prefix_hits;
+            out.kv_prefill_tokens_saved += s.kv_prefill_tokens_saved;
+            out.prefill_lane_tokens += s.prefill_lane_tokens;
+            out.kv_admission_stalls += s.kv_admission_stalls;
+            out.kv_blocks_free_min += s.kv_blocks_free_min;
+            out.kv_shared_refs_peak += s.kv_shared_refs_peak;
+        }
+        out.throughput =
+            if out.wall_secs > 0.0 { out.tokens_generated as f64 / out.wall_secs } else { 0.0 };
+        out
+    }
 }
 
 #[cfg(test)]
@@ -520,6 +582,50 @@ mod tests {
         assert_eq!(back.get("bank_full_uploads").unwrap().as_usize().unwrap(), 2);
         assert_eq!(back.get("bank_staged_rows").unwrap().as_usize().unwrap(), 9);
         assert!(back.opt("prefix_hit_ttft").is_some(), "prefix-hit TTFT histogram on the wire");
+    }
+
+    #[test]
+    fn merge_sums_counters_maxes_wall_and_recomputes_throughput() {
+        let mut a = MetricsSnapshot::default();
+        a.requests_completed = 3;
+        a.tokens_generated = 30;
+        a.bank_upload_bytes = 1000;
+        a.kv_prefix_hits = 2;
+        a.kv_blocks_free_min = 5;
+        a.wall_secs = 2.0;
+        let mut b = MetricsSnapshot::default();
+        b.requests_completed = 1;
+        b.tokens_generated = 10;
+        b.bank_upload_bytes = 500;
+        b.kv_blocks_free_min = 7;
+        b.wall_secs = 4.0;
+        let m = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(m.requests_completed, 4);
+        assert_eq!(m.tokens_generated, 40);
+        assert_eq!(m.bank_upload_bytes, 1500);
+        assert_eq!(m.kv_prefix_hits, 2);
+        assert_eq!(m.kv_blocks_free_min, 12, "per-replica headroom sums");
+        assert!((m.wall_secs - 4.0).abs() < 1e-12, "fleet wall is the longest replica");
+        assert!((m.throughput - 10.0).abs() < 1e-9, "recomputed: 40 tok / 4 s");
+    }
+
+    #[test]
+    fn merge_pools_latency_summaries_sample_weighted() {
+        let mut a = Metrics::default();
+        for _ in 0..3 {
+            a.ttft.record(Duration::from_millis(10));
+        }
+        let mut b = Metrics::default();
+        b.ttft.record(Duration::from_millis(50));
+        let m = MetricsSnapshot::merge(&[a.snapshot(), b.snapshot()]);
+        assert_eq!(m.ttft.n, 4);
+        assert!((m.ttft.mean - 20_000.0).abs() < 1e-6, "weighted mean: {}", m.ttft.mean);
+        assert!((m.ttft.min - 10_000.0).abs() < 1e-6);
+        assert!((m.ttft.max - 50_000.0).abs() < 1e-6);
+        // Merging with an empty snapshot is the identity.
+        let id = MetricsSnapshot::merge(&[m.clone(), MetricsSnapshot::default()]);
+        assert_eq!(id.ttft.n, m.ttft.n);
+        assert!((id.ttft.mean - m.ttft.mean).abs() < 1e-9);
     }
 
     #[test]

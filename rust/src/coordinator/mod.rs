@@ -12,7 +12,9 @@ pub mod metrics;
 pub mod net;
 pub mod pool;
 pub mod queue;
+pub mod replica;
 pub mod request;
+pub mod router;
 pub mod sampler;
 pub mod sched;
 pub mod server;
@@ -20,6 +22,11 @@ pub mod server;
 pub use engine::{Engine, EngineConfig};
 pub use metrics::MetricsSnapshot;
 pub use queue::EngineError;
+pub use replica::{Replica, ReplicaHealth, ReplicaState};
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams, StreamEvent};
+pub use router::{
+    Fleet, FleetGeneration, FleetSim, FleetSimConfig, FleetStats, PlaceKind, Placement, Placer,
+    ReplicaView, Router,
+};
 pub use sched::{PolicyKind, SchedPolicy, SchedSim};
 pub use server::{EngineClient, EngineServer, Generation};

@@ -12,15 +12,24 @@
 //! ← {"event":"finished","id":3,"finish":"max_tokens","tokens":[...],"text":"...","tag":1}
 //! → {"op":"cancel","id":3}
 //! → {"op":"stats"}
-//! ← {"event":"stats","stats":{...}}
+//! ← {"event":"stats","stats":{...},"active_connections":1,"replicas":[...]}
 //! ```
+//!
+//! The listener fronts a [`Router`] (docs/DESIGN.md §Data plane), so the
+//! same protocol serves one engine or a fleet: `admitted` events carry
+//! the serving `replica`, and `stats` answers with the merged fleet
+//! aggregate under the legacy `stats` key plus per-replica
+//! state/load/metrics rows under `replicas` and the listener's
+//! `active_connections` gauge.  Single-replica fleets keep the wire
+//! shape — clients that only read `stats` never notice a fleet.
 //!
 //! Requests on one connection run concurrently (each `generate` gets a
 //! streaming thread; lines are interleaved per event, never split).  The
 //! optional `tag` is echoed verbatim on every event of that request so
 //! clients can correlate before they learn the engine-issued id.  A
 //! dropped connection cancels its in-flight requests via the
-//! [`Generation`] drop path — a hung-up client frees its decode slots.
+//! [`FleetGeneration`] drop path — a hung-up client frees its decode
+//! slots and releases its replica's load gauge.
 //!
 //! Peer input is treated as hostile: request lines are capped at
 //! [`MAX_LINE_BYTES`] (overflow is discarded, not buffered) and the JSON
@@ -30,6 +39,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -39,23 +49,48 @@ use crate::util::json::{self, Json};
 
 use super::queue::EngineError;
 use super::request::{Request, RequestOutput, SamplingParams, StreamEvent};
-use super::server::{EngineClient, Generation};
+use super::router::{FleetGeneration, Router};
+
+/// RAII increment of the listener's `active_connections` gauge: one per
+/// live connection-handler thread, released on any exit path.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl ConnGuard {
+    fn new(gauge: Arc<AtomicUsize>) -> ConnGuard {
+        gauge.fetch_add(1, Ordering::AcqRel);
+        ConnGuard(gauge)
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        // Saturating: the gauge can never underflow even if a guard
+        // outlives a reset elsewhere.
+        let _ =
+            self.0.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| Some(v.saturating_sub(1)));
+    }
+}
 
 /// Accept loop: one handler thread per connection, forever.  Callers bind
 /// the listener themselves (so `--listen 127.0.0.1:0` can report the
-/// chosen port before entering the loop).
-pub fn serve(listener: TcpListener, client: EngineClient) -> Result<()> {
+/// chosen port before entering the loop).  The router decides which
+/// replica serves each request; a single-replica fleet degenerates to the
+/// pre-fleet behavior.
+pub fn serve(listener: TcpListener, router: Router) -> Result<()> {
+    let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
     for conn in listener.incoming() {
         match conn {
             Ok(stream) => {
-                let client = client.clone();
+                let router = router.clone();
+                let gauge = Arc::clone(&active);
                 let spawned =
                     std::thread::Builder::new().name("road-conn".into()).spawn(move || {
+                        let _guard = ConnGuard::new(Arc::clone(&gauge));
                         let peer = stream
                             .peer_addr()
                             .map(|a| a.to_string())
                             .unwrap_or_else(|_| "<unknown>".into());
-                        if let Err(e) = handle_conn(stream, client) {
+                        if let Err(e) = handle_conn(stream, router, gauge) {
                             eprintln!("[serve] connection {peer}: {e:#}");
                         }
                     });
@@ -136,7 +171,7 @@ fn read_line_bounded(r: &mut impl BufRead) -> std::io::Result<LineRead> {
     }
 }
 
-fn handle_conn(stream: TcpStream, client: EngineClient) -> Result<()> {
+fn handle_conn(stream: TcpStream, router: Router, active: Arc<AtomicUsize>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer = Arc::new(Mutex::new(stream));
     loop {
@@ -158,24 +193,27 @@ fn handle_conn(stream: TcpStream, client: EngineClient) -> Result<()> {
         }
         match parse_line(&line) {
             Ok(WireCmd::Generate(req, tag)) => {
-                let client = client.clone();
+                let router = router.clone();
                 let writer = writer.clone();
                 std::thread::Builder::new().name("road-stream".into()).spawn(move || {
-                    stream_generation(&client, req, tag, &writer);
+                    stream_generation(&router, req, tag, &writer);
                 })?;
             }
             Ok(WireCmd::Cancel(id)) => {
                 // Best-effort; unknown/finished ids are no-ops by design.
-                let _ = client.cancel(id);
+                // The id's stride residue names its replica — no fan-out.
+                let _ = router.cancel(id);
             }
             Ok(WireCmd::Stats) => {
-                let line = match client.stats() {
-                    Ok(snap) => json::obj(vec![
-                        ("event", json::s("stats")),
-                        ("stats", snap.to_json()),
-                    ]),
-                    Err(e) => error_event(None, None, &e),
-                };
+                // Merged fleet aggregate under the legacy `stats` key, plus
+                // the per-replica rows and the listener's connection gauge.
+                let fleet = router.stats();
+                let line = json::obj(vec![
+                    ("event", json::s("stats")),
+                    ("stats", fleet.merged.to_json()),
+                    ("active_connections", json::num(active.load(Ordering::Acquire) as f64)),
+                    ("replicas", fleet.replicas_json()),
+                ]);
                 write_line(&writer, &line)?;
             }
             Err(e) => {
@@ -188,22 +226,24 @@ fn handle_conn(stream: TcpStream, client: EngineClient) -> Result<()> {
 
 /// Drive one generation, relaying every stream event as an NDJSON line.
 /// A failed write means the client hung up: returning drops the
-/// [`Generation`], which auto-cancels the request in the engine.
+/// [`FleetGeneration`], which auto-cancels the request in the engine and
+/// releases the replica's load gauge.
 fn stream_generation(
-    client: &EngineClient,
+    router: &Router,
     req: Request,
     tag: Option<Json>,
     writer: &Arc<Mutex<TcpStream>>,
 ) {
-    let mut generation: Generation = match client.submit(req) {
+    let mut generation: FleetGeneration = match router.submit(req) {
         Ok(g) => g,
         Err(e) => {
             let _ = write_line(writer, &error_event(None, tag.as_ref(), &e));
             return;
         }
     };
+    let replica = generation.replica();
     while let Some(ev) = generation.recv() {
-        if write_line(writer, &event_json(&ev, tag.as_ref())).is_err() {
+        if write_line(writer, &event_json(&ev, tag.as_ref(), Some(replica))).is_err() {
             return;
         }
         if ev.is_terminal() {
@@ -295,12 +335,17 @@ fn with_tag(mut pairs: Vec<(&'static str, Json)>, tag: Option<&Json>) -> Json {
     json::obj(pairs)
 }
 
-fn event_json(ev: &StreamEvent, tag: Option<&Json>) -> Json {
+/// `replica` stamps `admitted` events with the serving replica (fleet
+/// placement is decided by then; later events correlate by id).
+fn event_json(ev: &StreamEvent, tag: Option<&Json>, replica: Option<usize>) -> Json {
     match ev {
-        StreamEvent::Admitted { id } => with_tag(
-            vec![("event", json::s("admitted")), ("id", json::num(*id as f64))],
-            tag,
-        ),
+        StreamEvent::Admitted { id } => {
+            let mut pairs = vec![("event", json::s("admitted")), ("id", json::num(*id as f64))];
+            if let Some(r) = replica {
+                pairs.push(("replica", json::num(r as f64)));
+            }
+            with_tag(pairs, tag)
+        }
         StreamEvent::Token { id, token, pos, ttft_hint } => {
             let mut pairs = vec![
                 ("event", json::s("token")),
@@ -455,7 +500,7 @@ mod tests {
     #[test]
     fn bad_lines_yield_typed_invalid_and_connection_survives() {
         use crate::coordinator::engine::EngineConfig;
-        use crate::coordinator::server::EngineServer;
+        use crate::coordinator::router::{Fleet, PlaceKind};
         use std::net::TcpListener;
 
         let econf = EngineConfig {
@@ -466,13 +511,18 @@ mod tests {
             backend: crate::runtime::BackendKind::Reference,
             ..Default::default()
         };
-        let (server, client) =
-            EngineServer::start(econf, crate::manifest::Manifest::default_dir(), |_| Ok(()))
-                .unwrap();
+        let (fleet, router) = Fleet::start(
+            econf,
+            crate::manifest::Manifest::default_dir(),
+            1,
+            PlaceKind::Affinity,
+            |_| Ok(()),
+        )
+        .unwrap();
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         std::thread::spawn(move || {
-            let _ = serve(listener, client);
+            let _ = serve(listener, router);
         });
 
         let mut conn = std::net::TcpStream::connect(addr).unwrap();
@@ -529,7 +579,7 @@ mod tests {
         );
 
         // The connection is still usable: a valid request streams to a
-        // finished event.
+        // finished event, and `admitted` names the serving replica.
         conn.write_all(b"{\"op\":\"generate\",\"prompt\":[3,4,5],\"max_new_tokens\":2}\n")
             .unwrap();
         let mut kinds = Vec::new();
@@ -539,6 +589,9 @@ mod tests {
             let ev = Json::parse(out.trim()).unwrap();
             let kind = ev.get("event").unwrap().as_str().unwrap().to_string();
             assert_ne!(kind, "error", "valid request errored: {out}");
+            if kind == "admitted" {
+                assert_eq!(ev.get("replica").unwrap().as_usize().unwrap(), 0, "{out}");
+            }
             kinds.push(kind.clone());
             if kind == "finished" {
                 assert_eq!(ev.get("tokens").unwrap().as_arr().unwrap().len(), 2);
@@ -547,7 +600,25 @@ mod tests {
         }
         assert_eq!(kinds.first().map(String::as_str), Some("admitted"));
         assert_eq!(kinds.iter().filter(|k| *k == "token").count(), 2);
-        server.shutdown().unwrap();
+
+        // The fleet `stats` shape: merged aggregate under the legacy key,
+        // per-replica rows, and this very connection on the gauge.
+        conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+        let mut out = String::new();
+        assert!(reader.read_line(&mut out).unwrap() > 0, "closed on stats");
+        let stats = Json::parse(out.trim()).unwrap();
+        assert_eq!(stats.get("event").unwrap().as_str().unwrap(), "stats");
+        assert!(
+            stats.get("stats").unwrap().get("requests_completed").unwrap().as_usize().unwrap()
+                >= 1,
+            "{stats:?}"
+        );
+        assert!(stats.get("active_connections").unwrap().as_usize().unwrap() >= 1);
+        let replicas = stats.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(replicas.len(), 1);
+        assert_eq!(replicas[0].get("replica").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(replicas[0].get("state").unwrap().as_str().unwrap(), "ready");
+        fleet.shutdown().unwrap();
     }
 
     #[test]
@@ -567,16 +638,21 @@ mod tests {
             StreamEvent::Error { id: 3, error: EngineError::DeadlineExceeded },
         ];
         for ev in &events {
-            let line = event_json(ev, Some(&tag)).to_string_compact();
+            let line = event_json(ev, Some(&tag), Some(1)).to_string_compact();
             assert!(!line.contains('\n'), "{line}");
             let back = Json::parse(&line).unwrap();
             assert_eq!(back.get("id").unwrap().as_usize().unwrap(), 3);
             assert_eq!(back.get("tag").unwrap().as_usize().unwrap(), 42);
         }
-        let fin = event_json(&events[2], None);
+        // Only `admitted` carries the replica stamp; later events
+        // correlate by id.
+        let adm = event_json(&events[0], None, Some(1));
+        assert_eq!(adm.get("replica").unwrap().as_usize().unwrap(), 1);
+        assert!(event_json(&events[1], None, Some(1)).opt("replica").is_none());
+        let fin = event_json(&events[2], None, None);
         assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "max_tokens");
         assert_eq!(fin.get("tokens").unwrap().as_arr().unwrap().len(), 2);
-        let err = event_json(&events[3], None);
+        let err = event_json(&events[3], None, None);
         assert_eq!(err.get("error").unwrap().as_str().unwrap(), "deadline_exceeded");
     }
 }

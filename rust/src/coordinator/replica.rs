@@ -1,0 +1,210 @@
+//! Replica lifecycle for the multi-replica data plane: one [`Replica`]
+//! wraps one engine's [`super::server::EngineClient`] with a typed
+//! lifecycle state and a live load gauge.
+//!
+//! States advance monotonically — `Starting → Ready → Draining → Stopped`
+//! — via a lock-free `fetch_max`, so a racing drain and shutdown can never
+//! resurrect a replica.  A `Draining` replica keeps serving its in-flight
+//! lanes (its engine thread and event streams stay live) but the router's
+//! placement layer stops sending it new admissions; `Stopped` means the
+//! engine thread is gone and every client call answers
+//! `EngineError::EngineStopped`.
+//!
+//! Load is the number of outstanding routed requests, tracked by RAII
+//! [`LoadGuard`]s: the router takes a guard per submission and parks it in
+//! the returned generation handle, so both normal completion and the
+//! drop-cancel path release the gauge without bookkeeping.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::server::EngineClient;
+
+/// Lifecycle state of one engine replica.  Ordered: transitions only move
+/// rightward ([`Replica::advance_to`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ReplicaState {
+    /// Engine thread is being constructed; not yet routable.
+    Starting,
+    /// Serving: the placement layer may route new admissions here.
+    Ready,
+    /// Finishing in-flight work; receives no new admissions.
+    Draining,
+    /// Engine thread is gone; every client call answers `EngineStopped`.
+    Stopped,
+}
+
+impl ReplicaState {
+    /// Stable wire / report name (the `state` field of fleet stats).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaState::Starting => "starting",
+            ReplicaState::Ready => "ready",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Stopped => "stopped",
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            ReplicaState::Starting => 0,
+            ReplicaState::Ready => 1,
+            ReplicaState::Draining => 2,
+            ReplicaState::Stopped => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> ReplicaState {
+        match v {
+            0 => ReplicaState::Starting,
+            1 => ReplicaState::Ready,
+            2 => ReplicaState::Draining,
+            _ => ReplicaState::Stopped,
+        }
+    }
+}
+
+/// One engine replica as the router sees it: the client handle plus the
+/// shared lifecycle/load cells every router clone reads.
+pub struct Replica {
+    id: usize,
+    client: EngineClient,
+    state: Arc<AtomicU8>,
+    load: Arc<AtomicUsize>,
+}
+
+impl Replica {
+    /// Wrap a started engine's client; the replica begins `Starting` and
+    /// the fleet advances it to `Ready` once construction succeeded.
+    pub fn new(id: usize, client: EngineClient) -> Replica {
+        Replica {
+            id,
+            client,
+            state: Arc::new(AtomicU8::new(ReplicaState::Starting.as_u8())),
+            load: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn client(&self) -> &EngineClient {
+        &self.client
+    }
+
+    pub fn state(&self) -> ReplicaState {
+        ReplicaState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    /// Routable right now (exactly `Ready`; `Draining` and `Stopped`
+    /// replicas receive no new admissions).
+    pub fn is_ready(&self) -> bool {
+        self.state() == ReplicaState::Ready
+    }
+
+    /// Advance the lifecycle — monotone: a `fetch_max` on the state cell,
+    /// so moving "backward" (e.g. `Ready` after `Draining`) is a no-op and
+    /// concurrent transitions settle at the furthest state.
+    pub fn advance_to(&self, s: ReplicaState) {
+        self.state.fetch_max(s.as_u8(), Ordering::AcqRel);
+    }
+
+    /// Outstanding routed requests (admitted or queued on this replica's
+    /// engine; live [`LoadGuard`] count).
+    pub fn load(&self) -> usize {
+        self.load.load(Ordering::Acquire)
+    }
+
+    /// Count one outstanding request until the guard drops.
+    pub fn load_guard(&self) -> LoadGuard {
+        self.load.fetch_add(1, Ordering::AcqRel);
+        LoadGuard { load: Arc::clone(&self.load) }
+    }
+
+    /// Point-in-time health view (the `replicas[]` rows of fleet stats).
+    pub fn health(&self) -> ReplicaHealth {
+        ReplicaHealth { id: self.id, state: self.state(), load: self.load() }
+    }
+}
+
+/// One replica's health row: id, lifecycle state, outstanding load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaHealth {
+    pub id: usize,
+    pub state: ReplicaState,
+    pub load: usize,
+}
+
+/// RAII load token: one outstanding request on one replica.  Created by
+/// [`Replica::load_guard`] at submission; the router parks it inside the
+/// returned generation handle so every terminal path — finished stream,
+/// explicit cancel, or a dropped handle — releases the gauge.
+pub struct LoadGuard {
+    load: Arc<AtomicUsize>,
+}
+
+impl Drop for LoadGuard {
+    fn drop(&mut self) {
+        // Saturating: a release can never underflow the gauge even if a
+        // guard outlives a reset elsewhere.
+        let _ = self
+            .load
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| Some(v.saturating_sub(1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bare_replica(id: usize) -> Replica {
+        // A client whose engine thread never existed: good enough for
+        // lifecycle/load tests (no command is sent).
+        Replica::new(id, EngineClient::disconnected())
+    }
+
+    #[test]
+    fn lifecycle_is_monotone() {
+        let r = bare_replica(0);
+        assert_eq!(r.state(), ReplicaState::Starting);
+        assert!(!r.is_ready());
+        r.advance_to(ReplicaState::Ready);
+        assert!(r.is_ready());
+        r.advance_to(ReplicaState::Draining);
+        assert_eq!(r.state(), ReplicaState::Draining);
+        // Backward transitions are no-ops.
+        r.advance_to(ReplicaState::Ready);
+        assert_eq!(r.state(), ReplicaState::Draining, "drain cannot be undone by ready");
+        r.advance_to(ReplicaState::Stopped);
+        r.advance_to(ReplicaState::Draining);
+        assert_eq!(r.state(), ReplicaState::Stopped, "stopped is terminal");
+    }
+
+    #[test]
+    fn load_guards_count_and_release_on_drop() {
+        let r = bare_replica(1);
+        assert_eq!(r.load(), 0);
+        let g1 = r.load_guard();
+        let g2 = r.load_guard();
+        assert_eq!(r.load(), 2);
+        drop(g1);
+        assert_eq!(r.load(), 1);
+        assert_eq!(r.health(), ReplicaHealth { id: 1, state: ReplicaState::Starting, load: 1 });
+        drop(g2);
+        assert_eq!(r.load(), 0);
+    }
+
+    #[test]
+    fn state_names_are_stable_wire_strings() {
+        for (s, name) in [
+            (ReplicaState::Starting, "starting"),
+            (ReplicaState::Ready, "ready"),
+            (ReplicaState::Draining, "draining"),
+            (ReplicaState::Stopped, "stopped"),
+        ] {
+            assert_eq!(s.as_str(), name);
+            assert_eq!(ReplicaState::from_u8(s.as_u8()), s);
+        }
+    }
+}

@@ -1,0 +1,939 @@
+//! The fleet front door: N engine replicas behind one [`Router`] doing
+//! adapter-affinity placement (docs/DESIGN.md §Data plane).
+//!
+//! One engine, one device bank, and one listener cannot carry the paper's
+//! hetero-adapter serving claim to heavy traffic: a popular adapter on a
+//! single bank thrashes every other adapter's pages (the Zipf churn
+//! `--study bank` measures).  The scaling move is *placement* — keep a hot
+//! adapter's bank pages and KV prefix blocks resident on a home replica
+//! and route its requests there, spilling over only on load or health.
+//!
+//! Three layers:
+//!
+//! * [`Placer`] — the pure placement registry: `BTreeMap` of adapter →
+//!   [`Placement`] (home replica + spillover candidates) plus a pluggable
+//!   [`PlaceKind`] policy (`affinity` / `least-loaded` / `round-robin`),
+//!   re-homing on sustained imbalance.  No I/O, no clocks, no locks — the
+//!   same struct drives the live router and the deterministic [`FleetSim`],
+//!   and is what the placement proptests pin down.
+//! * [`Router`] / [`Fleet`] — the live data plane: [`Fleet::start`] brings
+//!   up N [`super::server::EngineServer`] replicas (each with its own
+//!   `Runtime`, `AdapterBank`, and `BlockPool`, on its own named thread),
+//!   and the cloneable [`Router`] places submissions, fans out
+//!   `register`/`unregister`/`stats`, and routes cancels by id arithmetic
+//!   (replica `r` issues ids `r+1, r+1+n, …` via
+//!   `EngineConfig::request_id_base/stride`, so `(id-1) % n` recovers the
+//!   home replica with no shared id state).
+//! * [`FleetSim`] — `SchedSim`'s multi-replica mode: N per-replica sims
+//!   stepped in lockstep on manual clocks behind one `Placer`, with the
+//!   bank/prefix cache models ([`SchedSim::with_bank`],
+//!   [`SchedSim::with_prefix_cache`]) standing in for device state — so
+//!   `road bench-serving --study router --sim-clock` compares placement
+//!   policies byte-identically before any real traffic.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::adapters::Adapter;
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+
+use super::engine::{Engine, EngineConfig};
+use super::metrics::MetricsSnapshot;
+use super::queue::EngineError;
+use super::replica::{LoadGuard, Replica, ReplicaHealth, ReplicaState};
+use super::request::{Request, RequestOutput, StreamEvent};
+use super::sched::{PolicyKind, SchedSim};
+use super::server::{EngineServer, Generation};
+
+// ---------------------------------------------------------------------------
+// Placement policy + registry (pure; shared by the live router and the sim)
+// ---------------------------------------------------------------------------
+
+/// Which placement policy the router runs; `road serve --place <name>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaceKind {
+    /// Adapter-affinity: route to the adapter's home replica while it is
+    /// ready and under the overload threshold; spill to the least-loaded
+    /// candidate otherwise, re-homing after a sustained spill streak.
+    /// Unregistered adapters and base-model requests take the default
+    /// round-robin route.
+    Affinity,
+    /// Ignore homes: always the least-loaded ready replica (ties break to
+    /// the lowest id).
+    LeastLoaded,
+    /// Ignore homes and load: ready replicas in rotation.
+    RoundRobin,
+}
+
+impl PlaceKind {
+    /// Every shipped policy, in the order the router study sweeps them.
+    pub const ALL: [PlaceKind; 3] =
+        [PlaceKind::Affinity, PlaceKind::LeastLoaded, PlaceKind::RoundRobin];
+
+    /// Stable CLI / report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlaceKind::Affinity => "affinity",
+            PlaceKind::LeastLoaded => "least-loaded",
+            PlaceKind::RoundRobin => "round-robin",
+        }
+    }
+
+    /// Parse a `--place` flag value.
+    pub fn from_name(name: &str) -> Result<PlaceKind> {
+        Ok(match name {
+            "affinity" => PlaceKind::Affinity,
+            "least-loaded" | "least_loaded" => PlaceKind::LeastLoaded,
+            "round-robin" | "round_robin" | "rr" => PlaceKind::RoundRobin,
+            other => {
+                bail!("unknown placement policy {other:?} (affinity|least-loaded|round-robin)")
+            }
+        })
+    }
+}
+
+/// What the placer knows about one replica at decision time.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Routable: lifecycle state is exactly `Ready`.
+    pub ready: bool,
+    /// Outstanding routed requests.
+    pub load: usize,
+}
+
+/// One adapter's placement: its home replica plus the spillover
+/// candidates (every other replica that was ready when the placement was
+/// made or re-homed; liveness is re-checked at routing time).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub home: usize,
+    pub spill: Vec<usize>,
+}
+
+/// The placement registry + policy.  Pure and deterministic: decisions
+/// are functions of the registry, the policy's cursor/streak state, and
+/// the `ReplicaView`s passed in — no clocks, no locks, no I/O — so the
+/// live [`Router`] and the [`FleetSim`] share it and the proptests can
+/// drive it with arbitrary op sequences.
+#[derive(Debug)]
+pub struct Placer {
+    policy: PlaceKind,
+    registry: BTreeMap<String, Placement>,
+    /// Registered homes per replica — `register` balances new homes.
+    homes: BTreeMap<usize, usize>,
+    /// Default-route rotation cursor (round-robin policy and affinity's
+    /// unregistered/base-model route).
+    rr: usize,
+    /// Per-adapter (last spill target, consecutive spills) — the
+    /// sustained-imbalance detector behind re-homing.
+    streaks: BTreeMap<String, (usize, usize)>,
+    /// Outstanding-load bound above which an affinity home spills over.
+    overload: usize,
+    /// Consecutive spills to one target that trigger a re-home.
+    rehome_after: usize,
+    /// Lifetime placements that left the home replica (affinity only).
+    pub spills: usize,
+    /// Lifetime re-homes on sustained imbalance.
+    pub rehomes: usize,
+}
+
+impl Placer {
+    /// `overload`: outstanding requests a home replica may hold before
+    /// affinity spills over (the live fleet uses `2 * decode_slots`).
+    pub fn new(policy: PlaceKind, overload: usize) -> Placer {
+        Placer {
+            policy,
+            registry: BTreeMap::new(),
+            homes: BTreeMap::new(),
+            rr: 0,
+            streaks: BTreeMap::new(),
+            overload: overload.max(1),
+            rehome_after: 8,
+            spills: 0,
+            rehomes: 0,
+        }
+    }
+
+    pub fn policy(&self) -> PlaceKind {
+        self.policy
+    }
+
+    /// The adapter → placement registry (read-only; the invariant the
+    /// placement proptests check).
+    pub fn registry(&self) -> &BTreeMap<String, Placement> {
+        &self.registry
+    }
+
+    /// Record a placement for a newly registered adapter: home = the ready
+    /// replica with the fewest registered homes (ties to the lowest id),
+    /// spill = every other ready replica.  Idempotent for known adapters.
+    /// Returns the home, or `None` when no replica is ready (the adapter
+    /// stays unplaced and routes through the default route until a later
+    /// `register`).
+    pub fn register(&mut self, name: &str, views: &[ReplicaView]) -> Option<usize> {
+        if let Some(p) = self.registry.get(name) {
+            return Some(p.home);
+        }
+        let home = views
+            .iter()
+            .filter(|v| v.ready)
+            .min_by_key(|v| (self.homes.get(&v.id).copied().unwrap_or(0), v.id))?
+            .id;
+        let spill: Vec<usize> =
+            views.iter().filter(|v| v.ready && v.id != home).map(|v| v.id).collect();
+        self.registry.insert(name.to_string(), Placement { home, spill });
+        *self.homes.entry(home).or_insert(0) += 1;
+        Some(home)
+    }
+
+    /// Drop an adapter's placement (no-op for unknown names).
+    pub fn unregister(&mut self, name: &str) {
+        if let Some(p) = self.registry.remove(name) {
+            if let Some(n) = self.homes.get_mut(&p.home) {
+                *n = n.saturating_sub(1);
+            }
+        }
+        self.streaks.remove(name);
+    }
+
+    /// Choose a replica for one request.  Returns `None` only when no
+    /// replica is ready (the fleet is draining/stopped); never returns a
+    /// non-ready replica — draining replicas receive no new admissions.
+    pub fn place(&mut self, adapter: Option<&str>, views: &[ReplicaView]) -> Option<usize> {
+        let ready: Vec<ReplicaView> = views.iter().filter(|v| v.ready).copied().collect();
+        if ready.is_empty() {
+            return None;
+        }
+        match self.policy {
+            PlaceKind::RoundRobin => self.default_route(&ready),
+            PlaceKind::LeastLoaded => least_loaded(&ready),
+            PlaceKind::Affinity => {
+                let Some(name) = adapter else { return self.default_route(&ready) };
+                let Some(p) = self.registry.get(name).cloned() else {
+                    return self.default_route(&ready);
+                };
+                if let Some(home) = ready.iter().find(|v| v.id == p.home) {
+                    if home.load < self.overload {
+                        self.streaks.remove(name);
+                        return Some(home.id);
+                    }
+                }
+                // Home is overloaded or not ready: spill to the
+                // least-loaded live candidate (fall back to any ready
+                // replica when every recorded candidate is gone).
+                let candidates: Vec<ReplicaView> =
+                    ready.iter().filter(|v| p.spill.contains(&v.id)).copied().collect();
+                let target = least_loaded(if candidates.is_empty() { &ready } else { &candidates })?;
+                self.spills += 1;
+                let streak = match self.streaks.get(name) {
+                    Some(&(t, n)) if t == target => (target, n + 1),
+                    _ => (target, 1),
+                };
+                if streak.1 >= self.rehome_after {
+                    self.rehome(name, target, &ready);
+                } else {
+                    self.streaks.insert(name.to_string(), streak);
+                }
+                Some(target)
+            }
+        }
+    }
+
+    /// Sustained imbalance: make the spill target the new home and
+    /// recompute the spill set from the currently ready replicas.
+    fn rehome(&mut self, name: &str, new_home: usize, ready: &[ReplicaView]) {
+        let Some(p) = self.registry.get_mut(name) else { return };
+        if let Some(n) = self.homes.get_mut(&p.home) {
+            *n = n.saturating_sub(1);
+        }
+        p.home = new_home;
+        p.spill = ready.iter().filter(|v| v.id != new_home).map(|v| v.id).collect();
+        *self.homes.entry(new_home).or_insert(0) += 1;
+        self.streaks.remove(name);
+        self.rehomes += 1;
+    }
+
+    /// Rotation over the ready replicas (ascending id order, stable
+    /// cursor) — round-robin's route and affinity's default route.
+    fn default_route(&mut self, ready: &[ReplicaView]) -> Option<usize> {
+        let mut ids: Vec<usize> = ready.iter().map(|v| v.id).collect();
+        ids.sort_unstable();
+        let pick = ids.get(self.rr % ids.len()).copied();
+        self.rr = self.rr.wrapping_add(1);
+        pick
+    }
+}
+
+/// Least outstanding load, ties to the lowest id.
+fn least_loaded(views: &[ReplicaView]) -> Option<usize> {
+    views.iter().min_by_key(|v| (v.load, v.id)).map(|v| v.id)
+}
+
+// ---------------------------------------------------------------------------
+// The live fleet: Router + Fleet
+// ---------------------------------------------------------------------------
+
+struct RouterInner {
+    replicas: Vec<Replica>,
+    placer: Mutex<Placer>,
+}
+
+/// Cloneable front door over the fleet's replicas: places submissions,
+/// fans out adapter registration and stats, routes cancels by id.
+/// Clones share the placement registry and the replicas' lifecycle/load
+/// cells — the NDJSON listener hands one clone to every connection.
+#[derive(Clone)]
+pub struct Router {
+    inner: Arc<RouterInner>,
+}
+
+impl Router {
+    pub fn n_replicas(&self) -> usize {
+        self.inner.replicas.len()
+    }
+
+    /// Current placement views (lifecycle + load) — what the placer sees.
+    fn views(&self) -> Vec<ReplicaView> {
+        self.inner
+            .replicas
+            .iter()
+            .map(|r| ReplicaView { id: r.id(), ready: r.is_ready(), load: r.load() })
+            .collect()
+    }
+
+    /// Which replica issued a wire id (`(id-1) % n`, the id-stride
+    /// arithmetic from [`EngineConfig::request_id_stride`]).
+    fn replica_of(&self, id: u64) -> usize {
+        let n = self.inner.replicas.len().max(1) as u64;
+        (id.wrapping_sub(1) % n) as usize
+    }
+
+    /// Place and submit one request; returns the streaming handle bound to
+    /// the chosen replica.  `EngineStopped` when no replica is ready.
+    pub fn submit(&self, req: Request) -> std::result::Result<FleetGeneration, EngineError> {
+        let views = self.views();
+        let mut placer = self.inner.placer.lock().unwrap();
+        let target =
+            placer.place(req.adapter.as_deref(), &views).ok_or(EngineError::EngineStopped)?;
+        drop(placer);
+        let replica = self.inner.replicas.get(target).ok_or(EngineError::EngineStopped)?;
+        let guard = replica.load_guard();
+        let gen = replica.client().submit(req)?;
+        Ok(FleetGeneration { gen, replica: target, _guard: guard })
+    }
+
+    /// Submit and wait for the full response (one-shot convenience).
+    pub fn generate(&self, req: Request) -> std::result::Result<RequestOutput, EngineError> {
+        self.submit(req)?.wait()
+    }
+
+    /// Cancel by wire id without holding the generation handle: the id
+    /// encodes its replica, so this is one O(1) forward, not a fan-out.
+    pub fn cancel(&self, id: u64) -> std::result::Result<(), EngineError> {
+        let r = self.replica_of(id);
+        match self.inner.replicas.get(r) {
+            Some(replica) => replica.client().cancel(id),
+            None => Err(EngineError::EngineStopped),
+        }
+    }
+
+    /// Register an adapter on every live replica (any replica may serve a
+    /// spillover request for it), then record its home placement.  The
+    /// first replica error aborts and is returned.
+    pub fn register_adapter(
+        &self,
+        name: &str,
+        adapter: Adapter,
+    ) -> std::result::Result<(), EngineError> {
+        let mut any = false;
+        for r in &self.inner.replicas {
+            if r.state() == ReplicaState::Stopped {
+                continue;
+            }
+            r.client().register_adapter(name, adapter.clone())?;
+            any = true;
+        }
+        if !any {
+            return Err(EngineError::EngineStopped);
+        }
+        let views = self.views();
+        self.inner.placer.lock().unwrap().register(name, &views);
+        Ok(())
+    }
+
+    /// Record a home placement for an adapter that is already registered
+    /// on every replica (e.g. by the fleet's per-replica setup closure,
+    /// which bypasses the router).  Idempotent, like [`Placer::register`].
+    pub fn place_adapter(&self, name: &str) {
+        let views = self.views();
+        self.inner.placer.lock().unwrap().register(name, &views);
+    }
+
+    /// Unregister an adapter everywhere and drop its placement.  Fails
+    /// with the first replica rejection (e.g. queued work still references
+    /// it there) — the placement stays until every replica lets go.
+    pub fn unregister_adapter(&self, name: &str) -> std::result::Result<(), EngineError> {
+        for r in &self.inner.replicas {
+            if r.state() == ReplicaState::Stopped {
+                continue;
+            }
+            r.client().unregister_adapter(name)?;
+        }
+        self.inner.placer.lock().unwrap().unregister(name);
+        Ok(())
+    }
+
+    /// Fan out to every replica and merge: the fleet `stats` op.  Stopped
+    /// (or mid-shutdown) replicas report an empty snapshot rather than an
+    /// error — health is part of the answer, not a failure of it.
+    pub fn stats(&self) -> FleetStats {
+        let replicas: Vec<ReplicaStats> = self
+            .inner
+            .replicas
+            .iter()
+            .map(|r| ReplicaStats {
+                health: r.health(),
+                stats: r.client().stats().unwrap_or_default(),
+            })
+            .collect();
+        let merged =
+            MetricsSnapshot::merge(&replicas.iter().map(|r| r.stats.clone()).collect::<Vec<_>>());
+        FleetStats { merged, replicas }
+    }
+
+    /// Every replica's lifecycle + load row.
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        self.inner.replicas.iter().map(|r| r.health()).collect()
+    }
+
+    /// Move a replica to `Draining`: it finishes in-flight work but the
+    /// placer routes no new admissions to it.  No-op for unknown ids.
+    pub fn drain(&self, replica: usize) {
+        if let Some(r) = self.inner.replicas.get(replica) {
+            r.advance_to(ReplicaState::Draining);
+        }
+    }
+}
+
+/// A live request's event stream plus its fleet bookkeeping: which
+/// replica serves it, and the RAII load token that releases the replica's
+/// gauge on any terminal path (finish, cancel, or handle drop).
+pub struct FleetGeneration {
+    gen: Generation,
+    replica: usize,
+    _guard: LoadGuard,
+}
+
+impl FleetGeneration {
+    /// The engine-issued wire id (globally unique across the fleet).
+    pub fn id(&self) -> u64 {
+        self.gen.id()
+    }
+
+    /// The replica this request was placed on.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Next event; `None` after the terminal event ([`Generation::recv`]).
+    pub fn recv(&mut self) -> Option<StreamEvent> {
+        self.gen.recv()
+    }
+
+    /// Ask the serving replica to cancel this request (idempotent).
+    pub fn cancel(&self) {
+        self.gen.cancel()
+    }
+
+    /// Drain to the terminal outcome ([`Generation::wait`]).
+    pub fn wait(self) -> std::result::Result<RequestOutput, EngineError> {
+        self.gen.wait()
+    }
+}
+
+impl Iterator for FleetGeneration {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        self.recv()
+    }
+}
+
+/// Per-replica slice of [`FleetStats`]: health row + metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct ReplicaStats {
+    pub health: ReplicaHealth,
+    pub stats: MetricsSnapshot,
+}
+
+/// The fleet `stats` answer: the merged aggregate plus every replica's
+/// labeled snapshot (docs/DESIGN.md §Data plane describes the wire form).
+#[derive(Clone, Debug)]
+pub struct FleetStats {
+    pub merged: MetricsSnapshot,
+    pub replicas: Vec<ReplicaStats>,
+}
+
+impl FleetStats {
+    /// JSON form: `{"merged": {...}, "replicas": [{"replica": 0, "state":
+    /// "ready", "load": n, "stats": {...}}, ...]}`.  The NDJSON `stats`
+    /// event embeds `merged` under its legacy `stats` key so single-engine
+    /// clients keep parsing.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![("merged", self.merged.to_json()), ("replicas", self.replicas_json())])
+    }
+
+    /// Just the per-replica rows — the NDJSON `stats` event splices these
+    /// next to its legacy top-level fields.
+    pub fn replicas_json(&self) -> Json {
+        json::arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    json::obj(vec![
+                        ("replica", json::num(r.health.id as f64)),
+                        ("state", json::s(r.health.state.as_str())),
+                        ("load", json::num(r.health.load as f64)),
+                        ("stats", r.stats.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// The merged two-column report followed by a compact per-replica
+    /// table (`road serve --stats` in fleet mode).
+    pub fn report_table(&self) -> String {
+        let mut t = Table::new(&[
+            "replica",
+            "state",
+            "load",
+            "reqs",
+            "tokens",
+            "queue p50/p99 (ms)",
+            "bank h/m/e",
+            "upload B",
+            "kv prefix hits",
+        ]);
+        for r in &self.replicas {
+            let s = &r.stats;
+            t.row(vec![
+                r.health.id.to_string(),
+                r.health.state.as_str().to_string(),
+                r.health.load.to_string(),
+                s.requests_completed.to_string(),
+                s.tokens_generated.to_string(),
+                format!("{:.1} / {:.1}", s.queue_wait.p50 / 1e3, s.queue_wait.p99 / 1e3),
+                format!("{}/{}/{}", s.bank_hits, s.bank_misses, s.bank_evictions),
+                s.bank_upload_bytes.to_string(),
+                s.kv_prefix_hits.to_string(),
+            ]);
+        }
+        format!("{}\n{}", self.merged.report_table(), t.render())
+    }
+}
+
+/// The running fleet: owns the replica engine servers.  Keep it alive for
+/// the serving lifetime; [`Fleet::shutdown`] stops every replica cleanly
+/// (in-flight streams get typed terminal events).
+pub struct Fleet {
+    servers: Vec<EngineServer>,
+    router: Router,
+}
+
+impl Fleet {
+    /// Start `n_replicas` engines, each on its own named thread
+    /// (`road-engine-<r>`) with its own `Runtime`, `AdapterBank`, and
+    /// `BlockPool`, and an id namespace carved by base/stride so wire ids
+    /// are fleet-unique.  `setup` runs on every replica's engine thread
+    /// (hence `Clone`); `place` selects the router's placement policy.
+    pub fn start(
+        econf: EngineConfig,
+        artifacts_dir: std::path::PathBuf,
+        n_replicas: usize,
+        place: PlaceKind,
+        setup: impl Fn(&mut Engine) -> Result<()> + Send + Clone + 'static,
+    ) -> Result<(Fleet, Router)> {
+        if n_replicas == 0 {
+            bail!("a fleet needs at least one replica");
+        }
+        let mut servers = Vec::with_capacity(n_replicas);
+        let mut replicas = Vec::with_capacity(n_replicas);
+        for r in 0..n_replicas {
+            let mut rconf = econf.clone();
+            rconf.request_id_base = r as u64 + 1;
+            rconf.request_id_stride = n_replicas as u64;
+            let (server, client) = EngineServer::start_named(
+                rconf,
+                artifacts_dir.clone(),
+                format!("road-engine-{r}"),
+                setup.clone(),
+            )?;
+            let replica = Replica::new(r, client);
+            replica.advance_to(ReplicaState::Ready);
+            servers.push(server);
+            replicas.push(replica);
+        }
+        // A home replica may hold up to twice its decode slots in
+        // outstanding work before affinity spills over.
+        let overload = econf.decode_slots.saturating_mul(2).max(1);
+        let router = Router {
+            inner: Arc::new(RouterInner {
+                replicas,
+                placer: Mutex::new(Placer::new(place, overload)),
+            }),
+        };
+        Ok((Fleet { servers, router: router.clone() }, router))
+    }
+
+    /// Another handle to the shared router.
+    pub fn router(&self) -> Router {
+        self.router.clone()
+    }
+
+    /// Stop every replica: mark `Stopped` (placement sends nothing new),
+    /// then shut the engine threads down in replica order.
+    pub fn shutdown(self) -> Result<()> {
+        for r in &self.router.inner.replicas {
+            r.advance_to(ReplicaState::Stopped);
+        }
+        for server in self.servers {
+            server.shutdown()?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FleetSim: SchedSim's multi-replica mode
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`FleetSim`]: the per-replica sim parameters plus the
+/// placement policy and its thresholds.
+#[derive(Clone, Debug)]
+pub struct FleetSimConfig {
+    /// Per-replica admission policy (the engine-level scheduler).
+    pub policy: PolicyKind,
+    /// Fleet-level placement policy.
+    pub place: PlaceKind,
+    pub n_replicas: usize,
+    pub decode_slots: usize,
+    pub queue_capacity: usize,
+    pub step_cost: Duration,
+    /// Adapter-bank model slots per replica (0 = no bank model).
+    pub bank_slots: usize,
+    /// Bytes uploaded per bank page-in.
+    pub bank_row_bytes: usize,
+    /// Prefix-cache model entries per replica (0 = no prefix model).
+    pub prefix_cache: usize,
+    /// Leading prompt tokens forming a prefix-cache key.
+    pub prefix_len: usize,
+    /// Affinity overload threshold (outstanding requests per home).
+    pub overload: usize,
+}
+
+impl Default for FleetSimConfig {
+    fn default() -> FleetSimConfig {
+        FleetSimConfig {
+            policy: PolicyKind::Fcfs,
+            place: PlaceKind::Affinity,
+            n_replicas: 3,
+            decode_slots: 4,
+            queue_capacity: 4096,
+            step_cost: Duration::from_millis(5),
+            bank_slots: 0,
+            bank_row_bytes: 0,
+            prefix_cache: 0,
+            prefix_len: 0,
+            overload: 8,
+        }
+    }
+}
+
+/// Deterministic multi-replica serving sim: one [`SchedSim`] per replica
+/// (each with the optional bank/prefix models), stepped in lockstep on
+/// manual clocks, behind the same [`Placer`] the live router runs.  All
+/// state is integer accounting on virtual time, so two runs of the same
+/// workload are byte-identical — the router study's foundation.
+pub struct FleetSim {
+    replicas: Vec<SchedSim>,
+    draining: Vec<bool>,
+    placer: Placer,
+    step_cost: Duration,
+    /// Virtual time elapsed (steps × step cost) — the fleet-level clock
+    /// the arrival loop compares against.
+    elapsed: Duration,
+    /// Requests submitted per replica, in placement order.
+    pub placed: Vec<usize>,
+    /// Submissions refused because no replica was ready.
+    pub unplaced: usize,
+}
+
+impl FleetSim {
+    pub fn new(cfg: &FleetSimConfig) -> FleetSim {
+        let n = cfg.n_replicas.max(1);
+        let replicas = (0..n)
+            .map(|_| {
+                let mut sim =
+                    SchedSim::new(cfg.policy, cfg.decode_slots, cfg.queue_capacity, cfg.step_cost);
+                if cfg.bank_slots > 0 {
+                    sim = sim.with_bank(cfg.bank_slots, cfg.bank_row_bytes);
+                }
+                if cfg.prefix_cache > 0 {
+                    sim = sim.with_prefix_cache(cfg.prefix_cache, cfg.prefix_len);
+                }
+                sim
+            })
+            .collect();
+        FleetSim {
+            replicas,
+            draining: vec![false; n],
+            placer: Placer::new(cfg.place, cfg.overload),
+            step_cost: cfg.step_cost,
+            elapsed: Duration::ZERO,
+            placed: vec![0; n],
+            unplaced: 0,
+        }
+    }
+
+    fn views(&self) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(id, sim)| ReplicaView {
+                id,
+                ready: !self.draining.get(id).copied().unwrap_or(true),
+                load: sim.queue.len() + sim.n_active(),
+            })
+            .collect()
+    }
+
+    /// Record an adapter's home placement (mirrors the live fan-out
+    /// registration; the sim replicas need no registry).
+    pub fn register(&mut self, adapter: &str) {
+        let views = self.views();
+        self.placer.register(adapter, &views);
+    }
+
+    /// Place and submit: returns `(replica, sim-issued id)`.
+    /// `EngineStopped` when every replica is draining.
+    pub fn submit(&mut self, req: Request) -> std::result::Result<(usize, u64), EngineError> {
+        let views = self.views();
+        let target = match self.placer.place(req.adapter.as_deref(), &views) {
+            Some(t) => t,
+            None => {
+                self.unplaced += 1;
+                return Err(EngineError::EngineStopped);
+            }
+        };
+        let sim = self.replicas.get_mut(target).ok_or(EngineError::EngineStopped)?;
+        let id = sim.submit(req)?;
+        if let Some(n) = self.placed.get_mut(target) {
+            *n += 1;
+        }
+        Ok((target, id))
+    }
+
+    /// One fleet step: every replica steps (idle replicas advance their
+    /// clock only), keeping all virtual clocks in lockstep.
+    pub fn step(&mut self) {
+        for sim in &mut self.replicas {
+            sim.step();
+        }
+        self.elapsed += self.step_cost;
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.replicas.iter().any(|s| s.has_work())
+    }
+
+    /// Step until every replica is idle (capped at `max_steps`).
+    pub fn run_until_idle(&mut self, max_steps: usize) -> usize {
+        let mut steps = 0;
+        while self.has_work() && steps < max_steps {
+            self.step();
+            steps += 1;
+        }
+        steps
+    }
+
+    /// Virtual time elapsed since construction.
+    pub fn elapsed(&self) -> Duration {
+        self.elapsed
+    }
+
+    /// Mark a replica draining: it finishes its queue/lanes but the placer
+    /// routes no new work to it.
+    pub fn drain(&mut self, replica: usize) {
+        if let Some(d) = self.draining.get_mut(replica) {
+            *d = true;
+        }
+    }
+
+    /// The per-replica sims (records, bank/prefix stats) for aggregation.
+    pub fn replicas(&self) -> &[SchedSim] {
+        &self.replicas
+    }
+
+    /// The placement registry + counters (spills, rehomes).
+    pub fn placer(&self) -> &Placer {
+        &self.placer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::SimOutcome;
+
+    fn views(ready_load: &[(bool, usize)]) -> Vec<ReplicaView> {
+        ready_load
+            .iter()
+            .enumerate()
+            .map(|(id, &(ready, load))| ReplicaView { id, ready, load })
+            .collect()
+    }
+
+    #[test]
+    fn place_names_round_trip() {
+        for kind in PlaceKind::ALL {
+            assert_eq!(PlaceKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(PlaceKind::from_name("rr").unwrap(), PlaceKind::RoundRobin);
+        assert!(PlaceKind::from_name("sticky").is_err());
+    }
+
+    #[test]
+    fn register_balances_homes_and_spill_excludes_home() {
+        let mut p = Placer::new(PlaceKind::Affinity, 8);
+        let v = views(&[(true, 0), (true, 0), (true, 0)]);
+        let homes: Vec<usize> = ["a", "b", "c", "d", "e", "f"]
+            .iter()
+            .map(|n| p.register(n, &v).unwrap())
+            .collect();
+        assert_eq!(homes, vec![0, 1, 2, 0, 1, 2], "homes round-robin by count");
+        for (name, pl) in p.registry() {
+            assert!(!pl.spill.contains(&pl.home), "{name}: spill excludes home");
+            assert_eq!(pl.spill.len(), 2, "{name}: every other ready replica spills");
+        }
+        // Idempotent.
+        assert_eq!(p.register("a", &v), Some(0));
+        assert_eq!(p.registry().len(), 6);
+    }
+
+    #[test]
+    fn affinity_routes_home_until_overload_then_spills_least_loaded() {
+        let mut p = Placer::new(PlaceKind::Affinity, 4);
+        let v = views(&[(true, 0), (true, 0), (true, 0)]);
+        p.register("a", &v);
+        assert_eq!(p.place(Some("a"), &v), Some(0), "home while underloaded");
+        let hot = views(&[(true, 4), (true, 3), (true, 1)]);
+        assert_eq!(p.place(Some("a"), &hot), Some(2), "overloaded home spills least-loaded");
+        assert_eq!(p.spills, 1);
+        // Home recovers: route returns home and the streak resets.
+        let cool = views(&[(true, 1), (true, 3), (true, 1)]);
+        assert_eq!(p.place(Some("a"), &cool), Some(0));
+    }
+
+    #[test]
+    fn affinity_rehomes_after_sustained_spill_streak() {
+        let mut p = Placer::new(PlaceKind::Affinity, 2);
+        let v = views(&[(true, 0), (true, 0)]);
+        p.register("a", &v);
+        assert_eq!(p.registry()["a"].home, 0);
+        let overloaded = views(&[(true, 5), (true, 0)]);
+        for _ in 0..8 {
+            assert_eq!(p.place(Some("a"), &overloaded), Some(1));
+        }
+        assert_eq!(p.rehomes, 1, "8 consecutive spills to one target re-home");
+        assert_eq!(p.registry()["a"].home, 1);
+        assert_eq!(p.registry()["a"].spill, vec![0]);
+        assert_eq!(p.place(Some("a"), &views(&[(true, 0), (true, 0)])), Some(1));
+    }
+
+    #[test]
+    fn draining_replicas_receive_no_placements() {
+        let mut p = Placer::new(PlaceKind::Affinity, 8);
+        let v = views(&[(true, 0), (true, 0)]);
+        p.register("a", &v);
+        // Home (0) drains: every placement goes elsewhere.
+        let drained = views(&[(false, 0), (true, 9)]);
+        for _ in 0..4 {
+            assert_eq!(p.place(Some("a"), &drained), Some(1), "never the drained home");
+        }
+        assert_eq!(p.place(None, &drained), Some(1), "default route skips it too");
+        assert_eq!(p.place(Some("a"), &views(&[(false, 0), (false, 0)])), None, "none ready");
+    }
+
+    #[test]
+    fn round_robin_rotates_and_least_loaded_picks_minimum() {
+        let mut rr = Placer::new(PlaceKind::RoundRobin, 8);
+        let v = views(&[(true, 9), (true, 0), (true, 5)]);
+        let picks: Vec<Option<usize>> = (0..6).map(|_| rr.place(None, &v)).collect();
+        assert_eq!(picks, vec![Some(0), Some(1), Some(2), Some(0), Some(1), Some(2)]);
+        let mut ll = Placer::new(PlaceKind::LeastLoaded, 8);
+        assert_eq!(ll.place(Some("x"), &v), Some(1));
+        let tie = views(&[(true, 2), (true, 2)]);
+        assert_eq!(ll.place(None, &tie), Some(0), "ties break to the lowest id");
+    }
+
+    #[test]
+    fn fleet_sim_conserves_requests_across_replicas() {
+        let cfg = FleetSimConfig {
+            n_replicas: 3,
+            decode_slots: 2,
+            place: PlaceKind::RoundRobin,
+            ..FleetSimConfig::default()
+        };
+        let mut fleet = FleetSim::new(&cfg);
+        for i in 0..12 {
+            let adapter = format!("adapter-{}", i % 4);
+            fleet.register(&adapter);
+            fleet.submit(Request::new(vec![1; 4], 2).with_adapter(&adapter)).unwrap();
+        }
+        let steps = fleet.run_until_idle(256);
+        assert!(steps > 0 && !fleet.has_work());
+        let total: usize = fleet.replicas().iter().map(|s| s.records().len()).sum();
+        assert_eq!(total, 12, "every submission lands exactly one terminal record");
+        assert_eq!(fleet.placed.iter().sum::<usize>(), 12);
+        assert_eq!(fleet.unplaced, 0);
+        assert!(
+            fleet
+                .replicas()
+                .iter()
+                .flat_map(|s| s.records())
+                .all(|r| r.outcome == SimOutcome::Finished),
+        );
+        // Round-robin spread: every replica saw work.
+        assert!(fleet.placed.iter().all(|&n| n > 0), "{:?}", fleet.placed);
+    }
+
+    #[test]
+    fn fleet_sim_drained_replica_gets_no_new_work_and_finishes_in_flight() {
+        let cfg = FleetSimConfig {
+            n_replicas: 2,
+            decode_slots: 1,
+            place: PlaceKind::RoundRobin,
+            ..FleetSimConfig::default()
+        };
+        let mut fleet = FleetSim::new(&cfg);
+        let (r0, _) = fleet.submit(Request::new(vec![1; 4], 4)).unwrap();
+        assert_eq!(r0, 0);
+        fleet.drain(0);
+        for _ in 0..4 {
+            let (r, _) = fleet.submit(Request::new(vec![1; 4], 1)).unwrap();
+            assert_eq!(r, 1, "drained replica receives no new admissions");
+        }
+        fleet.run_until_idle(128);
+        assert_eq!(fleet.replicas()[0].records().len(), 1, "in-flight work drains to completion");
+        assert_eq!(fleet.replicas()[1].records().len(), 4);
+        fleet.drain(1);
+        assert!(fleet.submit(Request::new(vec![1; 2], 1)).is_err(), "whole fleet draining");
+        assert_eq!(fleet.unplaced, 1);
+    }
+}

@@ -237,6 +237,102 @@ struct SimLane {
     generated: usize,
 }
 
+/// Paging counters of a [`SchedSim`]'s optional adapter-bank model
+/// ([`SchedSim::with_bank`]) — the per-replica numbers the router study
+/// compares across placement policies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimBankStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    pub upload_bytes: usize,
+}
+
+/// Hit counters of a [`SchedSim`]'s optional shared-prefix cache model
+/// ([`SchedSim::with_prefix_cache`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimPrefixStats {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+/// LRU adapter-bank model: the accounting skeleton of
+/// [`crate::adapters::AdapterBank`] (slot capacity, LRU eviction, pinning
+/// of in-flight adapters, per-page-in upload bytes) with the device
+/// transfers replaced by counters.  Admission fails — the request stays
+/// queued, like the engine — when the adapter is cold and every resident
+/// slot is pinned.
+struct SimBank {
+    slots: usize,
+    row_bytes: usize,
+    /// Resident adapter names, LRU order (front = coldest).
+    resident: Vec<String>,
+    stats: SimBankStats,
+}
+
+impl SimBank {
+    /// Touch `adapter` for an admission.  `pinned` holds the adapters of
+    /// currently active lanes (plus same-step admissions) — never LRU
+    /// victims.  Returns whether the adapter is (now) resident.
+    fn admit(&mut self, adapter: &str, pinned: &BTreeMap<String, usize>) -> bool {
+        if let Some(pos) = self.resident.iter().position(|a| a == adapter) {
+            let name = self.resident.remove(pos);
+            self.resident.push(name);
+            self.stats.hits += 1;
+            return true;
+        }
+        if self.resident.len() >= self.slots {
+            let victim = self
+                .resident
+                .iter()
+                .position(|a| pinned.get(a).copied().unwrap_or(0) == 0);
+            match victim {
+                Some(pos) => {
+                    self.resident.remove(pos);
+                    self.stats.evictions += 1;
+                }
+                // Every resident adapter is pinned by an active lane: the
+                // request stays queued (the engine's kv_admission_stall
+                // analogue for the bank).
+                None => return false,
+            }
+        }
+        self.resident.push(adapter.to_string());
+        self.stats.misses += 1;
+        self.stats.upload_bytes += self.row_bytes;
+        true
+    }
+}
+
+/// LRU shared-prefix cache model: the hit/miss skeleton of
+/// [`super::kv::PagedKv`]'s prefix reuse, keyed by (adapter, leading
+/// prompt tokens) exactly like the engine's adapter-salted block hash.
+struct SimPrefixCache {
+    capacity: usize,
+    prefix_len: usize,
+    /// (adapter, prefix) keys, LRU order (front = coldest).
+    entries: Vec<(String, Vec<i32>)>,
+    stats: SimPrefixStats,
+}
+
+impl SimPrefixCache {
+    fn on_admit(&mut self, adapter: &str, prompt: &[i32]) {
+        let cut = self.prefix_len.min(prompt.len());
+        let key = (adapter.to_string(), prompt[..cut].to_vec());
+        if let Some(pos) = self.entries.iter().position(|e| *e == key) {
+            let e = self.entries.remove(pos);
+            self.entries.push(e);
+            self.stats.hits += 1;
+            return;
+        }
+        self.stats.misses += 1;
+        self.entries.push(key);
+        if self.entries.len() > self.capacity {
+            self.entries.remove(0);
+        }
+    }
+}
+
 /// The engine's admission/decode loop with compute replaced by a fixed
 /// per-step virtual cost, driven on a manual [`Clock`].
 ///
@@ -260,6 +356,11 @@ pub struct SchedSim {
     step_cost: Duration,
     next_id: u64,
     records: Vec<SimRecord>,
+    /// Optional adapter-bank model ([`SchedSim::with_bank`]); admission
+    /// gates on residency exactly like the engine's paging hook.
+    bank: Option<SimBank>,
+    /// Optional shared-prefix cache model ([`SchedSim::with_prefix_cache`]).
+    prefix: Option<SimPrefixCache>,
 }
 
 impl SchedSim {
@@ -280,7 +381,39 @@ impl SchedSim {
             step_cost,
             next_id: 1,
             records: Vec::new(),
+            bank: None,
+            prefix: None,
         }
+    }
+
+    /// Attach the LRU adapter-bank model: `slots` resident adapters,
+    /// `row_bytes` uploaded per page-in.  Admissions whose adapter is cold
+    /// when every resident slot is pinned stay queued, like the engine.
+    pub fn with_bank(mut self, slots: usize, row_bytes: usize) -> SchedSim {
+        self.bank = Some(SimBank { slots, row_bytes, resident: Vec::new(), stats: Default::default() });
+        self
+    }
+
+    /// Attach the shared-prefix cache model: `capacity` cached
+    /// (adapter, leading `prefix_len` prompt tokens) entries, LRU.
+    pub fn with_prefix_cache(mut self, capacity: usize, prefix_len: usize) -> SchedSim {
+        self.prefix = Some(SimPrefixCache {
+            capacity,
+            prefix_len,
+            entries: Vec::new(),
+            stats: Default::default(),
+        });
+        self
+    }
+
+    /// Paging counters of the bank model (zeros when no bank is attached).
+    pub fn bank_stats(&self) -> SimBankStats {
+        self.bank.as_ref().map(|b| b.stats).unwrap_or_default()
+    }
+
+    /// Hit counters of the prefix-cache model (zeros when none attached).
+    pub fn prefix_stats(&self) -> SimPrefixStats {
+        self.prefix.as_ref().map(|p| p.stats).unwrap_or_default()
     }
 
     pub fn policy_kind(&self) -> PolicyKind {
@@ -391,9 +524,35 @@ impl SchedSim {
             for lane in self.slots.iter().flatten() {
                 *in_flight.entry(lane.req.adapter.clone().unwrap_or_default()).or_insert(0) += 1;
             }
-            let ctx = SchedContext { now, in_flight: &in_flight, admitted: &self.admitted };
-            let order = self.policy.order(&self.queue, &ctx);
-            let take = self.queue.pop_scheduled(&order, n_free, self.max_prompt_len, |_| true);
+            let order = {
+                let ctx = SchedContext { now, in_flight: &in_flight, admitted: &self.admitted };
+                self.policy.order(&self.queue, &ctx)
+            };
+            // The admit predicate is the engine's paging hook: a request
+            // whose adapter cannot be paged into the bank model stays
+            // queued.  `pins` starts as the active-lane pin set and grows
+            // with same-step admissions so one pop cannot evict an adapter
+            // it just paged in.
+            let bank = &mut self.bank;
+            let max_prompt_len = self.max_prompt_len;
+            let mut pins = in_flight.clone();
+            let take = self.queue.pop_scheduled(&order, n_free, max_prompt_len, |r| {
+                let resident = match (bank.as_mut(), r.adapter.as_deref()) {
+                    (Some(b), Some(a)) => b.admit(a, &pins),
+                    _ => true,
+                };
+                if resident {
+                    if let Some(a) = &r.adapter {
+                        *pins.entry(a.clone()).or_insert(0) += 1;
+                    }
+                }
+                resident
+            });
+            if let Some(p) = &mut self.prefix {
+                for req in &take {
+                    p.on_admit(req.adapter.as_deref().unwrap_or(""), &req.prompt);
+                }
+            }
             // `pop_scheduled` hands back at most `n_free` requests, so
             // zipping against the free lanes can never drop one.
             let free: Vec<usize> =
@@ -563,5 +722,58 @@ mod tests {
         assert_eq!(w0, Duration::ZERO);
         assert_eq!(sim.records()[0].admitted_seq, Some(0), "first admission has ordinal 0");
         assert!(sim.records().iter().any(|r| r.queue_wait().unwrap() > Duration::ZERO));
+    }
+
+    #[test]
+    fn bank_model_counts_hits_misses_and_evictions_lru() {
+        let mut sim = SchedSim::new(PolicyKind::Fcfs, 1, 16, Duration::from_millis(5))
+            .with_bank(2, 100);
+        // One lane serializes admissions: a, b, a (hit), c (evicts LRU=b),
+        // b (miss again).
+        for name in ["a", "b", "a", "c", "b"] {
+            sim.submit(Request::new(vec![1; 4], 1).with_adapter(name)).unwrap();
+        }
+        sim.run_until_idle(64);
+        assert_eq!(sim.records().len(), 5);
+        let b = sim.bank_stats();
+        assert_eq!(b.hits, 1, "{b:?}");
+        assert_eq!(b.misses, 4, "{b:?}");
+        assert_eq!(b.evictions, 2, "c evicts b, then b evicts a: {b:?}");
+        assert_eq!(b.upload_bytes, 400, "one row per miss: {b:?}");
+    }
+
+    #[test]
+    fn bank_model_pins_active_adapters_and_defers_when_full() {
+        // 2 lanes, 1 bank slot: while adapter "a" holds a lane, "b" cannot
+        // page in (the only slot is pinned) and must wait for a to finish.
+        let mut sim = SchedSim::new(PolicyKind::Fcfs, 2, 16, Duration::from_millis(5))
+            .with_bank(1, 64);
+        sim.submit(Request::new(vec![1; 4], 4).with_adapter("a")).unwrap();
+        sim.submit(Request::new(vec![1; 4], 1).with_adapter("b")).unwrap();
+        sim.step();
+        assert_eq!(sim.n_active(), 1, "b is deferred while a pins the slot");
+        sim.run_until_idle(64);
+        assert_eq!(sim.records().len(), 2);
+        assert!(sim.records().iter().all(|r| r.outcome == SimOutcome::Finished));
+        let (a_rec, b_rec) = (&sim.records()[0], &sim.records()[1]);
+        assert_eq!(a_rec.adapter.as_deref(), Some("a"));
+        assert_eq!(b_rec.adapter.as_deref(), Some("b"));
+        assert!(b_rec.queue_wait().unwrap() > Duration::ZERO, "b waited for the pinned slot");
+    }
+
+    #[test]
+    fn prefix_cache_model_hits_on_repeated_adapter_prefix() {
+        let mut sim = SchedSim::new(PolicyKind::Fcfs, 1, 16, Duration::from_millis(5))
+            .with_prefix_cache(4, 3);
+        let prompt = vec![7, 8, 9, 1];
+        for _ in 0..3 {
+            sim.submit(Request::new(prompt.clone(), 1).with_adapter("a")).unwrap();
+        }
+        // Same leading tokens, different adapter: its own cache key.
+        sim.submit(Request::new(prompt.clone(), 1).with_adapter("b")).unwrap();
+        sim.run_until_idle(64);
+        let p = sim.prefix_stats();
+        assert_eq!(p.hits, 2, "{p:?}");
+        assert_eq!(p.misses, 2, "adapter-salted keys: {p:?}");
     }
 }

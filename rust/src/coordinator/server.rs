@@ -134,6 +134,15 @@ impl Drop for Generation {
 }
 
 impl EngineClient {
+    /// Test-only: a client whose command channel has no engine thread
+    /// behind it (every call answers `EngineStopped`) — lets sibling
+    /// modules unit-test handle plumbing without building an engine.
+    #[cfg(test)]
+    pub(crate) fn disconnected() -> EngineClient {
+        let (tx, _rx) = channel();
+        EngineClient { tx }
+    }
+
     /// Submit a request and stream its events.  Returns as soon as the
     /// engine has issued an id; typed rejections (`QueueFull`,
     /// `AdapterNotFound`, `Invalid`, `EngineStopped`) surface here rather
@@ -209,6 +218,19 @@ impl EngineServer {
         artifacts_dir: std::path::PathBuf,
         setup: impl FnOnce(&mut Engine) -> Result<()> + Send + 'static,
     ) -> Result<(EngineServer, EngineClient)> {
+        EngineServer::start_named(econf, artifacts_dir, "road-engine".into(), setup)
+    }
+
+    /// [`EngineServer::start`] with an explicit engine-thread name — the
+    /// multi-replica [`super::router::Fleet`] labels each replica's thread
+    /// (`road-engine-0`, `road-engine-1`, ...) so stack dumps attribute
+    /// work to a replica.
+    pub fn start_named(
+        econf: EngineConfig,
+        artifacts_dir: std::path::PathBuf,
+        thread_name: String,
+        setup: impl FnOnce(&mut Engine) -> Result<()> + Send + 'static,
+    ) -> Result<(EngineServer, EngineClient)> {
         // roadlint: allow(bounded-channels) -- the command plane: senders
         // are rendezvous-style clients whose payloads are already bounded
         // by queue-capacity backpressure inside the engine; blocking a
@@ -217,7 +239,7 @@ impl EngineServer {
         let (tx, rx) = channel::<Cmd>();
         let (ready_tx, ready_rx) = sync_channel::<Result<(), EngineError>>(1);
         let handle = std::thread::Builder::new()
-            .name("road-engine".into())
+            .name(thread_name)
             .spawn(move || engine_thread(econf, artifacts_dir, rx, ready_tx, setup))?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}

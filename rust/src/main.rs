@@ -8,15 +8,16 @@
 //!                  [--bank-slots N] [--whole-bank-uploads=true] [--stats=true]
 //!                  [--queue-capacity 4096] [--policy fcfs|edf|priority|fair]
 //!                  [--backend pjrt|ref] [--listen 127.0.0.1:7433]
+//!                  [--replicas 1] [--place affinity|least-loaded|round-robin]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
 //!                  [--steps 200] [--seed 0]
 //! road exp         --suite nlu|commonsense|arithmetic|instruct|multimodal|
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched|kvpage
+//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched|kvpage|router
 //!                  [--tokens 64] [--adapters 64] [--bank-slots 4]
-//!                  [--cancel-after 16] [--sim-clock]
+//!                  [--cancel-after 16] [--sim-clock] [--replicas 3]
 //! road bench-train-efficiency [--iters 50]
 //! road verify      (golden-record numerics check)
 //! ```
@@ -137,9 +138,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let econf = serve_config(args, &mode, slots)?;
 
     // --listen switches from the self-driving bench workload to the real
-    // front door: an NDJSON-over-TCP server over the streaming client API.
+    // front door: an NDJSON-over-TCP server over the streaming client API
+    // (--replicas N puts a placement router in front of N engines).
     if let Some(addr) = args.get("listen") {
-        return cmd_serve_listen(addr, econf, distinct);
+        let replicas = args.usize_or("replicas", 1);
+        let place =
+            road::coordinator::PlaceKind::from_name(&args.get_or("place", "affinity"))?;
+        return cmd_serve_listen(addr, econf, distinct, replicas, place);
     }
 
     let n_requests = args.usize_or("requests", 32);
@@ -175,16 +180,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `road serve --listen <addr>`: engine on its own thread, NDJSON front
-/// door on a TCP listener.  `--listen 127.0.0.1:0` picks a free port; the
-/// chosen address is printed as `listening on <addr>` before the accept
-/// loop starts (scripts/serve_smoke.py parses that line).
-fn cmd_serve_listen(addr: &str, econf: EngineConfig, distinct: usize) -> Result<()> {
+/// `road serve --listen <addr>`: a fleet of `--replicas` engines (each on
+/// its own named thread with its own runtime and bank) behind a placement
+/// [`road::coordinator::Router`], NDJSON front door on a TCP listener.
+/// `--listen 127.0.0.1:0` picks a free port; the chosen address is
+/// printed as `listening on <addr>` before the accept loop starts
+/// (scripts/serve_smoke.py parses that line).
+fn cmd_serve_listen(
+    addr: &str,
+    econf: EngineConfig,
+    distinct: usize,
+    replicas: usize,
+    place: road::coordinator::PlaceKind,
+) -> Result<()> {
     let mode = econf.mode.clone();
-    let (server, client) = road::coordinator::EngineServer::start(
+    // The setup closure runs on every replica's engine thread (Fn + Clone).
+    let (fleet, router) = road::coordinator::Fleet::start(
         econf,
         road::Manifest::default_dir(),
-        move |eng| {
+        replicas,
+        place,
+        move |eng: &mut road::coordinator::Engine| {
             if distinct > 0 {
                 bench::register_adapters(eng, distinct, 7)?;
                 println!("registered {distinct} {mode} adapters");
@@ -192,11 +208,17 @@ fn cmd_serve_listen(addr: &str, econf: EngineConfig, distinct: usize) -> Result<
             Ok(())
         },
     )?;
+    // The setup closure registered adapters engine-side on every replica;
+    // record their home placements so affinity has homes to route to.
+    for i in 0..distinct {
+        router.place_adapter(&format!("adapter-{i}"));
+    }
+    println!("fleet up: {replicas} replica(s), placement {}", place.name());
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("binding NDJSON listener on {addr}"))?;
     println!("listening on {}", listener.local_addr()?);
-    let result = road::coordinator::net::serve(listener, client);
-    server.shutdown()?;
+    let result = road::coordinator::net::serve(listener, router);
+    fleet.shutdown()?;
     result
 }
 
@@ -561,7 +583,31 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             md.push_str("\n```\n");
             md
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched|kvpage)"),
+        "router" => {
+            let n_requests = args.usize_or("requests", 96);
+            let replicas = args.usize_or("replicas", 3);
+            // Placement contrast wants paging pressure, not long
+            // generations; default short.
+            let new_tokens = if args.get("tokens").is_some() { tokens } else { 8 };
+            // The study always runs on the deterministic fleet sim
+            // (lockstep manual clocks, integer accounting): --sim-clock is
+            // accepted for symmetry with the other studies, and two runs
+            // are byte-identical either way (CI diffs the JSON).
+            let pts = bench::router_study_sim(n_requests, replicas, new_tokens, seed);
+            let json = bench::router_points_json(&pts).to_string_pretty();
+            std::fs::create_dir_all("results")?;
+            std::fs::write("results/BENCH_router.json", format!("{json}\n"))?;
+            println!("[saved results/BENCH_router.json]");
+            let mut md = bench::render_router_points(
+                "Fleet placement: adapter-affinity vs least-loaded vs round-robin",
+                &pts,
+            );
+            md.push_str("\n```json\n");
+            md.push_str(&json);
+            md.push_str("\n```\n");
+            md
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched|kvpage|router)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

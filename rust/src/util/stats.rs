@@ -35,6 +35,44 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
+/// Merge per-replica [`Summary`]s into one fleet-level summary without the
+/// raw samples (they never cross the engine-thread channel).  Counts sum,
+/// the mean is the sample-weighted mean, min/max are exact, and std is the
+/// pooled standard deviation.  Percentiles are the sample-weighted average
+/// of the parts' percentiles — an approximation (exact when the parts are
+/// identically distributed) that is fine for the fleet dashboard; any
+/// byte-accounted study computes its percentiles from raw records instead.
+pub fn merge_summaries<'a>(parts: impl IntoIterator<Item = &'a Summary>) -> Summary {
+    let mut out = Summary::default();
+    let mut m2 = 0.0; // sum of n_i * (std_i^2 + mean_i^2)
+    let mut first = true;
+    for s in parts {
+        if s.n == 0 {
+            continue;
+        }
+        let w = s.n as f64;
+        out.mean += w * s.mean;
+        m2 += w * (s.std * s.std + s.mean * s.mean);
+        out.p50 += w * s.p50;
+        out.p90 += w * s.p90;
+        out.p99 += w * s.p99;
+        out.min = if first { s.min } else { out.min.min(s.min) };
+        out.max = if first { s.max } else { out.max.max(s.max) };
+        out.n += s.n;
+        first = false;
+    }
+    if out.n == 0 {
+        return Summary::default();
+    }
+    let n = out.n as f64;
+    out.mean /= n;
+    out.p50 /= n;
+    out.p90 /= n;
+    out.p99 /= n;
+    out.std = (m2 / n - out.mean * out.mean).max(0.0).sqrt();
+    out
+}
+
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;

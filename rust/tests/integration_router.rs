@@ -1,0 +1,212 @@
+//! Multi-replica data-plane integration tests on the tiny config: the
+//! fleet's placement transparency (greedy decode is byte-identical whether
+//! one replica or three serve the workload), id-stride cancel routing,
+//! drain semantics, router-side adapter registration fan-out, and the
+//! merged + per-replica stats view.
+//!
+//! Like the streaming suite, every test runs unconditionally: on the
+//! pure-Rust reference backend when no artifacts are built, on PJRT when
+//! they exist (`ROAD_TEST_BACKEND=ref|pjrt` overrides).
+
+use std::rc::Rc;
+
+use road::adapters::{Adapter, RoadAdapter};
+use road::coordinator::engine::EngineConfig;
+use road::coordinator::queue::EngineError;
+use road::coordinator::request::{FinishReason, Request, SamplingParams};
+use road::coordinator::{Fleet, PlaceKind, ReplicaState, Router};
+use road::runtime::Runtime;
+use road::util::rng::Rng;
+
+fn test_backend() -> road::runtime::BackendKind {
+    road::runtime::BackendKind::auto()
+}
+
+fn rt() -> Rc<Runtime> {
+    let rt = Runtime::for_backend(test_backend(), road::Manifest::default_dir())
+        .expect("run `make artifacts` first");
+    Rc::new(rt)
+}
+
+fn tiny_econf(mode: &str) -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        mode: mode.into(),
+        decode_slots: 2,
+        queue_capacity: 64,
+        backend: test_backend(),
+        ..Default::default()
+    }
+}
+
+/// Greedy sampling: decode is a pure function of (prompt, adapter), so the
+/// same request produces the same tokens on any replica — the property the
+/// identity test leans on.
+fn greedy(prompt: &[i32], max_new: usize) -> Request {
+    Request::new(prompt.to_vec(), max_new).with_sampling(SamplingParams {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 0,
+        stop_token: None,
+    })
+}
+
+fn tiny_adapter(rt: &Rc<Runtime>, seed: u64) -> Adapter {
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let mut rng = Rng::seed_from(seed);
+    Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3))
+}
+
+/// A fleet with adapters "a" and "b" registered on every replica by the
+/// per-replica setup closure, homed in the router's placer.
+fn start_fleet(n_replicas: usize, place: PlaceKind, seed: u64) -> (Fleet, Router) {
+    let adapter_a = tiny_adapter(&rt(), seed);
+    let adapter_b = tiny_adapter(&rt(), seed ^ 0xb);
+    let (fleet, router) = Fleet::start(
+        tiny_econf("road"),
+        road::Manifest::default_dir(),
+        n_replicas,
+        place,
+        move |eng| {
+            eng.register_adapter("a", &adapter_a)?;
+            eng.register_adapter("b", &adapter_b)?;
+            Ok(())
+        },
+    )
+    .unwrap();
+    router.place_adapter("a");
+    router.place_adapter("b");
+    (fleet, router)
+}
+
+/// The greedy workload both fleets replay: hetero adapters, varied prompts.
+fn workload() -> Vec<Request> {
+    (0..9)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..3 + i % 4).map(|p| 1 + ((7 * i + p) % 13) as i32).collect();
+            let r = greedy(&prompt, 5 + i % 3);
+            match i % 3 {
+                0 => r.with_adapter("a"),
+                1 => r.with_adapter("b"),
+                _ => r,
+            }
+        })
+        .collect()
+}
+
+/// Placement is transparent to decoding: the same greedy workload yields
+/// token-identical outputs on a 1-replica fleet and a 3-replica affinity
+/// fleet (requests land on different engines with different banks, but
+/// greedy decode is a pure function of prompt + adapter).
+#[test]
+fn fleet_token_identity_one_vs_three_replicas() {
+    let run = |n: usize| -> Vec<Vec<i32>> {
+        let (fleet, router) = start_fleet(n, PlaceKind::Affinity, 17);
+        // Submit everything up front (requests interleave across lanes and
+        // replicas), then drain in submission order.
+        let generations: Vec<_> =
+            workload().into_iter().map(|r| router.submit(r).unwrap()).collect();
+        let outs: Vec<Vec<i32>> = generations
+            .into_iter()
+            .map(|generation| {
+                let out = generation.wait().unwrap();
+                assert_eq!(out.finish, FinishReason::MaxTokens);
+                out.tokens
+            })
+            .collect();
+        fleet.shutdown().unwrap();
+        outs
+    };
+    let single = run(1);
+    let tripled = run(3);
+    assert_eq!(single.len(), tripled.len());
+    for (i, (s, t)) in single.iter().zip(&tripled).enumerate() {
+        assert_eq!(s, t, "request {i}: placement changed greedy output");
+    }
+}
+
+/// Wire ids carve the fleet's id space by stride: `(id - 1) % n` recovers
+/// the serving replica, which is how `Router::cancel` routes without a
+/// fan-out — and an affinity fleet actually spreads adapters across homes.
+#[test]
+fn fleet_ids_encode_their_replica_and_cancel_routes_by_id() {
+    let n = 3usize;
+    let (fleet, router) = start_fleet(n, PlaceKind::Affinity, 4);
+    let mut seen_replicas = std::collections::BTreeSet::new();
+    for r in workload() {
+        let generation = router.submit(r).unwrap();
+        assert_eq!(
+            (generation.id() - 1) % n as u64,
+            generation.replica() as u64,
+            "id stride must encode the serving replica"
+        );
+        seen_replicas.insert(generation.replica());
+        generation.wait().unwrap();
+    }
+    assert!(
+        seen_replicas.len() > 1,
+        "adapters a/b + base route should span replicas: {seen_replicas:?}"
+    );
+
+    // Cancel through the router by bare wire id (no handle on the serving
+    // replica needed): the typed error comes back through the stream.
+    let generation = router.submit(greedy(&[5, 4, 3], 120).with_adapter("a")).unwrap();
+    router.cancel(generation.id()).unwrap();
+    assert!(matches!(generation.wait(), Err(EngineError::Cancelled)));
+    fleet.shutdown().unwrap();
+}
+
+/// Draining a replica stops new placements immediately while the rest of
+/// the fleet serves on; fleet stats label the drained replica.
+#[test]
+fn fleet_drain_stops_placement_and_shows_in_stats() {
+    let (fleet, router) = start_fleet(2, PlaceKind::RoundRobin, 9);
+    router.drain(0);
+    for i in 0..4 {
+        let generation = router.submit(greedy(&[1 + i, 2, 3], 3)).unwrap();
+        assert_eq!(generation.replica(), 1, "drained replica took new work");
+        generation.wait().unwrap();
+    }
+    let stats = router.stats();
+    let states: Vec<ReplicaState> = stats.replicas.iter().map(|r| r.health.state).collect();
+    assert_eq!(states, vec![ReplicaState::Draining, ReplicaState::Ready]);
+    assert_eq!(stats.replicas[0].stats.requests_completed, 0);
+    assert_eq!(stats.replicas[1].stats.requests_completed, 4);
+    assert_eq!(stats.merged.requests_completed, 4, "merged view sums the fleet");
+    fleet.shutdown().unwrap();
+}
+
+/// Router-side registration fans out to every replica: an adapter
+/// registered through the router serves spillover traffic anywhere, and
+/// the merged stats equal the per-replica sum.
+#[test]
+fn fleet_registration_fans_out_and_stats_merge() {
+    let rt = rt();
+    let (fleet, router) = start_fleet(3, PlaceKind::RoundRobin, 21);
+    router.register_adapter("c", tiny_adapter(&rt, 33)).unwrap();
+    // Round-robin sprays the same adapter across all three replicas —
+    // each must have it registered.
+    let mut seen = std::collections::BTreeSet::new();
+    let mut total_tokens = 0usize;
+    for i in 0..6 {
+        let out_gen = router.submit(greedy(&[2 + i, 7], 4).with_adapter("c")).unwrap();
+        seen.insert(out_gen.replica());
+        let out = out_gen.wait().unwrap();
+        total_tokens += out.tokens.len();
+    }
+    assert_eq!(seen.len(), 3, "round-robin should touch every replica: {seen:?}");
+    let stats = router.stats();
+    assert_eq!(stats.merged.requests_completed, 6);
+    assert_eq!(
+        stats.replicas.iter().map(|r| r.stats.requests_completed).sum::<usize>(),
+        6,
+        "per-replica snapshots sum to the merged counter"
+    );
+    assert_eq!(stats.merged.tokens_generated, total_tokens);
+    router.unregister_adapter("c").unwrap();
+    assert!(
+        router.submit(greedy(&[1, 2], 2).with_adapter("c")).is_err(),
+        "unregistered adapter must be rejected at submit"
+    );
+    fleet.shutdown().unwrap();
+}

@@ -411,15 +411,23 @@ fn ndjson_loopback_round_trip() {
         tiny_adapter(&rt, 6)
     };
     let dir = road::Manifest::default_dir();
-    let (server, client) = EngineServer::start(tiny_econf("road"), dir, move |eng| {
-        eng.register_adapter("srv", &adapter)?;
-        Ok(())
-    })
+    // The listener now fronts a fleet; a single-replica fleet is the
+    // pre-router serving shape.
+    let (fleet, router) = road::coordinator::Fleet::start(
+        tiny_econf("road"),
+        dir,
+        1,
+        road::coordinator::PlaceKind::Affinity,
+        move |eng| {
+            eng.register_adapter("srv", &adapter)?;
+            Ok(())
+        },
+    )
     .unwrap();
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        let _ = road::coordinator::net::serve(listener, client);
+        let _ = road::coordinator::net::serve(listener, router);
     });
 
     let mut conn = std::net::TcpStream::connect(addr).unwrap();
@@ -470,5 +478,8 @@ fn ndjson_loopback_round_trip() {
         ev.get("stats").unwrap().get("requests_completed").unwrap().as_usize().unwrap(),
         1
     );
-    server.shutdown().unwrap();
+    // Fleet-mode stats fields ride alongside the legacy shape.
+    assert_eq!(ev.get("replicas").unwrap().as_arr().unwrap().len(), 1);
+    assert!(ev.get("active_connections").unwrap().as_usize().unwrap() >= 1);
+    fleet.shutdown().unwrap();
 }

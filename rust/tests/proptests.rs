@@ -13,6 +13,7 @@ use road::coordinator::kv::SlotAllocator;
 use road::coordinator::pool::BlockPool;
 use road::coordinator::queue::{AdmissionQueue, EngineError};
 use road::coordinator::request::Request;
+use road::coordinator::router::{FleetSim, FleetSimConfig, PlaceKind, Placer, ReplicaView};
 use road::coordinator::sampler;
 use road::coordinator::sched::{PolicyKind, SchedSim, SimOutcome};
 use road::manifest::ModelConfigInfo;
@@ -610,6 +611,168 @@ fn prop_sched_rankings_are_permutations() {
                 (0..n).collect::<Vec<_>>(),
                 "[{kind:?}] ranking is not a permutation: {order:?}"
             );
+        }
+    }
+}
+
+#[test]
+fn prop_placer_registry_invariants_under_random_ops() {
+    // Random register / unregister / ready-flip / load-change / place
+    // sequences against every placement policy.  Invariants:
+    //  * the registry holds each adapter at most once, its home is in
+    //    range, and its spill set excludes the home and has no duplicates,
+    //  * a fresh registration homes on the ready replica with the fewest
+    //    registered homes (ties to the lowest id), and fails only when no
+    //    replica is ready,
+    //  * `place` never targets a non-ready (draining/stopped) replica and
+    //    returns None exactly when none is ready.
+    let mut rng = Rng::seed_from(prop_seed() ^ 0x9047);
+    for place in PlaceKind::ALL {
+        for _case in 0..40 {
+            let n = 1 + rng.below(5);
+            let mut p = Placer::new(place, 1 + rng.below(6));
+            let mut ready: Vec<bool> = vec![true; n];
+            let mut loads: Vec<usize> = vec![0; n];
+            let names: Vec<String> = (0..8).map(|i| format!("a{i}")).collect();
+            for _op in 0..150 {
+                let views: Vec<ReplicaView> = (0..n)
+                    .map(|id| ReplicaView { id, ready: ready[id], load: loads[id] })
+                    .collect();
+                match rng.below(10) {
+                    0 | 1 => {
+                        let name = &names[rng.below(names.len())];
+                        let fresh = !p.registry().contains_key(name.as_str());
+                        // Home counts derived from the registry itself —
+                        // the placer's internal counter must agree.
+                        let counts: Vec<usize> = (0..n)
+                            .map(|id| p.registry().values().filter(|pl| pl.home == id).count())
+                            .collect();
+                        match p.register(name, &views) {
+                            Some(h) => {
+                                if fresh {
+                                    assert!(ready[h], "fresh home {h} not ready");
+                                    let best = (0..n)
+                                        .filter(|&id| ready[id])
+                                        .min_by_key(|&id| (counts[id], id))
+                                        .unwrap();
+                                    assert_eq!(h, best, "fresh home is not balance-minimal");
+                                }
+                            }
+                            None => {
+                                assert!(fresh && ready.iter().all(|r| !r), "register refused");
+                            }
+                        }
+                    }
+                    2 => p.unregister(&names[rng.below(names.len())]),
+                    3 => {
+                        let i = rng.below(n);
+                        ready[i] = !ready[i];
+                    }
+                    4 => {
+                        let i = rng.below(n);
+                        loads[i] = rng.below(12);
+                    }
+                    _ => {
+                        let adapter = if rng.chance(0.7) {
+                            Some(names[rng.below(names.len())].clone())
+                        } else {
+                            None
+                        };
+                        match p.place(adapter.as_deref(), &views) {
+                            Some(t) => {
+                                assert!(t < n, "placed out of range");
+                                assert!(ready[t], "placed on a non-ready replica {t}");
+                            }
+                            None => {
+                                assert!(ready.iter().all(|r| !r), "refused with a ready replica")
+                            }
+                        }
+                    }
+                }
+                for (name, pl) in p.registry() {
+                    assert!(pl.home < n, "{name}: home {} out of range", pl.home);
+                    assert!(!pl.spill.contains(&pl.home), "{name}: home in its own spill set");
+                    assert!(pl.spill.iter().all(|&r| r < n), "{name}: spill out of range");
+                    let mut s = pl.spill.clone();
+                    s.sort_unstable();
+                    s.dedup();
+                    assert_eq!(s.len(), pl.spill.len(), "{name}: duplicate spill entries");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fleet_sim_conservation_across_policies() {
+    // Random submit / drain / step interleavings on the multi-replica sim,
+    // for every placement policy.  Invariants, checked after every op:
+    //  * conservation: every accepted submission is exactly one of
+    //    {terminal record, queued, in a lane} across the fleet,
+    //  * placement: accepted submissions never land on a replica that was
+    //    draining at submit time, and a refusal happens only when every
+    //    replica is draining,
+    //  * the drain converges and the placement tally matches.
+    let mut rng = Rng::seed_from(prop_seed() ^ 0xf1ee);
+    for place in PlaceKind::ALL {
+        for _case in 0..15 {
+            let n = 1 + rng.below(4);
+            let cfg = FleetSimConfig {
+                place,
+                n_replicas: n,
+                decode_slots: 1 + rng.below(3),
+                bank_slots: if rng.chance(0.5) { 2 } else { 0 },
+                bank_row_bytes: 64,
+                prefix_cache: if rng.chance(0.5) { 2 } else { 0 },
+                prefix_len: 4,
+                ..FleetSimConfig::default()
+            };
+            let mut fleet = FleetSim::new(&cfg);
+            for a in 0..5 {
+                fleet.register(&format!("a{a}"));
+            }
+            let mut drained = vec![false; n];
+            let mut submitted = 0usize;
+            for _op in 0..80 {
+                match rng.below(8) {
+                    0..=4 => {
+                        let mut r = Request::new(vec![1; 1 + rng.below(8)], 1 + rng.below(4));
+                        if rng.chance(0.7) {
+                            r = r.with_adapter(&format!("a{}", rng.below(5)));
+                        }
+                        match fleet.submit(r) {
+                            Ok((replica, _)) => {
+                                assert!(replica < n);
+                                assert!(!drained[replica], "placed on a draining replica");
+                                submitted += 1;
+                            }
+                            Err(_) => {
+                                assert!(drained.iter().all(|&d| d), "refused with a live replica");
+                            }
+                        }
+                    }
+                    5 => {
+                        // Drains are rare so most cases keep a live fleet.
+                        if rng.chance(0.3) {
+                            let i = rng.below(n);
+                            drained[i] = true;
+                            fleet.drain(i);
+                        }
+                    }
+                    _ => fleet.step(),
+                }
+                let in_system: usize = fleet
+                    .replicas()
+                    .iter()
+                    .map(|s| s.records().len() + s.queue.len() + s.n_active())
+                    .sum();
+                assert_eq!(in_system, submitted, "a request leaked or duplicated mid-run");
+            }
+            fleet.run_until_idle(4096);
+            assert!(!fleet.has_work(), "drain did not converge");
+            let total: usize = fleet.replicas().iter().map(|s| s.records().len()).sum();
+            assert_eq!(total, submitted, "terminal records != accepted submissions");
+            assert_eq!(fleet.placed.iter().sum::<usize>(), submitted, "placement tally drifted");
         }
     }
 }

@@ -1,11 +1,14 @@
 #!/usr/bin/env python3
 """Smoke test for the NDJSON serving front door.
 
-Runs up to two scenarios:
+Runs up to three scenarios:
 
   * reference backend (`--backend ref`) — always: the pure-Rust reference
     model needs no artifacts, so the loopback round-trip runs
     unconditionally in CI.
+  * reference backend, two replicas (`--replicas 2 --place affinity`) —
+    always: the same round-trip through the fleet router, asserting the
+    `replica` label on the admitted event stays in range.
   * pjrt backend (the default) — only when the AOT artifacts are present
     (`make artifacts`); otherwise that variant is skipped, mirroring the
     artifact-gated integration tests.
@@ -49,14 +52,17 @@ def artifacts_dir():
         d = d.parent
 
 
-def run_scenario(backend):
+def run_scenario(backend, replicas=1):
     binary = os.environ.get("ROAD_BIN", str(ROOT / "target" / "release" / "road"))
     model = os.environ.get("ROAD_SMOKE_MODEL", "tiny")
     cmd = [
         binary, "serve", "--listen", "127.0.0.1:0", "--backend", backend,
         "--model", model, "--mode", "base", "--slots", "2", "--distinct", "0",
     ]
-    print(f"serve smoke [{backend}]:", " ".join(cmd))
+    if replicas > 1:
+        cmd += ["--replicas", str(replicas), "--place", "affinity"]
+    label = backend if replicas == 1 else f"{backend} x{replicas}"
+    print(f"serve smoke [{label}]:", " ".join(cmd))
     proc = subprocess.Popen(
         cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
     )
@@ -70,7 +76,7 @@ def run_scenario(backend):
                 addr = line.split()[-1]
                 break
         if addr is None:
-            print(f"serve smoke [{backend}]: FAIL — server exited before listening")
+            print(f"serve smoke [{label}]: FAIL — server exited before listening")
             return 1
 
         host, port = addr.rsplit(":", 1)
@@ -83,17 +89,19 @@ def run_scenario(backend):
             deadline = time.time() + 120
             while True:
                 if time.time() > deadline:
-                    print(f"serve smoke [{backend}]: FAIL — timed out waiting for finished")
+                    print(f"serve smoke [{label}]: FAIL — timed out waiting for finished")
                     return 1
                 line = reader.readline()
                 if not line:
-                    print(f"serve smoke [{backend}]: FAIL — connection closed early")
+                    print(f"serve smoke [{label}]: FAIL — connection closed early")
                     return 1
                 ev = json.loads(line)
                 print("[event]", json.dumps(ev))
                 events.append(ev["event"])
+                if ev["event"] == "admitted":
+                    assert 0 <= ev.get("replica", 0) < replicas, ev
                 if ev["event"] == "error":
-                    print(f"serve smoke [{backend}]: FAIL — error event:", ev)
+                    print(f"serve smoke [{label}]: FAIL — error event:", ev)
                     return 1
                 if ev["event"] == "finished":
                     assert ev["finish"] == "max_tokens", ev
@@ -103,7 +111,7 @@ def run_scenario(backend):
 
         assert events[0] == "admitted", events
         assert events.count("token") == 4, events
-        print(f"serve smoke [{backend}]: OK —", " → ".join(events))
+        print(f"serve smoke [{label}]: OK —", " → ".join(events))
         return 0
     finally:
         proc.terminate()
@@ -114,8 +122,11 @@ def run_scenario(backend):
 
 
 def main():
-    # The reference backend is artifact-free: this leg always runs.
+    # The reference backend is artifact-free: these legs always run.
     rc = run_scenario("ref")
+    if rc != 0:
+        return rc
+    rc = run_scenario("ref", replicas=2)
     if rc != 0:
         return rc
 
