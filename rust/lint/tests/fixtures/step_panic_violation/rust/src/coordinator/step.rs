@@ -1,0 +1,31 @@
+pub fn plan_chunk(budget: Option<usize>) -> usize {
+    budget.unwrap()
+}
+
+pub fn grant(remaining: &[usize], lane: usize) -> usize {
+    *remaining.get(lane).expect("lane has a feeding prompt")
+}
+
+pub fn assemble(tokens: &[i32], start: usize, n: usize) {
+    if start + n > tokens.len() {
+        panic!("chunk {start}+{n} overruns the prompt");
+    }
+}
+
+pub fn spend(budget: usize, granted: usize) {
+    if granted > budget {
+        unreachable!("plan granted more than the step budget");
+    }
+}
+
+pub fn shared_plan(m: &std::sync::Mutex<usize>) -> usize {
+    *m.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        Some(1usize).unwrap();
+    }
+}

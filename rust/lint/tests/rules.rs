@@ -84,6 +84,23 @@ fn pool_panic_violation_fixture_fails_on_hot_paths() {
     assert!(findings.iter().all(|f| f.line < 21), "{findings:?}");
 }
 
+/// The mixed-step planner (`step.rs`: decode assembly + chunk-prefill
+/// budgeting) runs inside every scheduler iteration — a panic there
+/// freezes all decode lanes mid-step.  Seeded violations in a
+/// step-planner-shaped fixture pin the no-panic rule to the module; the
+/// lock idiom and test code stay allowed.
+#[test]
+fn step_panic_violation_fixture_fails_on_planner_paths() {
+    let findings = check("step_panic_violation");
+    let hits = of_rule(&findings, "no-panic-hot-path");
+    assert_eq!(hits.len(), 4, "unwrap + expect + panic! + unreachable!: {hits:?}");
+    assert!(hits.iter().all(|f| f.path == "rust/src/coordinator/step.rs"), "{hits:?}");
+    let lines: Vec<usize> = hits.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![2, 6, 11, 17]);
+    // Neither the poisoning-propagation idiom nor the test module fires.
+    assert!(findings.iter().all(|f| f.line < 21), "{findings:?}");
+}
+
 /// The fleet data plane (router placement + replica lifecycle) is
 /// coordinator hot-path code like the pool: a panic in `place` or a
 /// lifecycle transition takes down the front door for every replica.

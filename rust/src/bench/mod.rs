@@ -27,7 +27,7 @@ use crate::adapters::{Adapter, LoraAdapter, RoadAdapter};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::{Request, SamplingParams, StreamEvent};
 use crate::coordinator::router::{FleetSim, FleetSimConfig, PlaceKind};
-use crate::coordinator::sched::{PolicyKind, SchedSim, SimOutcome, SimRecord};
+use crate::coordinator::sched::{PolicyKind, PrefillModel, SchedSim, SimOutcome, SimRecord};
 use crate::runtime::Runtime;
 use crate::trainer::{Recipe, TrainBatch, Trainer};
 use crate::util::clock::Clock;
@@ -483,10 +483,13 @@ pub struct AdapterWait {
     pub wait_max_ms: f64,
 }
 
-/// One policy's row in the admission-scheduling study.
+/// One (policy, prefill-chunk budget) row in the admission-scheduling
+/// study.
 #[derive(Clone, Debug)]
 pub struct SchedPoint {
     pub policy: String,
+    /// Mixed-step chunk budget (0 = atomic prefill, the baseline).
+    pub prefill_chunk: usize,
     pub requests: usize,
     pub finished: usize,
     pub shed: usize,
@@ -498,12 +501,21 @@ pub struct SchedPoint {
     /// admission, or to its terminal event if it never got a lane) — the
     /// starvation axis.
     pub starvation_ms: f64,
+    /// Inter-token gap p99 across all lanes.
+    pub itl_p99_ms: f64,
+    /// p99 of the gap in excess of the decode cadence — what long-prompt
+    /// prefills cost every already-decoding lane, the chunking headline.
+    pub itl_stall_p99_ms: f64,
+    /// Submit → first-token p99 (chunking's side of the trade).
+    pub ttft_p99_ms: f64,
     pub per_adapter: Vec<AdapterWait>,
 }
 
 /// Decorate a Zipf workload for the sched study: every 3rd request
-/// carries a deadline and every 4th a priority tier, both derived from
-/// the request index so the workload is a pure function of `seed`.
+/// carries a deadline, every 4th a priority tier, and every 5th a
+/// maximum-length (64-token) prompt — the long prefills whose head-of-line
+/// stall the chunked rows exist to bound.  All derived from the request
+/// index so the workload is a pure function of `seed`.
 fn sched_workload(
     n_requests: usize,
     distinct: usize,
@@ -520,14 +532,28 @@ fn sched_workload(
         if i % 4 == 0 {
             r.priority = (i % 3) as u8 + 1;
         }
+        if i % 5 == 0 {
+            while r.prompt.len() < 64 {
+                r.prompt.push(((i * 31 + r.prompt.len() * 7) % 200) as i32 + 1);
+            }
+        }
     }
     reqs
 }
 
 /// Fold terminal records into one study row.  Works over [`SimRecord`]s
 /// whether they came from the [`SchedSim`] harness or from replaying a
-/// real engine's event stream.
-fn aggregate_sched(policy: &str, requests: usize, records: &[SimRecord]) -> SchedPoint {
+/// real engine's event stream.  The three latency p99s are computed by
+/// the caller (the harness owns the token-stamp samples).
+fn aggregate_sched(
+    policy: &str,
+    prefill_chunk: usize,
+    requests: usize,
+    records: &[SimRecord],
+    itl_p99_ms: f64,
+    itl_stall_p99_ms: f64,
+    ttft_p99_ms: f64,
+) -> SchedPoint {
     // Queue wait = submit → admission; a request that never reached a
     // lane (shed/cancelled while queued) waited until its terminal event.
     let wait_ms = |r: &SimRecord| {
@@ -565,6 +591,7 @@ fn aggregate_sched(policy: &str, requests: usize, records: &[SimRecord]) -> Sche
         .collect();
     SchedPoint {
         policy: policy.to_string(),
+        prefill_chunk,
         requests,
         finished,
         shed,
@@ -576,16 +603,23 @@ fn aggregate_sched(policy: &str, requests: usize, records: &[SimRecord]) -> Sche
         queue_wait_p50_ms: s.p50,
         queue_wait_p99_ms: s.p99,
         starvation_ms: s.max,
+        itl_p99_ms,
+        itl_stall_p99_ms,
+        ttft_p99_ms,
         per_adapter,
     }
 }
 
 /// The admission-scheduling study on the deterministic harness
-/// (`--sim-clock`): all four policies over the same Zipf-skewed,
-/// deadline/priority-decorated workload, arrivals every 10 ms of
-/// *virtual* time, decode steps costing a fixed 5 ms of virtual time.
-/// No artifacts, no sleeps, no wall-clock reads — two runs produce
-/// byte-identical output.
+/// (`--sim-clock`): all four policies × two prefill models (atomic
+/// baseline vs a 16-token mixed-step budget) over the same Zipf-skewed,
+/// deadline/priority-decorated, long-prompt-injected workload.  Arrivals
+/// land every 10 ms of *virtual* time; a decode step costs a fixed 5 ms
+/// and each prefill token 1/8 of that, so an atomic 64-token prefill
+/// stretches one step by 40 ms — the head-of-line stall the chunked rows
+/// bound at the budget.  No artifacts, no sleeps, no wall-clock reads —
+/// two runs produce byte-identical output (CI diffs
+/// `results/BENCH_sched.json`).
 pub fn sched_study_sim(
     n_requests: usize,
     distinct: usize,
@@ -594,33 +628,55 @@ pub fn sched_study_sim(
 ) -> Vec<SchedPoint> {
     let arrival_gap = Duration::from_millis(10);
     let step_cost = Duration::from_millis(5);
+    let token_cost = step_cost / 8;
     let mut out = Vec::new();
     for kind in PolicyKind::ALL {
-        let mut sim = SchedSim::new(kind, 8, 4096, step_cost);
-        let reqs = sched_workload(n_requests, distinct, 1.2, new_tokens, seed);
-        let start = sim.clock.now();
-        let mut pending: VecDeque<(usize, Request)> = reqs.into_iter().enumerate().collect();
-        loop {
-            let due = |pending: &VecDeque<(usize, Request)>| {
-                pending.front().map(|(i, _)| start + arrival_gap * (*i as u32))
+        for chunk in [0usize, 16] {
+            let model = if chunk == 0 {
+                PrefillModel::Atomic { token_cost }
+            } else {
+                PrefillModel::Chunked { budget: chunk, token_cost }
             };
-            while due(&pending).is_some_and(|d| d <= sim.clock.now()) {
-                let (_, req) = pending.pop_front().expect("due arrival checked");
-                sim.submit(req).expect("study queue capacity exceeds the workload");
-            }
-            if pending.is_empty() && !sim.has_work() {
-                break;
-            }
-            if !sim.has_work() {
-                // Idle until the next arrival (a virtual jump).
-                if let Some(d) = due(&pending) {
-                    sim.clock.sleep_until(d);
-                    continue;
+            let mut sim = SchedSim::new(kind, 8, 4096, step_cost).with_prefill(model);
+            let reqs = sched_workload(n_requests, distinct, 1.2, new_tokens, seed);
+            let start = sim.clock.now();
+            let mut pending: VecDeque<(usize, Request)> = reqs.into_iter().enumerate().collect();
+            loop {
+                let due = |pending: &VecDeque<(usize, Request)>| {
+                    pending.front().map(|(i, _)| start + arrival_gap * (*i as u32))
+                };
+                while due(&pending).is_some_and(|d| d <= sim.clock.now()) {
+                    let (_, req) = pending.pop_front().expect("due arrival checked");
+                    sim.submit(req).expect("study queue capacity exceeds the workload");
                 }
+                if pending.is_empty() && !sim.has_work() {
+                    break;
+                }
+                if !sim.has_work() {
+                    // Idle until the next arrival (a virtual jump).
+                    if let Some(d) = due(&pending) {
+                        sim.clock.sleep_until(d);
+                        continue;
+                    }
+                }
+                sim.step();
             }
-            sim.step();
+            let ms = |ds: &[Duration]| -> Vec<f64> {
+                ds.iter().map(|d| d.as_secs_f64() * 1e3).collect()
+            };
+            let itl = crate::util::stats::summarize(&ms(sim.itl_samples()));
+            let stall = crate::util::stats::summarize(&ms(sim.itl_stall_samples()));
+            let ttft = crate::util::stats::summarize(&ms(sim.ttft_samples()));
+            out.push(aggregate_sched(
+                kind.name(),
+                chunk,
+                n_requests,
+                sim.records(),
+                itl.p99,
+                stall.p99,
+                ttft.p99,
+            ));
         }
-        out.push(aggregate_sched(kind.name(), n_requests, sim.records()));
     }
     out
 }
@@ -751,7 +807,9 @@ pub fn sched_study_engine(
                 }
             }
         }
-        out.push(aggregate_sched(kind.name(), n_requests, &records));
+        // The engine path runs atomic prefill (chunk 0) and observes no
+        // virtual token stamps; the latency columns are sim-only.
+        out.push(aggregate_sched(kind.name(), 0, n_requests, &records, 0.0, 0.0, 0.0));
     }
     Ok(out)
 }
@@ -765,6 +823,7 @@ pub fn sched_points_json(points: &[SchedPoint]) -> Json {
             .map(|p| {
                 json::obj(vec![
                     ("policy", json::s(&p.policy)),
+                    ("prefill_chunk", json::num(p.prefill_chunk as f64)),
                     ("requests", json::num(p.requests as f64)),
                     ("finished", json::num(p.finished as f64)),
                     ("deadline_shed", json::num(p.shed as f64)),
@@ -772,6 +831,9 @@ pub fn sched_points_json(points: &[SchedPoint]) -> Json {
                     ("queue_wait_p50_ms", json::num(p.queue_wait_p50_ms)),
                     ("queue_wait_p99_ms", json::num(p.queue_wait_p99_ms)),
                     ("starvation_ms", json::num(p.starvation_ms)),
+                    ("itl_p99_ms", json::num(p.itl_p99_ms)),
+                    ("itl_stall_p99_ms", json::num(p.itl_stall_p99_ms)),
+                    ("ttft_p99_ms", json::num(p.ttft_p99_ms)),
                     (
                         "per_adapter",
                         json::arr(
@@ -800,6 +862,7 @@ pub fn sched_points_json(points: &[SchedPoint]) -> Json {
 pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
     let mut t = Table::new(&[
         "policy",
+        "chunk",
         "reqs",
         "finished",
         "shed",
@@ -807,6 +870,9 @@ pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
         "wait p50(ms)",
         "wait p99(ms)",
         "starvation(ms)",
+        "itl p99(ms)",
+        "stall p99(ms)",
+        "ttft p99(ms)",
         "hot p99(ms)",
         "cold p99(ms)",
     ]);
@@ -816,6 +882,7 @@ pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
         let cold = p.per_adapter.iter().min_by_key(|a| a.requests);
         t.row(vec![
             p.policy.clone(),
+            p.prefill_chunk.to_string(),
             p.requests.to_string(),
             p.finished.to_string(),
             p.shed.to_string(),
@@ -823,6 +890,9 @@ pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
             fmt_f(p.queue_wait_p50_ms, 1),
             fmt_f(p.queue_wait_p99_ms, 1),
             fmt_f(p.starvation_ms, 1),
+            fmt_f(p.itl_p99_ms, 1),
+            fmt_f(p.itl_stall_p99_ms, 1),
+            fmt_f(p.ttft_p99_ms, 1),
             fmt_f(hot.map_or(0.0, |a| a.wait_p99_ms), 1),
             fmt_f(cold.map_or(0.0, |a| a.wait_p99_ms), 1),
         ]);
@@ -830,7 +900,10 @@ pub fn render_sched_points(title: &str, points: &[SchedPoint]) -> String {
     format!(
         "## {title}\n{}\nedf should minimize miss-rate, priority should favor high tiers, \
          fair should pull cold-adapter waits toward hot-adapter waits, and fcfs is the \
-         pre-policy baseline.  Full per-adapter percentiles ride in the JSON block below.\n",
+         pre-policy baseline.  `chunk` is the mixed-step prefill budget: 0 rows prefill \
+         atomically (long prompts stall every decoding lane — the stall p99), chunked \
+         rows bound that stall at the budget.  Full per-adapter percentiles ride in the \
+         JSON block below.\n",
         t.render()
     )
 }

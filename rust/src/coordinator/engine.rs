@@ -48,6 +48,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -64,6 +65,7 @@ use super::queue::{AdmissionQueue, EngineError};
 use super::request::{ActiveRequest, FinishReason, Request, RequestOutput, StreamEvent};
 use super::sampler;
 use super::sched::{self, PolicyKind, SchedContext, SchedPolicy};
+use super::step;
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -132,6 +134,19 @@ pub struct EngineConfig {
     /// `r+1, r+1+n, r+1+2n, ...`, so `(id - 1) % n` recovers the replica
     /// for O(1) cancel routing with no shared id state.
     pub request_id_stride: u64,
+    /// Per-iteration token budget for chunked prefill (`road serve
+    /// --prefill-chunk`).  `0` (default) keeps the atomic bucketed-prefill
+    /// baseline: admission pads a whole batch of prompts to one bucket and
+    /// runs the prefill executable in a single call, freezing every active
+    /// decode lane for its duration.  `> 0` switches the engine to *mixed
+    /// steps*: each iteration, every occupied lane advances one token
+    /// through decode, and up to `prefill_chunk_tokens - occupied_lanes`
+    /// further prompt tokens stream through the `chunk_prefill` entry —
+    /// admission starts prompt-feeding lanes immediately (no bucket, no
+    /// padding) and long prompts prefill incrementally over several
+    /// iterations instead of stalling the batch (docs/DESIGN.md §Engine
+    /// step).
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for EngineConfig {
@@ -152,6 +167,7 @@ impl Default for EngineConfig {
             kv_pool_blocks: None,
             request_id_base: 1,
             request_id_stride: 1,
+            prefill_chunk_tokens: 0,
         }
     }
 }
@@ -171,6 +187,9 @@ pub struct Engine {
     param_bufs: BTreeMap<String, xla::PjRtBuffer>,
     bank_bufs: BTreeMap<String, xla::PjRtBuffer>,
     decode_exe: Rc<Executable>,
+    /// Chunked-prefill entry (`chunk_prefill_<mode>_<model>_b<slots>`),
+    /// loaded only when [`EngineConfig::prefill_chunk_tokens`] > 0.
+    chunk_exe: Option<Rc<Executable>>,
     prefill_buckets: Vec<PrefillBucket>,
     slots: Vec<Option<ActiveRequest>>,
     alloc: SlotAllocator,
@@ -193,6 +212,21 @@ pub struct Engine {
     /// Events produced inside the current scheduler iteration, drained by
     /// [`Engine::step`].
     events: Vec<StreamEvent>,
+    /// Requests currently stalled at the KV-block admission gate — stall
+    /// metrics count *transitions* into this set, not per-iteration
+    /// retries (one stuck request is one stall, however many scheduler
+    /// ticks it waits).
+    kv_stalled: BTreeSet<u64>,
+    /// Same transition tracking for the adapter-bank `Stalled` gate.
+    bank_stalled: BTreeSet<u64>,
+    /// When the previous decode step completed — the decode-stall
+    /// recorder's anchor; cleared when the engine has no active lanes.
+    last_decode_at: Option<Instant>,
+    /// Test-only fault injection ([`Engine::inject_reservation_loss`]):
+    /// the next admission of this id discards its KV reservation, seeding
+    /// the missing-reservation invariant breach the typed
+    /// [`EngineError::Internal`] path surfaces.
+    lose_reservation: Option<u64>,
 }
 
 impl Engine {
@@ -238,6 +272,24 @@ impl Engine {
         }
         prefill_buckets.sort_by_key(|b| (b.prompt_len, b.batch));
 
+        // Chunked prefill needs its own fixed-shape entry (same batch as
+        // decode); artifact sets without one can't serve --prefill-chunk>0
+        // and fail loudly at construction, not mid-request.
+        let chunk_exe = if econf.prefill_chunk_tokens > 0 {
+            let name = format!(
+                "chunk_prefill_{}_{}_b{}",
+                econf.mode, econf.model, econf.decode_slots
+            );
+            Some(rt.load(&name).with_context(|| {
+                format!(
+                    "chunked prefill (--prefill-chunk > 0) requires the {name} entry; \
+                     this artifact set has no chunk_prefill entries"
+                )
+            })?)
+        } else {
+            None
+        };
+
         // Upload parameters once; they stay device-resident for every call.
         let mut param_bufs = BTreeMap::new();
         for (name, t) in params.names.iter().zip(&params.tensors) {
@@ -273,6 +325,7 @@ impl Engine {
             param_bufs,
             bank_bufs: BTreeMap::new(),
             decode_exe,
+            chunk_exe,
             prefill_buckets,
             alloc: SlotAllocator::new(econf.decode_slots),
             slots,
@@ -287,6 +340,10 @@ impl Engine {
             // saturates up to 1 even if a caller passes 0.
             next_id: econf.request_id_base.max(1),
             events: Vec::new(),
+            kv_stalled: BTreeSet::new(),
+            bank_stalled: BTreeSet::new(),
+            last_decode_at: None,
+            lose_reservation: None,
             econf,
         };
         // The free-block low-water mark starts at the full pool.
@@ -397,6 +454,9 @@ impl Engine {
     pub fn cancel(&mut self, id: u64) -> Option<RequestOutput> {
         let now = self.clock.now();
         if let Some(req) = self.queue.cancel(id) {
+            // It can never stall at an admission gate again.
+            self.kv_stalled.remove(&id);
+            self.bank_stalled.remove(&id);
             self.metrics.requests_cancelled += 1;
             let e2e = req.submitted_at.map(|s| (now - s).as_secs_f64()).unwrap_or_default();
             return Some(RequestOutput {
@@ -433,6 +493,15 @@ impl Engine {
             ttft,
             e2e: (now - ar.submitted).as_secs_f64(),
         })
+    }
+
+    /// Test-only: make the next admission of `id` discard its KV
+    /// reservation after popping, reproducing the lost-reservation
+    /// invariant breach that the typed [`EngineError::Internal`] path
+    /// surfaces (and that conservation tests assert is never silent).
+    #[doc(hidden)]
+    pub fn inject_reservation_loss(&mut self, id: u64) {
+        self.lose_reservation = Some(id);
     }
 
     pub fn n_active(&self) -> usize {
@@ -514,39 +583,20 @@ impl Engine {
     /// the same batch can evict it.  Requests whose adapter cannot be
     /// paged (every pageable slot pinned) keep their queue position.
     fn maybe_prefill(&mut self) -> Result<()> {
+        let chunked = self.chunk_exe.is_some();
         loop {
             let n_free = self.alloc.n_free();
             if n_free == 0 || self.queue.is_empty() {
                 return Ok(());
             }
-            let shortest = self.queue.min_prompt_len();
-            // Smallest bucket that fits the shortest waiting prompt; among
-            // those, the largest batch that we can actually fill.
-            let want = n_free.min(self.queue.len());
-            let mut best: Option<usize> = None;
-            for (i, b) in self.prefill_buckets.iter().enumerate() {
-                if b.prompt_len < shortest {
-                    continue;
-                }
-                let cap = b.batch.min(want);
-                let better = match best {
-                    None => true,
-                    Some(j) => {
-                        let bj = &self.prefill_buckets[j];
-                        let (cap_j, len_j) = (bj.batch.min(want), bj.prompt_len);
-                        // prefer more admitted, then shorter padded length
-                        cap > cap_j || (cap == cap_j && b.prompt_len < len_j)
-                    }
-                };
-                if better {
-                    best = Some(i);
-                }
-            }
-            let Some(bi) = best else { return Ok(()) };
-            let bucket_b = self.prefill_buckets[bi].batch;
-            let bucket_l = self.prefill_buckets[bi].prompt_len;
-            // Rank the queue: the policy sees current lane occupancy and
-            // the lifetime admission ledger (the fair-share inputs).
+            // Rank the queue FIRST: the policy sees current lane occupancy
+            // (partially-prefilled feeding lanes included) and the
+            // lifetime admission ledger (the fair-share inputs).  The
+            // bucket is then selected against the top-ranked request —
+            // electing it from `min_prompt_len()` before ranking let
+            // short, late prompts keep choosing a small bucket whose
+            // `prompt_len` filter skipped a top-ranked long prompt every
+            // wave (the policy-order inversion bug).
             let mut in_flight: BTreeMap<String, usize> = BTreeMap::new();
             for lane in self.slots.iter().flatten() {
                 *in_flight.entry(lane.req.adapter.clone().unwrap_or_default()).or_insert(0) += 1;
@@ -557,12 +607,55 @@ impl Engine {
                 admitted: &self.admitted_per_adapter,
             };
             let order = self.policy.order(&self.queue, &ctx);
+            // Chunked mode admits without a bucket: every admission starts
+            // a prompt-feeding lane and streams its prefill through
+            // decode+chunk steps, so no padded shape constrains who fits.
+            let (bucket, cap, max_len) = if chunked {
+                (None, n_free, self.max_prompt_len())
+            } else {
+                // The prompt length the bucket must cover: the top-ranked
+                // waiting request's (falling back to the shortest prompt
+                // if the ranking is stale/empty).
+                let target_len = order
+                    .iter()
+                    .filter_map(|&i| self.queue.iter().nth(i))
+                    .map(|r| r.prompt.len())
+                    .next()
+                    .unwrap_or_else(|| self.queue.min_prompt_len());
+                // Smallest bucket that fits the target; among those, the
+                // largest batch that we can actually fill.
+                let want = n_free.min(self.queue.len());
+                let mut best: Option<usize> = None;
+                for (i, b) in self.prefill_buckets.iter().enumerate() {
+                    if b.prompt_len < target_len {
+                        continue;
+                    }
+                    let cap = b.batch.min(want);
+                    let better = match best {
+                        None => true,
+                        Some(j) => {
+                            let bj = &self.prefill_buckets[j];
+                            let (cap_j, len_j) = (bj.batch.min(want), bj.prompt_len);
+                            // prefer more admitted, then shorter padded length
+                            cap > cap_j || (cap == cap_j && b.prompt_len < len_j)
+                        }
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                let Some(bi) = best else { return Ok(()) };
+                let b = &self.prefill_buckets[bi];
+                (Some(bi), n_free.min(b.batch), b.prompt_len)
+            };
             let mut paged_ids: BTreeSet<u64> = BTreeSet::new();
             let mut reservations: BTreeMap<u64, KvReservation> = BTreeMap::new();
             let registry = &mut self.registry;
             let metrics = &mut self.metrics;
             let paged = &mut self.paged;
-            let take = self.queue.pop_scheduled(&order, n_free.min(bucket_b), bucket_l, |req| {
+            let kv_stalled = &mut self.kv_stalled;
+            let bank_stalled = &mut self.bank_stalled;
+            let take = self.queue.pop_scheduled(&order, cap, max_len, |req| {
                 // Gate 1: KV blocks.  All-or-nothing reservation of the
                 // request's footprint (shared-prefix refs + private blocks);
                 // a pool that can't cover it leaves the request queued and
@@ -570,9 +663,15 @@ impl Engine {
                 let Some(res) =
                     paged.try_reserve(req.adapter.as_deref(), &req.prompt, req.max_new_tokens)
                 else {
-                    metrics.kv_admission_stalls += 1;
+                    // Count stall *transitions*, not retries: one stuck
+                    // request is one stall however many scheduler
+                    // iterations it waits (the counter-inflation bug).
+                    if kv_stalled.insert(req.id) {
+                        metrics.kv_admission_stalls += 1;
+                    }
                     return false;
                 };
+                kv_stalled.remove(&req.id);
                 // Gate 2: adapter residency (pinned immediately so nothing
                 // admitted later in this batch can evict it).
                 let adapter_ok = match req.adapter.as_deref() {
@@ -594,7 +693,13 @@ impl Engine {
                         }
                         // All pageable slots pinned by in-flight lanes: leave
                         // the request queued; a finishing lane unblocks it.
-                        Ok(PageOutcome::Stalled) => false,
+                        // Transition-counted like the KV gate above.
+                        Ok(PageOutcome::Stalled) => {
+                            if bank_stalled.insert(req.id) {
+                                metrics.bank_admission_stalls += 1;
+                            }
+                            false
+                        }
                         // Unregistered mid-queue (unregister raced a waiting
                         // request): leave it queued rather than corrupting the
                         // batch; submit() validates, so this is exceptional.
@@ -608,6 +713,7 @@ impl Engine {
                     debug_assert!(rolled_back.is_ok(), "reservation rollback must succeed");
                     return false;
                 }
+                bank_stalled.remove(&req.id);
                 metrics.kv_block_hits += res.hit_blocks;
                 metrics.kv_block_misses += res.n_blocks() - res.hit_blocks;
                 metrics.kv_block_evictions += res.evictions;
@@ -626,20 +732,61 @@ impl Engine {
                 self.metrics.kv_blocks_free_min.min(self.paged.pool().n_free());
             self.metrics.kv_shared_refs_peak =
                 self.metrics.kv_shared_refs_peak.max(self.paged.pool().total_refs());
-            // Prefix-hit lanes skip the prefill executable entirely; cold
-            // lanes go through the bucket.
-            let mut cold = Vec::new();
+            // Pair every popped request with its reservation up front.  A
+            // request whose reservation went missing used to be silently
+            // dropped right here (`else { continue }` — no event, no slot,
+            // a caller waiting forever).  A lost reservation is a broken
+            // engine invariant, so it now ends the request's stream with a
+            // typed terminal [`EngineError::Internal`] instead.
+            let mut paired: Vec<(Request, KvReservation)> = Vec::with_capacity(take.len());
             for req in take {
-                let hit = reservations.get(&req.id).map(|r| r.hit_blocks > 0).unwrap_or(false);
-                if hit {
-                    let Some(res) = reservations.remove(&req.id) else { continue };
-                    self.admit_hit_lane(req, res, &paged_ids)?;
+                let mut res = reservations.remove(&req.id);
+                if self.lose_reservation == Some(req.id) {
+                    // Test-only fault injection: discard the reservation
+                    // (returning its blocks, so nothing leaks) to seed the
+                    // invariant breach this path is meant to surface.
+                    self.lose_reservation = None;
+                    if let Some(res) = res.take() {
+                        let rolled_back = self.paged.cancel_reservation(res);
+                        debug_assert!(rolled_back.is_ok(), "injected rollback must succeed");
+                    }
+                }
+                let Some(res) = res else {
+                    // The gate pinned the adapter before the reservation was
+                    // lost; unpin so the slot is not leaked forever.
+                    if let Some(slot) =
+                        req.adapter.as_deref().and_then(|name| self.registry.slot_of(name))
+                    {
+                        self.registry.unpin(slot);
+                    }
+                    self.events.push(StreamEvent::Error {
+                        id: req.id,
+                        error: EngineError::Internal {
+                            reason: format!(
+                                "request {} lost its KV reservation at admission",
+                                req.id
+                            ),
+                        },
+                    });
+                    continue;
+                };
+                paired.push((req, res));
+            }
+            // Prefix-hit lanes skip prefill compute entirely; chunked mode
+            // starts EVERY admission as a feeding lane (cold ones stream
+            // their whole prompt through decode + chunk-prefill steps).
+            let mut cold: Vec<(Request, KvReservation)> = Vec::new();
+            for (req, res) in paired {
+                if chunked || res.hit_blocks > 0 {
+                    self.admit_feeding_lane(req, res, &paged_ids)?;
                 } else {
-                    cold.push(req);
+                    cold.push((req, res));
                 }
             }
-            if !cold.is_empty() {
-                self.prefill_batch(bi, cold, &paged_ids, &mut reservations)?;
+            if let Some(bi) = bucket {
+                if !cold.is_empty() {
+                    self.prefill_batch(bi, cold, &paged_ids)?;
+                }
             }
             debug_assert!(
                 reservations.is_empty(),
@@ -648,13 +795,15 @@ impl Engine {
         }
     }
 
-    /// Admit a prefix-hit request straight into a decode lane: bind its
-    /// block reservation, copy the cached prefix payloads into the lane's
-    /// contiguous cache region, and start the lane in prompt-feeding state —
-    /// the uncached tail of the prompt streams through decode steps, and
-    /// the first new token is sampled when the last prompt position's
-    /// logits appear.  No prefill executable runs for this request.
-    fn admit_hit_lane(
+    /// Admit a request straight into a prompt-feeding decode lane: bind
+    /// its block reservation, adopt whatever shared-prefix blocks the
+    /// reservation hit (none for a cold chunked admission), and start the
+    /// lane feeding at the first uncached prompt position — the rest of
+    /// the prompt streams through decode steps (and, in chunked mode,
+    /// through chunk-prefill grants), and the first new token is sampled
+    /// when the last prompt position's logits appear.  No bucketed
+    /// prefill executable runs for this request.
+    fn admit_feeding_lane(
         &mut self,
         req: Request,
         res: KvReservation,
@@ -682,18 +831,28 @@ impl Engine {
             .alloc
             .alloc()
             .ok_or_else(|| anyhow!("scheduler invariant violated: no free slot"))?;
+        let cold = res.hit_blocks == 0;
         self.paged.bind_lane(slot, res)?;
-        // Adoption is a host-side scatter, same as prefill-lane adoption.
-        if self.kv.materialize_host()? {
-            self.metrics.kv_host_syncs += 1;
-        }
-        let hit_tokens = self.paged.adopt_shared_prefix(&mut self.kv, slot)?;
+        let hit_tokens = if cold {
+            0
+        } else {
+            // Adoption is a host-side scatter, same as prefill-lane
+            // adoption.
+            if self.kv.materialize_host()? {
+                self.metrics.kv_host_syncs += 1;
+            }
+            self.paged.adopt_shared_prefix(&mut self.kv, slot)?
+        };
         self.metrics.prompt_tokens += req.prompt.len();
         self.metrics.kv_prefill_tokens_saved += hit_tokens;
         let mut ar = ActiveRequest::new(req, slot_adapter, now);
-        // Resume where the cached prefix ends: decode feeds prompt[pos]
-        // until the whole prompt is in cache, then samples the first token.
+        // Resume where the cached prefix ends (position 0 for a cold
+        // chunked admission): decode feeds prompt[pos] until the whole
+        // prompt is in cache, then samples the first token.
         ar.pos = hit_tokens;
+        // Cold chunked lanes publish their prompt prefix once fully fed
+        // (hit lanes adopted an already-published prefix, nothing to add).
+        ar.publish_on_fed = cold;
         debug_assert!(self.slots[slot].is_none());
         self.slots[slot] = Some(ar);
         Ok(())
@@ -702,9 +861,8 @@ impl Engine {
     fn prefill_batch(
         &mut self,
         bucket_idx: usize,
-        reqs: Vec<Request>,
+        reqs: Vec<(Request, KvReservation)>,
         paged_ids: &BTreeSet<u64>,
-        reservations: &mut BTreeMap<u64, KvReservation>,
     ) -> Result<()> {
         self.upload_bank_if_dirty()?;
         let (b, l) = (
@@ -714,9 +872,9 @@ impl Engine {
         let mut tokens = vec![0i32; b * l];
         let mut lengths = vec![1i32; b];
         let mut ids = vec![0i32; b];
-        let mut actives: Vec<ActiveRequest> = Vec::with_capacity(reqs.len());
+        let mut actives: Vec<(ActiveRequest, KvReservation)> = Vec::with_capacity(reqs.len());
         let now = self.clock.now();
-        for (lane, req) in reqs.into_iter().enumerate() {
+        for (lane, (req, res)) in reqs.into_iter().enumerate() {
             *self
                 .admitted_per_adapter
                 .entry(req.adapter.clone().unwrap_or_default())
@@ -742,7 +900,7 @@ impl Engine {
                 }
             }
             self.events.push(StreamEvent::Admitted { id: req.id });
-            actives.push(ActiveRequest::new(req, slot_adapter, now));
+            actives.push((ActiveRequest::new(req, slot_adapter, now), res));
         }
 
         let ids_t = HostTensor::i32(vec![b], ids);
@@ -769,7 +927,7 @@ impl Engine {
             self.metrics.kv_host_syncs += 1;
         }
         let vocab = self.cfg.vocab;
-        for (lane, mut ar) in actives.into_iter().enumerate() {
+        for (lane, (mut ar, res)) in actives.into_iter().enumerate() {
             // Sample the first generated token from the prefill logits.
             let row = logits.read_f32_range(lane * vocab, vocab);
             let tok = sampler::sample(
@@ -781,6 +939,7 @@ impl Engine {
             ar.generated.push(tok);
             let first_token_at = self.clock.now();
             ar.first_token_at = Some(first_token_at);
+            ar.last_token_at = Some(first_token_at);
             self.metrics.tokens_generated += 1;
             self.metrics.prompt_tokens += ar.req.prompt.len();
             self.metrics.prefill_lane_tokens += ar.req.prompt.len();
@@ -801,9 +960,6 @@ impl Engine {
                 .alloc
                 .alloc()
                 .ok_or_else(|| anyhow!("scheduler invariant violated: no free slot"))?;
-            let Some(res) = reservations.remove(&ar.req.id) else {
-                bail!("admitted request {} has no KV reservation", ar.req.id);
-            };
             self.paged.bind_lane(slot, res)?;
             self.kv.adopt_prefill_lane(pk, pv, lane, slot, ar.req.prompt.len())?;
             // Promote this prompt's full blocks into the shared-prefix
@@ -816,114 +972,109 @@ impl Engine {
         Ok(())
     }
 
-    /// One decode step across all slots.
-    fn decode_once(&mut self) -> Result<()> {
-        self.upload_bank_if_dirty()?;
-        let b = self.econf.decode_slots;
-        let mut token = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut ids = vec![0i32; b];
-        let mut any = false;
-        for (s, slot) in self.slots.iter().enumerate() {
-            if let Some(ar) = slot {
-                any = true;
-                token[s] = if ar.pos < ar.req.prompt.len() {
-                    // Prompt-feeding lane (shared-prefix hit): the uncached
-                    // tail of its own prompt streams through decode.
-                    ar.req.prompt.get(ar.pos).copied().unwrap_or_default()
-                } else {
-                    // Prefill (or the feeding phase) pushes the first token
-                    // before normal decode, so `generated` is never empty
-                    // here; a zero fallback on a lost invariant decodes one
-                    // garbage token instead of killing the serving thread.
-                    ar.generated.last().copied().unwrap_or_default()
-                };
-                pos[s] = ar.pos as i32;
-                ids[s] = ar.slot_adapter as i32;
-            }
-        }
-        if !any {
-            return Ok(());
-        }
-
-        let ids_t = HostTensor::i32(vec![b], ids);
-        let token_t = HostTensor::i32(vec![b], token);
-        let pos_t = HostTensor::i32(vec![b], pos);
-        let exe = self.decode_exe.clone();
-
-        let logits = if self.econf.kv_host_roundtrip {
+    /// Run a serving entry with the standard K/V cache plumbing — the one
+    /// step-execution path shared by decode and chunked prefill.  `data`
+    /// carries the entry's per-call host inputs; the cache pair is
+    /// appended here.  On the device-resident hot path the caches stay in
+    /// PJRT buffers and each call's outputs are handed straight back as
+    /// the next call's inputs; [`EngineConfig::kv_host_roundtrip`] keeps
+    /// the full host round-trip measurable as a baseline.  Returns the
+    /// logits and the measured run time (the caller attributes it to
+    /// decode or prefill).
+    fn run_with_cache(
+        &mut self,
+        exe: Rc<Executable>,
+        data: &BTreeMap<&'static str, &HostTensor>,
+    ) -> Result<(HostTensor, Duration)> {
+        if self.econf.kv_host_roundtrip {
             // Baseline: the full [n_layers, B, n_heads, max_seq, head_dim]
-            // K/V pair is uploaded and downloaded every step — kept only as
+            // K/V pair is uploaded and downloaded every call — kept only as
             // the measurable comparison point for the device-resident path.
             if self.kv.materialize_host()? {
                 self.metrics.kv_host_syncs += 1;
             }
             let (outs, elapsed) = {
-                let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
-                data.insert("ids", &ids_t);
-                data.insert("token", &token_t);
-                data.insert("pos", &pos_t);
-                data.insert("k_cache", self.kv.host_k()?);
-                data.insert("v_cache", self.kv.host_v()?);
-                let args = self.build_args(&exe.info, &data, &BTreeMap::new())?;
+                let mut all: BTreeMap<&'static str, &HostTensor> = data.clone();
+                all.insert("k_cache", self.kv.host_k()?);
+                all.insert("v_cache", self.kv.host_v()?);
+                let args = self.build_args(&exe.info, &all, &BTreeMap::new())?;
                 let t0 = self.clock.now();
                 let outs = exe.run(&args)?;
                 (outs, self.clock.now().saturating_duration_since(t0))
             };
-            self.metrics.decode_time += elapsed;
-            // This step moved the full cache up (Arg::Host inputs) and back
+            // This call moved the full cache up (Arg::Host inputs) and back
             // down (outputs) — count it so the report reflects the baseline's
             // actual transfer behavior.
             self.metrics.kv_uploads += 1;
             self.metrics.kv_host_syncs += 1;
             let [logits, k_new, v_new]: [HostTensor; 3] = outs.try_into().map_err(|v: Vec<_>| {
-                anyhow!("decode entry {} returned {} outputs, expected 3", exe.info.name, v.len())
+                anyhow!("entry {} returned {} outputs, expected 3", exe.info.name, v.len())
             })?;
             self.kv.replace(k_new, v_new)?;
-            logits
+            Ok((logits, elapsed))
         } else {
-            // Device-resident hot path: the caches stay in PJRT buffers and
-            // each step's outputs are handed straight back as the next
-            // step's inputs; the only per-step transfer is the [B, vocab]
-            // logits download.
+            // Device-resident hot path: the only per-call transfer is the
+            // [B, vocab] logits download.
             if self.kv.ensure_device(&self.rt.client)? {
                 self.metrics.kv_uploads += 1;
             }
             let t0 = self.clock.now();
             let outs = {
                 let (kb, vb) = self.kv.device_pair()?;
-                let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
-                data.insert("ids", &ids_t);
-                data.insert("token", &token_t);
-                data.insert("pos", &pos_t);
                 let mut dev: BTreeMap<&'static str, &xla::PjRtBuffer> = BTreeMap::new();
                 dev.insert("k_cache", kb);
                 dev.insert("v_cache", vb);
-                let args = self.build_args(&exe.info, &data, &dev)?;
+                let args = self.build_args(&exe.info, data, &dev)?;
                 exe.run_device(&args)?
             };
             // Same positional contract as the host path: [logits, k, v].
             let [l_buf, k_buf, v_buf]: [xla::PjRtBuffer; 3] =
                 outs.try_into().map_err(|v: Vec<_>| {
-                    anyhow!(
-                        "decode entry {} returned {} outputs, expected 3",
-                        exe.info.name,
-                        v.len()
-                    )
+                    anyhow!("entry {} returned {} outputs, expected 3", exe.info.name, v.len())
                 })?;
             let logits_dtype = exe.info.outputs.first().map_or(DType::F32, |s| s.dtype);
             let logits = buffer_to_host(&l_buf, logits_dtype)?;
-            self.metrics.decode_time += self.clock.now().saturating_duration_since(t0);
+            let elapsed = self.clock.now().saturating_duration_since(t0);
             self.kv.install_device(k_buf, v_buf)?;
-            logits
-        };
+            Ok((logits, elapsed))
+        }
+    }
+
+    /// One decode step across all slots.
+    fn decode_once(&mut self) -> Result<()> {
+        self.upload_bank_if_dirty()?;
+        let b = self.econf.decode_slots;
+        let d = step::assemble_decode(&self.slots, b);
+        if !d.any {
+            return Ok(());
+        }
+
+        let ids_t = HostTensor::i32(vec![b], d.ids);
+        let token_t = HostTensor::i32(vec![b], d.token);
+        let pos_t = HostTensor::i32(vec![b], d.pos);
+        let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
+        data.insert("ids", &ids_t);
+        data.insert("token", &token_t);
+        data.insert("pos", &pos_t);
+        let exe = self.decode_exe.clone();
+        let (logits, elapsed) = self.run_with_cache(exe, &data)?;
+        self.metrics.decode_time += elapsed;
         self.metrics.decode_steps += 1;
+        // Decode-stall recorder: the gap between consecutive decode steps
+        // as active lanes see it — a long atomic prefill wedged between
+        // steps is exactly what shows up here.
+        let decoded_at = self.clock.now();
+        if let Some(prev) = self.last_decode_at {
+            self.metrics.decode_stall.record(decoded_at.saturating_duration_since(prev));
+        }
+        self.last_decode_at = Some(decoded_at);
 
         let vocab = self.cfg.vocab;
         for s in 0..b {
             // Advance the lane.  A prompt-feeding step (shared-prefix hit
-            // still streaming its prompt in) produced logits for a token we
-            // already know — nothing is sampled or streamed for it.
+            // or chunked admission still streaming its prompt in) produced
+            // logits for a token we already know — nothing is sampled or
+            // streamed for it.
             let (feeding, first) = {
                 let Some(ar) = self.slots[s].as_mut() else { continue };
                 ar.pos += 1;
@@ -933,7 +1084,7 @@ impl Engine {
                 continue;
             }
             let now = self.clock.now();
-            let (id, tok, pos, reason, ttft_hint) = {
+            let (id, tok, pos, reason, ttft_hint, hit_lane) = {
                 let Some(ar) = self.slots[s].as_mut() else { continue };
                 let row = logits.read_f32_range(s * vocab, vocab);
                 let tok = sampler::sample(
@@ -943,18 +1094,28 @@ impl Engine {
                     &mut ar.rng_state,
                 );
                 ar.generated.push(tok);
-                // A prefix-hit lane's first token lands here (cold lanes
-                // stamp theirs in the prefill batch).
+                // Inter-token latency as this lane's consumer sees it.
+                if let Some(prev) = ar.last_token_at {
+                    self.metrics.itl.record(now.saturating_duration_since(prev));
+                }
+                ar.last_token_at = Some(now);
+                // A feeding lane's first token lands here (bucketed cold
+                // lanes stamp theirs in the prefill batch).
                 let hint = if first {
                     ar.first_token_at = Some(now);
                     Some((now - ar.submitted).as_secs_f64())
                 } else {
                     None
                 };
-                (ar.req.id, tok, ar.generated.len() - 1, ar.done(), hint)
+                (ar.req.id, tok, ar.generated.len() - 1, ar.done(), hint, !ar.publish_on_fed)
             };
             if let Some(ttft) = ttft_hint {
-                self.metrics.prefix_hit_ttft.record_us(ttft * 1e6);
+                // Cold chunked lanes also take their first token mid-decode,
+                // but only genuine prefix hits feed the prefix-hit TTFT
+                // panel (`publish_on_fed` marks the cold ones).
+                if hit_lane {
+                    self.metrics.prefix_hit_ttft.record_us(ttft * 1e6);
+                }
             }
             self.metrics.tokens_generated += 1;
             // Stop tokens are terminal and stripped from the output, so
@@ -967,6 +1128,155 @@ impl Engine {
                 self.alloc.release(s)?;
                 self.release_kv_lane(s)?;
                 self.finish(ar, reason);
+            }
+        }
+        Ok(())
+    }
+
+    /// Spend the step's leftover token budget on partially-prefilled
+    /// lanes' prompts through the chunk-prefill entry.  The budget is
+    /// [`EngineConfig::prefill_chunk_tokens`] minus the occupied lanes
+    /// (each already advanced one token through decode this iteration);
+    /// [`step::plan_chunks`] ranks whose chunks run under the same
+    /// scheduling policy that ordered admission.  A chunk that covers the
+    /// rest of a lane's prompt samples that request's first token from
+    /// the chunk logits.
+    fn chunk_prefill_once(&mut self) -> Result<()> {
+        let Some(exe) = self.chunk_exe.clone() else { return Ok(()) };
+        let budget = self.econf.prefill_chunk_tokens.saturating_sub(self.n_active());
+        if budget == 0 {
+            return Ok(());
+        }
+        // Fair-share signal: occupied lanes per adapter name, feeding
+        // lanes included.
+        let mut in_flight: BTreeMap<String, usize> = BTreeMap::new();
+        for lane in self.slots.iter().flatten() {
+            *in_flight.entry(lane.req.adapter.clone().unwrap_or_default()).or_insert(0) += 1;
+        }
+        let lanes: Vec<step::ChunkLane> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, slot)| {
+                let ar = slot.as_ref()?;
+                let remaining = ar.req.prompt.len().checked_sub(ar.pos).filter(|&r| r > 0)?;
+                Some(step::ChunkLane {
+                    slot: s,
+                    remaining,
+                    deadline_at: ar.req.deadline_at(),
+                    priority: ar.req.priority,
+                    in_flight_same_adapter: in_flight
+                        .get(ar.req.adapter.as_deref().unwrap_or(""))
+                        .copied()
+                        .unwrap_or(0),
+                    id: ar.req.id,
+                })
+            })
+            .collect();
+        let assigns = step::plan_chunks(&lanes, budget, self.econf.policy);
+        if assigns.is_empty() {
+            return Ok(());
+        }
+        self.upload_bank_if_dirty()?;
+        let b = self.econf.decode_slots;
+        let ci = step::assemble_chunk(&self.slots, b, self.cfg.max_seq, &assigns);
+        let ids_t = HostTensor::i32(vec![b], ci.ids);
+        let tokens_t = HostTensor::i32(vec![b, self.cfg.max_seq], ci.tokens);
+        let start_t = HostTensor::i32(vec![b], ci.start);
+        let len_t = HostTensor::i32(vec![b], ci.len);
+        let mut data: BTreeMap<&'static str, &HostTensor> = BTreeMap::new();
+        data.insert("ids", &ids_t);
+        data.insert("tokens", &tokens_t);
+        data.insert("start", &start_t);
+        data.insert("len", &len_t);
+        let (logits, elapsed) = self.run_with_cache(exe, &data)?;
+        self.metrics.prefill_time += elapsed;
+
+        let vocab = self.cfg.vocab;
+        for a in &assigns {
+            let s = a.slot;
+            // Advance the lane past its granted chunk; a lane whose whole
+            // prompt is now in cache samples its first token from the
+            // chunk's last-position logits row.
+            let (fed, first) = {
+                let Some(ar) = self.slots[s].as_mut() else { continue };
+                ar.pos += a.n;
+                self.metrics.chunk_prefill_tokens += a.n;
+                (ar.pos < ar.req.prompt.len(), ar.first_token_at.is_none())
+            };
+            if fed {
+                continue;
+            }
+            let now = self.clock.now();
+            let (id, tok, pos, reason, ttft_hint, hit_lane) = {
+                let Some(ar) = self.slots[s].as_mut() else { continue };
+                let row = logits.read_f32_range(s * vocab, vocab);
+                let tok = sampler::sample(
+                    &row,
+                    ar.req.sampling.temperature,
+                    ar.req.sampling.top_k,
+                    &mut ar.rng_state,
+                );
+                ar.generated.push(tok);
+                if let Some(prev) = ar.last_token_at {
+                    self.metrics.itl.record(now.saturating_duration_since(prev));
+                }
+                ar.last_token_at = Some(now);
+                let hint = if first {
+                    ar.first_token_at = Some(now);
+                    Some((now - ar.submitted).as_secs_f64())
+                } else {
+                    None
+                };
+                (ar.req.id, tok, ar.generated.len() - 1, ar.done(), hint, !ar.publish_on_fed)
+            };
+            if let Some(ttft) = ttft_hint {
+                if hit_lane {
+                    self.metrics.prefix_hit_ttft.record_us(ttft * 1e6);
+                }
+            }
+            self.metrics.tokens_generated += 1;
+            if !matches!(reason, Some(FinishReason::StopToken)) {
+                self.events.push(StreamEvent::Token { id, token: tok, pos, ttft_hint });
+            }
+            if let Some(reason) = reason {
+                let Some(ar) = self.slots[s].take() else { continue };
+                self.alloc.release(s)?;
+                self.release_kv_lane(s)?;
+                self.finish(ar, reason);
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish fully-fed cold chunked lanes' prompt prefixes into the
+    /// shared-prefix cache — the chunked-path counterpart of the publish
+    /// step inside `prefill_batch`, so later identical prompts hit.  A
+    /// lane that finished in the same step it was fed has already
+    /// released its blocks and simply never publishes.
+    fn publish_fed_lanes(&mut self) -> Result<()> {
+        if !self.econf.paged_kv {
+            // Flat KV shares nothing; just retire the flags.
+            for ar in self.slots.iter_mut().flatten() {
+                ar.publish_on_fed = false;
+            }
+            return Ok(());
+        }
+        for s in 0..self.slots.len() {
+            let prompt_len = match self.slots[s].as_ref() {
+                Some(ar) if ar.publish_on_fed && ar.pos >= ar.req.prompt.len() => {
+                    ar.req.prompt.len()
+                }
+                _ => continue,
+            };
+            // Publication reads lane blocks host-side, same as adoption.
+            if self.kv.materialize_host()? {
+                self.metrics.kv_host_syncs += 1;
+            }
+            let published = self.paged.publish_prefix(&mut self.kv, s, prompt_len)?;
+            self.metrics.kv_blocks_published += published;
+            if let Some(ar) = self.slots[s].as_mut() {
+                ar.publish_on_fed = false;
             }
         }
         Ok(())
@@ -1016,6 +1326,9 @@ impl Engine {
     fn enforce_deadlines(&mut self) -> Result<()> {
         let now = self.clock.now();
         for req in self.queue.shed_expired(now) {
+            // A shed request leaves the admission gates too.
+            self.kv_stalled.remove(&req.id);
+            self.bank_stalled.remove(&req.id);
             self.metrics.deadline_shed += 1;
             self.events
                 .push(StreamEvent::Error { id: req.id, error: EngineError::DeadlineExceeded });
@@ -1059,6 +1372,13 @@ impl Engine {
             self.finish(ar, reason);
         }
         self.decode_once()?;
+        self.chunk_prefill_once()?;
+        self.publish_fed_lanes()?;
+        if self.n_active() == 0 {
+            // Nobody is observing decode gaps across the idle period; the
+            // next admitted batch starts its stall accounting fresh.
+            self.last_decode_at = None;
+        }
         Ok(std::mem::take(&mut self.events))
     }
 

@@ -91,9 +91,25 @@ pub struct Metrics {
     /// Prompt tokens that actually went through a prefill executable
     /// (cold lanes only; compare against `prompt_tokens`).
     pub prefill_lane_tokens: usize,
-    /// Admissions deferred because the block pool could not cover the
-    /// request's footprint (every evictable block pinned).
+    /// Requests that *entered* a stall at the KV-block admission gate
+    /// (pool could not cover their footprint).  Counts stall transitions,
+    /// not per-iteration retries: one stuck request is one stall however
+    /// many scheduler ticks it waits.
     pub kv_admission_stalls: usize,
+    /// Requests that entered a stall at the adapter-bank gate (every
+    /// pageable slot pinned by in-flight lanes).  Transition-counted like
+    /// `kv_admission_stalls`.
+    pub bank_admission_stalls: usize,
+    /// Prompt tokens prefilled through the chunked-prefill entry (mixed
+    /// steps; compare against `prefill_lane_tokens` for the bucketed
+    /// path).
+    pub chunk_prefill_tokens: usize,
+    /// Gap between consecutive sampled tokens on one lane, as the
+    /// request's consumer sees it (inter-token latency).
+    pub itl: LatencyRecorder,
+    /// Gap between consecutive decode steps while lanes are active — an
+    /// atomic prefill wedged between steps is exactly what widens this.
+    pub decode_stall: LatencyRecorder,
     /// Low-water mark of free pool blocks (memory headroom under load).
     pub kv_blocks_free_min: usize,
     /// High-water mark of outstanding shared-prefix refcounts.
@@ -196,9 +212,13 @@ impl Metrics {
             kv_prefill_tokens_saved: self.kv_prefill_tokens_saved,
             prefill_lane_tokens: self.prefill_lane_tokens,
             kv_admission_stalls: self.kv_admission_stalls,
+            bank_admission_stalls: self.bank_admission_stalls,
+            chunk_prefill_tokens: self.chunk_prefill_tokens,
             kv_blocks_free_min: self.kv_blocks_free_min,
             kv_shared_refs_peak: self.kv_shared_refs_peak,
             prefix_hit_ttft: self.prefix_hit_ttft.summary(),
+            itl: self.itl.summary(),
+            decode_stall: self.decode_stall.summary(),
         }
     }
 
@@ -249,9 +269,13 @@ pub struct MetricsSnapshot {
     pub kv_prefill_tokens_saved: usize,
     pub prefill_lane_tokens: usize,
     pub kv_admission_stalls: usize,
+    pub bank_admission_stalls: usize,
+    pub chunk_prefill_tokens: usize,
     pub kv_blocks_free_min: usize,
     pub kv_shared_refs_peak: usize,
     pub prefix_hit_ttft: Summary,
+    pub itl: Summary,
+    pub decode_stall: Summary,
 }
 
 impl MetricsSnapshot {
@@ -333,12 +357,22 @@ impl MetricsSnapshot {
             ("kv prefix hits", self.kv_prefix_hits.to_string()),
             ("kv prefill tokens saved", self.kv_prefill_tokens_saved.to_string()),
             ("prefill lane tokens", self.prefill_lane_tokens.to_string()),
+            ("chunk prefill tokens", self.chunk_prefill_tokens.to_string()),
             ("kv admission stalls", self.kv_admission_stalls.to_string()),
+            ("bank admission stalls", self.bank_admission_stalls.to_string()),
             ("kv blocks free (min)", self.kv_blocks_free_min.to_string()),
             ("kv shared refs (peak)", self.kv_shared_refs_peak.to_string()),
             (
                 "prefix-hit ttft p50/p90 (ms)",
                 format!("{:.1} / {:.1}", ph.p50 / 1e3, ph.p90 / 1e3),
+            ),
+            (
+                "itl p50/p99 (ms)",
+                format!("{:.1} / {:.1}", self.itl.p50 / 1e3, self.itl.p99 / 1e3),
+            ),
+            (
+                "decode stall p50/p99 (ms)",
+                format!("{:.1} / {:.1}", self.decode_stall.p50 / 1e3, self.decode_stall.p99 / 1e3),
             ),
         ])
     }
@@ -385,10 +419,14 @@ impl MetricsSnapshot {
             ("kv_prefix_hits", json::num(self.kv_prefix_hits as f64)),
             ("kv_prefill_tokens_saved", json::num(self.kv_prefill_tokens_saved as f64)),
             ("prefill_lane_tokens", json::num(self.prefill_lane_tokens as f64)),
+            ("chunk_prefill_tokens", json::num(self.chunk_prefill_tokens as f64)),
             ("kv_admission_stalls", json::num(self.kv_admission_stalls as f64)),
+            ("bank_admission_stalls", json::num(self.bank_admission_stalls as f64)),
             ("kv_blocks_free_min", json::num(self.kv_blocks_free_min as f64)),
             ("kv_shared_refs_peak", json::num(self.kv_shared_refs_peak as f64)),
             ("prefix_hit_ttft", summary(&self.prefix_hit_ttft)),
+            ("itl", summary(&self.itl)),
+            ("decode_stall", summary(&self.decode_stall)),
         ])
     }
 
@@ -417,6 +455,8 @@ impl MetricsSnapshot {
             paged_wait: merged_summary(|s| &s.paged_wait),
             queue_depth: merged_summary(|s| &s.queue_depth),
             prefix_hit_ttft: merged_summary(|s| &s.prefix_hit_ttft),
+            itl: merged_summary(|s| &s.itl),
+            decode_stall: merged_summary(|s| &s.decode_stall),
             ..MetricsSnapshot::default()
         };
         for s in parts {
@@ -445,7 +485,9 @@ impl MetricsSnapshot {
             out.kv_prefix_hits += s.kv_prefix_hits;
             out.kv_prefill_tokens_saved += s.kv_prefill_tokens_saved;
             out.prefill_lane_tokens += s.prefill_lane_tokens;
+            out.chunk_prefill_tokens += s.chunk_prefill_tokens;
             out.kv_admission_stalls += s.kv_admission_stalls;
+            out.bank_admission_stalls += s.bank_admission_stalls;
             out.kv_blocks_free_min += s.kv_blocks_free_min;
             out.kv_shared_refs_peak += s.kv_shared_refs_peak;
         }
@@ -573,7 +615,9 @@ mod tests {
             "kv_prefix_hits",
             "kv_prefill_tokens_saved",
             "prefill_lane_tokens",
+            "chunk_prefill_tokens",
             "kv_admission_stalls",
+            "bank_admission_stalls",
             "kv_blocks_free_min",
             "kv_shared_refs_peak",
         ] {
@@ -582,6 +626,8 @@ mod tests {
         assert_eq!(back.get("bank_full_uploads").unwrap().as_usize().unwrap(), 2);
         assert_eq!(back.get("bank_staged_rows").unwrap().as_usize().unwrap(), 9);
         assert!(back.opt("prefix_hit_ttft").is_some(), "prefix-hit TTFT histogram on the wire");
+        assert!(back.opt("itl").is_some(), "inter-token latency histogram on the wire");
+        assert!(back.opt("decode_stall").is_some(), "decode-stall histogram on the wire");
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod router;
 pub mod sampler;
 pub mod sched;
 pub mod server;
+pub mod step;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::MetricsSnapshot;
@@ -28,5 +29,5 @@ pub use router::{
     Fleet, FleetGeneration, FleetSim, FleetSimConfig, FleetStats, PlaceKind, Placement, Placer,
     ReplicaView, Router,
 };
-pub use sched::{PolicyKind, SchedPolicy, SchedSim};
+pub use sched::{PolicyKind, PrefillModel, SchedPolicy, SchedSim};
 pub use server::{EngineClient, EngineServer, Generation};

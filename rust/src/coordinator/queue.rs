@@ -32,6 +32,12 @@ pub enum EngineError {
     /// The request (or adapter operation) failed validation; `reason` is
     /// human-readable context, not a matching surface.
     Invalid { reason: String },
+    /// The engine broke one of its own invariants while handling the
+    /// request (e.g. admission popped a request whose KV reservation went
+    /// missing).  Surfaced as a terminal stream event instead of silently
+    /// dropping the request; `reason` is diagnostic context, not a
+    /// matching surface.
+    Internal { reason: String },
 }
 
 impl EngineError {
@@ -45,6 +51,7 @@ impl EngineError {
             EngineError::Cancelled => "cancelled",
             EngineError::EngineStopped => "engine_stopped",
             EngineError::Invalid { .. } => "invalid",
+            EngineError::Internal { .. } => "internal",
         }
     }
 }
@@ -62,6 +69,9 @@ impl fmt::Display for EngineError {
             EngineError::Cancelled => write!(f, "request cancelled"),
             EngineError::EngineStopped => write!(f, "engine stopped"),
             EngineError::Invalid { reason } => write!(f, "invalid request: {reason}"),
+            EngineError::Internal { reason } => {
+                write!(f, "internal engine error: {reason}")
+            }
         }
     }
 }
@@ -357,6 +367,7 @@ mod tests {
         assert_eq!(EngineError::Cancelled.kind(), "cancelled");
         assert_eq!(EngineError::EngineStopped.kind(), "engine_stopped");
         assert_eq!(EngineError::Invalid { reason: "r".into() }.kind(), "invalid");
+        assert_eq!(EngineError::Internal { reason: "r".into() }.kind(), "internal");
     }
 
     #[test]

@@ -189,6 +189,14 @@ pub struct ActiveRequest {
     pub pos: usize,
     pub submitted: Instant,
     pub first_token_at: Option<Instant>,
+    /// When the lane's most recent generated token was sampled — the
+    /// anchor for the inter-token-latency (ITL) recorder.
+    pub last_token_at: Option<Instant>,
+    /// Chunked-admission cold lanes carry no prefill output to publish
+    /// from; instead the engine publishes the lane's prompt prefix into
+    /// the shared-prefix cache once feeding completes.  Cleared after the
+    /// publish (and never set on prefix-hit or bucketed-prefill lanes).
+    pub publish_on_fed: bool,
     pub rng_state: crate::util::rng::Rng,
 }
 
@@ -205,6 +213,8 @@ impl ActiveRequest {
             generated: Vec::with_capacity(req.max_new_tokens),
             submitted: req.submitted_at.unwrap_or(admitted),
             first_token_at: None,
+            last_token_at: None,
+            publish_on_fed: false,
             rng_state: crate::util::rng::Rng::seed_from(seed),
             req,
         }

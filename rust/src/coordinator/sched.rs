@@ -78,6 +78,27 @@ impl PolicyKind {
     }
 }
 
+/// How a [`SchedSim`] accounts prompt prefill — the virtual-time analogue
+/// of [`super::engine::EngineConfig::prefill_chunk_tokens`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillModel {
+    /// Legacy: admission instantly installs a generating lane (prefill is
+    /// free) and every step costs exactly the sim's `step_cost`.  The
+    /// default; byte-identical to the pre-chunking harness.
+    None,
+    /// Atomic prefill (the engine's `--prefill-chunk=0` baseline): an
+    /// admitted lane's whole prompt is fed in its admission step, which
+    /// stretches that step by `token_cost` per prompt token — every other
+    /// lane's inter-token gap absorbs the full stretch.
+    Atomic { token_cost: Duration },
+    /// Chunked prefill (the engine's mixed step): each step spends at most
+    /// `budget` tokens — one per occupied lane (decode, or the feeding
+    /// lane's decode-fed prompt token), the leftover fed to
+    /// admitted-but-unfinished prompts in admission order — so no step
+    /// stretches beyond the budget.
+    Chunked { budget: usize, token_cost: Duration },
+}
+
 /// Live engine state a policy may consult when ranking waiting work.
 pub struct SchedContext<'a> {
     /// Scheduler-iteration timestamp from the engine's clock.
@@ -235,6 +256,11 @@ struct SimLane {
     admitted_at: Instant,
     admitted_seq: usize,
     generated: usize,
+    /// Prompt tokens already prefilled into this lane's virtual cache
+    /// (== `prompt.len()` once the lane is generating).
+    fed: usize,
+    /// Virtual stamp of the lane's latest token — the ITL baseline.
+    last_token_at: Option<Instant>,
 }
 
 /// Paging counters of a [`SchedSim`]'s optional adapter-bank model
@@ -361,6 +387,15 @@ pub struct SchedSim {
     bank: Option<SimBank>,
     /// Optional shared-prefix cache model ([`SchedSim::with_prefix_cache`]).
     prefix: Option<SimPrefixCache>,
+    /// Prefill accounting model ([`SchedSim::with_prefill`]).
+    prefill: PrefillModel,
+    /// Inter-token gap samples across all lanes (virtual durations).
+    itl: Vec<Duration>,
+    /// Per-gap stall: the gap in excess of the nominal decode cadence
+    /// (`step_cost`) — what a prefill stretching the step costs everyone.
+    itl_stall: Vec<Duration>,
+    /// Submit → first-token samples (virtual durations).
+    ttft: Vec<Duration>,
 }
 
 impl SchedSim {
@@ -383,7 +418,18 @@ impl SchedSim {
             records: Vec::new(),
             bank: None,
             prefix: None,
+            prefill: PrefillModel::None,
+            itl: Vec::new(),
+            itl_stall: Vec::new(),
+            ttft: Vec::new(),
         }
+    }
+
+    /// Attach a prefill accounting model (default [`PrefillModel::None`],
+    /// the legacy free-prefill harness).
+    pub fn with_prefill(mut self, model: PrefillModel) -> SchedSim {
+        self.prefill = model;
+        self
     }
 
     /// Attach the LRU adapter-bank model: `slots` resident adapters,
@@ -418,6 +464,24 @@ impl SchedSim {
 
     pub fn policy_kind(&self) -> PolicyKind {
         self.policy.kind()
+    }
+
+    /// All inter-token gap samples recorded so far (virtual durations,
+    /// across every lane, in emission order).
+    pub fn itl_samples(&self) -> &[Duration] {
+        &self.itl
+    }
+
+    /// Per-gap stall samples: each gap's excess over the nominal decode
+    /// cadence (`step_cost`).  Zero everywhere under
+    /// [`PrefillModel::None`]; the sched study's headline contrast.
+    pub fn itl_stall_samples(&self) -> &[Duration] {
+        &self.itl_stall
+    }
+
+    /// Submit → first-token samples (virtual durations).
+    pub fn ttft_samples(&self) -> &[Duration] {
+        &self.ttft
     }
 
     /// Enqueue a request (id engine-issued, submit time stamped from the
@@ -565,20 +629,118 @@ impl SchedSim {
                     .or_insert(0) += 1;
                 let admitted_seq = self.admissions;
                 self.admissions += 1;
-                self.slots[s] = Some(SimLane { req, admitted_at: now, admitted_seq, generated: 0 });
+                // Under the legacy free-prefill model a lane admits fully
+                // fed; the costed models start at 0 and feed per-step.
+                let fed = match self.prefill {
+                    PrefillModel::None => req.prompt.len(),
+                    _ => 0,
+                };
+                self.slots[s] = Some(SimLane {
+                    req,
+                    admitted_at: now,
+                    admitted_seq,
+                    generated: 0,
+                    fed,
+                    last_token_at: None,
+                });
             }
         }
 
-        // Decode: every active lane advances one token (admitted lanes
-        // produce their first token this same step, like prefill does).
+        // Decode + prefill feeding: every occupied lane advances one token
+        // — generating lanes decode, feeding lanes push one prompt token
+        // through the decode batch (the engine's decode-fed token, which
+        // guarantees progress even with a zero chunk budget).  Atomic
+        // prefill instead feeds a lane's whole remaining prompt in one go,
+        // stretching this step for everyone.
+        let n_active = self.slots.iter().filter(|s| s.is_some()).count();
+        let mut prefill_tokens = 0usize;
+        // Slots that emitted a token this step; stamped once the step's
+        // virtual length (which depends on the prefill work) is known.
+        let mut emitted: Vec<usize> = Vec::new();
         for s in 0..self.slots.len() {
-            let done = match self.slots[s].as_mut() {
-                Some(lane) => {
-                    lane.generated += 1;
-                    lane.generated >= lane.req.max_new_tokens
+            let Some(lane) = self.slots[s].as_mut() else { continue };
+            let plen = lane.req.prompt.len();
+            if lane.fed >= plen {
+                lane.generated += 1;
+                emitted.push(s);
+                continue;
+            }
+            match self.prefill {
+                // `None` admits lanes fully fed, so only `Atomic` reaches
+                // this arm in practice; feeding the whole prompt keeps the
+                // arm total either way.
+                PrefillModel::None | PrefillModel::Atomic { .. } => {
+                    prefill_tokens += plen - lane.fed;
+                    lane.fed = plen;
+                    lane.generated += 1; // prefill samples the first token
+                    emitted.push(s);
                 }
-                None => false,
-            };
+                PrefillModel::Chunked { .. } => {
+                    lane.fed += 1;
+                    if lane.fed >= plen {
+                        lane.generated += 1; // last decode-fed token samples
+                        emitted.push(s);
+                    }
+                }
+            }
+        }
+        // Chunked: spend the leftover budget on feeding lanes, earliest
+        // admission first — admission order is the policy's own ranking,
+        // so the chunk budget follows the policy too.
+        if let PrefillModel::Chunked { budget, .. } = self.prefill {
+            let mut left = budget.saturating_sub(n_active);
+            let mut feeding: Vec<usize> = (0..self.slots.len())
+                .filter(|&s| {
+                    self.slots[s].as_ref().is_some_and(|l| l.fed < l.req.prompt.len())
+                })
+                .collect();
+            feeding.sort_by_key(|&s| self.slots[s].as_ref().map(|l| l.admitted_seq));
+            for s in feeding {
+                if left == 0 {
+                    break;
+                }
+                let Some(lane) = self.slots[s].as_mut() else { continue };
+                let n = (lane.req.prompt.len() - lane.fed).min(left);
+                lane.fed += n;
+                left -= n;
+                prefill_tokens += n;
+                if lane.fed >= lane.req.prompt.len() {
+                    lane.generated += 1; // the completing chunk samples
+                    emitted.push(s);
+                }
+            }
+        }
+        // Tokens land at the end of the step; the step stretches by the
+        // prefill work it carried (zero under `None`, so the virtual
+        // timeline of the legacy harness is bit-preserved).
+        let token_cost = match self.prefill {
+            PrefillModel::None => Duration::ZERO,
+            PrefillModel::Atomic { token_cost } => token_cost,
+            PrefillModel::Chunked { token_cost, .. } => token_cost,
+        };
+        let step_len = self.step_cost + token_cost * prefill_tokens as u32;
+        let step_end = now + step_len;
+        for s in emitted {
+            let Some(lane) = self.slots[s].as_mut() else { continue };
+            match lane.last_token_at {
+                Some(prev) => {
+                    let gap = step_end.saturating_duration_since(prev);
+                    self.itl.push(gap);
+                    self.itl_stall.push(gap.saturating_sub(self.step_cost));
+                }
+                None => {
+                    let sub = lane.req.submitted_at.unwrap_or(lane.admitted_at);
+                    self.ttft.push(step_end.saturating_duration_since(sub));
+                }
+            }
+            lane.last_token_at = Some(step_end);
+        }
+        // Reap finished lanes (recorded at the step-start instant, as the
+        // pre-chunking harness always has).
+        for s in 0..self.slots.len() {
+            let done = self.slots[s]
+                .as_ref()
+                .is_some_and(|l| l.generated >= l.req.max_new_tokens);
             if done {
                 let Some(lane) = self.slots[s].take() else { continue };
                 self.push_record(
@@ -590,7 +752,7 @@ impl SchedSim {
             }
         }
 
-        self.clock.advance(self.step_cost);
+        self.clock.advance(step_len);
     }
 
     /// Step until idle; returns the number of steps taken (capped at
@@ -759,6 +921,64 @@ mod tests {
         assert_eq!(a_rec.adapter.as_deref(), Some("a"));
         assert_eq!(b_rec.adapter.as_deref(), Some("b"));
         assert!(b_rec.queue_wait().unwrap() > Duration::ZERO, "b waited for the pinned slot");
+    }
+
+    #[test]
+    fn prefill_none_records_zero_stall_and_exact_cadence() {
+        let step = Duration::from_millis(5);
+        let mut sim = SchedSim::new(PolicyKind::Fcfs, 2, 16, step);
+        for _ in 0..3 {
+            sim.submit(Request::new(vec![1; 8], 4)).unwrap();
+        }
+        sim.run_until_idle(64);
+        assert_eq!(sim.records().len(), 3);
+        assert!(!sim.itl_samples().is_empty());
+        assert!(sim.itl_samples().iter().all(|&g| g == step), "free prefill: pure cadence");
+        assert!(sim.itl_stall_samples().iter().all(|&g| g == Duration::ZERO));
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_the_stall_atomic_does_not() {
+        let step = Duration::from_millis(5);
+        let tok = Duration::from_micros(625);
+        let budget = 16usize;
+        let run = |model: PrefillModel| {
+            let mut sim =
+                SchedSim::new(PolicyKind::Fcfs, 2, 16, step).with_prefill(model);
+            // A short request holds a decode lane...
+            sim.submit(Request::new(vec![1; 4], 24)).unwrap();
+            sim.step();
+            sim.step();
+            // ...then a maximum-length prompt lands in the second lane.
+            sim.submit(Request::new(vec![2; 64], 4)).unwrap();
+            sim.run_until_idle(256);
+            assert_eq!(sim.records().len(), 2);
+            assert!(sim.records().iter().all(|r| r.outcome == SimOutcome::Finished));
+            sim.itl_stall_samples().iter().copied().max().unwrap_or(Duration::ZERO)
+        };
+        let atomic = run(PrefillModel::Atomic { token_cost: tok });
+        let chunked = run(PrefillModel::Chunked { budget, token_cost: tok });
+        // Atomic: the admission step stretches by the whole 64-token
+        // prompt; chunked steps never carry more than the budget.
+        assert_eq!(atomic, tok * 64, "atomic stall is the full prompt");
+        assert!(chunked <= tok * budget as u32, "chunked stall bounded by the budget: {chunked:?}");
+        assert!(chunked < atomic);
+    }
+
+    #[test]
+    fn chunked_prefill_progresses_on_decode_fed_tokens_even_with_zero_budget() {
+        let mut sim = SchedSim::new(PolicyKind::Fcfs, 1, 16, Duration::from_millis(5))
+            .with_prefill(PrefillModel::Chunked {
+                budget: 0,
+                token_cost: Duration::from_micros(625),
+            });
+        sim.submit(Request::new(vec![1; 8], 2)).unwrap();
+        let steps = sim.run_until_idle(64);
+        assert_eq!(sim.records().len(), 1, "decode-fed token defeats the zero-budget livelock");
+        assert_eq!(sim.records()[0].outcome, SimOutcome::Finished);
+        // 7 decode-fed prompt steps + the completing feed (first token) +
+        // 1 decode step for the second token.
+        assert_eq!(steps, 9);
     }
 
     #[test]

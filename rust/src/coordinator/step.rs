@@ -1,0 +1,234 @@
+//! Step assembly: the pure planning/packing half of the engine's mixed
+//! scheduler iteration.
+//!
+//! A *mixed step* ([`super::engine::EngineConfig::prefill_chunk_tokens`])
+//! spends one token budget across two kinds of work: every occupied decode
+//! lane advances one token, and the remaining budget goes to
+//! admitted-but-unfinished prefills in chunks.  This module owns the
+//! shape-fixed input assembly for both halves ([`assemble_decode`],
+//! [`assemble_chunk`]) and the chunk planner ([`plan_chunks`]) that decides
+//! *whose* prompt tokens consume the leftover budget — ranked by the same
+//! scheduling policy that ordered admission, so an EDF engine also
+//! prioritizes the tightest-deadline prefill and fair-share counts
+//! partially-prefilled lanes.
+//!
+//! Everything here is engine hot-path code: total (no panics), allocation
+//! only for the returned vectors, and independent of clocks and I/O so the
+//! planner is unit-testable in isolation.
+
+use std::time::Instant;
+
+use super::request::ActiveRequest;
+use super::sched::PolicyKind;
+
+/// Fixed-shape inputs for one decode step across all `b` slots: empty
+/// lanes are masked by token/pos/id 0.
+#[derive(Debug)]
+pub struct DecodeInputs {
+    pub token: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub ids: Vec<i32>,
+    /// Whether any lane is occupied (an all-empty step is skipped).
+    pub any: bool,
+}
+
+/// Pack the decode-entry inputs from the current lane table.  A
+/// prompt-feeding lane (`pos < prompt.len()`) feeds its own next prompt
+/// token; a generating lane feeds its last sampled token.
+pub fn assemble_decode(slots: &[Option<ActiveRequest>], b: usize) -> DecodeInputs {
+    let mut token = vec![0i32; b];
+    let mut pos = vec![0i32; b];
+    let mut ids = vec![0i32; b];
+    let mut any = false;
+    for (s, slot) in slots.iter().enumerate().take(b) {
+        let Some(ar) = slot.as_ref() else { continue };
+        any = true;
+        token[s] = if ar.pos < ar.req.prompt.len() {
+            // Prompt-feeding lane (shared-prefix hit or chunked
+            // admission): the unprefilled tail of its own prompt streams
+            // through decode.
+            ar.req.prompt.get(ar.pos).copied().unwrap_or_default()
+        } else {
+            // Prefill (or the feeding phase) pushes the first token
+            // before normal decode, so `generated` is never empty here; a
+            // zero fallback on a lost invariant decodes one garbage token
+            // instead of killing the serving thread.
+            ar.generated.last().copied().unwrap_or_default()
+        };
+        pos[s] = ar.pos as i32;
+        ids[s] = ar.slot_adapter as i32;
+    }
+    DecodeInputs { token, pos, ids, any }
+}
+
+/// One partially-prefilled lane competing for the step's leftover token
+/// budget — the policy-relevant facts only, so the planner stays decoupled
+/// from the lane table.
+#[derive(Clone, Debug)]
+pub struct ChunkLane {
+    pub slot: usize,
+    /// Prompt tokens not yet in this lane's cache (`prompt.len() - pos`).
+    pub remaining: usize,
+    /// Absolute deadline, if any (the EDF key).
+    pub deadline_at: Option<Instant>,
+    /// Admission tier (the priority-policy key).
+    pub priority: u8,
+    /// Occupied lanes wearing the same adapter — the fair-share load
+    /// signal; partially-prefilled lanes count like any other.
+    pub in_flight_same_adapter: usize,
+    /// Engine-issued request id (the FCFS key and the deterministic
+    /// tie-break everywhere: ids are issued in submit order).
+    pub id: u64,
+}
+
+/// Budget tokens granted to one lane this step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkAssign {
+    pub slot: usize,
+    pub n: usize,
+}
+
+/// Split `budget` prompt tokens across the feeding lanes, greedily in
+/// policy-rank order: the best-ranked lane takes as much of its remaining
+/// prompt as the budget covers, then the next, until the budget is spent.
+/// Greedy (rather than round-robin) allocation finishes the most urgent
+/// prefill soonest — exactly the policy's intent — while the decode-fed
+/// token every feeding lane gets per step guarantees the others still
+/// progress.
+pub fn plan_chunks(lanes: &[ChunkLane], budget: usize, policy: PolicyKind) -> Vec<ChunkAssign> {
+    let mut ranked: Vec<&ChunkLane> = lanes.iter().collect();
+    match policy {
+        PolicyKind::Fcfs => ranked.sort_by_key(|l| l.id),
+        // Deadline-less lanes rank last, ids break ties deterministically.
+        PolicyKind::Edf => ranked.sort_by_key(|l| (l.deadline_at.is_none(), l.deadline_at, l.id)),
+        PolicyKind::Priority => ranked.sort_by_key(|l| (std::cmp::Reverse(l.priority), l.id)),
+        PolicyKind::FairShare => ranked.sort_by_key(|l| (l.in_flight_same_adapter, l.id)),
+    }
+    let mut left = budget;
+    let mut out = Vec::new();
+    for lane in ranked {
+        if left == 0 {
+            break;
+        }
+        let n = lane.remaining.min(left);
+        if n == 0 {
+            continue;
+        }
+        left -= n;
+        out.push(ChunkAssign { slot: lane.slot, n });
+    }
+    out
+}
+
+/// Fixed-shape inputs for one chunked-prefill call across all `b` slots:
+/// `tokens` is `[b, max_seq]` with each granted lane's chunk written at
+/// its absolute prompt positions, `start`/`len` delimit the chunk per
+/// lane (`len == 0` masks a lane out entirely).
+#[derive(Debug)]
+pub struct ChunkInputs {
+    pub ids: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub start: Vec<i32>,
+    pub len: Vec<i32>,
+}
+
+/// Pack the chunk-entry inputs for the granted assignments.  Assignments
+/// whose slot emptied since planning (impossible within one step, but the
+/// packer stays total) are masked out with `len == 0`.
+pub fn assemble_chunk(
+    slots: &[Option<ActiveRequest>],
+    b: usize,
+    max_seq: usize,
+    assigns: &[ChunkAssign],
+) -> ChunkInputs {
+    let mut ids = vec![0i32; b];
+    let mut tokens = vec![0i32; b * max_seq];
+    let mut start = vec![0i32; b];
+    let mut len = vec![0i32; b];
+    for a in assigns {
+        let Some(ar) = slots.get(a.slot).and_then(|s| s.as_ref()) else { continue };
+        if a.slot >= b {
+            continue;
+        }
+        let s0 = ar.pos;
+        let n = a.n.min(ar.req.prompt.len().saturating_sub(s0)).min(max_seq.saturating_sub(s0));
+        if n == 0 {
+            continue;
+        }
+        ids[a.slot] = ar.slot_adapter as i32;
+        start[a.slot] = s0 as i32;
+        len[a.slot] = n as i32;
+        for i in 0..n {
+            tokens[a.slot * max_seq + s0 + i] = ar.req.prompt.get(s0 + i).copied().unwrap_or_default();
+        }
+    }
+    ChunkInputs { ids, tokens, start, len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn lane(slot: usize, remaining: usize, id: u64) -> ChunkLane {
+        ChunkLane {
+            slot,
+            remaining,
+            deadline_at: None,
+            priority: 0,
+            in_flight_same_adapter: 0,
+            id,
+        }
+    }
+
+    #[test]
+    fn plan_is_greedy_in_rank_order_and_respects_budget() {
+        let lanes = vec![lane(0, 10, 2), lane(1, 4, 1), lane(2, 3, 3)];
+        let plan = plan_chunks(&lanes, 8, PolicyKind::Fcfs);
+        // FCFS ranks by id: lane 1 (id 1) drains fully, lane 0 (id 2)
+        // takes the remaining 4, lane 2 gets nothing.
+        assert_eq!(plan, vec![ChunkAssign { slot: 1, n: 4 }, ChunkAssign { slot: 0, n: 4 }]);
+        let total: usize = plan.iter().map(|a| a.n).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn plan_edf_prefers_tightest_deadline_and_ranks_deadline_less_last() {
+        let t0 = Instant::now();
+        let mut a = lane(0, 5, 1);
+        let mut b = lane(1, 5, 2);
+        let c = lane(2, 5, 3); // no deadline
+        a.deadline_at = Some(t0 + Duration::from_millis(50));
+        b.deadline_at = Some(t0 + Duration::from_millis(10));
+        let plan = plan_chunks(&[a, b, c], 12, PolicyKind::Edf);
+        assert_eq!(
+            plan,
+            vec![
+                ChunkAssign { slot: 1, n: 5 },
+                ChunkAssign { slot: 0, n: 5 },
+                ChunkAssign { slot: 2, n: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_priority_and_fair_share_keys() {
+        let mut hi = lane(0, 4, 9);
+        hi.priority = 3;
+        let lo = lane(1, 4, 1);
+        let plan = plan_chunks(&[hi, lo], 4, PolicyKind::Priority);
+        assert_eq!(plan, vec![ChunkAssign { slot: 0, n: 4 }]);
+
+        let mut crowded = lane(0, 4, 1);
+        crowded.in_flight_same_adapter = 3;
+        let alone = lane(1, 4, 2);
+        let plan = plan_chunks(&[crowded, alone], 4, PolicyKind::FairShare);
+        assert_eq!(plan, vec![ChunkAssign { slot: 1, n: 4 }], "least-loaded adapter first");
+    }
+
+    #[test]
+    fn plan_zero_budget_or_no_lanes_is_empty() {
+        assert!(plan_chunks(&[lane(0, 5, 1)], 0, PolicyKind::Fcfs).is_empty());
+        assert!(plan_chunks(&[], 7, PolicyKind::Fcfs).is_empty());
+    }
+}

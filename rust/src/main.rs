@@ -7,6 +7,7 @@
 //!                  [--distinct 8] [--tokens 64] [--host-roundtrip-kv=true]
 //!                  [--bank-slots N] [--whole-bank-uploads=true] [--stats=true]
 //!                  [--queue-capacity 4096] [--policy fcfs|edf|priority|fair]
+//!                  [--prefill-chunk 0]
 //!                  [--backend pjrt|ref] [--listen 127.0.0.1:7433]
 //!                  [--replicas 1] [--place affinity|least-loaded|round-robin]
 //! road train       --method road1 [--suite nlu|commonsense|arithmetic]
@@ -127,6 +128,10 @@ fn serve_config(args: &Args, mode: &str, slots: usize) -> Result<EngineConfig> {
         // --kv-pool-blocks caps the shared block pool (the serving memory
         // budget; default sizes it so the gate never binds).
         kv_pool_blocks: args.get("kv-pool-blocks").and_then(|s| s.parse().ok()),
+        // --prefill-chunk enables mixed steps: each iteration advances
+        // every decode lane one token and spends the rest of this budget
+        // feeding admitted prefills in chunks (0 = atomic prefill).
+        prefill_chunk_tokens: args.usize_or("prefill-chunk", 0),
         ..Default::default()
     })
 }
@@ -533,7 +538,8 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             // Scheduling contrast wants saturation, not long generations;
             // default shorter than the throughput studies.
             let new_tokens = if args.get("tokens").is_some() { tokens } else { 32 };
-            let pts = if args.bool("sim-clock") {
+            let sim = args.bool("sim-clock");
+            let pts = if sim {
                 // Deterministic harness on the virtual clock: no
                 // artifacts, no sleeps, byte-identical output across runs.
                 bench::sched_study_sim(n_requests, distinct, new_tokens, seed)
@@ -546,12 +552,20 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
                     seed,
                 )?
             };
+            let json = bench::sched_points_json(&pts).to_string_pretty();
+            if sim {
+                // Only the deterministic harness commits a JSON artifact:
+                // CI runs the study twice and byte-diffs this file.
+                std::fs::create_dir_all("results")?;
+                std::fs::write("results/BENCH_sched.json", format!("{json}\n"))?;
+                println!("[saved results/BENCH_sched.json]");
+            }
             let mut md = bench::render_sched_points(
                 "Admission scheduling: fcfs vs edf vs priority vs fair-share",
                 &pts,
             );
             md.push_str("\n```json\n");
-            md.push_str(&bench::sched_points_json(&pts).to_string_pretty());
+            md.push_str(&json);
             md.push_str("\n```\n");
             md
         }

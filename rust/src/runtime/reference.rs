@@ -164,6 +164,19 @@ fn serving_entry(cfg: &ModelConfigInfo, mode: &str, kind: &str, b: usize, l: usi
         inputs.push(iospec("data", "tokens", vec![b, l], DType::I32));
         inputs.push(iospec("data", "lengths", vec![b], DType::I32));
         (format!("prefill_{mode}_{}_b{b}_l{l}", cfg.name), Some(l))
+    } else if kind == "chunk_prefill" {
+        // Mixed-step chunked prefill: continue each lane's existing cache
+        // by `len[lane]` prompt tokens written at absolute positions
+        // `start[lane]..`; `tokens` is [b, max_seq] so a chunk lands at
+        // its true positions without per-chunk shapes.  Lanes with
+        // len == 0 are untouched.
+        inputs.push(iospec("data", "ids", vec![b], DType::I32));
+        inputs.push(iospec("data", "tokens", vec![b, t], DType::I32));
+        inputs.push(iospec("data", "start", vec![b], DType::I32));
+        inputs.push(iospec("data", "len", vec![b], DType::I32));
+        inputs.push(iospec("data", "k_cache", cache_shape.clone(), DType::F32));
+        inputs.push(iospec("data", "v_cache", cache_shape.clone(), DType::F32));
+        (format!("chunk_prefill_{mode}_{}_b{b}", cfg.name), None)
     } else {
         inputs.push(iospec("data", "ids", vec![b], DType::I32));
         inputs.push(iospec("data", "token", vec![b], DType::I32));
@@ -209,6 +222,12 @@ pub fn prefill_buckets_for(cfg: &ModelConfigInfo) -> Vec<(usize, usize)> {
     if cfg.name == "serve" {
         buckets.push((8, 64));
     }
+    if cfg.name == "tiny" {
+        // A long-prompt bucket for the cheap test config, so scheduler
+        // tests can admit prompts past the 16-token buckets without the
+        // ~250× heavier "serve" forward pass.
+        buckets.push((2, 32));
+    }
     buckets.retain(|&(_, l)| l <= cfg.max_seq);
     buckets
 }
@@ -224,6 +243,8 @@ pub fn synthetic_manifest() -> Manifest {
         for mode in MODES {
             for b in DECODE_BATCHES {
                 let e = serving_entry(c, mode, "decode", b, 0);
+                entries.insert(e.name.clone(), e);
+                let e = serving_entry(c, mode, "chunk_prefill", b, 0);
                 entries.insert(e.name.clone(), e);
             }
             for (b, l) in prefill_buckets_for(c) {
@@ -302,6 +323,7 @@ pub fn synthetic_params(
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum RefKind {
     Prefill,
+    ChunkPrefill,
     Decode,
 }
 
@@ -322,9 +344,11 @@ impl RefEntry {
     pub fn from_info(info: &EntryInfo, cfg: &ModelConfigInfo) -> Result<RefEntry> {
         let kind = match info.kind.as_str() {
             "prefill" => RefKind::Prefill,
+            "chunk_prefill" => RefKind::ChunkPrefill,
             "decode" => RefKind::Decode,
             k => bail!(
-                "reference backend implements serving entries only (prefill/decode); \
+                "reference backend implements serving entries only \
+                 (prefill/chunk_prefill/decode); \
                  {} is kind {k:?} — use the pjrt backend with built artifacts",
                 info.name
             ),
@@ -373,6 +397,18 @@ impl RefEntry {
                     &datum("ids")?.as_i32(),
                     &datum("tokens")?.as_i32(),
                     &datum("lengths")?.as_i32(),
+                )
+            }
+            RefKind::ChunkPrefill => {
+                let b = self.info.batch.unwrap_or(1);
+                fwd.chunk_prefill(
+                    b,
+                    &datum("ids")?.as_i32(),
+                    &datum("tokens")?.as_i32(),
+                    &datum("start")?.as_i32(),
+                    &datum("len")?.as_i32(),
+                    datum("k_cache")?,
+                    datum("v_cache")?,
                 )
             }
             RefKind::Decode => {
@@ -741,6 +777,69 @@ impl Fwd<'_> {
         for lane in 0..b {
             let last = (lengths[lane] - 1).clamp(0, l as i32 - 1) as usize;
             let row = self.head_row(&x, lane * l + last)?;
+            logits[lane * cfg.vocab..(lane + 1) * cfg.vocab].copy_from_slice(&row);
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, cfg.vocab], logits),
+            HostTensor::f32(self.cache_shape(b), kcs),
+            HostTensor::f32(self.cache_shape(b), vcs),
+        ])
+    }
+
+    /// Chunked prefill: continue each granted lane's cache by `len[lane]`
+    /// prompt tokens written at absolute positions `start[lane]..`,
+    /// reusing whatever the cache already holds below `start`.  Lanes
+    /// with `len == 0` are untouched and get a zero logits row; a lane
+    /// whose chunk reaches the end of its prompt reads its first-token
+    /// logits from its row.
+    ///
+    /// Each lane's per-layer region of the `[nl, b, h, t, hd]` cache is
+    /// itself a valid `b = 1` cache, so the lane runs through [`Fwd::block`]
+    /// independently on a zero-copy slice.  Row `r` (absolute position
+    /// `start + r`) is masked to attend `t <= start + r`: `block` scatters
+    /// the whole chunk's K/V before attending, but the mask excludes the
+    /// not-yet-visible later rows, so every row sees exactly the cache
+    /// state a per-token decode would have — which is why a chunked
+    /// prefill is bitwise identical to feeding the same tokens through
+    /// single decode steps (and token-identical to one atomic prefill).
+    #[allow(clippy::too_many_arguments)]
+    fn chunk_prefill(
+        &self,
+        b: usize,
+        ids: &[i32],
+        tokens: &[i32],
+        start: &[i32],
+        len: &[i32],
+        k_cache: &HostTensor,
+        v_cache: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        let cfg = self.cfg;
+        let t_max = cfg.max_seq;
+        let mut kcs = k_cache.as_f32();
+        let mut vcs = v_cache.as_f32();
+        let lane_cache = cfg.n_heads * t_max * cfg.head_dim;
+        let mut logits = vec![0f32; b * cfg.vocab];
+        for lane in 0..b {
+            let n = len[lane].max(0) as usize;
+            if n == 0 {
+                continue;
+            }
+            let s0 = (start[lane].max(0) as usize).min(t_max - 1);
+            let n = n.min(t_max - s0);
+            let slot = ids[lane].max(0) as usize;
+            let slots = vec![slot; n];
+            let rope_pos: Vec<usize> = (s0..s0 + n).collect();
+            let write_pos = rope_pos.clone();
+            let chunk: Vec<i32> = (0..n).map(|i| tokens[lane * t_max + s0 + i]).collect();
+            let mut x = self.embed(&chunk)?;
+            let visible = move |r: usize, t: usize| t <= s0 + r;
+            for layer in 0..cfg.n_layers {
+                let off = (layer * b + lane) * lane_cache;
+                let (kc, vc) =
+                    (&mut kcs[off..off + lane_cache], &mut vcs[off..off + lane_cache]);
+                self.block(layer, &mut x, 1, n, &slots, &rope_pos, kc, vc, &write_pos, &visible)?;
+            }
+            let row = self.head_row(&x, n - 1)?;
             logits[lane * cfg.vocab..(lane + 1) * cfg.vocab].copy_from_slice(&row);
         }
         Ok(vec![
@@ -1132,6 +1231,94 @@ mod tests {
         assert_eq!(argmax(&a).0, argmax(&b).0, "greedy token diverged");
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert!((x - y).abs() < 1e-4, "logit {i}: cold {x} vs paged {y}");
+        }
+    }
+
+    /// The tentpole identity: prefilling a prompt in chunks (continuing
+    /// the lane's cache across calls) must be *bitwise* identical to
+    /// feeding the same tokens through single decode steps, and
+    /// token-identical to one atomic bucketed prefill — the property the
+    /// engine's `--prefill-chunk` mixed steps rest on.
+    #[test]
+    fn chunked_prefill_matches_decode_steps_and_cold_prefill() {
+        let m = synthetic_manifest();
+        let cfg = tiny();
+        let pre_info = &m.entries["prefill_road_tiny_b1_l16"];
+        let dec_info = &m.entries["decode_road_tiny_b1"];
+        let chk_info = &m.entries["chunk_prefill_road_tiny_b1"];
+        let pre = RefEntry::from_info(pre_info, &cfg).unwrap();
+        let dec = RefEntry::from_info(dec_info, &cfg).unwrap();
+        let chk = RefEntry::from_info(chk_info, &cfg).unwrap();
+
+        let prompt = [17i32, 4, 99, 250, 33, 8, 120, 7];
+        let shape = vec![cfg.n_layers, 1, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+
+        // Chunked: 3 tokens, then the remaining 5, carrying the cache.
+        let mut full = vec![0i32; cfg.max_seq];
+        full[..prompt.len()].copy_from_slice(&prompt);
+        let run_chunk = |s0: usize, n: usize, kc: HostTensor, vc: HostTensor| {
+            let data = BTreeMap::from([
+                ("ids", HostTensor::i32(vec![1], vec![0])),
+                ("tokens", HostTensor::i32(vec![1, cfg.max_seq], full.clone())),
+                ("start", HostTensor::i32(vec![1], vec![s0 as i32])),
+                ("len", HostTensor::i32(vec![1], vec![n as i32])),
+                ("k_cache", kc),
+                ("v_cache", vc),
+            ]);
+            chk.execute(&entry_inputs(chk_info, data)).unwrap()
+        };
+        let first = run_chunk(
+            0,
+            3,
+            HostTensor::zeros(shape.clone(), DType::F32),
+            HostTensor::zeros(shape.clone(), DType::F32),
+        );
+        let chunked = run_chunk(3, 5, first[1].clone(), first[2].clone());
+
+        // Decode-fed: the same prompt one token per step.
+        let mut kc = HostTensor::zeros(shape.clone(), DType::F32);
+        let mut vc = HostTensor::zeros(shape, DType::F32);
+        let mut stepped = None;
+        for (p, &tok) in prompt.iter().enumerate() {
+            let data = BTreeMap::from([
+                ("ids", HostTensor::i32(vec![1], vec![0])),
+                ("token", HostTensor::i32(vec![1], vec![tok])),
+                ("pos", HostTensor::i32(vec![1], vec![p as i32])),
+                ("k_cache", kc.clone()),
+                ("v_cache", vc.clone()),
+            ]);
+            let step = dec.execute(&entry_inputs(dec_info, data)).unwrap();
+            kc = step[1].clone();
+            vc = step[2].clone();
+            stepped = Some(step);
+        }
+        let stepped = stepped.unwrap();
+        assert_eq!(chunked[0].bytes(), stepped[0].bytes(), "logits: chunked vs decode-fed");
+        assert_eq!(chunked[1].bytes(), stepped[1].bytes(), "k cache: chunked vs decode-fed");
+        assert_eq!(chunked[2].bytes(), stepped[2].bytes(), "v cache: chunked vs decode-fed");
+
+        // Atomic bucketed prefill of the whole prompt agrees on tokens.
+        let mut padded = vec![0i32; 16];
+        padded[..prompt.len()].copy_from_slice(&prompt);
+        let data = BTreeMap::from([
+            ("ids", HostTensor::i32(vec![1], vec![0])),
+            ("tokens", HostTensor::i32(vec![1, 16], padded)),
+            ("lengths", HostTensor::i32(vec![1], vec![prompt.len() as i32])),
+        ]);
+        let cold = pre.execute(&entry_inputs(pre_info, data)).unwrap();
+        let (a, b) = (cold[0].as_f32(), chunked[0].as_f32());
+        let argmax = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .fold(
+                    (0usize, f32::NEG_INFINITY),
+                    |acc, (i, &x)| if x > acc.1 { (i, x) } else { acc },
+                )
+                .0
+        };
+        assert_eq!(argmax(&a), argmax(&b), "greedy token diverged");
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-4, "logit {i}: cold {x} vs chunked {y}");
         }
     }
 

@@ -721,6 +721,221 @@ fn cancel_releases_cow_refs_but_keeps_shared_originals() {
     assert_eq!(warm_tokens, cold_out[0].tokens, "post-cancel hit diverged");
 }
 
+// ---------------------------------------------------------------------------
+// Chunked prefill (mixed steps) + admission-path stall accounting
+// ---------------------------------------------------------------------------
+
+/// The chunk-prefill entry ships in the synthetic (reference) manifest
+/// only — aot.py lowers no chunk_prefill artifacts — so the chunked-mode
+/// tests pin the reference backend instead of [`test_backend`].
+fn ref_rt() -> Rc<Runtime> {
+    Rc::new(Runtime::for_backend(BackendKind::Reference, road::Manifest::default_dir()).unwrap())
+}
+
+/// One scheduler step on the virtual clock, charged at 1ms per iteration
+/// plus 1ms per prompt token prefilled (bucketed or chunked) — the
+/// constant-rate cost model the ITL assertions below are phrased in: an
+/// atomic 32-token prefill costs a 33ms step, a chunked step never
+/// exceeds 1ms + its token budget.
+fn step_charged(eng: &mut Engine, clock: &Clock, fed_seen: &mut usize) -> Vec<StreamEvent> {
+    let evs = eng.step().unwrap();
+    let fed = eng.metrics.prefill_lane_tokens + eng.metrics.chunk_prefill_tokens;
+    let delta = fed - *fed_seen;
+    *fed_seen = fed;
+    clock.advance(Duration::from_millis(1) * (1 + delta) as u32);
+    evs
+}
+
+/// The tentpole identity claim for mixed steps: streaming prompts through
+/// the chunk-prefill entry under a per-iteration token budget produces
+/// exactly the tokens the atomic bucketed prefill produces, across a
+/// heterogeneous-adapter batch — chunking is a scheduling change, not a
+/// model change.
+#[test]
+fn chunked_prefill_token_identical_to_atomic_prefill() {
+    let rt = ref_rt();
+    let mk = || {
+        vec![
+            greedy(&[10, 20, 30], 8).with_adapter("a"),
+            greedy(&(1..=20).collect::<Vec<i32>>(), 6).with_adapter("b"),
+            greedy(&[5, 6], 6),
+            greedy(&prefixed(9, 1), 5).with_adapter("a"),
+            greedy(&[42, 43, 44], 4).with_adapter("b"),
+        ]
+    };
+    let run = |chunk: usize| {
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                model: "tiny".into(),
+                mode: "road".into(),
+                decode_slots: 2,
+                queue_capacity: 64,
+                prefill_chunk_tokens: chunk,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        two_adapters(&mut eng, 77);
+        let mut outs = eng.run_all(mk()).unwrap();
+        outs.sort_by_key(|o| o.id);
+        (outs, eng.metrics.prefill_batches, eng.metrics.chunk_prefill_tokens)
+    };
+    let (atomic, atomic_batches, atomic_chunk_tokens) = run(0);
+    let (chunked, chunked_batches, chunked_chunk_tokens) = run(6);
+    assert!(atomic_batches > 0, "baseline must run bucketed prefills");
+    assert_eq!(atomic_chunk_tokens, 0, "baseline must never touch the chunk entry");
+    assert_eq!(chunked_batches, 0, "chunked admission must never run a bucketed prefill");
+    assert!(chunked_chunk_tokens > 0, "prompts must stream through the chunk entry");
+    assert_eq!(atomic.len(), chunked.len());
+    for (a, c) in atomic.iter().zip(&chunked) {
+        assert_eq!(a.tokens, c.tokens, "chunked prefill changed request {} output", a.id);
+        assert_eq!(a.finish, c.finish);
+    }
+}
+
+/// The ITL regression the tentpole fixes, on the virtual clock: admit a
+/// max-length prompt into an actively decoding batch.  Under the atomic
+/// baseline the short request's inter-token gap absorbs the entire
+/// 32-token prefill (33 virtual ms); under `--prefill-chunk 6` no step —
+/// and therefore no gap — can exceed the 6-token budget (5ms when one
+/// lane decodes beside the feeding lane).
+#[test]
+fn chunked_prefill_bounds_decode_stall_from_long_prompt_admission() {
+    let rt = ref_rt();
+    let run = |chunk: usize| {
+        let clock = Clock::manual();
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                model: "tiny".into(),
+                mode: "road".into(),
+                decode_slots: 2,
+                queue_capacity: 64,
+                clock: clock.clone(),
+                prefill_chunk_tokens: chunk,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut fed = 0usize;
+        let mut outs = Vec::new();
+        // The short request is admitted and decoding...
+        eng.submit(greedy(&[3, 4, 5, 6], 16)).unwrap();
+        for ev in step_charged(&mut eng, &clock, &mut fed) {
+            if let StreamEvent::Finished(o) = ev {
+                outs.push(o);
+            }
+        }
+        // ...when a max-length prompt arrives mid-stream.
+        let long: Vec<i32> = (1..=32).collect();
+        assert_eq!(long.len(), eng.max_prompt_len());
+        eng.submit(greedy(&long, 2)).unwrap();
+        let mut steps = 0;
+        while eng.has_work() {
+            for ev in step_charged(&mut eng, &clock, &mut fed) {
+                if let StreamEvent::Finished(o) = ev {
+                    outs.push(o);
+                }
+            }
+            steps += 1;
+            assert!(steps < 300, "engine wedged");
+        }
+        outs.sort_by_key(|o| o.id);
+        (outs, eng.metrics.itl.summary().max)
+    };
+    let (atomic, atomic_max_us) = run(0);
+    let (chunked, chunked_max_us) = run(6);
+    // Chunking changes when prompt tokens are computed, never what any
+    // request generates.
+    assert_eq!(atomic.len(), 2);
+    assert_eq!(chunked.len(), 2);
+    for (a, c) in atomic.iter().zip(&chunked) {
+        assert_eq!(a.tokens, c.tokens, "chunking changed request {}", a.id);
+    }
+    // Red under --prefill-chunk=0: the short lane's worst gap spans the
+    // whole 32-token prefill step (1ms + 32ms under the cost model).
+    assert!(atomic_max_us >= 33_000.0 - 1.0, "atomic max itl {atomic_max_us}us");
+    // Green chunked: no step exceeds 1ms + (budget - active) tokens = 5ms.
+    assert!(chunked_max_us <= 5_000.0 + 1.0, "chunked max itl {chunked_max_us}us");
+    assert!(chunked_max_us < atomic_max_us);
+}
+
+/// Regression (counter inflation): a request parked at the KV-block gate
+/// for many scheduler iterations is ONE stall, not one per retry.  A
+/// 6-block pool fits request A (5 blocks) but strands B behind it until A
+/// drains and its published prefix becomes evictable.
+#[test]
+fn kv_admission_stall_counts_one_transition_not_retries() {
+    let rt = rt();
+    let clock = Clock::manual();
+    let mut eng = paged_engine(&rt, true, Some(6), clock.clone());
+    let a: Vec<i32> = (1..=12).collect();
+    let b: Vec<i32> = (101..=112).collect();
+    eng.submit(greedy(&a, 8)).unwrap();
+    eng.submit(greedy(&b, 8)).unwrap();
+    let mut outs = Vec::new();
+    let mut steps = 0usize;
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            if let StreamEvent::Finished(o) = ev {
+                outs.push(o);
+            }
+        }
+        clock.advance(Duration::from_millis(1));
+        steps += 1;
+        assert!(steps < 200, "engine wedged");
+    }
+    assert_eq!(outs.len(), 2, "the stalled request must eventually admit and finish");
+    assert!(outs.iter().all(|o| o.tokens.len() == 8));
+    // B retried the block gate on every iteration of A's 8-token decode.
+    assert!(steps > 8, "B must have waited across iterations, saw {steps}");
+    assert_eq!(eng.metrics.kv_admission_stalls, 1, "stall counter inflated by retries");
+    assert!(eng.metrics.kv_block_evictions > 0, "B's admission evicts A's cached prefix");
+}
+
+/// Same transition accounting for the adapter-bank gate: with a single
+/// pageable bank slot pinned by an in-flight request, the request waiting
+/// on the other adapter is ONE bank stall across its whole wait.
+#[test]
+fn bank_admission_stall_counts_one_transition_not_retries() {
+    let rt = rt();
+    let clock = Clock::manual();
+    let mut eng = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            model: "tiny".into(),
+            mode: "road".into(),
+            decode_slots: 2,
+            queue_capacity: 64,
+            bank_slots: Some(2), // identity slot 0 + one pageable slot
+            clock: clock.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    two_adapters(&mut eng, 55);
+    eng.submit(greedy(&[10, 20, 30], 8).with_adapter("a")).unwrap();
+    eng.submit(greedy(&[40, 50], 4).with_adapter("b")).unwrap();
+    let mut outs = Vec::new();
+    let mut steps = 0usize;
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            if let StreamEvent::Finished(o) = ev {
+                outs.push(o);
+            }
+        }
+        clock.advance(Duration::from_millis(1));
+        steps += 1;
+        assert!(steps < 200, "engine wedged");
+    }
+    assert_eq!(outs.len(), 2, "the bank-stalled request must eventually serve");
+    assert!(steps > 6, "b must have waited across iterations, saw {steps}");
+    assert_eq!(eng.metrics.bank_admission_stalls, 1, "bank stall counter inflated by retries");
+    assert_eq!(eng.metrics.kv_admission_stalls, 0, "the block gate never bound here");
+    assert_eq!(eng.metrics.bank_evictions, 1, "b pages in over a's slot once it drains");
+}
+
 /// Cross-backend oracle (artifact-gated): the pure-Rust reference model
 /// and the compiled PJRT artifacts, serving the *same weights* from the
 /// same manifest, must produce token-identical greedy outputs.  This is

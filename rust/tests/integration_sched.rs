@@ -296,24 +296,101 @@ fn real_engine_on_reference_backend_matches_sim_ordering() {
     );
 }
 
+/// Regression: bucket selection must follow the policy ranking, not the
+/// other way around.  Pre-fix, `maybe_prefill` picked the prefill bucket
+/// from the queue's *minimum* prompt length before asking the policy, so
+/// a short low-urgency prompt at the queue head forced a 16-token bucket
+/// and the tight-deadline 20-token request EDF ranked first silently
+/// failed the bucket's length filter — admission order inverted the
+/// policy, which the padded buckets were hiding.
+#[test]
+fn edf_engine_admits_long_tight_deadline_prompt_over_short_loose_ones() {
+    use road::coordinator::engine::{Engine, EngineConfig};
+    use road::coordinator::request::{SamplingParams, StreamEvent};
+    use road::util::clock::Clock;
+
+    let rt = std::rc::Rc::new(road::runtime::Runtime::reference());
+    let econf = EngineConfig {
+        model: "tiny".into(),
+        mode: "base".into(),
+        decode_slots: 1,
+        queue_capacity: 64,
+        policy: PolicyKind::Edf,
+        clock: Clock::manual(),
+        ..Default::default()
+    };
+    let mut eng = Engine::new(rt, econf).unwrap();
+    let greedy = |prompt: Vec<i32>, n: usize, deadline: Duration| {
+        Request::new(prompt, n).with_deadline(deadline).with_sampling(SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            stop_token: None,
+        })
+    };
+    // Three short, loose-deadline prompts arrive first...
+    let shorts: Vec<u64> = (0..3)
+        .map(|i| eng.submit(greedy(vec![10 + i; 4], 1, Duration::from_secs(60))).unwrap())
+        .collect();
+    // ...then a 20-token prompt with the tightest deadline.  Only the
+    // (2, 32) bucket fits it, while the queue's minimum prompt length (4)
+    // elects a 16-token bucket.
+    let long = eng.submit(greedy((1..21).collect(), 1, Duration::from_secs(5))).unwrap();
+    let mut admitted = Vec::new();
+    while eng.has_work() {
+        for ev in eng.step().unwrap() {
+            if let StreamEvent::Admitted { id } = ev {
+                admitted.push(id);
+            }
+        }
+    }
+    assert_eq!(
+        admitted.first().copied(),
+        Some(long),
+        "EDF must admit the tight-deadline request first even though its \
+         prompt needs a larger bucket than the queue head's (shorts={shorts:?})"
+    );
+    assert_eq!(admitted.len(), 4, "everyone is eventually admitted");
+}
+
 /// The sched study itself is byte-reproducible: the acceptance criterion
-/// `road bench-serving --study sched --sim-clock` relies on this.
+/// `road bench-serving --study sched --sim-clock` relies on this.  Each
+/// policy contributes an atomic-prefill row (chunk 0) and a chunked row,
+/// and chunking must strictly lower the ITL-stall p99 under the
+/// long-prompt-injected workload.
 #[test]
 fn sched_study_sim_is_byte_identical_across_runs() {
     let render = || {
         let pts = road::bench::sched_study_sim(48, 6, 8, 9);
-        assert_eq!(pts.len(), PolicyKind::ALL.len());
+        // 4 policies x {atomic, chunked}.
+        assert_eq!(pts.len(), PolicyKind::ALL.len() * 2);
         road::bench::sched_points_json(&pts).to_string_pretty()
     };
     let (a, b) = (render(), render());
     assert_eq!(a, b, "sched study JSON must be byte-identical across runs");
-    // And it is real JSON naming every policy.
+    // And it is real JSON naming every policy twice (chunk 0, then 16).
     let parsed = road::util::json::Json::parse(&a).unwrap();
     let arr = parsed.as_arr().unwrap();
     let names: Vec<&str> =
         arr.iter().map(|p| p.get("policy").unwrap().as_str().unwrap()).collect();
-    assert_eq!(names, vec!["fcfs", "edf", "priority", "fair"]);
-    for p in arr {
-        assert!(p.get("per_adapter").unwrap().as_arr().unwrap().len() > 1);
+    assert_eq!(
+        names,
+        vec!["fcfs", "fcfs", "edf", "edf", "priority", "priority", "fair", "fair"]
+    );
+    for pair in arr.chunks(2) {
+        let (atomic, chunked) = (&pair[0], &pair[1]);
+        assert_eq!(atomic.get("prefill_chunk").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(chunked.get("prefill_chunk").unwrap().as_f64().unwrap(), 16.0);
+        let stall_a = atomic.get("itl_stall_p99_ms").unwrap().as_f64().unwrap();
+        let stall_c = chunked.get("itl_stall_p99_ms").unwrap().as_f64().unwrap();
+        assert!(
+            stall_c < stall_a,
+            "chunked prefill must strictly lower the ITL-stall p99: \
+             atomic {stall_a} vs chunked {stall_c} ({})",
+            atomic.get("policy").unwrap().as_str().unwrap()
+        );
+        for p in pair {
+            assert!(p.get("per_adapter").unwrap().as_arr().unwrap().len() > 1);
+        }
     }
 }

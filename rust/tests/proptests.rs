@@ -567,6 +567,96 @@ fn prop_sched_conservation_under_random_ops() {
 }
 
 #[test]
+fn prop_engine_lost_reservation_is_surfaced_never_silent() {
+    // Conservation through the real engine's admission path under fault
+    // injection: one request's KV reservation is made to vanish between
+    // the gate and lane binding (the invariant breach that used to be a
+    // silent drop — `else { continue }`, no event, a caller waiting
+    // forever).  Every submitted id must still reach EXACTLY one terminal
+    // event, and the victim's is the typed `internal` error.
+    use std::rc::Rc;
+
+    use road::coordinator::engine::{Engine, EngineConfig};
+    use road::coordinator::request::{SamplingParams, StreamEvent};
+    use road::runtime::{BackendKind, Runtime};
+    use road::util::clock::Clock;
+
+    let rt = Rc::new(
+        Runtime::for_backend(BackendKind::Reference, road::Manifest::default_dir()).unwrap(),
+    );
+    let mut rng = Rng::seed_from(prop_seed() ^ 0x105e);
+    // Each case runs a real engine to idle; 10 cases keep the test fast.
+    for case in 0..10 {
+        let clock = Clock::manual();
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                model: "tiny".into(),
+                mode: "base".into(),
+                decode_slots: 2,
+                queue_capacity: 64,
+                clock: clock.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let n = 3 + rng.below(4);
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let plen = 2 + rng.below(6);
+            let prompt: Vec<i32> =
+                (0..plen).map(|p| 1 + ((case * 37 + i * 13 + p * 7) % 200) as i32).collect();
+            let req = Request::new(prompt, 1 + rng.below(4)).with_sampling(SamplingParams {
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+                stop_token: None,
+            });
+            ids.push(eng.submit(req).unwrap());
+        }
+        let victim = ids[rng.below(ids.len())];
+        eng.inject_reservation_loss(victim);
+        // Drive step() directly: run_all treats any Error event as fatal,
+        // and the property under test is that the engine itself keeps
+        // serving the survivors.
+        let mut terminal: std::collections::BTreeMap<u64, String> = Default::default();
+        let mut steps = 0usize;
+        while eng.has_work() {
+            for ev in eng.step().unwrap() {
+                match ev {
+                    StreamEvent::Finished(o) => {
+                        assert!(
+                            terminal.insert(o.id, "finished".into()).is_none(),
+                            "duplicate terminal event for id {}",
+                            o.id
+                        );
+                    }
+                    StreamEvent::Error { id, error } => {
+                        assert!(
+                            terminal.insert(id, error.kind().into()).is_none(),
+                            "duplicate terminal event for id {id}"
+                        );
+                    }
+                    StreamEvent::Admitted { .. } | StreamEvent::Token { .. } => {}
+                }
+            }
+            clock.advance(Duration::from_millis(1));
+            steps += 1;
+            assert!(steps < 500, "engine wedged after injection");
+        }
+        assert_eq!(terminal.len(), n, "a request leaked without a terminal event");
+        for id in &ids {
+            let kind = terminal.get(id).expect("every submitted id gets a terminal event");
+            if *id == victim {
+                assert_eq!(kind, "internal", "victim must die loudly, not silently");
+            } else {
+                assert_eq!(kind, "finished", "survivor {id} must be unaffected");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_sched_rankings_are_permutations() {
     // Every policy's ranking is a permutation of the queue indices —
     // no request can be dropped or double-admitted by ordering alone.
