@@ -74,8 +74,9 @@ pub fn registry() -> Vec<RuleDef> {
         },
         RuleDef {
             name: panic_free::NAME,
-            description: "no unwrap/expect/panic! in non-test coordinator code \
-                          (a malformed peer or lost invariant must not kill a serving thread)",
+            description: "no unwrap/expect/panic! in non-test coordinator or epilogue-kernel \
+                          code (a malformed peer or lost invariant must not kill a serving \
+                          thread)",
             check: panic_free::check,
         },
         RuleDef {

@@ -7,6 +7,11 @@
 //! prevent.  So non-test coordinator code may not `unwrap`/`expect`/
 //! `panic!` (nor `unreachable!`/`todo!`/`unimplemented!`).
 //!
+//! `rust/src/runtime/epilogue.rs` is held to the same bar: its adapter
+//! kernels run inside every decode step of the engine thread, so a
+//! slice panic there (an out-of-range bank slot, a ragged plane) kills
+//! the same thread — shape trouble must surface as typed errors.
+//!
 //! Allowlisted idiom: `.lock().unwrap()` / `.lock().expect(…)` (and the
 //! RwLock `read`/`write` forms).  Lock poisoning means a *different*
 //! thread already panicked while holding the lock; propagating is the
@@ -32,7 +37,9 @@ const LOCK_RECEIVERS: [&str; 3] = [".lock()", ".read()", ".write()"];
 pub fn check(ctx: &RepoContext) -> Vec<Finding> {
     let mut out = Vec::new();
     for file in &ctx.files {
-        if !file.rel.starts_with("rust/src/coordinator/") {
+        let hot = file.rel.starts_with("rust/src/coordinator/")
+            || file.rel == "rust/src/runtime/epilogue.rs";
+        if !hot {
             continue;
         }
         for (i, line) in file.lines.iter().enumerate() {
@@ -49,7 +56,7 @@ pub fn check(ctx: &RepoContext) -> Vec<Finding> {
                         path: file.rel.clone(),
                         line: i + 1,
                         message: format!(
-                            "{} in non-test coordinator code — return a typed \
+                            "{} in non-test hot-path code — return a typed \
                              EngineError / restructure with let-else, or justify a \
                              roadlint allow for a proven invariant",
                             pat.trim_end_matches('(')

@@ -1,0 +1,32 @@
+pub fn bank_row(data: &[f32], s: usize, row: usize) -> &[f32] {
+    data.get(s * row..(s + 1) * row).unwrap()
+}
+
+pub fn slot_for(slots: &[usize], r: usize) -> usize {
+    *slots.get(r).expect("row has a slot")
+}
+
+pub fn rotate_pair(z: &mut [f32]) {
+    if z.len() % 2 != 0 {
+        panic!("odd rotation dim {}", z.len());
+    }
+}
+
+pub fn mode_dispatch(mode: &str) {
+    match mode {
+        "road" | "lora" | "ia3" => {}
+        _ => unreachable!("validated at construction"),
+    }
+}
+
+pub fn guarded_bank(m: &std::sync::Mutex<Vec<f32>>) -> usize {
+    m.lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        Some(1usize).unwrap();
+    }
+}

@@ -121,6 +121,23 @@ fn router_panic_violation_fixture_fails_on_both_fleet_modules() {
     assert_eq!(lines("coordinator/replica.rs"), vec![3], "{hits:?}");
 }
 
+/// The adapter-epilogue kernels (`runtime/epilogue.rs`) run inside every
+/// decode step of the engine thread, so the no-panic rule extends beyond
+/// `coordinator/` to that one runtime file.  Seeded violations in an
+/// epilogue-shaped fixture pin the rule there; the lock idiom and test
+/// code stay allowed.
+#[test]
+fn epilogue_panic_violation_fixture_fails_on_kernel_paths() {
+    let findings = check("epilogue_panic_violation");
+    let hits = of_rule(&findings, "no-panic-hot-path");
+    assert_eq!(hits.len(), 4, "unwrap + expect + panic! + unreachable!: {hits:?}");
+    assert!(hits.iter().all(|f| f.path == "rust/src/runtime/epilogue.rs"), "{hits:?}");
+    let lines: Vec<usize> = hits.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![2, 6, 11, 18]);
+    // Neither the poisoning-propagation idiom nor the test module fires.
+    assert!(findings.iter().all(|f| f.line < 22), "{findings:?}");
+}
+
 #[test]
 fn typed_error_fixture_fails_on_string_results_and_wire_drift() {
     let findings = check("typed_error_violation");

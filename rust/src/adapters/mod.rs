@@ -297,6 +297,18 @@ impl Ia3Adapter {
         }
         Ia3Adapter { per_proj }
     }
+
+    /// Random scaling vectors centered on identity: `1 + N(0, scale)` per
+    /// output channel, mirroring `RoadAdapter::random`'s near-identity init.
+    pub fn random(cfg: &ModelConfigInfo, rng: &mut Rng, scale: f32) -> Ia3Adapter {
+        let mut a = Ia3Adapter::identity(cfg);
+        for s in a.per_proj.values_mut() {
+            for v in s.iter_mut() {
+                *v = 1.0 + rng.normal() * scale;
+            }
+        }
+        a
+    }
 }
 
 /// Any trained adapter.
@@ -356,6 +368,14 @@ impl AdapterBank {
                 let key = format!("blocks.{i}.{proj}");
                 match mode {
                     "road" => {
+                        if d_out % 2 != 0 {
+                            bail!(
+                                "config {}: road mode needs even projection widths, \
+                                 {proj} has d_out {d_out} (the rotation pairs adjacent \
+                                 elements and would silently skip the last one)",
+                                cfg.name
+                            );
+                        }
                         let mut r1 = HostTensor::zeros(vec![n_slots, d_out], crate::tensor::DType::F32);
                         for s in 0..n_slots {
                             r1.write_f32_range(s * d_out, &vec![1.0; d_out]);
@@ -804,6 +824,36 @@ mod tests {
             head_dim: 4,
             n_adapters: 4,
             lora_rank: 2,
+        }
+    }
+
+    #[test]
+    fn road_bank_rejects_odd_projection_width() {
+        // d_ff = 13 makes wgate/wup gather an odd d_out; the rotation pairs
+        // adjacent elements, so construction must fail instead of serving a
+        // bank that silently leaves the last channel unrotated.
+        let mut cfg = tiny_cfg();
+        cfg.d_ff = 13;
+        let err = AdapterBank::new(&cfg, "road", 4).unwrap_err().to_string();
+        assert!(err.contains("even projection widths"), "unexpected error: {err}");
+        assert!(err.contains("d_out 13"), "unexpected error: {err}");
+        // lora / ia3 don't pair elements and stay constructible.
+        assert!(AdapterBank::new(&cfg, "lora", 4).is_ok());
+        assert!(AdapterBank::new(&cfg, "ia3", 4).is_ok());
+    }
+
+    #[test]
+    fn ia3_random_is_near_identity_and_deterministic() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from(7);
+        let a = Ia3Adapter::random(&cfg, &mut rng, 0.05);
+        let mut rng2 = Rng::seed_from(7);
+        let b = Ia3Adapter::random(&cfg, &mut rng2, 0.05);
+        assert_eq!(a.per_proj, b.per_proj);
+        for s in a.per_proj.values() {
+            for &v in s {
+                assert!((v - 1.0).abs() < 1.0, "scale {v} too far from identity");
+            }
         }
     }
 

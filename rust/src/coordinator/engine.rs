@@ -147,6 +147,13 @@ pub struct EngineConfig {
     /// iterations instead of stalling the batch (docs/DESIGN.md §Engine
     /// step).
     pub prefill_chunk_tokens: usize,
+    /// `true` (default): the reference backend drives adapter epilogues
+    /// through the chunked fused kernels in [`crate::runtime::epilogue`].
+    /// `false`: the element-at-a-time scalar oracle (`road serve
+    /// --fused-epilogue=false`).  The two are bitwise-identical for
+    /// road/ia3 and within 1 ulp for lora; the flag exists so that claim
+    /// can be checked end-to-end, not because the outputs should differ.
+    pub fused_epilogue: bool,
 }
 
 impl Default for EngineConfig {
@@ -168,6 +175,7 @@ impl Default for EngineConfig {
             request_id_base: 1,
             request_id_stride: 1,
             prefill_chunk_tokens: 0,
+            fused_epilogue: true,
         }
     }
 }
@@ -242,6 +250,7 @@ impl Engine {
 
     /// Build an engine over explicit parameters (e.g. merged weights).
     pub fn with_params(rt: Rc<Runtime>, econf: EngineConfig, params: ParamStore) -> Result<Engine> {
+        rt.set_fused_epilogue(econf.fused_epilogue);
         let cfg = rt.manifest.config(&econf.model)?.clone();
         let decode_name = format!("decode_{}_{}_b{}", econf.mode, econf.model, econf.decode_slots);
         let decode_exe = rt

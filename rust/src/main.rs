@@ -16,7 +16,7 @@
 //!                  commonsense2|all [--steps 200] [--seeds 3] [--n-eval 256]
 //! road pilot       --study magnitude-angle|disentangle [--steps 100]
 //! road compose     [--steps 200] [--n-eval 32]
-//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched|kvpage|router
+//! road bench-serving          --study merge|tokens|hetero|kv|bank|stream|sched|kvpage|router|adapters
 //!                  [--tokens 64] [--adapters 64] [--bank-slots 4]
 //!                  [--cancel-after 16] [--sim-clock] [--replicas 3]
 //! road bench-train-efficiency [--iters 50]
@@ -132,6 +132,11 @@ fn serve_config(args: &Args, mode: &str, slots: usize) -> Result<EngineConfig> {
         // every decode lane one token and spends the rest of this budget
         // feeding admitted prefills in chunks (0 = atomic prefill).
         prefill_chunk_tokens: args.usize_or("prefill-chunk", 0),
+        // --fused-epilogue=false drops the reference backend to the scalar
+        // adapter-epilogue oracle (same tokens; exists to prove it).
+        fused_epilogue: args
+            .get("fused-epilogue")
+            .map_or(true, |v| matches!(v, "true" | "1" | "yes")),
         ..Default::default()
     })
 }
@@ -621,7 +626,27 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
             md.push_str("\n```\n");
             md
         }
-        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched|kvpage|router)"),
+        "adapters" => {
+            // The fused-epilogue head-to-head always runs on the reference
+            // backend with a manual clock and an analytic cost model, so
+            // two runs are byte-identical (CI diffs the JSON against the
+            // committed artifact).
+            let rt = Rc::new(Runtime::reference());
+            let pts = bench::adapters_study(&rt, seed)?;
+            let json = bench::adapters_points_json(&pts).to_string_pretty();
+            std::fs::create_dir_all("results")?;
+            std::fs::write("results/BENCH_adapters.json", format!("{json}\n"))?;
+            println!("[saved results/BENCH_adapters.json]");
+            let mut md = bench::render_adapters_points(
+                "Adapter epilogues: fused RoAd vs LoRA-bmm vs ia3 across hetero batches",
+                &pts,
+            );
+            md.push_str("\n```json\n");
+            md.push_str(&json);
+            md.push_str("\n```\n");
+            md
+        }
+        s => bail!("unknown study {s} (merge|tokens|hetero|kv|bank|stream|sched|kvpage|router|adapters)"),
     };
     println!("{md}");
     save_result(&format!("fig4_{study}"), &md)?;

@@ -185,13 +185,8 @@ pub fn param_specs(manifest: &Manifest, config: &str) -> Result<Vec<(String, Vec
 /// (r1, r2): z = r1*h + r2*pairswap(h).  Host-side oracle used by merging
 /// and by the runtime tests.
 pub fn road_rotate_vec(h: &[f32], r1: &[f32], r2: &[f32]) -> Vec<f32> {
-    let d = h.len();
-    let mut z = vec![0f32; d];
-    for k in 0..d / 2 {
-        let (e, o) = (2 * k, 2 * k + 1);
-        z[e] = r1[e] * h[e] - r2[e] * h[o];
-        z[o] = r2[o] * h[e] + r1[o] * h[o];
-    }
+    let mut z = h.to_vec();
+    crate::runtime::epilogue::rotate_row_fused(&mut z, r1, r2);
     z
 }
 
@@ -202,17 +197,12 @@ pub fn road_rotate_vec(h: &[f32], r1: &[f32], r2: &[f32]) -> Vec<f32> {
 ///   W'[:, 2k+1] = r2[2k+1] * W[:, 2k] + r1[2k+1] * W[:, 2k+1]
 pub fn road_merge_weight(w: &HostTensor, r1: &[f32], r2: &[f32]) -> HostTensor {
     let (d_in, d_out) = (w.shape[0], w.shape[1]);
-    let wv = w.as_f32();
-    let mut out = vec![0f32; d_in * d_out];
+    let mut out = w.as_f32();
+    // Each weight row's column pairs transform exactly like an activation
+    // row under Eq. 4, so the merge shares the serving rotation kernel
+    // (one source of truth for the pair arithmetic).
     for i in 0..d_in {
-        let row = i * d_out;
-        for k in 0..d_out / 2 {
-            let (e, o) = (2 * k, 2 * k + 1);
-            let we = wv[row + e];
-            let wo = wv[row + o];
-            out[row + e] = r1[e] * we - r2[e] * wo;
-            out[row + o] = r2[o] * we + r1[o] * wo;
-        }
+        crate::runtime::epilogue::rotate_row_fused(&mut out[i * d_out..(i + 1) * d_out], r1, r2);
     }
     HostTensor::f32(w.shape.clone(), out)
 }

@@ -1,0 +1,431 @@
+//! Adapter epilogues for the reference backend: the per-row bank math
+//! that runs after `z = x W + b` (paper Eq. 4 for RoAd, the bmm chain for
+//! LoRA, the per-channel scale for (IA)³).
+//!
+//! # Layout contract
+//!
+//! Bank tensors arrive as the stacked `[n_slots, ...]` device-bank shapes
+//! ([`crate::adapters::AdapterBank`]): one contiguous row per slot, RoAd's
+//! `r1`/`r2` as two parallel `[n_slots, d_out]` planes.  [`BankView`]
+//! wraps one plane and is the *only* way the kernels read it — every row
+//! access is bounds-checked (`slot * row .. (slot + 1) * row`) and an
+//! out-of-range slot is a typed shape error, never a slice panic in the
+//! decode hot path.
+//!
+//! Batch rows are processed grouped by ascending bank slot
+//! ([`slot_order`]): all rows sharing an adapter read its bank rows
+//! back-to-back, so the gather over the bank is one forward linear walk
+//! instead of a random walk per batch row.  Rows are independent, so the
+//! visit order cannot change any output bit.
+//!
+//! # Fused vs scalar
+//!
+//! Each epilogue has two drivers over the *same* per-element primitives
+//! ([`rot2`], [`axpy1`], plain `*`): a scalar oracle (one pair/element at
+//! a time, natural order — `--fused-epilogue=false`) and a fused kernel
+//! that walks `chunks_exact(8)` blocks so the autovectorizer can keep
+//! eight lanes busy (no nightly `std::simd`).  Because both paths execute
+//! identical arithmetic per element — `mul_add` lowers to the IEEE-754
+//! correctly-rounded fused multiply-add — fused output is bitwise equal
+//! to scalar output for road/ia3 and for this lora accumulation order
+//! (pinned by the `prop_fused_epilogue_matches_scalar` property test).
+//!
+//! The kernels are total: they process whole pairs and never index past
+//! any slice (roadlint's `no-panic-hot-path` covers this module).  Odd
+//! rotation dims are rejected earlier, at bank/entry construction.
+
+use anyhow::{bail, Result};
+
+/// Bounds-checked view over one stacked `[n_slots, row]` bank plane.
+pub struct BankView<'a> {
+    key: &'a str,
+    data: &'a [f32],
+    row: usize,
+    n_slots: usize,
+}
+
+impl<'a> BankView<'a> {
+    /// Wrap `data` as `n_slots = data.len() / row` contiguous slot rows.
+    /// A plane that is not a whole number of rows is a shape error.
+    pub fn new(key: &'a str, data: &'a [f32], row: usize) -> Result<BankView<'a>> {
+        if row == 0 {
+            bail!("adapter bank {key}: zero-length slot rows");
+        }
+        if data.len() % row != 0 {
+            bail!(
+                "adapter bank {key}: {} elements is not a whole number of {row}-element rows",
+                data.len()
+            );
+        }
+        Ok(BankView { key, data, row, n_slots: data.len() / row })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Slot `s`'s row, `s * row .. (s + 1) * row`.  A slot at or past the
+    /// bank end is a typed out-of-range error, not a slice panic.
+    pub fn row(&self, s: usize) -> Result<&'a [f32]> {
+        match self.data.get(s * self.row..(s + 1) * self.row) {
+            Some(r) => Ok(r),
+            None => bail!(
+                "adapter bank {}: slot {s} out of range ({} slots)",
+                self.key,
+                self.n_slots
+            ),
+        }
+    }
+}
+
+/// Batch visit order grouped by ascending bank slot (stable within a
+/// slot), making the bank gather a single linear walk.
+fn slot_order(slots: &[usize]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..slots.len()).collect();
+    order.sort_by_key(|&r| slots[r]);
+    order
+}
+
+/// Shape check shared by the batched entry points: `z` must be exactly
+/// one `d_out` row per batch slot.
+fn check_rows(what: &str, z_len: usize, slots: &[usize], d_out: usize) -> Result<()> {
+    if d_out == 0 || z_len != slots.len() * d_out {
+        bail!(
+            "{what} epilogue: {z_len} output elements for {} rows of {d_out}",
+            slots.len()
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Per-element primitives — the single definition both drivers execute
+// ---------------------------------------------------------------------------
+
+/// One 2-element rotation (Eq. 4): `z_e = r1_e·h_e − r2_e·h_o`,
+/// `z_o = r2_o·h_e + r1_o·h_o`, each with one fused rounding.
+#[inline(always)]
+fn rot2(r1e: f32, r2e: f32, r1o: f32, r2o: f32, he: f32, ho: f32) -> (f32, f32) {
+    (r2e.mul_add(-ho, r1e * he), r2o.mul_add(he, r1o * ho))
+}
+
+/// One fused accumulate: `z += a·b`.
+#[inline(always)]
+fn axpy1(z: f32, a: f32, b: f32) -> f32 {
+    a.mul_add(b, z)
+}
+
+// ---------------------------------------------------------------------------
+// Row kernels: scalar oracle + chunked fused driver per epilogue
+// ---------------------------------------------------------------------------
+
+/// Scalar rotation oracle: one pair at a time in natural order.  Total —
+/// processes the whole pairs the three slices share; a trailing odd
+/// element (rejected upstream) is left untouched rather than panicked on.
+pub fn rotate_row_scalar(z: &mut [f32], r1: &[f32], r2: &[f32]) {
+    let pairs = (z.len().min(r1.len()).min(r2.len())) / 2;
+    for k in 0..pairs {
+        let (e, o) = (2 * k, 2 * k + 1);
+        let (ze, zo) = rot2(r1[e], r2[e], r1[o], r2[o], z[e], z[o]);
+        z[e] = ze;
+        z[o] = zo;
+    }
+}
+
+/// Fused rotation: four pairs per 8-lane chunk (`chunks_exact(8)` +
+/// `mul_add`, autovectorizer-friendly), remainder through the scalar
+/// oracle.  Same [`rot2`] per pair, so bitwise equal to the scalar path.
+pub fn rotate_row_fused(z: &mut [f32], r1: &[f32], r2: &[f32]) {
+    let n = (z.len().min(r1.len()).min(r2.len()) / 2) * 2;
+    let (z, _odd_tail) = z.split_at_mut(n);
+    let mut zc = z.chunks_exact_mut(8);
+    let mut ac = r1[..n].chunks_exact(8);
+    let mut bc = r2[..n].chunks_exact(8);
+    for ((zv, av), bv) in (&mut zc).zip(&mut ac).zip(&mut bc) {
+        for k in 0..4 {
+            let (e, o) = (2 * k, 2 * k + 1);
+            let (ze, zo) = rot2(av[e], bv[e], av[o], bv[o], zv[e], zv[o]);
+            zv[e] = ze;
+            zv[o] = zo;
+        }
+    }
+    rotate_row_scalar(zc.into_remainder(), ac.remainder(), bc.remainder());
+}
+
+fn scale_row_scalar(z: &mut [f32], s: &[f32]) {
+    for (zv, &sv) in z.iter_mut().zip(s) {
+        *zv *= sv;
+    }
+}
+
+fn scale_row_fused(z: &mut [f32], s: &[f32]) {
+    let n = z.len().min(s.len());
+    let mut zc = z[..n].chunks_exact_mut(8);
+    let mut sc = s[..n].chunks_exact(8);
+    for (zv, sv) in (&mut zc).zip(&mut sc) {
+        for k in 0..8 {
+            zv[k] *= sv[k];
+        }
+    }
+    scale_row_scalar(zc.into_remainder(), sc.remainder());
+}
+
+fn axpy_row_scalar(z: &mut [f32], a: f32, b: &[f32]) {
+    for (zv, &bv) in z.iter_mut().zip(b) {
+        *zv = axpy1(*zv, a, bv);
+    }
+}
+
+fn axpy_row_fused(z: &mut [f32], a: f32, b: &[f32]) {
+    let n = z.len().min(b.len());
+    let mut zc = z[..n].chunks_exact_mut(8);
+    let mut bc = b[..n].chunks_exact(8);
+    for (zv, bv) in (&mut zc).zip(&mut bc) {
+        for k in 0..8 {
+            zv[k] = axpy1(zv[k], a, bv[k]);
+        }
+    }
+    axpy_row_scalar(zc.into_remainder(), a, bc.remainder());
+}
+
+// ---------------------------------------------------------------------------
+// Batched entry points (one call per adapted projection)
+// ---------------------------------------------------------------------------
+
+/// RoAd epilogue over a batch: rotate each `d_out` row of `z` by its
+/// slot's `(r1, r2)` bank rows (Eq. 4, slot-grouped gather).
+pub fn road(
+    z: &mut [f32],
+    d_out: usize,
+    slots: &[usize],
+    r1: &BankView,
+    r2: &BankView,
+    fused: bool,
+) -> Result<()> {
+    check_rows("road", z.len(), slots, d_out)?;
+    if d_out % 2 != 0 {
+        bail!("road epilogue: odd rotation dim {d_out} (rejected at construction)");
+    }
+    for r in slot_order(slots) {
+        let (r1s, r2s) = (r1.row(slots[r])?, r2.row(slots[r])?);
+        let zr = &mut z[r * d_out..(r + 1) * d_out];
+        if fused {
+            rotate_row_fused(zr, r1s, r2s);
+        } else {
+            rotate_row_scalar(zr, r1s, r2s);
+        }
+    }
+    Ok(())
+}
+
+/// (IA)³ epilogue over a batch: scale each row of `z` by its slot's `s`
+/// bank row.
+pub fn ia3(
+    z: &mut [f32],
+    d_out: usize,
+    slots: &[usize],
+    s: &BankView,
+    fused: bool,
+) -> Result<()> {
+    check_rows("ia3", z.len(), slots, d_out)?;
+    for r in slot_order(slots) {
+        let ss = s.row(slots[r])?;
+        let zr = &mut z[r * d_out..(r + 1) * d_out];
+        if fused {
+            scale_row_fused(zr, ss);
+        } else {
+            scale_row_scalar(zr, ss);
+        }
+    }
+    Ok(())
+}
+
+/// LoRA epilogue over a batch: `z += (x B) A` per row with the slot's
+/// `[d_in, rank]` / `[rank, d_out]` bank rows — the bmm-chain baseline.
+/// The rank-vector `mid = x B` accumulates identically on both paths;
+/// only the `z += mid A` drive differs in iteration shape.
+#[allow(clippy::too_many_arguments)]
+pub fn lora(
+    z: &mut [f32],
+    x: &[f32],
+    d_in: usize,
+    d_out: usize,
+    rank: usize,
+    slots: &[usize],
+    lb: &BankView,
+    la: &BankView,
+    fused: bool,
+) -> Result<()> {
+    check_rows("lora", z.len(), slots, d_out)?;
+    if rank == 0 || x.len() != slots.len() * d_in {
+        bail!(
+            "lora epilogue: {} input elements for {} rows of {d_in} at rank {rank}",
+            x.len(),
+            slots.len()
+        );
+    }
+    let mut mid = vec![0f32; rank];
+    for r in slot_order(slots) {
+        let (lbs, las) = (lb.row(slots[r])?, la.row(slots[r])?);
+        if lbs.len() < d_in * rank || las.len() < rank * d_out {
+            bail!("lora epilogue: bank rows shorter than [{d_in},{rank}]x[{rank},{d_out}]");
+        }
+        let xr = &x[r * d_in..(r + 1) * d_in];
+        mid.fill(0.0);
+        for (i, &xv) in xr.iter().enumerate() {
+            let lrow = &lbs[i * rank..(i + 1) * rank];
+            for (m, &bv) in mid.iter_mut().zip(lrow) {
+                *m = axpy1(*m, xv, bv);
+            }
+        }
+        let zr = &mut z[r * d_out..(r + 1) * d_out];
+        for (t, &mv) in mid.iter().enumerate() {
+            let arow = &las[t * d_out..(t + 1) * d_out];
+            if fused {
+                axpy_row_fused(zr, mv, arow);
+            } else {
+                axpy_row_scalar(zr, mv, arow);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bank(rng: &mut Rng, n_slots: usize, row: usize) -> Vec<f32> {
+        rng.normal_vec(n_slots * row, 0.5)
+    }
+
+    #[test]
+    fn bank_view_bounds() {
+        let data = vec![0f32; 12];
+        let v = BankView::new("t.r1", &data, 4).unwrap();
+        assert_eq!(v.n_slots(), 3);
+        assert_eq!(v.row(2).unwrap().len(), 4);
+        let err = v.row(3).unwrap_err().to_string();
+        assert!(err.contains("slot 3 out of range"), "{err}");
+        assert!(err.contains("t.r1"), "error names the bank key: {err}");
+        // Ragged planes and zero-length rows are shape errors up front.
+        assert!(BankView::new("t", &data, 5).is_err());
+        assert!(BankView::new("t", &data, 0).is_err());
+    }
+
+    #[test]
+    fn out_of_range_slot_is_a_typed_error_not_a_panic() {
+        let mut rng = Rng::seed_from(3);
+        let (d, n_slots) = (8usize, 2usize);
+        let r1 = bank(&mut rng, n_slots, d);
+        let r2 = bank(&mut rng, n_slots, d);
+        let mut z = rng.normal_vec(2 * d, 1.0);
+        let r1v = BankView::new("p.r1", &r1, d).unwrap();
+        let r2v = BankView::new("p.r2", &r2, d).unwrap();
+        for fused in [false, true] {
+            let err = road(&mut z, d, &[0, 99], &r1v, &r2v, fused).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{err}");
+        }
+        let sv = BankView::new("p.s", &r1, d).unwrap();
+        assert!(ia3(&mut z, d, &[99, 0], &sv, true).is_err());
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let data = vec![0f32; 16];
+        let v = BankView::new("t", &data, 8).unwrap();
+        let mut z = vec![0f32; 8];
+        // One row of 8 against two slots' worth of z: shape error.
+        assert!(road(&mut z, 8, &[0, 0], &v, &v, true).is_err());
+        // Odd d_out is a typed error here too (and rejected at
+        // construction before any serving path reaches this).
+        let v3 = BankView::new("t", &data[..6], 3).unwrap();
+        let mut z3 = vec![0f32; 3];
+        assert!(road(&mut z3, 3, &[0], &v3, &v3, true).is_err());
+    }
+
+    #[test]
+    fn fused_matches_scalar_bitwise_across_remainders() {
+        let mut rng = Rng::seed_from(11);
+        // 8k and 8k+2 widths: full chunks and a 2-element remainder.
+        for d in [2usize, 6, 8, 10, 16, 18, 24, 26] {
+            let r1 = bank(&mut rng, 3, d);
+            let r2 = bank(&mut rng, 3, d);
+            let slots = [2usize, 0, 1, 1];
+            let z0 = rng.normal_vec(slots.len() * d, 1.0);
+            let r1v = BankView::new("k.r1", &r1, d).unwrap();
+            let r2v = BankView::new("k.r2", &r2, d).unwrap();
+            let (mut zs, mut zf) = (z0.clone(), z0.clone());
+            road(&mut zs, d, &slots, &r1v, &r2v, false).unwrap();
+            road(&mut zf, d, &slots, &r1v, &r2v, true).unwrap();
+            assert_eq!(
+                zs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                zf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "road d={d}"
+            );
+            let sv = BankView::new("k.s", &r1, d).unwrap();
+            let (mut zs, mut zf) = (z0.clone(), z0.clone());
+            ia3(&mut zs, d, &slots, &sv, false).unwrap();
+            ia3(&mut zf, d, &slots, &sv, true).unwrap();
+            assert_eq!(zs, zf, "ia3 d={d}");
+        }
+    }
+
+    #[test]
+    fn rotation_matches_naive_expansion() {
+        // Against the hand-written Eq. 4 (separate roundings) the kernel
+        // agrees to fp tolerance; identity/quarter-turn are exact.
+        let mut z = vec![1.0f32, 2.0, 3.0, 4.0];
+        rotate_row_fused(&mut z, &[1.0; 4], &[0.0; 4]);
+        assert_eq!(z, vec![1.0, 2.0, 3.0, 4.0]);
+        rotate_row_scalar(&mut z, &[0.0; 4], &[1.0; 4]);
+        assert_eq!(z, vec![-2.0, 1.0, -4.0, 3.0]);
+        let mut rng = Rng::seed_from(7);
+        let d = 10usize;
+        let (r1, r2) = (bank(&mut rng, 1, d), bank(&mut rng, 1, d));
+        let h = rng.normal_vec(d, 1.0);
+        let mut z = h.clone();
+        rotate_row_fused(&mut z, &r1, &r2);
+        for k in 0..d / 2 {
+            let (e, o) = (2 * k, 2 * k + 1);
+            let ze = r1[e] * h[e] - r2[e] * h[o];
+            let zo = r2[o] * h[e] + r1[o] * h[o];
+            assert!((z[e] - ze).abs() < 1e-5 && (z[o] - zo).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lora_fused_within_ulp_of_scalar() {
+        let mut rng = Rng::seed_from(23);
+        let (d_in, d_out, rank) = (6usize, 10usize, 3usize);
+        let lb = bank(&mut rng, 2, d_in * rank);
+        let la = bank(&mut rng, 2, rank * d_out);
+        let x = rng.normal_vec(3 * d_in, 1.0);
+        let z0 = rng.normal_vec(3 * d_out, 1.0);
+        let slots = [1usize, 0, 1];
+        let lbv = BankView::new("k.lb", &lb, d_in * rank).unwrap();
+        let lav = BankView::new("k.la", &la, rank * d_out).unwrap();
+        let (mut zs, mut zf) = (z0.clone(), z0);
+        lora(&mut zs, &x, d_in, d_out, rank, &slots, &lbv, &lav, false).unwrap();
+        lora(&mut zf, &x, d_in, d_out, rank, &slots, &lbv, &lav, true).unwrap();
+        for (a, b) in zs.iter().zip(&zf) {
+            let ulps = (a.to_bits() as i64 - b.to_bits() as i64).abs();
+            assert!(ulps <= 1, "{a} vs {b}: {ulps} ulps");
+        }
+    }
+
+    #[test]
+    fn nan_and_zero_weights_propagate() {
+        // 0 · NaN must stay NaN through every path (no sparsity skips).
+        let r1 = vec![0.0f32, 0.0];
+        let r2 = vec![f32::NAN, f32::NAN];
+        let mut z = vec![0.0f32, 0.0];
+        rotate_row_fused(&mut z, &r1, &r2);
+        assert!(z.iter().all(|v| v.is_nan()), "{z:?}");
+        let mut z = vec![1.0f32, 2.0, 3.0, 4.0];
+        axpy_row_scalar(&mut z, 0.0, &[f32::NAN, 1.0, f32::NAN, 1.0]);
+        assert!(z[0].is_nan() && z[2].is_nan(), "{z:?}");
+        assert_eq!((z[1], z[3]), (2.0, 4.0));
+    }
+}

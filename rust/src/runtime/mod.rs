@@ -55,7 +55,7 @@
 //! happens at [`Runtime`] construction (`road serve --backend ref`,
 //! `EngineConfig::backend`).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
@@ -65,6 +65,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::manifest::{EntryInfo, Manifest};
 use crate::tensor::{DType, HostTensor};
 
+pub mod epilogue;
 pub mod reference;
 
 /// Which execution backend a [`Runtime`] (and its [`Executable`]s) uses.
@@ -385,6 +386,11 @@ pub struct Runtime {
     cache: RefCell<HashMap<String, Rc<Executable>>>,
     /// Cumulative compile time (reported by `road stats`).
     pub total_compile: RefCell<std::time::Duration>,
+    /// Reference-backend adapter epilogues: fused chunked kernel (default)
+    /// or the scalar oracle (`road serve --fused-epilogue=false`).  Shared
+    /// with every loaded [`reference::RefEntry`] — including already-cached
+    /// ones — so flipping it re-routes the whole runtime.
+    fused_epilogue: Rc<Cell<bool>>,
 }
 
 impl Runtime {
@@ -404,7 +410,20 @@ impl Runtime {
             backend,
             cache: RefCell::new(HashMap::new()),
             total_compile: RefCell::new(Default::default()),
+            fused_epilogue: Rc::new(Cell::new(true)),
         })
+    }
+
+    /// Select the reference backend's adapter-epilogue path: `true` = the
+    /// fused chunked kernel, `false` = the scalar oracle.  Affects every
+    /// entry this runtime has loaded or will load; a no-op on PJRT.
+    pub fn set_fused_epilogue(&self, fused: bool) {
+        self.fused_epilogue.set(fused);
+    }
+
+    /// Current epilogue selection (reference backend).
+    pub fn fused_epilogue(&self) -> bool {
+        self.fused_epilogue.get()
     }
 
     pub fn from_default_artifacts() -> Result<Runtime> {
@@ -466,7 +485,9 @@ impl Runtime {
             }
             BackendKind::Reference => {
                 let cfg = self.manifest.config(&info.config)?.clone();
-                ExecImpl::Reference(reference::RefEntry::from_info(&info, &cfg)?)
+                let mut entry = reference::RefEntry::from_info(&info, &cfg)?;
+                entry.attach_fused(self.fused_epilogue.clone());
+                ExecImpl::Reference(entry)
             }
         };
         *self.total_compile.borrow_mut() += t0.elapsed();

@@ -30,11 +30,14 @@
 //! serve the same model.
 
 use std::borrow::Cow;
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::epilogue::{self, BankView};
 use crate::manifest::{EntryInfo, IoSpec, Manifest, ModelConfigInfo};
 use crate::model::{proj_dims, PROJS};
 use crate::tensor::{DType, HostTensor};
@@ -335,6 +338,10 @@ pub struct RefEntry {
     cfg: ModelConfigInfo,
     kind: RefKind,
     mode: String,
+    /// Epilogue path selector shared with the owning [`super::Runtime`]
+    /// ([`RefEntry::attach_fused`]): fused chunked kernel when true, the
+    /// scalar oracle when false.
+    fused: Rc<Cell<bool>>,
 }
 
 impl RefEntry {
@@ -357,7 +364,36 @@ impl RefEntry {
         if !MODES.contains(&mode.as_str()) {
             bail!("reference backend does not implement adapter mode {mode:?} ({})", info.name);
         }
-        Ok(RefEntry { info: info.clone(), cfg: cfg.clone(), kind, mode })
+        // RoAd rotates element *pairs*: an odd projection width would
+        // silently leave the last element unrotated, so it is rejected
+        // here — at entry construction — not discovered mid-decode.
+        if mode == "road" {
+            for proj in PROJS {
+                let (_, d_out) = proj_dims(cfg, proj);
+                if d_out % 2 != 0 {
+                    bail!(
+                        "config {}: road mode needs even projection widths, {proj} has d_out \
+                         {d_out} ({})",
+                        cfg.name,
+                        info.name
+                    );
+                }
+            }
+        }
+        Ok(RefEntry {
+            info: info.clone(),
+            cfg: cfg.clone(),
+            kind,
+            mode,
+            fused: Rc::new(Cell::new(true)),
+        })
+    }
+
+    /// Share the runtime's epilogue selector with this entry (called by
+    /// [`super::Runtime::load`]; a standalone `from_info` keeps its own
+    /// cell, defaulting to fused).
+    pub fn attach_fused(&mut self, fused: Rc<Cell<bool>>) {
+        self.fused = fused;
     }
 
     /// Execute the entry on host tensors in positional signature order.
@@ -381,7 +417,13 @@ impl RefEntry {
                 g => bail!("entry {}: unexpected input group {g}", self.info.name),
             };
         }
-        let fwd = Fwd { cfg: &self.cfg, mode: &self.mode, params: &params, adapters: &adapters };
+        let fwd = Fwd {
+            cfg: &self.cfg,
+            mode: &self.mode,
+            params: &params,
+            adapters: &adapters,
+            fused: self.fused.get(),
+        };
         let datum = |name: &str| {
             data.get(name)
                 .copied()
@@ -464,6 +506,9 @@ struct Fwd<'a> {
     mode: &'a str,
     params: &'a BTreeMap<&'a str, &'a HostTensor>,
     adapters: &'a BTreeMap<&'a str, &'a HostTensor>,
+    /// Fused chunked epilogue kernels vs the scalar oracle
+    /// ([`crate::runtime::epilogue`]); both produce identical bits.
+    fused: bool,
 }
 
 impl Fwd<'_> {
@@ -498,10 +543,10 @@ impl Fwd<'_> {
             let xr = &x[r * d_in..(r + 1) * d_in];
             let zr = &mut z[r * d_out..(r + 1) * d_out];
             zr.copy_from_slice(&bias);
+            // No `xv == 0.0` shortcut: 0·NaN / 0·inf must propagate (IEEE
+            // semantics, and PJRT agreement), and timing must not depend
+            // on activation sparsity.
             for (i, &xv) in xr.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
                 let wrow = &w[i * d_out..(i + 1) * d_out];
                 for j in 0..d_out {
                     zr[j] += xv * wrow[j];
@@ -513,62 +558,28 @@ impl Fwd<'_> {
             "road" => {
                 // Eq. 4: z' = r1 ⊙ z + r2 ⊙ pairswap(z), adapter chosen by
                 // the row's bank slot (a gather of two vectors).
-                let r1 = self.a(&format!("{key}.r1"))?;
-                let r2 = self.a(&format!("{key}.r2"))?;
-                for r in 0..rows {
-                    let s = slots[r];
-                    let (r1s, r2s) = (&r1[s * d_out..], &r2[s * d_out..]);
-                    let zr = &mut z[r * d_out..(r + 1) * d_out];
-                    for k in 0..d_out / 2 {
-                        let (e, o) = (2 * k, 2 * k + 1);
-                        let (he, ho) = (zr[e], zr[o]);
-                        zr[e] = r1s[e] * he - r2s[e] * ho;
-                        zr[o] = r2s[o] * he + r1s[o] * ho;
-                    }
-                }
+                let (k1, k2) = (format!("{key}.r1"), format!("{key}.r2"));
+                let (r1, r2) = (self.a(&k1)?, self.a(&k2)?);
+                let r1v = BankView::new(&k1, &r1, d_out)?;
+                let r2v = BankView::new(&k2, &r2, d_out)?;
+                epilogue::road(&mut z, d_out, slots, &r1v, &r2v, self.fused)?;
                 Ok(z)
             }
             "lora" => {
                 // z' = z + (x B) A — the bmm-chain baseline of Figure 4.
-                let lb = self.a(&format!("{key}.lb"))?;
-                let la = self.a(&format!("{key}.la"))?;
+                let (kb, ka) = (format!("{key}.lb"), format!("{key}.la"));
+                let (lb, la) = (self.a(&kb)?, self.a(&ka)?);
                 let rank = self.cfg.lora_rank;
-                for r in 0..rows {
-                    let s = slots[r];
-                    let lbs = &lb[s * d_in * rank..(s + 1) * d_in * rank];
-                    let las = &la[s * rank * d_out..(s + 1) * rank * d_out];
-                    let xr = &x[r * d_in..(r + 1) * d_in];
-                    let mut mid = vec![0f32; rank];
-                    for (i, &xv) in xr.iter().enumerate() {
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        for (t, m) in mid.iter_mut().enumerate() {
-                            *m += xv * lbs[i * rank + t];
-                        }
-                    }
-                    let zr = &mut z[r * d_out..(r + 1) * d_out];
-                    for (t, &mv) in mid.iter().enumerate() {
-                        if mv == 0.0 {
-                            continue;
-                        }
-                        let larow = &las[t * d_out..(t + 1) * d_out];
-                        for j in 0..d_out {
-                            zr[j] += mv * larow[j];
-                        }
-                    }
-                }
+                let lbv = BankView::new(&kb, &lb, d_in * rank)?;
+                let lav = BankView::new(&ka, &la, rank * d_out)?;
+                epilogue::lora(&mut z, x, d_in, d_out, rank, slots, &lbv, &lav, self.fused)?;
                 Ok(z)
             }
             "ia3" => {
-                let sb = self.a(&format!("{key}.s"))?;
-                for r in 0..rows {
-                    let ss = &sb[slots[r] * d_out..];
-                    let zr = &mut z[r * d_out..(r + 1) * d_out];
-                    for j in 0..d_out {
-                        zr[j] *= ss[j];
-                    }
-                }
+                let ks = format!("{key}.s");
+                let sb = self.a(&ks)?;
+                let sv = BankView::new(&ks, &sb, d_out)?;
+                epilogue::ia3(&mut z, d_out, slots, &sv, self.fused)?;
                 Ok(z)
             }
             m => bail!("reference backend: unsupported mode {m}"),
@@ -1332,5 +1343,68 @@ mod tests {
         let mut info2 = synthetic_manifest().entries["decode_road_tiny_b2"].clone();
         info2.mode = Some("oft".into());
         assert!(RefEntry::from_info(&info2, &cfg).is_err());
+    }
+
+    #[test]
+    fn road_entries_reject_odd_projection_widths_at_construction() {
+        // RoAd pairs adjacent output elements; a config with an odd d_ff
+        // would silently leave the last w1/w3 column unrotated.  The entry
+        // constructor refuses it up front, before any decode step runs.
+        let mut odd = tiny();
+        odd.d_ff = 13;
+        let info = synthetic_manifest().entries["decode_road_tiny_b2"].clone();
+        let err = RefEntry::from_info(&info, &odd).unwrap_err().to_string();
+        assert!(err.contains("even projection widths"), "{err}");
+        assert!(err.contains("d_out 13"), "error names the odd width: {err}");
+        // The same config is fine for the non-rotating modes.
+        for mode in ["base", "lora", "ia3"] {
+            let i = synthetic_manifest().entries[&format!("decode_{mode}_tiny_b2")].clone();
+            assert!(RefEntry::from_info(&i, &odd).is_ok(), "mode {mode}");
+        }
+    }
+
+    /// Tiny hand-built [`Fwd`] over one 1x2 linear layer, for kernel-level
+    /// assertions that need full control of weights and banks.
+    fn micro_fwd<'a>(
+        mode: &'a str,
+        params: &'a BTreeMap<&'a str, &'a HostTensor>,
+        adapters: &'a BTreeMap<&'a str, &'a HostTensor>,
+        cfg: &'a ModelConfigInfo,
+    ) -> Fwd<'a> {
+        Fwd { cfg, mode, params, adapters, fused: true }
+    }
+
+    #[test]
+    fn zero_activation_times_nan_weight_propagates_through_linear() {
+        // The old `if xv == 0.0 { continue; }` sparsity skip made
+        // 0 · NaN = 0 — diverging from IEEE and from PJRT, and masking
+        // poisoned weights exactly when an activation happened to be zero.
+        let cfg = tiny();
+        let w = HostTensor::f32(vec![1, 2], vec![f32::NAN, 3.0]);
+        let b = HostTensor::f32(vec![2], vec![1.0, 1.0]);
+        let params = BTreeMap::from([("wq", &w), ("wq.bias", &b)]);
+        let adapters = BTreeMap::new();
+        let fwd = micro_fwd("base", &params, &adapters, &cfg);
+        let z = fwd.linear("wq", &[0.0], 1, &[0], 1, 2).unwrap();
+        assert!(z[0].is_nan(), "0 * NaN must stay NaN, got {}", z[0]);
+        assert_eq!(z[1], 1.0, "bias + 0*3.0");
+    }
+
+    #[test]
+    fn out_of_range_bank_slot_is_a_typed_error_not_a_panic() {
+        // One-slot identity bank, row asks for slot 7: the epilogue's
+        // bounds-checked BankView turns that into an error naming the
+        // bank key instead of a slice panic mid-decode.
+        let cfg = tiny();
+        let w = HostTensor::f32(vec![1, 2], vec![1.0, 1.0]);
+        let b = HostTensor::f32(vec![2], vec![0.0, 0.0]);
+        let r1 = HostTensor::f32(vec![1, 2], vec![1.0, 1.0]);
+        let r2 = HostTensor::f32(vec![1, 2], vec![0.0, 0.0]);
+        let params = BTreeMap::from([("wq", &w), ("wq.bias", &b)]);
+        let adapters = BTreeMap::from([("wq.r1", &r1), ("wq.r2", &r2)]);
+        let fwd = micro_fwd("road", &params, &adapters, &cfg);
+        let err = fwd.linear("wq", &[1.0], 1, &[7], 1, 2).unwrap_err().to_string();
+        assert!(err.contains("slot 7 out of range"), "{err}");
+        assert!(err.contains("wq.r1"), "error names the bank key: {err}");
     }
 }

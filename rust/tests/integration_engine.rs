@@ -13,7 +13,7 @@
 use std::rc::Rc;
 use std::time::Duration;
 
-use road::adapters::{Adapter, RoadAdapter};
+use road::adapters::{Adapter, Ia3Adapter, LoraAdapter, RoadAdapter};
 use road::coordinator::engine::{Engine, EngineConfig};
 use road::coordinator::queue::EngineError;
 use road::coordinator::request::{FinishReason, Request, SamplingParams, StreamEvent};
@@ -934,6 +934,70 @@ fn bank_admission_stall_counts_one_transition_not_retries() {
     assert_eq!(eng.metrics.bank_admission_stalls, 1, "bank stall counter inflated by retries");
     assert_eq!(eng.metrics.kv_admission_stalls, 0, "the block gate never bound here");
     assert_eq!(eng.metrics.bank_evictions, 1, "b pages in over a's slot once it drains");
+}
+
+/// The fused epilogue is a pure iteration-shape change: serving a
+/// heterogeneous-adapter batch (two distinct adapters plus an identity
+/// lane) with `fused_epilogue: false` (the scalar oracle) must produce
+/// token-identical greedy streams to the fused default, end to end
+/// through admission, prefill, and banked decode — for every adapter
+/// mode.  Reference backend: the flag only steers the reference kernels.
+#[test]
+fn fused_epilogue_token_identical_to_scalar_oracle() {
+    let rt = ref_rt();
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let mk_reqs = || {
+        vec![
+            greedy(&[10, 20, 30], 8).with_adapter("a"),
+            greedy(&[10, 20, 30], 8).with_adapter("b"),
+            greedy(&[5, 6, 7], 6),
+        ]
+    };
+    for mode in ["road", "lora", "ia3"] {
+        let mut rng = Rng::seed_from(77);
+        let (a, b) = match mode {
+            "road" => (
+                Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3)),
+                Adapter::Road(RoadAdapter::random(&cfg, &mut rng, 0.3)),
+            ),
+            "lora" => (
+                Adapter::Lora(LoraAdapter::random(&cfg, &mut rng, 0.3)),
+                Adapter::Lora(LoraAdapter::random(&cfg, &mut rng, 0.3)),
+            ),
+            _ => (
+                Adapter::Ia3(Ia3Adapter::random(&cfg, &mut rng, 0.3)),
+                Adapter::Ia3(Ia3Adapter::random(&cfg, &mut rng, 0.3)),
+            ),
+        };
+        let run = |fused: bool| {
+            let mut eng = Engine::new(
+                rt.clone(),
+                EngineConfig {
+                    model: "tiny".into(),
+                    mode: mode.into(),
+                    decode_slots: 3,
+                    queue_capacity: 64,
+                    fused_epilogue: fused,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            eng.register_adapter("a", &a).unwrap();
+            eng.register_adapter("b", &b).unwrap();
+            let mut outs = eng.run_all(mk_reqs()).unwrap();
+            outs.sort_by_key(|o| o.id);
+            outs
+        };
+        let (fused, scalar) = (run(true), run(false));
+        assert_eq!(fused.len(), 3, "mode {mode}");
+        for (f, s) in fused.iter().zip(&scalar) {
+            assert_eq!(f.tokens, s.tokens, "mode {mode}: fused epilogue changed tokens");
+            assert_eq!(f.finish, FinishReason::MaxTokens, "mode {mode}");
+        }
+        // Distinct adapters in the same batch actually diverge, so the
+        // identity above is not vacuous.
+        assert_ne!(fused[0].tokens, fused[2].tokens, "mode {mode}: adapter a had no effect");
+    }
 }
 
 /// Cross-backend oracle (artifact-gated): the pure-Rust reference model

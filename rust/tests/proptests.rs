@@ -18,6 +18,7 @@ use road::coordinator::sampler;
 use road::coordinator::sched::{PolicyKind, SchedSim, SimOutcome};
 use road::manifest::ModelConfigInfo;
 use road::model::{road_merge_weight, road_rotate_vec};
+use road::runtime::epilogue::{self, BankView};
 use road::tasks::{lm_batch, Example};
 use road::tensor::HostTensor;
 use road::trainer::linear_lr;
@@ -965,5 +966,54 @@ fn prop_rng_fork_streams_are_independent() {
         let mut fb = fb;
         let same = (0..8).all(|_| fa.next_u64() == fb.next_u64());
         assert!(!same, "forked streams identical");
+    }
+}
+
+#[test]
+fn prop_fused_epilogue_matches_scalar() {
+    // The fused (chunks_exact(8) + mul_add) epilogue drivers must agree
+    // with the scalar oracle on random shapes: bitwise for road and ia3
+    // (identical per-element arithmetic), within 1 ulp for lora (only the
+    // z += mid*A drive changes iteration shape).  d_out alternates between
+    // 8k (whole chunks) and 8k+2 (2-element remainder) to exercise both
+    // the vector body and the scalar tail.
+    let mut rng = Rng::seed_from(prop_seed() ^ 0xe91);
+    for case in 0..CASES {
+        let d_out = 8 * (1 + rng.below(4)) + if case % 2 == 0 { 0 } else { 2 };
+        let d_in = 2 + rng.below(12);
+        let rank = 1 + rng.below(4);
+        let n_slots = 1 + rng.below(5);
+        let rows = 1 + rng.below(9);
+        let slots: Vec<usize> = (0..rows).map(|_| rng.below(n_slots)).collect();
+
+        let r1 = rng.normal_vec(n_slots * d_out, 0.7);
+        let r2 = rng.normal_vec(n_slots * d_out, 0.7);
+        let z0 = rng.normal_vec(rows * d_out, 1.0);
+        let r1v = BankView::new("p.r1", &r1, d_out).unwrap();
+        let r2v = BankView::new("p.r2", &r2, d_out).unwrap();
+        let (mut zs, mut zf) = (z0.clone(), z0.clone());
+        epilogue::road(&mut zs, d_out, &slots, &r1v, &r2v, false).unwrap();
+        epilogue::road(&mut zf, d_out, &slots, &r1v, &r2v, true).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&zs), bits(&zf), "road case {case} d_out {d_out}");
+
+        let sv = BankView::new("p.s", &r1, d_out).unwrap();
+        let (mut zs, mut zf) = (z0.clone(), z0.clone());
+        epilogue::ia3(&mut zs, d_out, &slots, &sv, false).unwrap();
+        epilogue::ia3(&mut zf, d_out, &slots, &sv, true).unwrap();
+        assert_eq!(bits(&zs), bits(&zf), "ia3 case {case} d_out {d_out}");
+
+        let lb = rng.normal_vec(n_slots * d_in * rank, 0.5);
+        let la = rng.normal_vec(n_slots * rank * d_out, 0.5);
+        let x = rng.normal_vec(rows * d_in, 1.0);
+        let lbv = BankView::new("p.lb", &lb, d_in * rank).unwrap();
+        let lav = BankView::new("p.la", &la, rank * d_out).unwrap();
+        let (mut zs, mut zf) = (z0.clone(), z0);
+        epilogue::lora(&mut zs, &x, d_in, d_out, rank, &slots, &lbv, &lav, false).unwrap();
+        epilogue::lora(&mut zf, &x, d_in, d_out, rank, &slots, &lbv, &lav, true).unwrap();
+        for (i, (a, b)) in zs.iter().zip(&zf).enumerate() {
+            let ulps = (a.to_bits() as i64 - b.to_bits() as i64).abs();
+            assert!(ulps <= 1, "lora case {case} elem {i}: {a} vs {b} ({ulps} ulps)");
+        }
     }
 }
